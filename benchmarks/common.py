@@ -1,0 +1,66 @@
+"""Shared MQAR train/eval harness for the Fig-2 family of benchmarks.
+
+CPU-sized but structurally faithful: 2-layer models, MQAR with 8 kv pairs /
+4 queries in a 64-token context, accuracy measured only at query positions.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.mqar import mqar_batch
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.nn.module import F32
+from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
+from repro.train import init_train_state, make_train_step, make_eval_step
+
+VOCAB = 64
+SEQ = 32
+PAIRS = 2
+QUERIES = 2
+BATCH = 64
+
+
+def mqar_model(mechanism: str, *, d_model: int = 64,
+               zeta: ZetaConfig | None = None) -> ModelConfig:
+    return ModelConfig(
+        name=f"mqar-{mechanism}", vocab=VOCAB, d_model=d_model, n_layers=2,
+        n_heads=2, n_kv_heads=2, d_ff=2 * d_model,
+        attention=mechanism,  # "full" | "zeta" | "topk"
+        zeta=zeta or ZetaConfig(d_k=3, k=8, num_chunks=4,
+                                local_window=0),
+        tie_embeddings=False,
+    )
+
+
+def train_mqar(cfg: ModelConfig, *, steps: int = 600, lr: float = 3e-3,
+               seed: int = 0) -> dict:
+    tx = chain(clip_by_global_norm(1.0),
+               adamw(warmup_cosine(lr, 20, 2 * steps), b2=0.999,
+                     weight_decay=0.01))
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, tx)
+    step = jax.jit(make_train_step(cfg, tx, F32), donate_argnums=0)
+    evalf = jax.jit(make_eval_step(cfg, F32))
+    key = jax.random.PRNGKey(seed + 1)
+    t0 = time.time()
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        batch = mqar_batch(sub, batch=BATCH, seq_len=SEQ, vocab=VOCAB,
+                           num_pairs=PAIRS, num_queries=QUERIES)
+        state, metrics = step(state, batch)
+    train_time = time.time() - t0
+    accs = []
+    for i in range(8):
+        key, sub = jax.random.split(key)
+        batch = mqar_batch(sub, batch=BATCH, seq_len=SEQ, vocab=VOCAB,
+                           num_pairs=PAIRS, num_queries=QUERIES)
+        accs.append(float(evalf(state["params"], batch)["acc"]))
+    return {
+        "acc": sum(accs) / len(accs),
+        "final_loss": float(metrics["loss"]),
+        "train_s": train_time,
+        "us_per_step": 1e6 * train_time / steps,
+    }

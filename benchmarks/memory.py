@@ -1,0 +1,57 @@
+"""Table 4: memory scaling of ZETA vs full attention.
+
+Uses compiled memory_analysis (temp + output bytes) of the jitted attention
+cores across sequence lengths — full attention's N x N scores dominate and
+grow quadratically; ZETA's gathered candidates grow ~linearly (N * k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import zeta_attention
+from repro.core.ref import full_softmax_attention
+
+B, H, DK, DV = 1, 2, 32, 32
+LENGTHS = (512, 1024, 2048, 4096, 8192)
+ZETA_DK = 3
+
+
+def _peak_bytes(fn, *shapes) -> int:
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    c = jax.jit(fn).lower(*args).compile()
+    m = c.memory_analysis()
+    return int(m.temp_size_in_bytes + m.output_size_in_bytes)
+
+
+def run() -> list[str]:
+    rows = []
+    full_b, zeta_b = [], []
+    for n in LENGTHS:
+        fb = _peak_bytes(
+            lambda q, k, v: full_softmax_attention(q, k, v),
+            (B, H, n, DK), (B, H, n, DK), (B, H, n, DV),
+        )
+        zb = _peak_bytes(
+            lambda q, k, v: zeta_attention(q, k, v, 0.5, num_chunks=16,
+                                           k=32),
+            (B, H, n, ZETA_DK), (B, H, n, ZETA_DK), (B, H, n, DV),
+        )
+        full_b.append(fb)
+        zeta_b.append(zb)
+        rows.append(
+            f"tab4_memory_N{n},0,"
+            f"full_mb={fb / 1e6:.1f};zeta_mb={zb / 1e6:.1f};"
+            f"ratio={fb / max(zb, 1):.2f}"
+        )
+    ln = np.log(np.asarray(LENGTHS[2:], float))
+    for name, bs in (("full", full_b), ("zeta", zeta_b)):
+        slope = np.polyfit(ln, np.log(np.asarray(bs[2:], float)), 1)[0]
+        rows.append(f"tab4_memscaling_{name},0,exponent={slope:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

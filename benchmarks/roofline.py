@@ -1,0 +1,77 @@
+"""§Roofline table emitter: merges the dry-run sweep (compile-proof +
+memory) with the trip-count-corrected roofline analysis and prints the
+per-(arch x shape) table used in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(path: str) -> dict:
+    out = {}
+    full = os.path.join(RESULTS_DIR, path)
+    if not os.path.exists(full):
+        return out
+    with open(full) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            out[(r.get("arch"), r.get("shape"))] = r
+    return out
+
+
+def rows() -> list[dict]:
+    roof = _load("roofline.jsonl")
+    sweep = _load("dryrun_single_pod.jsonl")
+    merged = []
+    for key, r in sorted(roof.items()):
+        if r.get("status") != "ok":
+            continue
+        s = sweep.get(key, {})
+        mem = s.get("memory", {})
+        merged.append({
+            **r,
+            "temp_gb": mem.get("temp_size_in_bytes", 0) / 1e9,
+            "arg_gb": mem.get("argument_size_in_bytes", 0) / 1e9,
+        })
+    return merged
+
+
+def markdown_table() -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " useful ratio | roofline frac | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows():
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} |"
+            f" {r['memory_s']:.4f} | {r['collective_s']:.4f} |"
+            f" {r['dominant'].replace('_s', '')} |"
+            f" {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |"
+            f" {r['temp_gb']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    out = []
+    for r in rows():
+        out.append(
+            f"roofline_{r['arch']}_{r['shape']},0,"
+            f"dominant={r['dominant']};frac={r['roofline_fraction']:.4f};"
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f}"
+        )
+    if not out:
+        out.append("roofline_pending,0,run launch/roofline.py first")
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table())

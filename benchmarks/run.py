@@ -1,0 +1,74 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
+``--only fig2a,tab3`` (the MQAR-training figures are the slow ones).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = {
+    "fig2a": ("benchmarks.mqar", "MQAR accuracy: full vs zeta vs topk"),
+    "fig2b": ("benchmarks.dk_sweep", "d_K sweep"),
+    "fig2c": ("benchmarks.softmax_ops", "Euclidean softmax operators"),
+    "fig2d": ("benchmarks.k_sweep", "k sweep"),
+    "fig3": ("benchmarks.locality", "z-order locality preservation"),
+    "tab3": ("benchmarks.timing", "time scaling vs full attention"),
+    "tab4": ("benchmarks.memory", "memory scaling vs full attention"),
+    "recall": ("benchmarks.recall", "z-order window recall of exact kNN"),
+    "roofline": ("benchmarks.roofline", "dry-run roofline table"),
+}
+
+FAST_DEFAULT = ["fig3", "tab3", "tab4", "recall", "roofline"]
+ALL = list(SUITES)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names; default: fast set "
+                         f"({','.join(FAST_DEFAULT)}); use 'all' for "
+                         "everything incl. MQAR training figures")
+    args = ap.parse_args()
+    if args.only == "all":
+        names = ALL
+    elif args.only:
+        names = [s.strip() for s in args.only.split(",")]
+    else:
+        names = FAST_DEFAULT
+
+    print("name,us_per_call,derived")
+    # MQAR training figures take ~40 min on this CPU; when a cached run
+    # exists (results/bench_mqar_figs.csv), replay it in the default set.
+    if not args.only:
+        import os
+
+        cached = os.path.join(
+            os.path.dirname(__file__), "..", "results",
+            "bench_mqar_figs.csv",
+        )
+        if os.path.exists(cached):
+            with open(cached) as f:
+                for line in f:
+                    line = line.strip()
+                    if line and not line.startswith("name,"):
+                        print(f"{line} [cached]", flush=True)
+    for name in names:
+        mod_name, desc = SUITES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # keep the suite running
+            print(f"{name}_ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stderr, flush=True)
+        print(f"{name}_suite,{1e6 * (time.time() - t0):.0f},{desc}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Fig 2c / Table 6: Euclidean score operators at small d_K.
+
+Claim: Cauchy softmax >= negative-euclid softmax >= inverse-euclid at
+small d_K (heavier tails keep distant tokens attendable)."""
+
+from __future__ import annotations
+
+from benchmarks.common import mqar_model, train_mqar
+from repro.nn.config import ZetaConfig
+
+STEPS = 600
+LR = 3e-3
+
+
+def run() -> list[str]:
+    rows = []
+    for score in ("cauchy", "neg_euclid", "inverse_euclid"):
+        for dk in (1, 2, 3):
+            cfg = mqar_model(
+                "zeta", d_model=64,
+                zeta=ZetaConfig(d_k=dk, k=8, num_chunks=4, score=score),
+            )
+            r = train_mqar(cfg, steps=STEPS, lr=LR)
+            rows.append(
+                f"fig2c_{score}_dk{dk},{r['us_per_step']:.0f},"
+                f"acc={r['acc']:.3f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

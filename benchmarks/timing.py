@@ -1,0 +1,85 @@
+"""Table 3: wall-time scaling of ZETA vs full attention (CPU).
+
+The paper's Table 3 is GPU milliseconds; on this CPU-only container the
+*absolute* numbers are meaningless but the SCALING exponent is the claim
+under test: full attention grows ~O(N^2), ZETA ~O(N log N).  We time the
+jitted attention core (forward and forward+backward) across sequence
+lengths and fit log-log slopes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import zeta_attention
+from repro.core.ref import full_softmax_attention
+
+B, H, DK, DV = 1, 2, 32, 32
+LENGTHS = (512, 1024, 2048, 4096, 8192)
+ZETA_DK = 3
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def run() -> list[str]:
+    rows = []
+    times: dict[str, list[float]] = {}
+    for mech in ("full", "zeta"):
+        times[f"{mech}_fwd"] = []
+        times[f"{mech}_fwdbwd"] = []
+    for n in LENGTHS:
+        key = jax.random.PRNGKey(n)
+        if True:
+            qf = jax.random.normal(key, (B, H, n, DK))
+            kf = jax.random.normal(jax.random.PRNGKey(1), (B, H, n, DK))
+            vf = jax.random.normal(jax.random.PRNGKey(2), (B, H, n, DV))
+            zq = jnp.tanh(qf[..., :ZETA_DK])
+            zk = jnp.tanh(kf[..., :ZETA_DK])
+
+        full_fwd = jax.jit(lambda q, k, v: full_softmax_attention(q, k, v))
+        full_bwd = jax.jit(jax.grad(
+            lambda q, k, v: full_softmax_attention(q, k, v).sum(),
+            argnums=(0, 1, 2),
+        ))
+        zeta_fwd = jax.jit(lambda q, k, v: zeta_attention(
+            q, k, v, 0.5, num_chunks=16, k=32))
+        zeta_bwd = jax.jit(jax.grad(
+            lambda q, k, v: zeta_attention(
+                q, k, v, 0.5, num_chunks=16, k=32).sum(),
+            argnums=(0, 1, 2),
+        ))
+        t_ffwd = _time(full_fwd, qf, kf, vf)
+        t_fbwd = _time(full_bwd, qf, kf, vf)
+        t_zfwd = _time(zeta_fwd, zq, zk, vf)
+        t_zbwd = _time(zeta_bwd, zq, zk, vf)
+        times["full_fwd"].append(t_ffwd)
+        times["full_fwdbwd"].append(t_ffwd + t_fbwd)
+        times["zeta_fwd"].append(t_zfwd)
+        times["zeta_fwdbwd"].append(t_zfwd + t_zbwd)
+        rows.append(
+            f"tab3_timing_N{n},{1e6 * t_zfwd:.0f},"
+            f"full_fwd_ms={1e3 * t_ffwd:.1f};zeta_fwd_ms={1e3 * t_zfwd:.1f};"
+            f"full_fb_ms={1e3 * (t_ffwd + t_fbwd):.1f};"
+            f"zeta_fb_ms={1e3 * (t_zfwd + t_zbwd):.1f}"
+        )
+    # log-log scaling exponents over the top half of lengths
+    ln = np.log(np.asarray(LENGTHS[2:], float))
+    for name, ts in times.items():
+        slope = np.polyfit(ln, np.log(np.asarray(ts[2:])), 1)[0]
+        rows.append(f"tab3_scaling_{name},0,exponent={slope:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

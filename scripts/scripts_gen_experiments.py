@@ -1,0 +1,112 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from results/."""
+
+import json
+import os
+
+R = "results"
+
+
+def load(path):
+    out = []
+    p = os.path.join(R, path)
+    if not os.path.exists(p):
+        return out
+    for line in open(p):
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            pass
+    return out
+
+
+def dryrun_tables():
+    single = load("dryrun_single_pod.jsonl")
+    multi = load("dryrun_multi_pod.jsonl")
+    lines = []
+    for name, rows in (("16x16 single-pod (256 chips)", single),
+                       ("2x16x16 multi-pod (512 chips)", multi)):
+        ok = sum(1 for r in rows if r.get("status") == "ok")
+        lines.append(f"\n### Mesh {name} — {ok}/{len(rows)} cells compile\n")
+        lines.append(
+            "| arch | shape | compile s | arg GB/dev | temp GB/dev |"
+            " HLO flops/dev | coll GB/dev (ag/ar/rs/a2a/cp) |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            if r.get("status") != "ok":
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | FAIL | | | |"
+                    f" {r.get('error', '')[:60]} |")
+                continue
+            mem = r.get("memory", {})
+            c = r.get("collectives", {}).get("bytes_by_op", {})
+            cg = "/".join(
+                f"{c.get(op, 0) / 1e9:.1f}"
+                for op in ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('compile_s', '')} |"
+                f" {mem.get('argument_size_in_bytes', 0) / 1e9:.2f} |"
+                f" {mem.get('temp_size_in_bytes', 0) / 1e9:.2f} |"
+                f" {r.get('cost', {}).get('flops', 0):.3e} | {cg} |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    rows = load("roofline.jsonl")
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "ok":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} |"
+            f" {r['memory_s']:.4f} | {r['collective_s']:.4f} |"
+            f" {r['dominant'].replace('_s', '')} | {r['model_flops']:.3e} |"
+            f" {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def perf_table():
+    rows = load("perf.jsonl")
+    base = {(r["arch"], r["shape"]): r for r in load("roofline.jsonl")
+            if r.get("status") == "ok"}
+    lines = [
+        "| arch | shape | variant | compute_s | memory_s | collective_s |"
+        " dominant | roofline frac | vs baseline dominant |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        key = (r["arch"], r["shape"])
+        b = base.get(key)
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['variant']} |"
+                         f" FAIL {r.get('error', '')[:60]} | | | | | |")
+            continue
+        if b:
+            bd = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            nd = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            speed = bd / nd if nd else float("inf")
+        else:
+            speed = 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} |"
+            f" {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+            f" {r['collective_s']:.4f} |"
+            f" {r['dominant'].replace('_s', '')} |"
+            f" {r['roofline_fraction']:.4f} | {speed:.2f}x |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print(dryrun_tables())
+    if which in ("all", "roofline"):
+        print(roofline_table())
+    if which in ("all", "perf"):
+        print(perf_table())

@@ -1,0 +1,62 @@
+"""Architecture registry + assigned input shapes.
+
+Every assigned architecture is selectable by id (``--arch <id>``); each has
+a full CONFIG (exact public numbers) and a reduced SMOKE config of the same
+family for CPU tests.  The four assigned shape cells are defined here too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+_ARCH_MODULES = {
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "whisper-base": "repro.configs.whisper_base",
+    "zeta-wt103-124m": "repro.configs.zeta_paper",
+}
+
+ASSIGNED_ARCHS = [a for a in _ARCH_MODULES if a != "zeta-wt103-124m"]
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_smoke(arch: str):
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.SMOKE
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) cells."""
+    return [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]

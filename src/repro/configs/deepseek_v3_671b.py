@@ -1,0 +1,26 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H d_ff=2048 vocab=129280,
+MoE 256e top-8 — MLA, 1 shared + 256 routed, MTP [arXiv:2412.19437; hf]."""
+from repro.nn.config import MLAConfig, ModelConfig, MoEConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", vocab=129280, d_model=7168, n_layers=61,
+    n_heads=128, n_kv_heads=128, d_ff=2048,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    # ep_shard_map: explicit expert parallelism — see EXPERIMENTS.md §Perf.
+    moe=MoEConfig(num_experts=256, top_k=8, shared_experts=1,
+                  capacity_factor=1.25, ep_shard_map=True),
+    first_k_dense=3, dense_ff=18432, mtp_depth=1, attention="zeta",
+    optimizer="adafactor",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="deepseek-smoke", vocab=512, d_model=64, n_layers=3, n_heads=4,
+    n_kv_heads=4, d_ff=32,
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, rope_head_dim=8,
+                  nope_head_dim=16, v_head_dim=16),
+    moe=MoEConfig(num_experts=8, top_k=2, shared_experts=1),
+    first_k_dense=1, dense_ff=128, mtp_depth=1,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,19 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attn+mamba [arXiv:2411.13676; hf]."""
+from repro.nn.config import ModelConfig, SSMConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", vocab=32001, d_model=1600, n_layers=32,
+    n_heads=25, n_kv_heads=5, head_dim=64, d_ff=5504, mixer="hybrid",
+    ssm=SSMConfig(state_dim=16, head_dim=64, expand=2, n_groups=1,
+                  chunk=256),
+    attention="zeta", zeta=ZetaConfig(d_k=3, k=32, num_chunks=16),
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="hymba-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, n_groups=1, chunk=8),
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,22 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384e top-8 [arXiv:2501.kimi2; unverified]."""
+from repro.nn.config import ModelConfig, MoEConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", vocab=163840, d_model=7168, n_layers=61,
+    n_heads=64, n_kv_heads=8, head_dim=112, d_ff=2048,
+    # ep_shard_map: explicit expert parallelism — 70x less collective
+    # traffic than XLA-auto SPMD dispatch (EXPERIMENTS.md §Perf iter 4).
+    moe=MoEConfig(num_experts=384, top_k=8, shared_experts=1,
+                  capacity_factor=1.25, ep_shard_map=True),
+    first_k_dense=1, dense_ff=18432, attention="zeta", optimizer="adafactor",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="kimi-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=32,
+    moe=MoEConfig(num_experts=8, top_k=2, shared_experts=1),
+    first_k_dense=1, dense_ff=128,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,22 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 — anyres tiling [hf:llava-hf/...; unverified].
+
+The vision frontend is a STUB: input_specs provide 512 precomputed patch
+embeddings (anyres-tiled, CLIP-L width 1024); the model projects and
+prepends them to the token sequence."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+N_PATCHES = 512
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", vocab=64000, d_model=7168, n_layers=60,
+    n_heads=56, n_kv_heads=8, head_dim=128, d_ff=20480,
+    frontend="vision", frontend_dim=1024, attention="zeta",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="llava-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, frontend_dim=32,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,19 @@
+"""mamba2-370m [ssm]: 48L d_model=1024 (attn-free) vocab=50280,
+ssm_state=128 — SSD [arXiv:2405.21060; unverified].
+
+ZETA is INAPPLICABLE here (no attention tokens to select) — see DESIGN.md
+§Arch-applicability.  The arch still runs every shape natively (O(N))."""
+from repro.nn.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", vocab=50280, d_model=1024, n_layers=48,
+    mixer="ssd", d_ff=0,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, n_groups=1,
+                  chunk=256),
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="mamba2-smoke", vocab=512, d_model=64, n_layers=2,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, n_groups=1, chunk=8),
+)

@@ -1,0 +1,16 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron [arXiv:2407.14679; hf]."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", vocab=256000, d_model=4096, n_layers=32,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=16384,
+    activation="relu2", attention="zeta",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="minitron-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

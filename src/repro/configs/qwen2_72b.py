@@ -1,0 +1,16 @@
+"""qwen2-72b [dense]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — GQA, QKV bias [arXiv:2407.10671; hf]."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b", vocab=152064, d_model=8192, n_layers=80,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=29568, qkv_bias=True,
+    attention="zeta", zeta=ZetaConfig(d_k=3, k=32, num_chunks=16),
+    tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen2-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,14 @@
+"""stablelm-1.6b [dense]: 24L d_model=2048 32H (GQA kv=32) d_ff=5632
+vocab=100352  [hf:stabilityai/stablelm-2-1_6b; unverified]."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b", vocab=100352, d_model=2048, n_layers=24,
+    n_heads=32, n_kv_heads=32, d_ff=5632, attention="zeta",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="stablelm-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=4, d_ff=128, zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

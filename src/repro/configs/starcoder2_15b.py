@@ -1,0 +1,16 @@
+"""starcoder2-15b [dense]: 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", vocab=49152, d_model=6144, n_layers=40,
+    n_heads=48, n_kv_heads=4, head_dim=128, d_ff=24576,
+    activation="gelu", attention="zeta",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="starcoder2-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,21 @@
+"""whisper-base [audio]: 6L enc + 6L dec d_model=512 8H d_ff=2048
+vocab=51865 — enc-dec, conv frontend STUB [arXiv:2212.04356; unverified].
+
+input_specs provide 1500 precomputed frame embeddings (post-conv, width
+512).  Decoder self-attention is ZETA (causal); encoder self-attention is
+the non-causal ZETA variant; cross-attention stays full (memory is tiny)."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", vocab=51865, d_model=512, n_layers=6,
+    n_heads=8, n_kv_heads=8, d_ff=2048, enc_layers=6, enc_context=1500,
+    frontend="audio", frontend_dim=512, norm="layer", activation="gelu",
+    attention="zeta", zeta=ZetaConfig(d_k=3, k=32, num_chunks=16),
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="whisper-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=4, d_ff=128, enc_layers=2, enc_context=16, frontend_dim=24,
+    zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

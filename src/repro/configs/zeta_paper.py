@@ -1,0 +1,20 @@
+"""The paper's own models: ZETA-124M for WikiText-103 (Appendix C:
+d_V=768, 12 heads, d_K=d_Q=3) and the LRA-scale classifier config."""
+from repro.nn.config import ModelConfig, ZetaConfig
+
+CONFIG = ModelConfig(
+    name="zeta-wt103-124m", vocab=50257, d_model=768, n_layers=12,
+    n_heads=12, n_kv_heads=12, d_ff=3072, attention="zeta",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=16), tie_embeddings=True,
+)
+
+LRA = ModelConfig(
+    name="zeta-lra", vocab=256, d_model=512, n_layers=6, n_heads=8,
+    n_kv_heads=8, d_ff=2048, attention="zeta",
+    zeta=ZetaConfig(d_k=3, k=32, num_chunks=8), tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="zeta-smoke", vocab=512, d_model=64, n_layers=2, n_heads=4,
+    n_kv_heads=4, d_ff=128, zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+)

@@ -1,0 +1,23 @@
+"""ZETA core: the paper's contribution as composable JAX functions."""
+
+from repro.core.attention import zeta_attention, zeta_attention_noncausal
+from repro.core.cauchy import (
+    cauchy_weights,
+    gamma2_from_param,
+    squared_distances,
+)
+from repro.core.topk import chunked_causal_topk, prefix_topk_decode, sorted_insert
+from repro.core.zorder import zorder_encode, zorder_encode_with_bounds
+
+__all__ = [
+    "zeta_attention",
+    "zeta_attention_noncausal",
+    "cauchy_weights",
+    "gamma2_from_param",
+    "squared_distances",
+    "chunked_causal_topk",
+    "prefix_topk_decode",
+    "sorted_insert",
+    "zorder_encode",
+    "zorder_encode_with_bounds",
+]

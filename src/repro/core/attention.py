@@ -1,0 +1,279 @@
+"""ZETA attention: Z-order top-k search + Adaptive Cauchy-Softmax (§3.2-3.4).
+
+Public entry point is :func:`zeta_attention`.  The pipeline:
+
+  1. Morton-encode low-dim keys & queries (core/zorder.py)
+  2. chunked causal parallel top-k candidate search (core/topk.py)
+  3. optional own-chunk local window (beyond-paper, default off)
+  4. gather candidate K/V, append history-mean smoothing token
+  5. squared distances -> Adaptive Cauchy-Softmax -> weighted value sum
+     (step 5 runs either as pure-XLA ops or as the fused Pallas kernel)
+
+Layout convention: q, k are (B, H, N, d_k); v is (B, H, N, d_v).
+GQA is handled by the nn layer (keys are searched once per KV head).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cauchy, ref, topk, zorder
+
+
+def _gather_kv(
+    k: jax.Array, v: jax.Array, idx: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """k: (F, N, dk), v: (F, N, dv), idx: (F, N, K) ->
+    (F, N, K, dk), (F, N, K, dv)."""
+    k_sel = jnp.take_along_axis(k[:, None, :, :], idx[..., None], axis=-2)
+    v_sel = jnp.take_along_axis(v[:, None, :, :], idx[..., None], axis=-2)
+    return k_sel, v_sel
+
+
+def _local_window_indices(
+    n: int, num_chunks: int, window: int
+) -> tuple[jax.Array, jax.Array]:
+    """Own-chunk sliding-window candidate indices (beyond-paper option).
+
+    Returns idx (N, window) and valid (N, window); positions clamped to
+    [chunk_start(i), i] so they never overlap the z-order candidates (which
+    live in strictly earlier chunks)."""
+    m = n // num_chunks
+    i = jnp.arange(n, dtype=jnp.int32)[:, None]
+    off = jnp.arange(window, dtype=jnp.int32)[None, :]
+    j = i - off                               # i, i-1, ..., i-window+1
+    lo = (i // m) * m
+    valid = j >= lo
+    return jnp.where(valid, j, 0), valid
+
+
+def _score_weights(d2, g2, valid, score, dtype):
+    if score == "cauchy":
+        return cauchy.cauchy_weights(d2, g2, valid)
+    if score == "neg_euclid":
+        return cauchy.neg_euclid_weights(d2, jnp.asarray(1.0, dtype), valid)
+    return cauchy.inverse_euclid_weights(d2, jnp.asarray(1e-3, dtype), valid)
+
+
+@jax.custom_vjp
+def _weighted_sum(w: jax.Array, v_sel: jax.Array) -> jax.Array:
+    """out[..., d] = sum_k w[..., k] * v_sel[..., k, d].
+
+    f32 accumulation in the forward, *bf16 cotangents* in the backward.
+    Without the custom VJP, the f32 accumulation makes v_sel's cotangent
+    f32 and XLA then converts the candidate-value GATHERS to f32 — doubling
+    the dominant HBM traffic of the whole layer (§Perf iteration 7).  The
+    backward here is the exact product rule, just dtype-pinned.
+    """
+    return jnp.sum(
+        w[..., None] * v_sel, axis=-2, dtype=jnp.float32
+    ).astype(v_sel.dtype)
+
+
+def _ws_fwd(w, v_sel):
+    return _weighted_sum(w, v_sel), (w, v_sel)
+
+
+def _ws_bwd(res, g):
+    w, v_sel = res
+    g = g.astype(v_sel.dtype)
+    dw = jnp.sum(
+        g[..., None, :] * v_sel, axis=-1, dtype=jnp.float32
+    ).astype(w.dtype)
+    dv = w[..., None].astype(v_sel.dtype) * g[..., None, :]
+    return dw, dv
+
+
+_weighted_sum.defvjp(_ws_fwd, _ws_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_chunks", "k", "bits", "bound", "history_mean",
+        "local_window", "score", "impl", "shard_search",
+    ),
+)
+def zeta_attention(
+    q: jax.Array,
+    kk: jax.Array,
+    v: jax.Array,
+    gamma2: jax.Array,
+    *,
+    num_chunks: int,
+    k: int,
+    bits: int | None = None,
+    bound: float | None = 1.0,
+    history_mean: bool = True,
+    local_window: int = 0,
+    score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy",
+    impl: Literal["xla", "pallas"] = "xla",
+    shard_search: bool = False,
+) -> jax.Array:
+    """Causal ZETA attention.
+
+    q: (B, Hq, N, d_k); kk: (B, Hkv, N, d_k); v: (B, Hkv, N, d_v) with
+    Hq % Hkv == 0.  When Hq > Hkv the GQA-grouped search runs: keys are
+    sorted once per KV head and all Hq/Hkv query heads of the group search
+    the same sorted prefixes (beyond-paper §Perf optimization; selection
+    semantics identical to repeating the keys).
+
+    ``shard_search=True`` annotates every search intermediate with a
+    (batch->data, kv_heads->model) sharding — aligned with the TP layout
+    of v, so no resharding — which stops XLA replicating the prefix sorts
+    across the model axis (§Perf iteration 6).
+
+    gamma2: scalar or (Hq,).  Returns (B, Hq, N, d_v).
+    """
+    from repro.launch.sharding import shard_activation as _sa
+
+    B, Hq, N, dk = q.shape
+    Hkv = kk.shape[1]
+    G = Hq // Hkv
+    dv = v.shape[-1]
+
+    def sa(x, spec):
+        return _sa(x, spec) if shard_search else x
+
+    # Everything below is RESHAPE-FREE in the (B, H) leading dims: sorts,
+    # binary searches, and gathers align with the trailing axis so the SPMD
+    # partitioner preserves batch/head shardings (no involuntary remat).
+    kf = sa(kk, ("batch", "model", None, None))          # (B, Hkv, N, dk)
+    vf = sa(v, ("batch", "model", None, None))           # (B, Hkv, N, dv)
+    qg = sa(
+        q.reshape(B, Hkv, G, N, dk),
+        ("batch", "model", None, None, None),
+    )
+
+    # 1-2. Morton codes + parallel causal candidate search.  ``bound`` must
+    # be fixed (not data-dependent) to preserve causality — see zorder.py.
+    if bound is None:
+        raise ValueError("causal ZETA requires fixed quantisation bounds")
+    nbits = zorder.bits_for_dim(dk, bits)
+    kz = zorder.zorder_encode_with_bounds(kf, -bound, bound, nbits)
+    qz = zorder.zorder_encode_with_bounds(qg, -bound, bound, nbits)
+    kz = sa(kz, ("batch", "model", None))                # (B, Hkv, N)
+    qz = sa(qz, ("batch", "model", None, None))          # (B, Hkv, G, N)
+    sel = topk.chunked_causal_topk_grouped(
+        kz, qz, num_chunks=num_chunks, k=k
+    )
+    idx = sa(sel.idx, ("batch", "model", None, None, None))
+    valid = sa(sel.valid, ("batch", "model", None, None, None))
+
+    # 3. optional own-chunk local window.
+    if local_window > 0:
+        lw_idx, lw_valid = _local_window_indices(N, num_chunks, local_window)
+        idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(lw_idx, (B, Hkv, G, N, local_window))],
+            axis=-1,
+        )
+        valid = jnp.concatenate(
+            [valid,
+             jnp.broadcast_to(lw_valid, (B, Hkv, G, N, local_window))],
+            axis=-1,
+        )
+
+    # 4. gather candidates (per query; XLA gather — see DESIGN.md §3).
+    kk_ = idx.shape[-1]
+    flat = idx.reshape(B, Hkv, G * N * kk_)              # trailing merge
+    k_sel = jnp.take_along_axis(
+        kf, flat[..., None], axis=2
+    ).reshape(B, Hkv, G, N, kk_, dk)
+    v_sel = jnp.take_along_axis(
+        vf, flat[..., None], axis=2
+    ).reshape(B, Hkv, G, N, kk_, dv)
+
+    # history-mean smoothing token (§3.4): cumulative mean of keys gives the
+    # token's coordinate, cumulative mean of values its payload.
+    if history_mean:
+        km = ref.history_mean(kf)[:, :, None, :, None, :]  # (B,Hkv,1,N,1,dk)
+        vm = ref.history_mean(vf)[:, :, None, :, None, :]
+        k_sel = jnp.concatenate(
+            [k_sel, jnp.broadcast_to(km, k_sel.shape[:4] + (1, dk))],
+            axis=-2,
+        )
+        v_sel = jnp.concatenate(
+            [v_sel, jnp.broadcast_to(vm, v_sel.shape[:4] + (1, dv))],
+            axis=-2,
+        )
+        valid = jnp.concatenate(
+            [valid, jnp.ones(valid.shape[:-1] + (1,), bool)], axis=-1
+        )
+    k_sel = sa(k_sel, ("batch", "model") + (None,) * 4)
+    v_sel = sa(v_sel, ("batch", "model") + (None,) * 4)
+
+    g2 = jnp.asarray(gamma2, q.dtype)
+    if g2.ndim == 1:  # per query head
+        g2 = g2.reshape(1, Hkv, G, 1, 1)
+
+    # 5. score + aggregate.
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        kp = k_sel.shape[-2]
+        f = B * Hkv * G
+        out = kernel_ops.cauchy_topk_attention(
+            qg.reshape(f, N, dk),
+            k_sel.reshape(f, N, kp, dk),
+            v_sel.reshape(f, N, kp, dv),
+            valid.reshape(f, N, kp),
+            jnp.broadcast_to(g2, (B, Hkv, G, 1, 1)).reshape(f),
+        ).reshape(B, Hkv, G, N, dv)
+    else:
+        d2 = jnp.sum((qg[..., None, :] - k_sel) ** 2, axis=-1)
+        w = _score_weights(d2, g2, valid, score, q.dtype)
+        out = _weighted_sum(w, v_sel)
+
+    out = sa(out, ("batch", "model", None, None, None))
+    return out.reshape(B, Hq, N, dv)
+
+
+def zeta_attention_noncausal(
+    q: jax.Array,
+    kk: jax.Array,
+    v: jax.Array,
+    gamma2: jax.Array,
+    *,
+    k: int,
+    bits: int | None = None,
+    bound: float | None = None,
+    impl: Literal["xla", "pallas"] = "xla",
+) -> jax.Array:
+    """Encoder-side (non-causal) ZETA: every query searches the *entire*
+    sorted key sequence — a single global sort, no chunk restriction."""
+    B, H, N, dk = q.shape
+    dv = v.shape[-1]
+    F = B * H
+    qf = q.reshape(F, N, dk)
+    kf = kk.reshape(F, N, dk)
+    vf = v.reshape(F, N, dv)
+
+    kz, qz = zorder.zorder_encode(kf, qf, bits=bits, bound=bound)
+    iota = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), kz.shape)
+    skz, perm = jax.lax.sort((kz, iota), dimension=-1, num_keys=1)
+    # batched search: every query row against its own sorted key row
+    ins = topk._searchsorted_batched(skz, qz)                  # (F, N)
+    start = jnp.clip(ins - (k // 2), 0, max(N - k, 0))
+    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)  # (F, N, k)
+    valid = slots < N
+    idx = jnp.take_along_axis(
+        perm, jnp.minimum(slots, N - 1).reshape(F, N * k), axis=-1
+    ).reshape(F, N, k)
+
+    k_sel, v_sel = _gather_kv(kf, vf, idx)
+    g2 = jnp.asarray(gamma2, q.dtype)
+    if g2.ndim == 1:  # per-head
+        g2 = jnp.broadcast_to(g2[None, :], (B, H)).reshape(F, 1, 1)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        out = kernel_ops.cauchy_topk_attention(qf, k_sel, v_sel, valid, g2)
+    else:
+        d2 = cauchy.squared_distances(qf, k_sel)
+        w = cauchy.cauchy_weights(d2, g2, valid)
+        out = jnp.einsum("fnk,fnkd->fnd", w, v_sel)
+    return out.reshape(B, H, N, dv)

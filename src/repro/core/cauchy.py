@@ -1,0 +1,83 @@
+"""Adaptive Cauchy-Softmax and the other Euclidean score operators (§3.3, §4.3).
+
+All operators consume squared Euclidean distances ``d2`` of shape (..., k)
+plus a validity mask and return normalised attention weights.  ``gamma2`` is
+the trainable Cauchy bandwidth; the paper parameterises it as
+gamma^2 = sigmoid(theta) in [0, 1] per layer (optionally per head).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def gamma2_from_param(theta: jax.Array) -> jax.Array:
+    """gamma^2 = sigmoid(theta), the paper's bounded parameterisation."""
+    return jax.nn.sigmoid(theta)
+
+
+def squared_distances(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (..., d), k: (..., k, d) -> (..., k)."""
+    diff = q[..., None, :] - k
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def cauchy_weights(
+    d2: jax.Array, gamma2: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Adaptive Cauchy-Softmax (eq. 6): A_ij = (d2_ij + g2)^-1 / sum_j ...
+
+    Invalid slots get exactly zero weight.  If *no* slot is valid the output
+    row is all-zero (callers append the history-mean token so this only
+    happens when that token is also absent).
+    """
+    s = jnp.where(valid, 1.0 / (d2 + gamma2 + _EPS), 0.0)
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    return s / jnp.maximum(z, _EPS)
+
+
+def neg_euclid_weights(
+    d2: jax.Array, scale: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """softmax(-scale * d2) over valid slots (the 'Negative Euclidean' row of
+    Table 6)."""
+    logits = jnp.where(valid, -scale * d2, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(valid, jnp.exp(logits - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, _EPS)
+
+
+def inverse_euclid_weights(
+    d2: jax.Array, eps: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """1/sqrt(d2 + eps) normalised ('Inverse Euclidean' of Table 6)."""
+    s = jnp.where(valid, jax.lax.rsqrt(d2 + eps + _EPS), 0.0)
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    return s / jnp.maximum(z, _EPS)
+
+
+def normalized_dot_weights(
+    q: jax.Array, k: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """softmax(q_hat . k_hat) over valid slots ('Normalized Dot Prod')."""
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), _EPS)
+    kn = k / jnp.maximum(jnp.linalg.norm(k, axis=-1, keepdims=True), _EPS)
+    logits = jnp.einsum("...d,...kd->...k", qn, kn)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(valid, jnp.exp(logits - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, _EPS)
+
+
+SCORE_FNS = {
+    "cauchy": cauchy_weights,
+    "neg_euclid": neg_euclid_weights,
+    "inverse_euclid": inverse_euclid_weights,
+}

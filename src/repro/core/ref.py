@@ -1,0 +1,153 @@
+"""Dense O(N^2) oracles for ZETA — ground truth for tests and recall metrics.
+
+These are deliberately naive: full pairwise distances, explicit masks.  The
+fast path (core/attention.py, kernels/) is validated against them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def chunk_causal_mask(n: int, num_chunks: int) -> jax.Array:
+    """allowed[i, j] = True iff key j is in query i's ZETA candidate set:
+    original position j < (i // M) * M, i.e. a strictly earlier chunk."""
+    m = n // num_chunks
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return j < (i // m) * m
+
+
+def local_window_mask(n: int, num_chunks: int, window: int) -> jax.Array:
+    """allowed[i, j] for the own-chunk local window: j in
+    [max(i - window + 1, chunk_start(i)), i]."""
+    m = n // num_chunks
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    lo = jnp.maximum(i - window + 1, (i // m) * m)
+    return (j >= lo) & (j <= i)
+
+
+def pairwise_sqdist(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (..., Nq, d), k: (..., Nk, d) -> (..., Nq, Nk)."""
+    diff = q[..., :, None, :] - k[..., None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def exact_topk_indices(
+    d2: jax.Array, allowed: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact Euclidean kNN per query under an allowed mask.
+
+    d2: (..., Nq, Nk); allowed: broadcastable bool.
+    Returns (idx, valid): (..., Nq, k).
+    """
+    big = jnp.asarray(jnp.finfo(d2.dtype).max, d2.dtype)
+    masked = jnp.where(allowed, d2, big)
+    neg = -masked  # top_k takes the largest
+    vals, idx = jax.lax.top_k(neg, k)
+    valid = vals > -big
+    return idx.astype(jnp.int32), valid
+
+
+def history_mean(x: jax.Array) -> jax.Array:
+    """Inclusive cumulative mean over the sequence axis (-2).
+
+    mean_i = mean(x_0 .. x_i); guarantees every query attends to >= 1 token
+    (§3.4's smoothing token).  Accumulates in f32: a bf16 cumsum over
+    thousands of tokens drifts badly, and bf16 cannot even represent the
+    position counts above 256."""
+    n = x.shape[-2]
+    csum = jnp.cumsum(x.astype(jnp.float32), axis=-2)
+    counts = jnp.arange(1, n + 1, dtype=jnp.float32).reshape(
+        (1,) * (x.ndim - 2) + (n, 1)
+    )
+    return (csum / counts).astype(x.dtype)
+
+
+def dense_cauchy_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gamma2: jax.Array,
+    allowed: jax.Array,
+    include_history_mean: bool = True,
+) -> jax.Array:
+    """Dense masked Adaptive-Cauchy attention (the semantics ZETA approximates
+    when the candidate set is exact).
+
+    q, k: (..., N, dk); v: (..., N, dv); allowed: (N, N) or broadcastable.
+    """
+    d2 = pairwise_sqdist(q, k)  # (..., N, N)
+    s = jnp.where(allowed, 1.0 / (d2 + gamma2 + _EPS), 0.0)
+    if include_history_mean:
+        km = history_mean(k)
+        vm = history_mean(v)
+        dm = jnp.sum((q - km) ** 2, axis=-1)  # (..., N)
+        sm = 1.0 / (dm + gamma2 + _EPS)
+        z = jnp.sum(s, axis=-1) + sm
+        out = (
+            jnp.einsum("...ij,...jd->...id", s, v)
+            + sm[..., None] * vm
+        ) / jnp.maximum(z, _EPS)[..., None]
+        return out
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    a = s / jnp.maximum(z, _EPS)
+    return jnp.einsum("...ij,...jd->...id", a, v)
+
+
+def gathered_cauchy_attention(
+    q: jax.Array,
+    k_sel: jax.Array,
+    v_sel: jax.Array,
+    valid: jax.Array,
+    gamma2: jax.Array,
+) -> jax.Array:
+    """Oracle for the *gathered* form the Pallas kernel computes.
+
+    q: (..., N, dk); k_sel: (..., N, K, dk); v_sel: (..., N, K, dv);
+    valid: (..., N, K)."""
+    d2 = jnp.sum((q[..., None, :] - k_sel) ** 2, axis=-1)
+    s = jnp.where(valid, 1.0 / (d2 + gamma2 + _EPS), 0.0)
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    a = s / jnp.maximum(z, _EPS)
+    return jnp.einsum("...nk,...nkd->...nd", a, v_sel)
+
+
+def full_softmax_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """Vanilla scaled-dot-product attention (eq. 1) — the paper's baseline."""
+    dk = q.shape[-1]
+    logits = jnp.einsum("...id,...jd->...ij", q, k) / jnp.sqrt(float(dk))
+    if causal:
+        n = q.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    a = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...ij,...jd->...id", a, v)
+
+
+def gupta_topk_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, kk: int
+) -> jax.Array:
+    """Top-k attention baseline (Gupta et al. 2021): exact top-k of the causal
+    dot-product scores, softmax over the selected set.  O(N^2) search — the
+    very cost ZETA removes — kept as a quality/efficiency baseline."""
+    dk = q.shape[-1]
+    logits = jnp.einsum("...id,...jd->...ij", q, k) / jnp.sqrt(float(dk))
+    n = q.shape[-2]
+    mask = jnp.tril(jnp.ones((n, n), bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    vals, idx = jax.lax.top_k(logits, kk)
+    w = jax.nn.softmax(vals, axis=-1)
+    w = jnp.where(jnp.isfinite(vals), w, 0.0)
+    v_sel = jnp.take_along_axis(
+        v[..., None, :, :],
+        idx[..., None].clip(0),
+        axis=-2,
+    )
+    return jnp.einsum("...nk,...nkd->...nd", w, v_sel)

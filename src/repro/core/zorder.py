@@ -1,0 +1,124 @@
+"""Z-order (Morton) curve projection of low-dimensional keys/queries to 1-D.
+
+The paper (ZETA §3.1 eq. 4) interleaves the binary representations of the
+d_K coordinates, MSB first:  Z = b11 b21 ... bd1  b12 b22 ... bd2  ...
+
+Coordinates are continuous activations, so we first quantise each dim to
+``bits`` unsigned integer levels using per-(batch, head) min/max bounds taken
+over the *union* of keys and queries (stop-gradient: the discrete code only
+drives index selection; gradients flow through the Euclidean distances of the
+selected pairs, per Appendix E).
+
+Codes use at most 30 bits so they are exactly representable (and sortable)
+as non-negative int32 on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+MAX_TOTAL_BITS = 30
+
+
+def bits_for_dim(d: int, requested: int | None = None) -> int:
+    """Bits per coordinate so that d * bits <= 30 (int32-safe Morton code)."""
+    if d < 1:
+        raise ValueError(f"d must be >= 1, got {d}")
+    auto = max(1, MAX_TOTAL_BITS // d)
+    if requested is None:
+        return auto
+    if requested * d > MAX_TOTAL_BITS:
+        raise ValueError(
+            f"bits={requested} with d={d} exceeds {MAX_TOTAL_BITS} total bits"
+        )
+    return requested
+
+
+def quantize(
+    x: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    bits: int,
+) -> jax.Array:
+    """Map float coords in [lo, hi] to uint32 levels in [0, 2**bits - 1].
+
+    x: (..., N, d); lo/hi broadcastable to (..., 1, d).
+    """
+    levels = (1 << bits) - 1
+    span = jnp.maximum(hi - lo, 1e-6)
+    u = (x - lo) / span
+    u = jnp.clip(u, 0.0, 1.0)
+    q = jnp.round(u * levels).astype(jnp.uint32)
+    # f32 rounding can land exactly on 2**bits (whose bit is outside the
+    # interleave range and would silently wrap the code to 0) — clamp.
+    return jnp.minimum(q, jnp.uint32(levels))
+
+
+def interleave_bits(q: jax.Array, bits: int) -> jax.Array:
+    """Bit-interleave quantised coords. q: (..., N, d) uint32 -> (..., N) int32.
+
+    Output bit layout (MSB first): dim 0 contributes the most significant bit
+    of each interleaved group, matching eq. (4) of the paper.
+    """
+    d = q.shape[-1]
+    if bits * d > MAX_TOTAL_BITS:
+        raise ValueError(f"bits*d = {bits * d} > {MAX_TOTAL_BITS}")
+    out = jnp.zeros(q.shape[:-1], dtype=jnp.uint32)
+    for b in range(bits):  # b = significance within a coordinate (0 = LSB)
+        for j in range(d):
+            bit = (q[..., j] >> jnp.uint32(b)) & jnp.uint32(1)
+            pos = b * d + (d - 1 - j)
+            out = out | (bit << jnp.uint32(pos))
+    return out.astype(jnp.int32)
+
+
+def _minmax_bounds(k: jax.Array, q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(leading dims, coordinate) bounds over keys *and* queries."""
+    both_lo = jnp.minimum(
+        jnp.min(k, axis=-2, keepdims=True), jnp.min(q, axis=-2, keepdims=True)
+    )
+    both_hi = jnp.maximum(
+        jnp.max(k, axis=-2, keepdims=True), jnp.max(q, axis=-2, keepdims=True)
+    )
+    return jax.lax.stop_gradient(both_lo), jax.lax.stop_gradient(both_hi)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bound"))
+def zorder_encode(
+    k: jax.Array,
+    q: jax.Array,
+    bits: int | None = None,
+    bound: float | None = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Encode keys and queries to Morton codes with shared bounds.
+
+    k, q: (..., N, d) float arrays (N may differ between them).
+    Returns (kz, qz): (..., N) int32 Morton codes.
+
+    ``bound``: fixed symmetric quantisation range [-bound, bound].  This is
+    the default because *data-dependent* bounds (min/max over the sequence)
+    leak future information into past codes under causal masking — the model
+    squashes its K/Q projections with tanh so a fixed bound loses nothing.
+    Pass ``bound=None`` for data min/max bounds (encoder / analysis use only).
+    """
+    d = k.shape[-1]
+    nbits = bits_for_dim(d, bits)
+    if bound is None:
+        lo, hi = _minmax_bounds(k, q)
+    else:
+        lo = jnp.asarray(-bound, k.dtype)
+        hi = jnp.asarray(bound, k.dtype)
+    kz = interleave_bits(quantize(k, lo, hi, nbits), nbits)
+    qz = interleave_bits(quantize(q, lo, hi, nbits), nbits)
+    return kz, qz
+
+
+def zorder_encode_with_bounds(
+    x: jax.Array, lo: jax.Array, hi: jax.Array, bits: int
+) -> jax.Array:
+    """Encode with externally supplied bounds (used by the decode cache,
+    where bounds must stay fixed across steps for codes to be comparable)."""
+    return interleave_bits(quantize(x, lo, hi, bits), bits)

@@ -1,0 +1,6 @@
+"""Data pipeline: MQAR generator, synthetic LM corpus, stateful loader."""
+
+from repro.data.mqar import mqar_batch
+from repro.data.synthetic import SyntheticLMLoader
+
+__all__ = ["mqar_batch", "SyntheticLMLoader"]

@@ -1,0 +1,74 @@
+"""MULTI-QUERY ASSOCIATIVE RECALL (Arora et al. 2024) — the paper's Fig 2
+task.
+
+A sequence interleaves (key, value) pairs drawn without replacement from
+disjoint key/value vocab halves, then re-presents a subset of the keys as
+queries; the model must emit the associated value at the position right
+after each repeated key.  Loss/accuracy are evaluated only at query-answer
+positions (mask).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("batch", "seq_len", "vocab", "num_pairs",
+                              "num_queries"),
+)
+def mqar_batch(
+    key: jax.Array,
+    *,
+    batch: int,
+    seq_len: int,
+    vocab: int,
+    num_pairs: int,
+    num_queries: int,
+):
+    """Returns {"tokens": (B, N), "labels": (B, N), "mask": (B, N)}.
+
+    Layout: [k1 v1 k2 v2 ... kP vP  pad...  q1 a1 q2 a2 ... qQ aQ] where the
+    a_i positions carry the label (the value bound to q_i) and are the only
+    masked-in loss positions (teacher forcing: the token at an answer
+    position is the correct value).
+    """
+    assert 2 * num_pairs + 2 * num_queries <= seq_len
+    half = vocab // 2
+    k_keys, k_vals, k_q, k_tok = jax.random.split(key, 4)
+
+    # per-row random keys/values (keys from [2, half), values from [half, vocab))
+    def one_row(kk, kv, kq):
+        perm_k = jax.random.permutation(kk, half - 2)[:num_pairs] + 2
+        vals = jax.random.randint(kv, (num_pairs,), half, vocab)
+        qsel = jax.random.permutation(kq, num_pairs)[:num_queries]
+        return perm_k, vals, qsel
+
+    perm_k, vals, qsel = jax.vmap(one_row)(
+        jax.random.split(k_keys, batch),
+        jax.random.split(k_vals, batch),
+        jax.random.split(k_q, batch),
+    )
+
+    tokens = jnp.ones((batch, seq_len), jnp.int32)  # pad token = 1
+    labels = jnp.zeros((batch, seq_len), jnp.int32)
+    mask = jnp.zeros((batch, seq_len), jnp.float32)
+
+    pair_pos = jnp.arange(num_pairs) * 2
+    tokens = tokens.at[:, pair_pos].set(perm_k)
+    tokens = tokens.at[:, pair_pos + 1].set(vals)
+
+    qstart = seq_len - 2 * num_queries
+    qpos = qstart + jnp.arange(num_queries) * 2
+    q_keys = jnp.take_along_axis(perm_k, qsel, axis=1)
+    q_vals = jnp.take_along_axis(vals, qsel, axis=1)
+    tokens = tokens.at[:, qpos].set(q_keys)
+    tokens = tokens.at[:, qpos + 1].set(q_vals)
+    # the model must PREDICT the answer at the position of the query token
+    # (next-token prediction): label[qpos] = value, mask on.
+    labels = labels.at[:, qpos].set(q_vals)
+    mask = mask.at[:, qpos].set(1.0)
+    return {"tokens": tokens, "labels": labels, "mask": mask}

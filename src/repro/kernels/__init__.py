@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for ZETA's compute hot-spots.
+
+cauchy_topk  — fused gathered Cauchy top-k attention (fwd + Appendix-E bwd)
+zorder       — Morton encode (quantise + bit interleave)
+flash        — blocked causal softmax attention (Table 3/4 baseline)
+
+All validated against ref.py oracles with interpret=True on CPU.
+"""

@@ -1,0 +1,172 @@
+"""Fused sparse Cauchy top-k attention — Pallas TPU kernel.
+
+This is ZETA's compute hot-spot (Appendix D implements it in Triton on GPU;
+see DESIGN.md §3 for the TPU adaptation).  The kernel consumes *gathered*
+candidates — the Z-order search and the HBM gather stay in XLA where TPU is
+already optimal — and fuses, per query tile resident in VMEM:
+
+    d2   = ||q - k_sel||^2          (VPU, loop over the tiny d_k)
+    S    = valid / (d2 + gamma^2)
+    A    = S / sum_k S
+    out  = sum_k A * v_sel
+
+Backward implements the closed-form gradients of Appendix E as a second
+kernel producing *dense* grads in the gathered (N, K, .) layout; the
+scatter-add back to token space happens in XLA via the gather's transpose
+(TPU Pallas has no HBM atomics — by design, see DESIGN.md).
+
+Block shapes: queries are tiled by BLOCK_N; K (the k+1 candidates) and d_v
+live fully in VMEM per tile.  VMEM budget per tile (f32):
+BLOCK_N*(K*(d_k+d_v) + d_v + K) * 4B — e.g. 256*(33*(3+128)+128+33)*4 ≈
+4.6 MiB, comfortably inside the ~16 MiB VMEM of a v5e core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-9
+DEFAULT_BLOCK_N = 256
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, valid_ref, g2_ref, out_ref, z_ref):
+    q = q_ref[...].astype(jnp.float32)          # (BN, dk)
+    k = k_ref[...].astype(jnp.float32)          # (BN, K, dk)
+    v = v_ref[...].astype(jnp.float32)          # (BN, K, dv)
+    valid = valid_ref[...]                      # (BN, K) bool/int8
+    g2 = g2_ref[0].astype(jnp.float32)
+
+    dk = q.shape[-1]
+    d2 = jnp.zeros(k.shape[:-1], jnp.float32)   # (BN, K)
+    for j in range(dk):                         # d_k is tiny (paper: 3)
+        diff = q[:, None, j] - k[:, :, j]
+        d2 = d2 + diff * diff
+    s = jnp.where(valid != 0, 1.0 / (d2 + g2 + _EPS), 0.0)
+    z = jnp.sum(s, axis=-1)                     # (BN,)
+    a = s / jnp.maximum(z, _EPS)[:, None]
+    out = jnp.sum(a[:, :, None] * v, axis=1)    # (BN, dv)
+    out_ref[...] = out.astype(out_ref.dtype)
+    z_ref[...] = z
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, valid_ref, g2_ref, g_ref,
+                dq_ref, dk_ref, dv_ref, dg2_ref):
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    valid = valid_ref[...]
+    g2 = g2_ref[0].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)          # (BN, dv) upstream grad
+
+    dk_dim = q.shape[-1]
+    d2 = jnp.zeros(k.shape[:-1], jnp.float32)
+    for j in range(dk_dim):
+        diff = q[:, None, j] - k[:, :, j]
+        d2 = d2 + diff * diff
+    delta = d2 + g2 + _EPS
+    s = jnp.where(valid != 0, 1.0 / delta, 0.0)
+    z = jnp.maximum(jnp.sum(s, axis=-1), _EPS)  # (BN,)
+    a = s / z[:, None]
+    o = jnp.sum(a[:, :, None] * v, axis=1)      # (BN, dv) recompute
+
+    # dL/dv_l = A_il * g_i   (Appendix E eq. 44, gathered layout)
+    dv_ref[...] = (a[:, :, None] * g[:, None, :]).astype(dv_ref.dtype)
+
+    # dL/dS_il = g_i . (v_l - o_i) / Z_i        (eq. 30)
+    gv = jnp.sum(g[:, None, :] * v, axis=-1)    # (BN, K)
+    go = jnp.sum(g * o, axis=-1)                # (BN,)
+    g_s = (gv - go[:, None]) / z[:, None]
+    # dS/d(delta) = -S^2; chain through d2 and gamma^2 (eqs. 22-25, 35-37)
+    g_delta = jnp.where(valid != 0, -g_s * s * s, 0.0)  # (BN, K)
+
+    dq_cols, dk_cols = [], []
+    for j in range(dk_dim):
+        diff = q[:, None, j] - k[:, :, j]       # (BN, K)
+        dq_cols.append(jnp.sum(2.0 * g_delta * diff, axis=-1))
+        dk_cols.append(-2.0 * g_delta * diff)
+    dq_ref[...] = jnp.stack(dq_cols, axis=-1).astype(dq_ref.dtype)
+    dk_ref[...] = jnp.stack(dk_cols, axis=-1).astype(dk_ref.dtype)
+    dg2_ref[...] = jnp.sum(g_delta, axis=-1)    # (BN,) summed outside
+
+
+def _block_n(n: int, requested: int | None) -> int:
+    bn = requested or DEFAULT_BLOCK_N
+    while n % bn:
+        bn //= 2
+    return max(bn, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def cauchy_topk_fwd(q, k_sel, v_sel, valid, gamma2, *,
+                    block_n: int | None = None, interpret: bool = True):
+    """q: (F, N, dk); k_sel: (F, N, K, dk); v_sel: (F, N, K, dv);
+    valid: (F, N, K); gamma2: (F,) per-row (flattened batch*heads).
+    Returns (out (F, N, dv), z (F, N))."""
+    f, n, dk = q.shape
+    kk = k_sel.shape[2]
+    dv = v_sel.shape[-1]
+    bn = _block_n(n, block_n)
+    grid = (f, n // bn)
+
+    out, z = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bn, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bn, kk, dk), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, bn, kk, dv), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, bn, kk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bn, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, n, dv), q.dtype),
+            jax.ShapeDtypeStruct((f, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_sel, v_sel, valid.astype(jnp.int8), gamma2)
+    return out, z
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def cauchy_topk_bwd(q, k_sel, v_sel, valid, gamma2, g, *,
+                    block_n: int | None = None, interpret: bool = True):
+    f, n, dk = q.shape
+    kk = k_sel.shape[2]
+    dv = v_sel.shape[-1]
+    bn = _block_n(n, block_n)
+    grid = (f, n // bn)
+
+    dq, dks, dvs, dg2 = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bn, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bn, kk, dk), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, bn, kk, dv), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, bn, kk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((None, bn, dv), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bn, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bn, kk, dk), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, bn, kk, dv), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, n, dk), q.dtype),
+            jax.ShapeDtypeStruct((f, n, kk, dk), k_sel.dtype),
+            jax.ShapeDtypeStruct((f, n, kk, dv), v_sel.dtype),
+            jax.ShapeDtypeStruct((f, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_sel, v_sel, valid.astype(jnp.int8), gamma2, g)
+    return dq, dks, dvs, dg2

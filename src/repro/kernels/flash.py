@@ -1,0 +1,98 @@
+"""Blocked causal flash attention (baseline for paper Tables 3/4).
+
+Classic online-softmax formulation: grid over (batch*heads, q blocks); the
+kernel loops over KV blocks up to the diagonal with running (max, denom)
+statistics, so the N x N score matrix never materialises.  MXU does the
+(BQ, hd) x (hd, BK) and (BQ, BK) x (BK, hd) contractions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  scale: float, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale      # (BQ, hd)
+    n = k_ref.shape[0]
+    hd = q.shape[-1]
+    dv = v_ref.shape[-1]
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dv), jnp.float32)
+
+    num_kb = n // bk
+    q_start = qi * bq
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(
+            k_ref, (pl.dslice(kb * bk, bk), slice(None))
+        ).astype(jnp.float32)                        # (BK, hd)
+        v = pl.load(
+            v_ref, (pl.dslice(kb * bk, bk), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.dot(q, k.T)                          # (BQ, BK)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0
+            )
+            cols = kb * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1
+            )
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[:, None] * acc + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    upper = (
+        jax.lax.div(q_start + bq + bk - 1, bk) if causal else num_kb
+    )
+    upper = jnp.minimum(upper, num_kb)
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "causal", "interpret")
+)
+def flash_attention(q, k, v, *, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    causal: bool = True, interpret: bool = True):
+    """q, k: (F, N, hd); v: (F, N, dv) -> (F, N, dv)."""
+    f, n, hd = q.shape
+    dv = v.shape[-1]
+    bq = min(bq, n)
+    while n % bq:
+        bq //= 2
+    bk = min(bk, n)
+    while n % bk:
+        bk //= 2
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, scale=scale, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(f, n // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, n, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, n, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, n, dv), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers for the Pallas kernels, with custom VJPs.
+
+``cauchy_topk_attention`` uses the analytic Appendix-E gradients via the
+backward kernel; the gather that produced k_sel/v_sel lives *outside*, so
+its transpose (scatter-add to token space) is handled by XLA automatically.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cauchy_topk as ck
+from repro.kernels.flash import flash_attention  # re-export  # noqa: F401
+from repro.kernels.zorder_kernel import zorder_encode_kernel  # noqa: F401
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _norm_gamma(gamma2, f, dtype):
+    g = jnp.asarray(gamma2, dtype)
+    g = jnp.broadcast_to(g.reshape(-1)[:1] if g.size == 1 else g.reshape(f),
+                         (f,))
+    return g.astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def cauchy_topk_attention(q, k_sel, v_sel, valid, gamma2):
+    """q: (F, N, dk); k_sel: (F, N, K, dk); v_sel: (F, N, K, dv);
+    valid: (F, N, K) bool; gamma2: scalar | (F,) | (F,1,1).
+    Returns (F, N, dv)."""
+    out, _ = _fwd_impl(q, k_sel, v_sel, valid, gamma2)
+    return out
+
+
+def _fwd_impl(q, k_sel, v_sel, valid, gamma2):
+    f = q.shape[0]
+    g = _norm_gamma(gamma2, f, q.dtype)
+    out, z = ck.cauchy_topk_fwd(
+        q, k_sel, v_sel, valid, g, interpret=_interpret_default()
+    )
+    return out, z
+
+
+def _vjp_fwd(q, k_sel, v_sel, valid, gamma2):
+    out, _ = _fwd_impl(q, k_sel, v_sel, valid, gamma2)
+    return out, (q, k_sel, v_sel, valid, gamma2)
+
+
+def _vjp_bwd(res, g_out):
+    q, k_sel, v_sel, valid, gamma2 = res
+    f = q.shape[0]
+    g = _norm_gamma(gamma2, f, q.dtype)
+    dq, dks, dvs, dg2_rows = ck.cauchy_topk_bwd(
+        q, k_sel, v_sel, valid, g, g_out,
+        interpret=_interpret_default(),
+    )
+    # gamma2 arrives broadcast as scalar / (F,) / (F,1,1): reduce to match.
+    g2 = jnp.asarray(gamma2)
+    dg2_f = jnp.sum(dg2_rows, axis=1)           # (F,)
+    if g2.ndim == 0 or g2.size == 1:
+        dgamma = jnp.sum(dg2_f).reshape(g2.shape).astype(g2.dtype)
+    else:
+        dgamma = dg2_f.reshape(g2.shape).astype(g2.dtype)
+    return (
+        dq.astype(q.dtype),
+        dks.astype(k_sel.dtype),
+        dvs.astype(v_sel.dtype),
+        None,
+        dgamma,
+    )
+
+
+cauchy_topk_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every kernel (per-kernel allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ref import (  # noqa: F401  (canonical oracle lives in core)
+    full_softmax_attention,
+    gathered_cauchy_attention,
+)
+from repro.core.zorder import bits_for_dim, interleave_bits, quantize
+
+_EPS = 1e-9
+
+
+def cauchy_topk_ref(q, k_sel, v_sel, valid, gamma2):
+    """Oracle for kernels.cauchy_topk (gathered layout, f32 math)."""
+    g = jnp.asarray(gamma2, jnp.float32)
+    if g.ndim == 1:
+        g = g[:, None, None]
+    d2 = jnp.sum(
+        (q[..., None, :].astype(jnp.float32)
+         - k_sel.astype(jnp.float32)) ** 2, axis=-1
+    )
+    s = jnp.where(valid, 1.0 / (d2 + g + _EPS), 0.0)
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    a = s / jnp.maximum(z, _EPS)
+    out = jnp.einsum("fnk,fnkd->fnd", a, v_sel.astype(jnp.float32))
+    return out.astype(q.dtype), z[..., 0]
+
+
+def zorder_ref(x, *, bits=None, lo=-1.0, hi=1.0):
+    """Oracle for kernels.zorder_kernel."""
+    d = x.shape[-1]
+    nbits = bits_for_dim(d, bits)
+    q = quantize(
+        x, jnp.asarray(lo, x.dtype), jnp.asarray(hi, x.dtype), nbits
+    )
+    return interleave_bits(q, nbits)
+
+
+def flash_ref(q, k, v, *, causal=True):
+    """Oracle for kernels.flash (f32 softmax attention)."""
+    out = full_softmax_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), causal=causal,
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+"""Launcher: meshes, sharding rules, dry-run, drivers."""

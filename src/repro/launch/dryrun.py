@@ -1,0 +1,232 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the fake device count before ANY jax import side effects — these
+two lines are first on purpose (jax locks the device count on first init).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_cells, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import use_mesh
+from repro.models import api
+from repro.nn.module import BF16
+from repro.serve.step import make_serve_step
+from repro.train import make_train_step
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<types>\([^)]*\)|[a-z0-9_]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def collective_stats(hlo_text: str) -> dict[str, Any]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    ``-done`` ops are skipped (the ``-start`` carries the shape); shapes in
+    the result tuple of a start op can repeat the operand — we take the
+    *result* types, which for all-gather/all-reduce equal the communicated
+    payload."""
+    per_op: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("types")):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        if m.group("start"):
+            # avoid double counting start/done pairs: count starts only
+            pass
+        per_op[op] = per_op.get(op, 0) + total
+        counts[op] = counts.get(op, 0) + 1
+    return {
+        "bytes_by_op": per_op,
+        "counts": counts,
+        "total_bytes": sum(per_op.values()),
+    }
+
+
+def _build_lowered(arch: str, shape_name: str, mesh, *, zeta_overrides=None):
+    cfg = get_config(arch)
+    if zeta_overrides:
+        cfg = cfg.replace(zeta=cfg.zeta.replace(**zeta_overrides)) \
+            if hasattr(cfg.zeta, "replace") else cfg
+    cell = SHAPES[shape_name]
+    prec = BF16
+
+    if cell.kind == "train":
+        tx = S.make_optimizer(cfg)
+        step = make_train_step(cfg, tx, prec)
+        st_shapes = S.state_specs(cfg)
+        st_shard = S.state_shardings(mesh, st_shapes)
+        b_shapes = S.batch_specs(cfg, cell)
+        b_shard = S.batch_shardings(mesh, cfg, cell)
+        fn = jax.jit(
+            step,
+            in_shardings=(st_shard, b_shard),
+            out_shardings=(st_shard, None),
+            donate_argnums=(0,),
+        )
+        return fn.lower(st_shapes, b_shapes)
+
+    if cell.kind == "prefill":
+        def prefill(params, batch):
+            logits, _ = api.apply_model(params, batch, cfg, prec)
+            return logits
+
+        p_shapes = jax.eval_shape(
+            lambda: api.init_params(jax.random.PRNGKey(0), cfg,
+                                    jnp.bfloat16)
+        )
+        p_shard = S.param_shardings(mesh, p_shapes)
+        b_shapes = S.batch_specs(cfg, cell)
+        b_shard = S.batch_shardings(mesh, cfg, cell)
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        return fn.lower(p_shapes, b_shapes)
+
+    # decode
+    serve = make_serve_step(cfg, prec)
+    p_shapes = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    )
+    p_shard = S.param_shardings(mesh, p_shapes)
+    c_shapes = S.cache_specs(cfg, SHAPES[shape_name])
+    c_shard = S.cache_shardings(mesh, c_shapes, cell)
+    tok = S.token_specs(cell)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    fn = jax.jit(
+        serve,
+        in_shardings=(p_shard, c_shard, None, None),
+        out_shardings=(None, None, c_shard),
+        donate_argnums=(1,),
+    )
+    return fn.lower(p_shapes, c_shapes, tok, rng)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             keep_hlo: str | None = None) -> dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+    }
+    try:
+        with use_mesh(mesh):
+            lowered = _build_lowered(arch, shape_name, mesh)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory"] = {
+                    k: int(getattr(mem, k))
+                    for k in (
+                        "argument_size_in_bytes",
+                        "output_size_in_bytes",
+                        "temp_size_in_bytes",
+                        "generated_code_size_in_bytes",
+                    )
+                    if hasattr(mem, k)
+                }
+            except Exception as e:  # CPU backend may not support it
+                rec["memory"] = {"error": str(e)[:200]}
+            try:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0]
+                rec["cost"] = {
+                    k: float(cost[k]) for k in
+                    ("flops", "transcendentals", "bytes accessed")
+                    if k in cost and isinstance(cost[k], (int, float))
+                }
+            except Exception as e:
+                rec["cost"] = {"error": str(e)[:200]}
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_stats(hlo)
+            rec["hlo_len"] = len(hlo)
+            if keep_hlo:
+                with open(keep_hlo, "w") as f:
+                    f.write(hlo)
+            del hlo
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = "".join(
+            traceback.format_exception_only(type(e), e)
+        )[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--keep-hlo")
+    args = ap.parse_args()
+
+    cells = (
+        all_cells() if args.all else [(args.arch, args.shape)]
+    )
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") == "ok":
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    for arch, shape in cells:
+        if (arch, shape, mesh_name) in done:
+            print(f"skip {arch} {shape} {mesh_name} (done)", flush=True)
+            continue
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       keep_hlo=args.keep_hlo)
+        line = json.dumps(rec)
+        print(line, flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""HLO forensics for the §Perf hillclimb: where do the bytes/collectives go?
+
+Compiles a 2-layer *unrolled* variant of a cell (same per-layer structure,
+cost_analysis-correct) and reports:
+  * top-k largest collectives (op, result shape, bytes)
+  * byte histogram by opcode family (sort, gather/scatter, dot, conv, ...)
+  * op counts
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.hlostat --arch qwen2-72b \
+        --shape train_4k [--optimized]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import re
+from collections import defaultdict
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import use_mesh
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?P<types>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[a-z0-9\-]+)\(", re.M,
+)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+FAMILIES = {
+    "sort": "sort",
+    "gather": "gather",
+    "scatter": "scatter",
+    "dot": "dot",
+    "convolution": "dot",
+    "dynamic-slice": "gather",
+    "dynamic-update-slice": "scatter",
+    "all-gather": "collective",
+    "all-reduce": "collective",
+    "reduce-scatter": "collective",
+    "all-to-all": "collective",
+    "collective-permute": "collective",
+}
+
+
+def shape_bytes(types: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(types):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def analyze(hlo: str, top: int = 15):
+    by_family = defaultdict(int)
+    counts = defaultdict(int)
+    collectives = []
+    for m in _OP_LINE.finditer(hlo):
+        op = m.group("op")
+        base = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            continue
+        fam = FAMILIES.get(base)
+        b = shape_bytes(m.group("types"))
+        counts[base] += 1
+        if fam:
+            by_family[fam if fam != "collective" else base] += b
+            if fam == "collective":
+                collectives.append((base, b, m.group("types")[:90]))
+    collectives.sort(key=lambda t: -t[1])
+    return by_family, counts, collectives[:top]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--steps", default=None,
+                    help="comma-joined optimization steps")
+    ap.add_argument("--layers", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.optimized or args.steps:
+        from repro.launch.optimized import optimize_config
+
+        cfg = optimize_config(
+            cfg, steps=tuple(args.steps.split(",")) if args.steps
+            else ("shard_search", "group_search", "ep_shard_map", "chunks8"))
+    if cfg.moe:
+        cfg = cfg.replace(n_layers=2, first_k_dense=1, scan_unroll=True)
+    elif cfg.enc_layers:
+        cfg = cfg.replace(enc_layers=1, n_layers=args.layers,
+                          scan_unroll=True)
+    else:
+        cfg = cfg.replace(n_layers=args.layers, scan_unroll=True)
+
+    mesh = make_production_mesh()
+    from repro.launch import dryrun as D
+
+    with use_mesh(mesh):
+        orig = D.get_config
+        try:
+            D.get_config = lambda a: cfg
+            lowered = D._build_lowered("patched", args.shape, mesh)
+        finally:
+            D.get_config = orig
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+    fam, counts, colls = analyze(hlo)
+    print(f"== {args.arch} {args.shape} "
+          f"{args.steps or ('OPTIMIZED' if args.optimized else 'baseline')} "
+          f"(2-layer unrolled, per-device bytes) ==")
+    print("-- bytes by family --")
+    for k, v in sorted(fam.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:22s} {v / 1e9:10.3f} GB")
+    print("-- top collectives --")
+    for op, b, ty in colls:
+        print(f"  {op:20s} {b / 1e9:9.3f} GB  {ty}")
+    print("-- op counts --")
+    for k, v in sorted(counts.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"  {k:22s} {v}")
+
+
+if __name__ == "__main__":
+    main()

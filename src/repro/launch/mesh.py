@@ -1,0 +1,33 @@
+"""Production meshes.
+
+A *function*, not a module-level constant: importing this module must never
+touch jax device state (tests see 1 CPU device; only dryrun.py fakes 512).
+
+Topology: TPU v5e pods of 16x16 = 256 chips.  Single-pod mesh is
+(data=16, model=16); the multi-pod mesh adds a leading ``pod`` axis
+(2 pods = 512 chips).  The ``pod`` axis intentionally carries only
+data-parallel traffic (gradient all-reduce, optionally compressed — see
+optim/compress.py) because cross-pod links are the slowest in the system.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names — lets the same
+    sharded code paths run in tests on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# v5e hardware constants used by the roofline analysis (per chip).
+PEAK_BF16_FLOPS = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW_PER_LINK = 50e9            # bytes/s per link

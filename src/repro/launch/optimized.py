@@ -1,0 +1,33 @@
+"""Beyond-paper optimization bundles for the §Perf hillclimb.
+
+Each flag is individually toggleable (the iteration log in EXPERIMENTS.md
+measures them stepwise); ``optimize_config`` applies the full bundle."""
+
+from __future__ import annotations
+
+from repro.nn.config import ModelConfig
+
+
+def optimize_config(cfg: ModelConfig, *, steps: tuple[str, ...] = (
+        "ep_shard_map",)
+) -> ModelConfig:
+    import dataclasses
+
+    z = cfg.zeta
+    if "shard_search" in steps:
+        z = z.replace(shard_search=True)
+    if "group_search" in steps and cfg.mixer != "ssd":
+        z = z.replace(group_search=True)
+    if "chunks8" in steps and z.num_chunks > 8:
+        z = z.replace(num_chunks=8)
+    out = cfg.replace(zeta=z)
+    if "ep_shard_map" in steps and cfg.moe is not None:
+        out = out.replace(moe=dataclasses.replace(
+            cfg.moe, ep_shard_map=True))
+    if "cap1" in steps and cfg.moe is not None:
+        out = out.replace(moe=dataclasses.replace(
+            out.moe, capacity_factor=1.0))
+    if "dots_remat" in steps:
+        out = out.replace(
+            remat_policy="dots_with_no_batch_dims_saveable")
+    return out

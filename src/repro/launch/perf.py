@@ -1,0 +1,60 @@
+"""§Perf hillclimb driver: measure a cell's corrected roofline terms under
+stepwise optimization bundles and append to results/perf.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen2-72b \
+        --shape train_4k --steps group_search --steps group_search,shard_search
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.optimized import optimize_config
+from repro.launch.roofline import corrected_cell_metrics, roofline_record
+from repro.launch.sharding import use_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--steps", action="append", default=[],
+                    help="comma-joined optimization step bundle; repeatable")
+    ap.add_argument("--out", default="results/perf.jsonl")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    for bundle in args.steps or ["baseline"]:
+        names = () if bundle == "baseline" else tuple(bundle.split(","))
+        cfg = get_config(args.arch)
+        if names:
+            cfg = optimize_config(cfg, steps=names)
+        try:
+            with use_mesh(mesh):
+                metrics = corrected_cell_metrics(
+                    args.arch, args.shape, mesh, cfg=cfg
+                )
+            rec = roofline_record(args.arch, args.shape, metrics, cfg=cfg)
+            rec["variant"] = bundle
+            rec["status"] = "ok"
+        except Exception as e:
+            rec = {"arch": args.arch, "shape": args.shape,
+                   "variant": bundle, "status": "fail",
+                   "error": str(e)[:1500]}
+        line = json.dumps(rec)
+        print(line, flush=True)
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Logical-axis sharding rules + activation constraints.
+
+Models annotate activations with *logical* names ("batch", "model",
+"expert", "seq"); the launcher binds a mesh plus a logical->mesh-axis rule
+table.  Outside any bound mesh, annotations are no-ops, so all model code
+runs unchanged on a single CPU device (tests, smoke configs).
+
+Parameter sharding is path-based (see :func:`param_pspec`): the conventions
+are FSDP over ``data`` for the contracting dim + tensor parallel over
+``model`` for heads / ffn / vocab, stacked-scan layer axis unsharded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    # logical activation axis -> mesh axis (or tuple of axes)
+    "batch": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+    "fbatch": ("data", "model"),   # flattened batch*heads (z-search)
+    "seq": None,
+    # parameter logical axes
+    "fsdp": ("data",),
+    "tp": ("model",),
+}
+
+MULTIPOD_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "model": ("model",),
+    "expert": ("model",),
+    "fbatch": ("pod", "data", "model"),
+    "seq": None,
+    "fsdp": ("data",),
+    "tp": ("model",),
+}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Bind a mesh + logical rules for shard_activation / param shardings."""
+    prev = getattr(_state, "ctx", None)
+    rules = dict(rules or (
+        MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+    ))
+    _state.ctx = (mesh, rules)
+    try:
+        with jax.sharding.use_mesh(mesh) if hasattr(
+            jax.sharding, "use_mesh"
+        ) else contextlib.nullcontext():
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Mesh | None:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _resolve(logical: tuple) -> P:
+    ctx = getattr(_state, "ctx", None)
+    rules = ctx[1] if ctx else DEFAULT_RULES
+    axes = []
+    for name in logical:
+        if name is None:
+            axes.append(None)
+            continue
+        mapped = rules.get(name)
+        if mapped is None:
+            axes.append(None)
+        elif isinstance(mapped, (tuple, list)):
+            axes.append(tuple(mapped) if len(mapped) > 1 else mapped[0])
+        else:
+            axes.append(mapped)
+    return P(*axes)
+
+
+def shard_activation(x: jax.Array, logical: tuple) -> jax.Array:
+    """Annotate an intermediate with a logical sharding; no-op without mesh.
+    Axes that do not divide the corresponding dim are dropped (guard);
+    "fbatch" (batch over the whole mesh) falls back to "batch" when the
+    dim is too small for the full device grid."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    logical = tuple(logical)
+    spec = guard_spec(mesh, _resolve(logical), x.shape)
+    if "fbatch" in logical:
+        idx = logical.index("fbatch")
+        if tuple(spec)[idx] is None:
+            fallback = tuple(
+                "batch" if name == "fbatch" else name for name in logical
+            )
+            spec = guard_spec(mesh, _resolve(fallback), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------- parameters
+
+# path regex -> logical spec for the *trailing* dims (leading scan axis
+# handled automatically).  First match wins.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embedding$",                     ("tp", "fsdp")),      # (V, D)
+    (r"(wq|wk|wv)/kernel$",             ("fsdp", "tp")),      # (D, H*hd)
+    (r"(wq|wk|wv)/bias$",               ("tp",)),
+    (r"wo$",                            ("tp", "fsdp")),      # (H*hd, D)
+    (r"(w_uq|w_uk|w_uv|w_kr|w_dq|w_dkv)$", ("fsdp", "tp")),
+    (r"experts/(w_up|w_gate)$",         ("expert", "fsdp", None)),  # (E,D,F)
+    (r"experts/w_down$",                ("expert", None, "fsdp")),  # (E,F,D)
+    (r"(w_up|w_gate)$",                 ("fsdp", "tp")),      # (D, F)
+    (r"w_down$",                        ("tp", "fsdp")),      # (F, D)
+    (r"router$",                        ("fsdp", None)),      # (D, E)
+    (r"(zq_proj|zk_proj)/w1$",          ("fsdp", None)),
+    (r"(zq_proj|zk_proj)/w2$",          (None, None)),
+    (r"in_proj$",                       ("fsdp", "tp")),      # ssd
+    (r"out_proj$",                      ("tp", "fsdp")),
+    (r"lm_head$",                       ("fsdp", "tp")),      # (D, V)
+    (r"(scale|bias|gamma_theta|A_log|D_skip|dt_bias)$", None),
+    (r"conv_kernel$",                   None),
+]
+
+
+def param_pspec(path: str, ndim: int, stacked: bool) -> P:
+    """PartitionSpec for a parameter given its '/'-joined path."""
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            if logical is None:
+                spec: tuple = (None,) * (ndim - (1 if stacked else 0))
+            else:
+                spec = tuple(logical)
+            break
+    else:
+        spec = (None,) * (ndim - (1 if stacked else 0))
+    # pad/truncate to the actual trailing rank
+    trailing = ndim - (1 if stacked else 0)
+    spec = tuple(spec)[:trailing]
+    spec = spec + (None,) * (trailing - len(spec))
+    ctx = getattr(_state, "ctx", None)
+    rules = ctx[1] if ctx else DEFAULT_RULES
+    resolved = []
+    for name in spec:
+        if name is None:
+            resolved.append(None)
+        else:
+            mapped = rules.get(name)
+            if mapped is None:
+                resolved.append(None)
+            elif isinstance(mapped, (tuple, list)):
+                resolved.append(
+                    tuple(mapped) if len(mapped) > 1 else mapped[0]
+                )
+            else:
+                resolved.append(mapped)
+    if stacked:
+        resolved = [None] + resolved  # scan layer axis replicated
+    return P(*resolved)
+
+
+def is_stacked_path(path: str) -> bool:
+    """Stacked-scan param: first segment is a layer stack ("layers",
+    "moe_layers", "enc_layers", "dec_layers", ...)."""
+    head = path.split("/", 1)[0]
+    return head.endswith("layers")
+
+
+def tree_paths(tree):
+    """Yield (path, leaf) with '/'-joined key paths."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for keypath, leaf in flat:
+        parts = []
+        for kp in keypath:
+            if hasattr(kp, "key"):
+                parts.append(str(kp.key))
+            elif hasattr(kp, "idx"):
+                parts.append(str(kp.idx))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def guard_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop sharding on any dim the mesh axes don't divide evenly."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(mesh: Mesh, tree):
+    """NamedSharding pytree matching ``tree`` (divisibility-guarded)."""
+    flat, treedef = tree_paths(tree)
+    specs = [
+        NamedSharding(
+            mesh,
+            guard_spec(
+                mesh,
+                param_pspec(path, leaf.ndim, is_stacked_path(path)),
+                leaf.shape,
+            ),
+        )
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,212 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every
+(architecture x shape) cell — nothing here allocates device memory.
+
+Shape cells (assigned):
+  train_4k     seq 4096,   global_batch 256  -> lowers train_step
+  prefill_32k  seq 32768,  global_batch 32   -> lowers forward (prefill)
+  decode_32k   seq 32768,  global_batch 128  -> lowers serve_step (1 token,
+                                                full KV/z cache)
+  long_500k    seq 524288, global_batch 1    -> lowers serve_step
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeCell
+from repro.launch.sharding import param_shardings
+from repro.models import api
+from repro.nn.config import ModelConfig
+from repro.nn.module import BF16, Precision
+from repro.optim import adafactor, adamw, chain, clip_by_global_norm
+from repro.train import init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+N_PATCHES = 512  # llava anyres stub
+
+
+def _axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[n] for n in names if n in mesh.shape)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_optimizer(cfg: ModelConfig):
+    if cfg.optimizer == "adafactor":
+        return chain(clip_by_global_norm(1.0), adafactor(1e-3))
+    return chain(clip_by_global_norm(1.0), adamw(3e-4))
+
+
+# --------------------------------------------------------------- batches
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, SDS]:
+    b, n = cell.global_batch, cell.seq_len
+    specs = {
+        "tokens": SDS((b, n), jnp.int32),
+        "labels": SDS((b, n), jnp.int32),
+        "mask": SDS((b, n), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        specs["prefix_embeds"] = SDS(
+            (b, N_PATCHES, cfg.frontend_dim), jnp.bfloat16
+        )
+    if api.is_encdec(cfg):
+        specs["frames"] = SDS(
+            (b, cfg.enc_context, cfg.frontend_dim), jnp.bfloat16
+        )
+    return specs
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, cell: ShapeCell):
+    baxes = batch_axes(mesh)
+    spec2 = P(baxes, None)
+    spec3 = P(baxes, None, None)
+    out = {
+        "tokens": NamedSharding(mesh, spec2),
+        "labels": NamedSharding(mesh, spec2),
+        "mask": NamedSharding(mesh, spec2),
+    }
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = NamedSharding(mesh, spec3)
+    if api.is_encdec(cfg):
+        out["frames"] = NamedSharding(mesh, spec3)
+    return out
+
+
+# ----------------------------------------------------------------- state
+
+
+def state_specs(cfg: ModelConfig, key=None) -> Any:
+    """Abstract TrainState via eval_shape — no allocation."""
+    tx = make_optimizer(cfg)
+
+    def build():
+        return init_train_state(jax.random.PRNGKey(0), cfg, tx)
+
+    return jax.eval_shape(build)
+
+
+def state_shardings(mesh: Mesh, state_shapes: Any):
+    """Params and optimizer moments share the parameter layout (ZeRO-style:
+    moments shard exactly like their parameters; adafactor's factored
+    rows/cols inherit the surviving dims' axes)."""
+    from repro.launch.sharding import (
+        guard_spec, is_stacked_path, param_pspec, tree_paths,
+    )
+
+    def moment_shardings(subtree):
+        flat, treedef = tree_paths(subtree)
+        res = []
+        for path, leaf in flat:
+            p = path
+            for pre in ("mu/", "nu/"):
+                if p.startswith(pre):
+                    p = p[len(pre):]
+            stacked = is_stacked_path(p)
+            if p.endswith("/vr"):
+                base = tuple(param_pspec(p[:-3], leaf.ndim + 1, stacked))
+                spec = P(*base[:-1])
+            elif p.endswith("/vc"):
+                base = tuple(param_pspec(p[:-3], leaf.ndim + 1, stacked))
+                spec = P(*(base[:-2] + base[-1:]))
+            else:
+                if p.endswith("/v"):
+                    p = p[:-2]
+                spec = param_pspec(p, leaf.ndim, stacked)
+            res.append(NamedSharding(mesh, guard_spec(mesh, spec, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, res)
+
+    return {
+        "params": param_shardings(mesh, state_shapes["params"]),
+        "opt_state": tuple(
+            moment_shardings(sub) for sub in state_shapes["opt_state"]
+        ),
+        "step": NamedSharding(mesh, P()),
+        "rng": NamedSharding(mesh, P()),
+    }
+
+
+# ----------------------------------------------------------------- cache
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> Any:
+    b, n = cell.global_batch, cell.seq_len
+
+    def build():
+        return api.cache_init(cfg, b, n, jnp.bfloat16)
+
+    return jax.eval_shape(build)
+
+
+def _cache_pspec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                 cell: ShapeCell) -> P:
+    baxes = batch_axes(mesh)
+    bsz = cell.global_batch
+    b_ok = bsz % _axis_size(mesh, baxes) == 0
+    bspec = baxes if b_ok else None
+    # sequence axis sharding (SP): over 'model' when batch is sharded,
+    # over everything when batch isn't (long_500k, global_batch=1).
+    seq_axes = ("model",) if b_ok else tuple(
+        a for a in mesh.axis_names
+    )
+    leaf = path.rsplit("/", 1)[-1]
+    nd = len(shape)
+    if leaf in ("v", "k", "zk"):          # (L, B, H, N, d)
+        return P(None, bspec, None, seq_axes, None)
+    if leaf in ("kv_lat", "k_rope"):      # (L, B, N, r)
+        return P(None, bspec, seq_axes, None)
+    if leaf in ("zk_sorted", "pos_sorted"):   # (L, F, Nmax)
+        return P(None, bspec if b_ok else None, seq_axes)
+    if leaf in ("ksum", "vsum"):          # (L, B, H, d)
+        return P(None, bspec, None, None)
+    if leaf == "state":                   # (L, B, H, P, S)
+        return P(None, bspec, None, None, None)
+    if leaf == "conv":                    # (L, B, W, C)
+        return P(None, bspec, None, "model")
+    if leaf == "memory":                  # (B, T_enc, D)
+        return P(bspec, None, None)
+    return P(*([None] * nd))              # length etc.
+
+
+def cache_shardings(mesh: Mesh, cache_shapes: Any, cell: ShapeCell):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for keypath, leaf in flat:
+        parts = []
+        for kp in keypath:
+            if hasattr(kp, "key"):
+                parts.append(str(kp.key))
+            elif hasattr(kp, "idx"):
+                parts.append(str(kp.idx))
+        path = "/".join(parts)
+        spec = _cache_pspec(path, leaf.shape, mesh, cell)
+        # guard: never shard an axis that doesn't divide
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            if dim % _axis_size(mesh, axes) == 0:
+                fixed.append(ax)
+            else:
+                fixed.append(None)
+        out.append(NamedSharding(mesh, P(*fixed)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def token_specs(cell: ShapeCell) -> SDS:
+    return SDS((cell.global_batch, 1), jnp.int32)
+
+
+def precision_for(cfg: ModelConfig) -> Precision:
+    return BF16

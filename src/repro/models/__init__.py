@@ -1,0 +1,1 @@
+"""Model zoo: decoder-only LM + encoder-decoder over pluggable mixers."""

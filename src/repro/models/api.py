@@ -1,0 +1,166 @@
+"""Model API: build/init/apply/decode for every architecture family.
+
+``batch`` dicts:
+  LM:      {"tokens": (B, N) int32[, "prefix_embeds": (B, Np, F)]}
+  enc-dec: {"tokens": (B, N) int32, "frames": (B, T_enc, F)}
+
+Decode ("serve") state is a pytree of stacked per-layer caches; one
+``decode_step`` consumes one new token per sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import attn_cache_init, attn_decode_step
+from repro.nn.config import ModelConfig
+from repro.nn.hybrid import hybrid_cache_init, hybrid_decode_step
+from repro.nn.layers import embedding_attend, mlp_apply
+from repro.nn.module import Precision
+from repro.nn.moe import moe_apply
+from repro.nn.ssd import ssd_cache_init, ssd_decode_step
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.lm import _norm_apply  # shared norm dispatch
+
+Params = Any
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.enc_layers > 0
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    if is_encdec(cfg):
+        return encdec_mod.encdec_init(key, cfg, dtype)
+    return lm_mod.lm_init(key, cfg, dtype)
+
+
+def apply_model(params: Params, batch: dict, cfg: ModelConfig,
+                prec: Precision, *, return_hidden: bool = False):
+    """Returns (logits, aux)."""
+    if is_encdec(cfg):
+        return encdec_mod.encdec_apply(
+            params, batch["frames"], batch["tokens"], cfg, prec
+        )
+    return lm_mod.lm_apply(
+        params, batch["tokens"], cfg, prec,
+        prefix_embeds=batch.get("prefix_embeds"),
+        return_hidden=return_hidden,
+    )
+
+
+# ------------------------------------------------------------------ decode
+
+
+def _layer_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.mixer == "attn":
+        return attn_cache_init(cfg, batch, max_len, dtype)
+    if cfg.mixer == "ssd":
+        return ssd_cache_init(cfg, batch, dtype)
+    return hybrid_cache_init(cfg, batch, max_len, dtype)
+
+
+def _block_decode(lp, lc, x_t, cfg: ModelConfig, prec: Precision, moe: bool):
+    h = _norm_apply(cfg, lp["norm1"], x_t)
+    if cfg.mixer == "attn":
+        mixed, lc = attn_decode_step(lp["mixer"], lc, h, cfg, prec)
+    elif cfg.mixer == "ssd":
+        mixed, lc = ssd_decode_step(lp["mixer"], lc, h, cfg, prec)
+    else:
+        mixed, lc = hybrid_decode_step(lp["mixer"], lc, h, cfg, prec)
+    x_t = x_t + mixed
+    if "ffn" in lp:
+        h2 = _norm_apply(cfg, lp["norm2"], x_t)
+        if moe:
+            y, _ = moe_apply(lp["ffn"], h2, cfg, prec)
+        else:
+            y = mlp_apply(lp["ffn"], h2, prec, activation=cfg.activation)
+        x_t = x_t + y
+    return x_t, lc
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Stacked decode caches for the whole model."""
+    if is_encdec(cfg):
+        return {
+            "self": encdec_mod.encdec_cache_init(cfg, batch, max_len, dtype),
+            # memory is produced by prefill (encode) and carried in state
+            "memory": jnp.zeros(
+                (batch, cfg.enc_context, cfg.d_model), dtype
+            ),
+        }
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    n_dense = cfg.n_layers - n_moe
+    cache: Params = {}
+
+    def stack(n):
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_layer_cache_init(cfg, batch, max_len, dtype)
+              for _ in range(n)],
+        )
+
+    if n_dense:
+        cache["layers"] = stack(n_dense)
+    if n_moe:
+        cache["moe_layers"] = stack(n_moe)
+    return cache
+
+
+def decode_step(params: Params, cache: Params, token_t: jax.Array,
+                cfg: ModelConfig, prec: Precision):
+    """token_t: (B, 1) int32 -> (logits (B, 1, V), new_cache)."""
+    if is_encdec(cfg):
+        logits, new_self = encdec_mod.encdec_decode_step(
+            params, cache["self"], cache["memory"], token_t, cfg, prec
+        )
+        return logits, dict(cache, self=new_self)
+
+    x = jnp.take(
+        params["embed"]["embedding"], token_t, axis=0
+    ).astype(prec.compute_dtype)
+
+    def _scan(body, x0, xs):
+        if cfg.scan_unroll:
+            n = jax.tree.leaves(xs)[0].shape[0]
+            ys = []
+            h = x0
+            for i in range(n):
+                h, y = body(h, jax.tree.map(lambda a: a[i], xs))
+                ys.append(y)
+            return h, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        return jax.lax.scan(body, x0, xs)
+
+    new_cache: Params = {}
+    if "layers" in params:
+        def body(h, scanned):
+            lp, lc = scanned
+            h, lc = _block_decode(lp, lc, h, cfg, prec, moe=False)
+            return h, lc
+
+        x, new_cache["layers"] = _scan(
+            body, x, (params["layers"], cache["layers"])
+        )
+    if "moe_layers" in params:
+        def body_moe(h, scanned):
+            lp, lc = scanned
+            h, lc = _block_decode(lp, lc, h, cfg, prec, moe=True)
+            return h, lc
+
+        x, new_cache["moe_layers"] = _scan(
+            body_moe, x, (params["moe_layers"], cache["moe_layers"])
+        )
+
+    h = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], h, None)
+    else:
+        logits = jnp.dot(
+            h.astype(jnp.float32), params["lm_head"].astype(jnp.float32)
+        )
+    return logits, new_cache

@@ -1,0 +1,52 @@
+"""Sequence classifier head over the LM trunk — the LRA configuration.
+
+The paper evaluates ZETA on LONG RANGE ARENA (sequence classification);
+this wraps the decoder trunk with mean-pooling + a linear head.  Attention
+stays causal (the paper trains LRA with its causal chunked search — the
+pooled representation sees the whole sequence through depth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import _norm_apply, block_init, block_apply, _norm_init
+from repro.nn.config import ModelConfig
+from repro.nn.layers import embedding_init, linear_init
+from repro.nn.module import Precision, scan_layers, stack_init
+
+
+def classifier_init(key, cfg: ModelConfig, num_classes: int,
+                    dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": embedding_init(k1, cfg.vocab, cfg.d_model, dtype=dtype),
+        "layers": stack_init(
+            lambda kk: block_init(kk, cfg, moe=False, dtype=dtype),
+            k2, cfg.n_layers,
+        ),
+        "final_norm": _norm_init(cfg, cfg.d_model, dtype),
+        "head": linear_init(k3, cfg.d_model, num_classes),
+    }
+
+
+def classifier_apply(p, tokens: jax.Array, cfg: ModelConfig,
+                     prec: Precision) -> jax.Array:
+    """tokens: (B, N) -> logits (B, num_classes)."""
+    x = jnp.take(p["embed"]["embedding"], tokens, axis=0).astype(
+        prec.compute_dtype
+    )
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        h, _ = block_apply(lp, h, cfg, prec, positions, moe=False)
+        return h
+
+    x = scan_layers(body, x, p["layers"], remat=True,
+                    remat_policy=cfg.remat_policy, unroll=cfg.scan_unroll)
+    h = _norm_apply(cfg, p["final_norm"], x)
+    pooled = jnp.mean(h, axis=1)
+    logits = jnp.dot(
+        pooled.astype(jnp.float32), p["head"]["kernel"].astype(jnp.float32)
+    )
+    return logits

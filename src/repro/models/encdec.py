@@ -1,0 +1,192 @@
+"""Whisper-style encoder-decoder.  The conv/mel frontend is a STUB: the data
+pipeline / input_specs provide pre-computed frame embeddings (B, T_enc, F);
+the model projects them to d_model, runs the (non-causal) encoder, and the
+decoder consumes tokens with causal self-attention (ZETA-able) plus full
+cross-attention into the small encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard_activation
+from repro.nn.attention import (
+    attn_apply,
+    attn_cache_init,
+    attn_decode_step,
+    attn_init,
+    cross_attn_apply,
+    cross_attn_init,
+)
+from repro.nn.config import ModelConfig
+from repro.nn.layers import (
+    embedding_attend,
+    embedding_init,
+    layernorm_apply,
+    layernorm_init,
+    linear_init,
+    mlp_apply,
+    mlp_init,
+)
+from repro.nn.module import Precision, scan_layers, stack_init
+from repro.nn.rope import sinusoidal_features
+
+
+def _enc_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype=dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype=dtype),
+        "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff,
+                        activation=cfg.activation, dtype=dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype=dtype),
+        "self_attn": attn_init(k1, cfg, dtype),
+        "norm_c": layernorm_init(cfg.d_model, dtype=dtype),
+        "cross": cross_attn_init(k2, cfg, dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype=dtype),
+        "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff,
+                        activation=cfg.activation, dtype=dtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 5)
+    return {
+        "frontend_proj": linear_init(
+            keys[0], cfg.frontend_dim, cfg.d_model
+        )["kernel"],
+        "enc_layers": stack_init(
+            lambda kk: _enc_block_init(kk, cfg, dtype), keys[1],
+            cfg.enc_layers,
+        ),
+        "enc_norm": layernorm_init(cfg.d_model, dtype=dtype),
+        "embed": embedding_init(keys[2], cfg.vocab, cfg.d_model, dtype=dtype),
+        "dec_layers": stack_init(
+            lambda kk: _dec_block_init(kk, cfg, dtype), keys[3],
+            cfg.n_layers,
+        ),
+        "final_norm": layernorm_init(cfg.d_model, dtype=dtype),
+    }
+
+
+def encode(p, frames: jax.Array, cfg: ModelConfig, prec: Precision):
+    """frames: (B, T_enc, frontend_dim) -> memory (B, T_enc, D)."""
+    x = jnp.dot(prec.cast(frames), prec.cast(p["frontend_proj"]))
+    pos = sinusoidal_features(
+        jnp.arange(x.shape[1], dtype=jnp.int32), cfg.d_model
+    )
+    x = x + pos[None].astype(x.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        a = attn_apply(
+            lp["attn"], layernorm_apply(lp["norm1"], h), cfg, prec,
+            positions, causal=False,
+        )
+        h = h + a
+        f = mlp_apply(lp["ffn"], layernorm_apply(lp["norm2"], h), prec,
+                      activation=cfg.activation)
+        return h + f
+
+    x = scan_layers(body, x, p["enc_layers"], remat=True,
+                    remat_policy=cfg.remat_policy, unroll=cfg.scan_unroll)
+    return layernorm_apply(p["enc_norm"], x)
+
+
+def decode_train(p, memory: jax.Array, tokens: jax.Array, cfg: ModelConfig,
+                 prec: Precision):
+    """Teacher-forced decoder. tokens: (B, N) -> logits (B, N, V)."""
+    x = jnp.take(p["embed"]["embedding"], tokens, axis=0).astype(
+        prec.compute_dtype
+    )
+    n = x.shape[1]
+    pos = sinusoidal_features(jnp.arange(n, dtype=jnp.int32), cfg.d_model)
+    x = x + pos[None].astype(x.dtype)
+    positions = jnp.arange(n, dtype=jnp.int32)
+    x = shard_activation(x, ("batch", None, None))
+
+    def body(h, lp):
+        a = attn_apply(
+            lp["self_attn"], layernorm_apply(lp["norm1"], h), cfg, prec,
+            positions, causal=True,
+        )
+        h = h + a
+        c = cross_attn_apply(
+            lp["cross"], layernorm_apply(lp["norm_c"], h), memory, cfg, prec
+        )
+        h = h + c
+        f = mlp_apply(lp["ffn"], layernorm_apply(lp["norm2"], h), prec,
+                      activation=cfg.activation)
+        return h + f
+
+    x = scan_layers(body, x, p["dec_layers"], remat=True,
+                    remat_policy=cfg.remat_policy, unroll=cfg.scan_unroll)
+    h = layernorm_apply(p["final_norm"], x)
+    logits = embedding_attend(p["embed"], h, None)
+    return shard_activation(logits, ("batch", None, "model"))
+
+
+def encdec_apply(p, frames, tokens, cfg: ModelConfig, prec: Precision):
+    memory = encode(p, frames, cfg, prec)
+    logits = decode_train(p, memory, tokens, cfg, prec)
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+# ------------------------------------------------------------------ decode
+
+
+def encdec_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Stacked self-attn caches for all decoder layers."""
+    def one(_):
+        return attn_cache_init(cfg, batch, max_len, dtype)
+
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[one(i) for i in range(cfg.n_layers)],
+    )
+
+
+def encdec_decode_step(p, cache, memory, token_t: jax.Array,
+                       cfg: ModelConfig, prec: Precision):
+    """token_t: (B, 1) -> (logits (B, 1, V), new_cache)."""
+    x = jnp.take(p["embed"]["embedding"], token_t, axis=0).astype(
+        prec.compute_dtype
+    )
+    t = cache["length"][0] if isinstance(cache["length"], jax.Array) and \
+        cache["length"].ndim else cache["length"]
+    pos = sinusoidal_features(
+        jnp.arange(1, dtype=jnp.int32) + t, cfg.d_model
+    )
+    x = x + pos[None].astype(x.dtype)
+
+    def body(h, scanned):
+        lp, lc = scanned
+        a, lc = attn_decode_step(
+            lp["self_attn"], lc, layernorm_apply(lp["norm1"], h), cfg, prec
+        )
+        h = h + a
+        c = cross_attn_apply(
+            lp["cross"], layernorm_apply(lp["norm_c"], h), memory, cfg, prec
+        )
+        h = h + c
+        f = mlp_apply(lp["ffn"], layernorm_apply(lp["norm2"], h), prec,
+                      activation=cfg.activation)
+        return h + f, lc
+
+    x, new_cache = jax.lax.scan(
+        lambda carry, sc: body(carry, sc),
+        x,
+        (p["dec_layers"], cache),
+    )
+    h = layernorm_apply(p["final_norm"], x)
+    logits = embedding_attend(p["embed"], h, None)
+    return logits, new_cache

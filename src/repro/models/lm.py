@@ -1,0 +1,243 @@
+"""Decoder-only LM over pluggable mixers (attention / SSD / hybrid) with
+optional MoE FFN, MLA, multi-token prediction, and modality-stub prefixes.
+
+Layers are initialised stacked and executed with lax.scan (+ remat) so HLO
+size is depth-independent; this is what keeps 80-layer × 512-device dry-runs
+compilable.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard_activation
+from repro.nn.attention import attn_apply, attn_init
+from repro.nn.config import ModelConfig
+from repro.nn.hybrid import hybrid_apply, hybrid_init
+from repro.nn.layers import (
+    embedding_attend,
+    embedding_init,
+    layernorm_apply,
+    layernorm_init,
+    linear_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+from repro.nn.module import Precision, scan_layers, stack_init
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.ssd import ssd_apply, ssd_init
+
+Params = Any
+
+
+def _norm_init(cfg: ModelConfig, d: int, dtype):
+    return (rmsnorm_init if cfg.norm == "rms" else layernorm_init)(
+        d, dtype=dtype
+    )
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    return (rmsnorm_apply if cfg.norm == "rms" else layernorm_apply)(p, x)
+
+
+# ------------------------------------------------------------------ block
+
+
+def block_init(key, cfg: ModelConfig, *, moe: bool, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": _norm_init(cfg, cfg.d_model, dtype)}
+    if cfg.mixer == "attn":
+        p["mixer"] = attn_init(k1, cfg, dtype)
+    elif cfg.mixer == "ssd":
+        p["mixer"] = ssd_init(k1, cfg, dtype)
+    else:
+        p["mixer"] = hybrid_init(k1, cfg, dtype)
+    if cfg.d_ff > 0 or moe:
+        p["norm2"] = _norm_init(cfg, cfg.d_model, dtype)
+        if moe:
+            p["ffn"] = moe_init(k2, cfg, dtype)
+        else:
+            ff = cfg.dense_ff or cfg.d_ff
+            p["ffn"] = mlp_init(
+                k2, cfg.d_model, ff, activation=cfg.activation, dtype=dtype
+            )
+    return p
+
+
+def block_apply(p, x, cfg: ModelConfig, prec: Precision, positions,
+                *, moe: bool, causal: bool = True):
+    """Pre-norm block.  Returns (x, aux_loss)."""
+    h = _norm_apply(cfg, p["norm1"], x)
+    if cfg.mixer == "attn":
+        mixed = attn_apply(p["mixer"], h, cfg, prec, positions, causal=causal)
+    elif cfg.mixer == "ssd":
+        mixed = ssd_apply(p["mixer"], h, cfg, prec)
+    else:
+        mixed = hybrid_apply(p["mixer"], h, cfg, prec, positions)
+    x = x + mixed
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        if moe:
+            y, aux = moe_apply(p["ffn"], h2, cfg, prec)
+        else:
+            y = mlp_apply(p["ffn"], h2, prec, activation=cfg.activation)
+        x = x + y
+    x = shard_activation(x, ("batch", None, None))
+    return x, aux
+
+
+# ------------------------------------------------------------------ model
+
+
+def lm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    n_dense = cfg.n_layers - n_moe
+    p: Params = {
+        "embed": embedding_init(keys[0], cfg.vocab, cfg.d_model, dtype=dtype),
+        "final_norm": _norm_init(cfg, cfg.d_model, dtype),
+    }
+    if n_dense:
+        p["layers"] = stack_init(
+            lambda kk: block_init(kk, cfg, moe=False, dtype=dtype),
+            keys[1], n_dense,
+        )
+    if n_moe:
+        p["moe_layers"] = stack_init(
+            lambda kk: block_init(kk, cfg, moe=True, dtype=dtype),
+            keys[2], n_moe,
+        )
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(
+            keys[3], cfg.d_model, cfg.vocab
+        )["kernel"]
+    if cfg.frontend is not None:
+        p["frontend_proj"] = linear_init(
+            keys[4], cfg.frontend_dim, cfg.d_model
+        )["kernel"]
+    if cfg.mtp_depth > 0:
+        p["mtp"] = {
+            "proj": linear_init(keys[5], 2 * cfg.d_model, cfg.d_model)[
+                "kernel"
+            ],
+            "block": block_init(keys[6], cfg, moe=False, dtype=dtype),
+            "norm_h": _norm_init(cfg, cfg.d_model, dtype),
+            "norm_e": _norm_init(cfg, cfg.d_model, dtype),
+        }
+    return p
+
+
+def _logits(p, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = embedding_attend(p["embed"], h, None)
+    else:
+        logits = jnp.dot(
+            h.astype(jnp.float32), p["lm_head"].astype(jnp.float32)
+        )
+    return shard_activation(logits, ("batch", None, "model"))
+
+
+def lm_apply(
+    p: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    prec: Precision,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    return_hidden: bool = False,
+):
+    """tokens: (B, N) int32; prefix_embeds: (B, Np, frontend_dim) from the
+    modality stub (prepended).  Returns (logits over token part, aux)."""
+    x = jnp.take(
+        p["embed"]["embedding"], tokens, axis=0
+    ).astype(prec.compute_dtype)
+    n_prefix = 0
+    if prefix_embeds is not None:
+        pe = jnp.dot(
+            prec.cast(prefix_embeds), prec.cast(p["frontend_proj"])
+        )
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    x = shard_activation(x, ("batch", None, None))
+    n_total = x.shape[1]
+    positions = jnp.arange(n_total, dtype=jnp.int32)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if "layers" in p:
+        def dense_body(h, layer_p):
+            h, aux = block_apply(
+                layer_p, h, cfg, prec, positions, moe=False
+            )
+            return h
+
+        x = scan_layers(
+            dense_body, x, p["layers"],
+            remat=True, remat_policy=cfg.remat_policy,
+            unroll=cfg.scan_unroll,
+        )
+    if "moe_layers" in p:
+        def moe_body(carry, layer_p):
+            h, aux_acc = carry
+            h, aux = block_apply(layer_p, h, cfg, prec, positions, moe=True)
+            return (h, aux_acc + aux)
+
+        def moe_step(carry, layer_p):
+            return moe_body(carry, layer_p), None
+
+        from repro.nn.module import _REMAT_POLICIES
+        step = jax.checkpoint(
+            moe_step, policy=_REMAT_POLICIES[cfg.remat_policy],
+            prevent_cse=False,
+        )
+        if cfg.scan_unroll:
+            carry = (x, aux_total)
+            n = jax.tree.leaves(p["moe_layers"])[0].shape[0]
+            for i in range(n):
+                layer = jax.tree.map(lambda a: a[i], p["moe_layers"])
+                carry, _ = step(carry, layer)
+            x, aux_total = carry
+        else:
+            (x, aux_total), _ = jax.lax.scan(
+                step, (x, aux_total), p["moe_layers"]
+            )
+
+    h = _norm_apply(cfg, p["final_norm"], x)
+    if n_prefix:
+        h_tok = h[:, n_prefix:]
+    else:
+        h_tok = h
+    logits = _logits(p, cfg, h_tok)
+    aux = {"moe_aux": aux_total}
+    if return_hidden:
+        aux["hidden"] = h_tok
+    return logits, aux
+
+
+def mtp_logits(p: Params, cfg: ModelConfig, prec: Precision,
+               hidden: jax.Array, next_tokens: jax.Array) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction head (depth 1): combine the main
+    trunk's hidden state at t with the embedding of token t+1 to predict
+    t+2.  hidden: (B, N, D); next_tokens: (B, N)."""
+    mp = p["mtp"]
+    emb = jnp.take(
+        p["embed"]["embedding"], next_tokens, axis=0
+    ).astype(prec.compute_dtype)
+    h = jnp.concatenate(
+        [
+            _norm_apply(cfg, mp["norm_h"], hidden),
+            _norm_apply(cfg, mp["norm_e"], emb),
+        ],
+        axis=-1,
+    )
+    h = jnp.dot(h, prec.cast(mp["proj"]))
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    h, _ = block_apply(mp["block"], h, cfg, prec, positions, moe=False)
+    h = _norm_apply(cfg, p["final_norm"], h)
+    return _logits(p, cfg, h)

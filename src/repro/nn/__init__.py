@@ -1,0 +1,1 @@
+"""Neural substrate: layers, attention, MoE, SSD, hybrid mixers."""

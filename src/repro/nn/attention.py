@@ -1,0 +1,469 @@
+"""Attention layer: GQA / MLA over pluggable mechanisms (full / ZETA / top-k).
+
+In ``zeta`` mode the layer has *no* full-dim Q/K projections: queries and
+keys are produced by two-layer tanh projectors into d_k dims (paper §4.2),
+fed by the hidden state concatenated with sinusoidal position features (the
+Euclidean metric space needs an explicit position signal; RoPE applies only
+to the full-attention path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ref as core_ref
+from repro.core import topk as core_topk
+from repro.core import zorder as core_zorder
+from repro.core.attention import zeta_attention
+from repro.core.cauchy import cauchy_weights, gamma2_from_param
+from repro.nn.config import ModelConfig
+from repro.nn.layers import (
+    linear_apply,
+    linear_init,
+    proj2_apply,
+    proj2_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+from repro.nn.module import Precision
+from repro.nn.rope import apply_rope, rope_table, sinusoidal_features
+
+# ------------------------------------------------------------------ init
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    d = cfg.d_model
+    keys = jax.random.split(key, 10)
+    p = {}
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_dim = m.nope_head_dim + m.rope_head_dim
+        p["w_dq"] = linear_init(keys[0], d, m.q_lora_rank)["kernel"]
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype=dtype)
+        p["w_uq"] = linear_init(keys[1], m.q_lora_rank, hq * qk_dim)["kernel"]
+        p["w_dkv"] = linear_init(keys[2], d, m.kv_lora_rank)["kernel"]
+        p["kv_norm"] = rmsnorm_init(m.kv_lora_rank, dtype=dtype)
+        p["w_uk"] = linear_init(
+            keys[3], m.kv_lora_rank, hq * m.nope_head_dim
+        )["kernel"]
+        p["w_kr"] = linear_init(keys[4], d, m.rope_head_dim)["kernel"]
+        p["w_uv"] = linear_init(
+            keys[5], m.kv_lora_rank, hq * m.v_head_dim
+        )["kernel"]
+        p["wo"] = linear_init(keys[6], hq * m.v_head_dim, d)["kernel"]
+    else:
+        p["wv"] = linear_init(keys[2], d, hkv * hd, bias=cfg.qkv_bias)
+        p["wo"] = linear_init(keys[3], hq * hd, d)["kernel"]
+        if cfg.attention in ("full", "topk"):
+            p["wq"] = linear_init(keys[0], d, hq * hd, bias=cfg.qkv_bias)
+            p["wk"] = linear_init(keys[1], d, hkv * hd, bias=cfg.qkv_bias)
+
+    if cfg.attention == "zeta":
+        z = cfg.zeta
+        d_in = (cfg.mla.kv_lora_rank if cfg.mla else d) + z.pos_feat_dim
+        dq_in = (cfg.mla.q_lora_rank if cfg.mla else d) + z.pos_feat_dim
+        p["zq_proj"] = proj2_init(keys[7], dq_in, z.proj_hidden, hq * z.d_k)
+        if z.shared_qk and d_in == dq_in:
+            p["zk_proj"] = p["zq_proj"]
+        else:
+            p["zk_proj"] = proj2_init(
+                keys[8], d_in, z.proj_hidden, hkv * z.d_k
+            )
+        # gamma^2 = sigmoid(theta) per head, init theta=0 -> gamma^2 = 0.5
+        p["gamma_theta"] = jnp.zeros((hq,), dtype)
+    return p
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    """(B, N, h*d) -> (B, h, N, d)."""
+    b, n, _ = x.shape
+    return x.reshape(b, n, h, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(B, h, N, d) -> (B, N, h*d)."""
+    b, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(B, Hkv, N, d) -> (B, Hkv*groups, N, d)."""
+    if groups == 1:
+        return x
+    b, h, n, d = x.shape
+    return jnp.broadcast_to(
+        x[:, :, None], (b, h, groups, n, d)
+    ).reshape(b, h * groups, n, d)
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, prec: Precision, positions):
+    """Returns (q (B,Hq,N,qk), k (B,Hq,N,qk), v (B,Hq,N,v), q_lat, kv_lat)."""
+    m = cfg.mla
+    hq = cfg.n_heads
+    xc = prec.cast(x)
+    q_lat = rmsnorm_apply(p["q_norm"], xc @ prec.cast(p["w_dq"]))
+    q = _split_heads(q_lat @ prec.cast(p["w_uq"]), hq)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    kv_lat = rmsnorm_apply(p["kv_norm"], xc @ prec.cast(p["w_dkv"]))
+    k_nope = _split_heads(kv_lat @ prec.cast(p["w_uk"]), hq)
+    k_rope = (xc @ prec.cast(p["w_kr"]))[:, None]  # (B, 1, N, rope_dim)
+    cos, sin = rope_table(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    k_rope = jnp.broadcast_to(
+        k_rope, (k_rope.shape[0], hq) + k_rope.shape[2:]
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    v = _split_heads(kv_lat @ prec.cast(p["w_uv"]), hq)
+    return q, k, v, q_lat, kv_lat
+
+
+def _zeta_coords(p, src_q, src_k, cfg: ModelConfig, prec: Precision,
+                 positions):
+    """Project hidden states (+ position feats) into d_k metric coords.
+    src_q: (B, N, Dq); src_k: (B, N, Dk).  Returns zq (B,Hq,N,d_k),
+    zk (B,Hkv,N,d_k)."""
+    z = cfg.zeta
+    feats = sinusoidal_features(positions, z.pos_feat_dim)
+    feats = jnp.broadcast_to(
+        feats[None], (src_q.shape[0],) + feats.shape
+    ).astype(src_q.dtype)
+    zq = proj2_apply(p["zq_proj"], jnp.concatenate([src_q, feats], -1), prec)
+    zk = proj2_apply(p["zk_proj"], jnp.concatenate([src_k, feats], -1), prec)
+    hq = cfg.n_heads
+    hkv = cfg.n_heads if cfg.mla is not None else cfg.kv_heads
+    return _split_heads(zq, hq), _split_heads(zk, hkv)
+
+
+# ------------------------------------------------------------------ apply
+
+
+def attn_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
+               positions: jax.Array | None = None,
+               causal: bool = True) -> jax.Array:
+    """Full-sequence attention. x: (B, N, D) -> (B, N, D)."""
+    b, n, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    groups = hq // hkv
+    if positions is None:
+        positions = jnp.arange(n, dtype=jnp.int32)
+
+    if cfg.mla is not None:
+        q, k, v, q_lat, kv_lat = _mla_qkv(p, x, cfg, prec, positions)
+        if cfg.attention == "zeta":
+            zq, zk = _zeta_coords(p, q_lat, kv_lat, cfg, prec, positions)
+            g2 = gamma2_from_param(p["gamma_theta"]).astype(x.dtype)
+            z = cfg.zeta
+            out = zeta_attention(
+                zq, zk, v, g2,
+                num_chunks=z.num_chunks, k=z.k, bits=z.bits,
+                history_mean=z.history_mean, local_window=z.local_window,
+                score=z.score, impl=z.impl,
+            ) if causal else _zeta_noncausal(zq, zk, v, g2, z)
+        else:
+            out = _softmax_attention(q, k, v, causal)
+        y = _merge_heads(out)
+        return jnp.dot(y, prec.cast(p["wo"]))
+
+    v = _split_heads(linear_apply(p["wv"], x, prec), hkv)
+
+    if cfg.attention == "zeta":
+        zq, zk = _zeta_coords(p, x, x, cfg, prec, positions)
+        z = cfg.zeta
+        if z.group_search and causal:
+            # GQA-deduplicated search: sort once per KV head (§Perf)
+            zk_s, vv_s = zk, v
+        else:
+            zk_s, vv_s = _repeat_kv(zk, groups), _repeat_kv(v, groups)
+        g2 = gamma2_from_param(p["gamma_theta"]).astype(x.dtype)
+        if causal:
+            out = zeta_attention(
+                zq, zk_s, vv_s, g2,
+                num_chunks=z.num_chunks, k=z.k, bits=z.bits,
+                history_mean=z.history_mean, local_window=z.local_window,
+                score=z.score, impl=z.impl, shard_search=z.shard_search,
+            )
+        else:
+            # non-causal (encoder) path keeps the repeated-KV layout
+            out = _zeta_noncausal(
+                zq, _repeat_kv(zk, groups), _repeat_kv(v, groups), g2, z
+            )
+    else:
+        q = _split_heads(linear_apply(p["wq"], x, prec), hq)
+        k = _split_heads(linear_apply(p["wk"], x, prec), hkv)
+        cos, sin = rope_table(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k = _repeat_kv(k, groups)
+        vv = _repeat_kv(v, groups)
+        if cfg.attention == "topk":
+            out = core_ref.gupta_topk_attention(q, k, vv, cfg.zeta.k)
+        else:
+            out = _softmax_attention(q, k, vv, causal)
+
+    return jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
+
+
+def _zeta_noncausal(zq, zk, v, g2, z):
+    from repro.core.attention import zeta_attention_noncausal
+
+    return zeta_attention_noncausal(
+        zq, zk, v, g2, k=z.k, bits=z.bits, impl=z.impl
+    )
+
+
+def _softmax_attention(q, k, v, causal: bool) -> jax.Array:
+    out32 = core_ref.full_softmax_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), causal=causal,
+    )
+    return out32.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ cross
+
+
+def cross_attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    hq, hd = cfg.n_heads, cfg.resolved_head_dim
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(k1, d, hq * hd),
+        "wk": linear_init(k2, d, hq * hd),
+        "wv": linear_init(k3, d, hq * hd),
+        "wo": linear_init(k4, hq * hd, d)["kernel"],
+    }
+
+
+def cross_attn_apply(p, x, memory, cfg: ModelConfig, prec: Precision):
+    hq = cfg.n_heads
+    q = _split_heads(linear_apply(p["wq"], x, prec), hq)
+    k = _split_heads(linear_apply(p["wk"], memory, prec), hq)
+    v = _split_heads(linear_apply(p["wv"], memory, prec), hq)
+    out = _softmax_attention(q, k, v, causal=False)
+    return jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
+
+
+# ------------------------------------------------------------------ decode
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    """Per-layer decode cache (unstacked; models stack over layers)."""
+    hkv, hd = cfg.kv_heads, cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        cache = {
+            "kv_lat": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+        }
+        hkv_eff = 1
+        dk_src = m.kv_lora_rank
+    else:
+        cache = {"v": jnp.zeros((batch, hkv, max_len, hd), dtype)}
+        if cfg.attention != "zeta":
+            # ZETA never uses full-dim keys; only materialise them otherwise.
+            cache["k"] = jnp.zeros((batch, hkv, max_len, hd), dtype)
+        hkv_eff = hkv
+    if cfg.attention == "zeta":
+        z = cfg.zeta
+        cache.update({
+            "zk": jnp.zeros((batch, hkv_eff, max_len, z.d_k), dtype),
+            "zk_sorted": jnp.full(
+                (batch * hkv_eff, max_len), core_topk.SENTINEL, jnp.int32
+            ),
+            "pos_sorted": jnp.zeros((batch * hkv_eff, max_len), jnp.int32),
+            "ksum": jnp.zeros((batch, hkv_eff, z.d_k), jnp.float32),
+            "vsum": jnp.zeros((batch, hkv_eff, hd if cfg.mla is None
+                               else cfg.mla.v_head_dim * cfg.n_heads),
+                              jnp.float32),
+        })
+    cache["length"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
+                     prec: Precision):
+    """One-token decode.  x_t: (B, 1, D).  Returns (y_t, new_cache).
+
+    The ZETA path searches the incrementally-maintained sorted z-code cache
+    (O(log N) search + O(k) aggregation per token) instead of re-sorting.
+    """
+    b = x_t.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    groups = hq // hkv
+    t = cache["length"]
+    pos_t = jnp.full((1,), t, jnp.int32)
+
+    if cfg.mla is not None:
+        return _mla_decode_step(p, cache, x_t, cfg, prec, pos_t)
+
+    v_t = _split_heads(linear_apply(p["wv"], x_t, prec), hkv)  # (B,hkv,1,hd)
+
+    if cfg.attention == "zeta":
+        z = cfg.zeta
+        zq_t, zk_t = _zeta_coords(p, x_t, x_t, cfg, prec, pos_t)
+        nbits = core_zorder.bits_for_dim(z.d_k, z.bits)
+        f = b * hkv
+        # Delayed insertion keeps decode *conservative* w.r.t. training:
+        # during training a query in chunk m sees keys of strictly earlier
+        # chunks (positions < m*M, i.e. between 0 and M-1 recent keys
+        # excluded).  At decode, key j becomes searchable once it is M steps
+        # old, so the decode candidate pool {0..t-M-1} is always a subset of
+        # the training pool {0..floor(t/M)*M-1} — never *more* history than
+        # training saw, at O(1) sorted-insert work per token.
+        delay = cache["zk"].shape[2] // max(z.num_chunks, 1)
+        searchable = jnp.maximum(t - delay, 0)
+        fq = b * hq
+        qz_t = core_zorder.zorder_encode_with_bounds(
+            zq_t.reshape(fq, 1, z.d_k).astype(jnp.float32), -1.0, 1.0, nbits
+        )[:, 0]
+        # queries of a GQA group search their kv head's sorted cache
+        skz = jnp.repeat(cache["zk_sorted"], groups, axis=0)
+        spos = jnp.repeat(cache["pos_sorted"], groups, axis=0)
+        sel = core_topk.prefix_topk_decode(
+            skz, spos, searchable, qz_t, k=z.k
+        )
+        idx = sel.idx[:, 0]                                    # (Fq, k)
+        valid = sel.valid[:, 0]
+        zk_all = cache["zk"].reshape(f, -1, z.d_k)
+        zk_all = jnp.repeat(zk_all, groups, axis=0)
+        v_all = cache["v"].reshape(f, -1, hd)
+        v_all = jnp.repeat(v_all, groups, axis=0)
+        k_sel = jnp.take_along_axis(zk_all, idx[..., None], axis=1)
+        v_sel = jnp.take_along_axis(v_all, idx[..., None], axis=1)
+        # history-mean token over past tokens (+ current key/value)
+        new_ksum = cache["ksum"] + zk_t[:, :, 0].astype(jnp.float32)
+        new_vsum = cache["vsum"].reshape(b, hkv, hd) + (
+            v_t[:, :, 0].astype(jnp.float32)
+        )
+        denom = (t + 1).astype(jnp.float32)
+        km = jnp.repeat(
+            (new_ksum / denom).reshape(f, 1, z.d_k), groups, axis=0
+        )
+        vm = jnp.repeat(
+            (new_vsum / denom).reshape(f, 1, hd), groups, axis=0
+        )
+        k_sel = jnp.concatenate(
+            [k_sel, km.astype(k_sel.dtype)], axis=1
+        )
+        v_sel = jnp.concatenate(
+            [v_sel, vm.astype(v_sel.dtype)], axis=1
+        )
+        valid = jnp.concatenate(
+            [valid, jnp.ones((fq, 1), bool)], axis=1
+        )
+        g2 = gamma2_from_param(p["gamma_theta"]).astype(x_t.dtype)
+        g2 = jnp.broadcast_to(g2[None], (b, hq)).reshape(fq, 1)
+        qf = zq_t.reshape(fq, z.d_k)
+        d2 = jnp.sum(
+            (qf[:, None, :] - k_sel.astype(qf.dtype)) ** 2, axis=-1
+        )
+        w = cauchy_weights(d2, g2, valid)
+        out = jnp.einsum("fk,fkd->fd", w, v_sel.astype(qf.dtype))
+        out = out.reshape(b, hq, 1, hd)
+
+        # cache updates: write current raw key, then (if old enough) insert
+        # the key that just became ``delay`` steps old into the sorted cache.
+        zk_cache = cache["zk"].at[:, :, t].set(zk_t[:, :, 0])
+        t_ins = jnp.maximum(t - delay, 0)
+        ins_key = jnp.take_along_axis(
+            zk_cache.reshape(f, -1, z.d_k),
+            jnp.broadcast_to(t_ins, (f, 1))[..., None],
+            axis=1,
+        )                                                      # (f,1,d_k)
+        ins_kz = core_zorder.zorder_encode_with_bounds(
+            ins_key.astype(jnp.float32), -1.0, 1.0, nbits
+        )[:, 0]
+        cand_skz, cand_spos = core_topk.sorted_insert(
+            cache["zk_sorted"], cache["pos_sorted"],
+            jnp.broadcast_to(searchable, (f,)), ins_kz,
+            jnp.broadcast_to(t_ins, (f,)).astype(jnp.int32),
+        )
+        do_insert = t >= delay
+        new_skz = jnp.where(do_insert, cand_skz, cache["zk_sorted"])
+        new_spos = jnp.where(do_insert, cand_spos, cache["pos_sorted"])
+        new_cache = dict(
+            cache,
+            zk=zk_cache,
+            v=cache["v"].at[:, :, t].set(v_t[:, :, 0]),
+            zk_sorted=new_skz,
+            pos_sorted=new_spos,
+            ksum=new_ksum,
+            vsum=new_vsum.reshape(cache["vsum"].shape),
+            length=t + 1,
+        )
+    else:
+        q_t = _split_heads(linear_apply(p["wq"], x_t, prec), hq)
+        k_t = _split_heads(linear_apply(p["wk"], x_t, prec), hkv)
+        cos, sin = rope_table(pos_t, hd, cfg.rope_theta)
+        q_t = apply_rope(q_t, cos, sin)
+        k_t = apply_rope(k_t, cos, sin)
+        k_cache = cache["k"].at[:, :, t].set(k_t[:, :, 0])
+        v_cache = cache["v"].at[:, :, t].set(v_t[:, :, 0])
+        kk = _repeat_kv(k_cache, groups)
+        vv = _repeat_kv(v_cache, groups)
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", q_t.astype(jnp.float32),
+            kk.astype(jnp.float32),
+        ) / jnp.sqrt(float(hd))
+        n_max = kk.shape[2]
+        live = jnp.arange(n_max) <= t
+        logits = jnp.where(live[None, None, None, :], logits, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhqk,bhkd->bhqd", w, vv.astype(jnp.float32)
+        ).astype(x_t.dtype)
+        new_cache = dict(cache, k=k_cache, v=v_cache, length=t + 1)
+
+    y = jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
+    return y, new_cache
+
+
+def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
+                     pos_t):
+    """MLA decode: cache the latent + rope key only (DeepSeek's trick)."""
+    m = cfg.mla
+    b = x_t.shape[0]
+    hq = cfg.n_heads
+    t = cache["length"]
+    xc = prec.cast(x_t)
+    q_lat = rmsnorm_apply(p["q_norm"], xc @ prec.cast(p["w_dq"]))
+    q = _split_heads(q_lat @ prec.cast(p["w_uq"]), hq)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    kv_lat = rmsnorm_apply(p["kv_norm"], xc @ prec.cast(p["w_dkv"]))
+    k_rope_t = xc @ prec.cast(p["w_kr"])
+    cos, sin = rope_table(pos_t, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_t = apply_rope(k_rope_t[:, None], cos, sin)[:, 0]
+
+    kv_cache = cache["kv_lat"].at[:, t].set(kv_lat[:, 0])
+    kr_cache = cache["k_rope"].at[:, t].set(k_rope_t[:, 0])
+
+    # absorbed attention: logits = q_nope^T W_uk c_j + q_rope^T k_rope_j
+    w_uk = prec.cast(p["w_uk"]).reshape(m.kv_lora_rank, hq, m.nope_head_dim)
+    q_abs = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)
+    logits = (
+        jnp.einsum("bhqr,bnr->bhqn", q_abs.astype(jnp.float32),
+                   kv_cache.astype(jnp.float32))
+        + jnp.einsum("bhqd,bnd->bhqn", q_rope.astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    ) / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    n_max = kv_cache.shape[1]
+    live = jnp.arange(n_max) <= t
+    logits = jnp.where(live[None, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum(
+        "bhqn,bnr->bhqr", w, kv_cache.astype(jnp.float32)
+    )  # (B, H, 1, r)
+    w_uv = prec.cast(p["w_uv"]).reshape(m.kv_lora_rank, hq, m.v_head_dim)
+    out = jnp.einsum("bhqr,rhd->bhqd", ctx.astype(x_t.dtype), w_uv)
+    y = jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
+    new_cache = dict(cache, kv_lat=kv_cache, k_rope=kr_cache, length=t + 1)
+    return y, new_cache

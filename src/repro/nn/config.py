@@ -1,0 +1,113 @@
+"""Config dataclasses shared by layers, models, and the launcher."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class ZetaConfig:
+    """Paper hyper-parameters (Appendix C): d_k = 3, k = 32, C in {4..32}."""
+    d_k: int = 3
+    k: int = 32
+    num_chunks: int = 16
+    bits: int | None = None          # default: floor(30 / d_k)
+    local_window: int = 0            # beyond-paper own-chunk window (0 = off)
+    history_mean: bool = True
+    score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy"
+    proj_hidden: int = 32            # hidden width of the 2-layer f_k / f_q
+    pos_feat_dim: int = 8            # sinusoidal position features fed to f_k/f_q
+    shared_qk: bool = False          # Reformer-style shared projection
+    impl: Literal["xla", "pallas"] = "xla"
+    # ---- beyond-paper performance flags (see launch/optimized.py) ----
+    shard_search: bool = False       # shard the z-search over batch*heads
+    group_search: bool = False       # GQA: sort once per KV head, not per Q head
+
+    def replace(self, **kw) -> "ZetaConfig":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style multi-head latent attention."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    shared_experts: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.001
+    router_dtype: str = "float32"
+    ep_shard_map: bool = False       # explicit all-to-all expert parallelism
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD."""
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    chunk: int = 64
+    conv_width: int = 4
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int = 0                 # 0 for attention-free archs
+    n_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    d_ff: int = 0
+    mixer: Literal["attn", "ssd", "hybrid"] = "attn"
+    attention: Literal["zeta", "full", "topk"] = "zeta"
+    zeta: ZetaConfig = ZetaConfig()
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    activation: str = "swiglu"
+    norm: Literal["rms", "layer"] = "rms"
+    tie_embeddings: bool = True
+    first_k_dense: int = 0           # leading dense layers before MoE stack
+    dense_ff: int | None = None      # d_ff of those dense layers
+    mtp_depth: int = 0               # DeepSeek multi-token-prediction heads
+    enc_layers: int = 0              # >0 -> encoder-decoder (whisper)
+    enc_context: int = 1500          # encoder memory length (audio frames)
+    frontend: Literal[None, "vision", "audio"] = None
+    frontend_dim: int = 0            # patch/frame embedding dim from the stub
+    max_position: int = 1 << 20
+    remat_policy: str | None = "nothing_saveable"
+    optimizer: Literal["adamw", "adafactor"] = "adamw"
+    scan_unroll: bool = False    # roofline-analysis variants only
+    # adafactor is the default for the 1T-class MoE configs: full Adam
+    # moments (12 B/param) cannot fit the assigned 256-chip pod.
+    # top-k baseline (Gupta et al. 2021) uses zeta.k as its k.
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

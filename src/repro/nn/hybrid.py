@@ -1,0 +1,62 @@
+"""Hymba-style hybrid mixer: parallel attention + SSM heads in one layer.
+
+Both branches see the same normalised input; each branch output is
+RMS-normalised and combined with learned per-dim scales (mean fusion), per
+Hymba (arXiv:2411.13676).  The attention branch uses ZETA when configured.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import (
+    attn_apply,
+    attn_cache_init,
+    attn_decode_step,
+    attn_init,
+)
+from repro.nn.config import ModelConfig
+from repro.nn.layers import rmsnorm_apply, rmsnorm_init
+from repro.nn.module import Precision
+from repro.nn.ssd import ssd_apply, ssd_cache_init, ssd_decode_step, ssd_init
+
+
+def hybrid_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn_init(k1, cfg, dtype),
+        "ssm": ssd_init(k2, cfg, dtype),
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype=dtype),
+        "ssm_norm": rmsnorm_init(cfg.d_model, dtype=dtype),
+        "beta_attn": jnp.ones((cfg.d_model,), dtype),
+        "beta_ssm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def hybrid_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
+                 positions=None) -> jax.Array:
+    ya = rmsnorm_apply(p["attn_norm"], attn_apply(p["attn"], x, cfg, prec,
+                                                  positions))
+    ys = rmsnorm_apply(p["ssm_norm"], ssd_apply(p["ssm"], x, cfg, prec))
+    return 0.5 * (
+        ya * prec.cast(p["beta_attn"]) + ys * prec.cast(p["beta_ssm"])
+    )
+
+
+def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    return {
+        "attn": attn_cache_init(cfg, batch, max_len, dtype),
+        "ssm": ssd_cache_init(cfg, batch, dtype),
+    }
+
+
+def hybrid_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision):
+    ya, attn_cache = attn_decode_step(p["attn"], cache["attn"], x_t, cfg, prec)
+    ys, ssm_cache = ssd_decode_step(p["ssm"], cache["ssm"], x_t, cfg, prec)
+    y = 0.5 * (
+        rmsnorm_apply(p["attn_norm"], ya) * prec.cast(p["beta_attn"])
+        + rmsnorm_apply(p["ssm_norm"], ys) * prec.cast(p["beta_ssm"])
+    )
+    return y, {"attn": attn_cache, "ssm": ssm_cache}

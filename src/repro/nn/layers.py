@@ -1,0 +1,119 @@
+"""Basic layers: Linear, Embedding, RMSNorm/LayerNorm, SwiGLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Precision, truncated_normal_init
+
+
+# ---------------------------------------------------------------- Linear
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: float = 1.0, dtype=jnp.float32):
+    p = {"kernel": truncated_normal_init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p, x: jax.Array, prec: Precision) -> jax.Array:
+    y = jnp.dot(prec.cast(x), prec.cast(p["kernel"]))
+    if "bias" in p:
+        y = y + prec.cast(p["bias"])
+    return y
+
+
+# ---------------------------------------------------------------- Embedding
+
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32):
+    return {"embedding": truncated_normal_init(key, (vocab, d), 1.0, dtype)}
+
+
+def embedding_apply(p, ids: jax.Array, prec: Precision) -> jax.Array:
+    return prec.cast(jnp.take(p["embedding"], ids, axis=0))
+
+
+def embedding_attend(p, x: jax.Array, prec: Precision) -> jax.Array:
+    """Tied decode head: logits = x @ E^T (computed in f32 for stability)."""
+    return jnp.dot(x.astype(jnp.float32), p["embedding"].astype(jnp.float32).T)
+
+
+# ---------------------------------------------------------------- Norms
+
+
+def rmsnorm_init(d: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, activation: str = "swiglu",
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": truncated_normal_init(k1, (d_model, d_ff), 1.0, dtype),
+        "w_down": truncated_normal_init(k2, (d_ff, d_model), 1.0, dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = truncated_normal_init(k3, (d_model, d_ff), 1.0, dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, prec: Precision, *,
+              activation: str = "swiglu") -> jax.Array:
+    xc = prec.cast(x)
+    up = jnp.dot(xc, prec.cast(p["w_up"]))
+    if activation == "swiglu":
+        gate = jnp.dot(xc, prec.cast(p["w_gate"]))
+        h = jax.nn.silu(gate) * up
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    elif activation == "relu2":  # Nemotron-style squared ReLU
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.relu(up)
+    return jnp.dot(h, prec.cast(p["w_down"]))
+
+
+# ---------------------------------------------------------------- proj MLP
+# Two-layer tanh projector for ZETA's f_k / f_q (§4.2: "two-layer neural
+# networks rather than single-layer ones").  tanh output keeps coordinates in
+# [-1, 1] so Morton quantisation uses fixed causal-safe bounds.
+
+
+def proj2_init(key, d_in: int, d_hidden: int, d_out: int, *, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": truncated_normal_init(k1, (d_in, d_hidden), 1.0, dtype),
+        "w2": truncated_normal_init(k2, (d_hidden, d_out), 1.0, dtype),
+    }
+
+
+def proj2_apply(p, x: jax.Array, prec: Precision) -> jax.Array:
+    h = jnp.tanh(jnp.dot(prec.cast(x), prec.cast(p["w1"])))
+    return jnp.tanh(jnp.dot(h, prec.cast(p["w2"])))

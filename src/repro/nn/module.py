@@ -1,0 +1,117 @@
+"""Minimal functional module conventions (no flax/haiku on this box).
+
+* Parameters are nested dicts of jnp arrays ("param trees").
+* Every layer exposes ``init(key, cfg...) -> params`` and
+  ``apply(params, x, ...) -> y`` as plain functions.
+* Repeated blocks are initialised *stacked* (leading layer axis L) and
+  executed with ``jax.lax.scan`` so HLO size and compile time are O(1) in
+  depth (MaxText-style).
+* Mixed precision: params live in ``param_dtype`` (f32 default); compute in
+  ``compute_dtype`` (bf16 default for production configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def cast(self, x: jax.Array) -> jax.Array:
+        return x.astype(self.compute_dtype)
+
+
+F32 = Precision(jnp.float32, jnp.float32)
+BF16 = Precision(jnp.float32, jnp.bfloat16)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def truncated_normal_init(
+    key: jax.Array, shape: tuple[int, ...], scale: float, dtype
+) -> jax.Array:
+    """MaxText/T5-style scaled truncated normal (std = scale/sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / jnp.sqrt(jnp.asarray(max(fan_in, 1), jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(
+        dtype
+    )
+
+
+def stack_init(
+    init_fn: Callable[[jax.Array], Params], key: jax.Array, n: int
+) -> Params:
+    """Initialise ``n`` copies of a block with stacked (n, ...) leaves."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_layers(
+    body: Callable[[jax.Array, Params], jax.Array],
+    x: jax.Array,
+    stacked_params: Params,
+    *,
+    remat: bool = True,
+    remat_policy: str | None = "nothing_saveable",
+    unroll: bool = False,
+) -> jax.Array:
+    """Run ``body`` once per stacked layer via lax.scan.
+
+    ``body(x, layer_params) -> x``; optionally rematerialised so the backward
+    pass recomputes activations instead of saving them per layer.
+
+    ``unroll=True`` replaces the scan with a static python loop — used ONLY
+    by the roofline analysis: XLA's cost_analysis counts a while-loop body
+    once regardless of trip count, so per-layer costs are measured from
+    small unrolled variants and extrapolated (see launch/dryrun.py).
+    """
+
+    def step(carry, layer_params):
+        return body(carry, layer_params), None
+
+    if remat:
+        policy = _REMAT_POLICIES[remat_policy]
+        step = jax.checkpoint(step, policy=policy, prevent_cse=False)
+    if unroll:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        for i in range(n):
+            layer = jax.tree.map(lambda a: a[i], stacked_params)
+            x, _ = step(x, layer)
+        return x
+    out, _ = jax.lax.scan(step, x, stacked_params)
+    return out
+
+
+_REMAT_POLICIES = {
+    None: None,
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims_saveable":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def count_params(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def tree_bytes(params: Params) -> int:
+    return sum(int(p.size * p.dtype.itemsize) for p in jax.tree.leaves(params))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(p.astype(jnp.float32))) for p in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

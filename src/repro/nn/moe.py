@@ -1,0 +1,244 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch is MegaBlocks-style: token->expert assignments are sorted by expert
+id, each token takes a slot ``rank-within-expert`` in a fixed
+(E, capacity, D) buffer (dropping beyond capacity), experts run as one
+stacked einsum, and outputs scatter back.  Memory is O(T·D + E·C·D) — no
+(T, E, C) one-hot dispatch tensor.
+
+Under pjit the (E, C, D) buffer is sharding-annotated to the ``model`` axis
+(expert parallelism); XLA SPMD inserts the all-to-all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard_activation
+from repro.nn.config import ModelConfig
+from repro.nn.layers import mlp_apply, mlp_init
+from repro.nn.module import Precision, truncated_normal_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    ekeys = jax.random.split(k_e, m.num_experts)
+    experts = jax.vmap(
+        lambda kk: mlp_init(kk, d, f, activation=cfg.activation, dtype=dtype)
+    )(ekeys)
+    p = {
+        "router": truncated_normal_init(k_r, (d, m.num_experts), 1.0, dtype),
+        "experts": experts,
+    }
+    if m.shared_experts:
+        p["shared"] = mlp_init(
+            k_s, d, f * m.shared_experts, activation=cfg.activation,
+            dtype=dtype,
+        )
+    return p
+
+
+def _expert_mlp(p_experts, buf: jax.Array, prec: Precision,
+                activation: str) -> jax.Array:
+    """buf: (E, C, D) -> (E, C, D) with stacked expert weights (E, D, F)."""
+    up = jnp.einsum("ecd,edf->ecf", buf, prec.cast(p_experts["w_up"]))
+    if activation == "swiglu":
+        gate = jnp.einsum(
+            "ecd,edf->ecf", buf, prec.cast(p_experts["w_gate"])
+        )
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", h, prec.cast(p_experts["w_down"]))
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, N, D) -> (y, aux_loss).  Dispatches to the explicit
+    expert-parallel shard_map path when configured and a mesh is bound."""
+    if cfg.moe.ep_shard_map:
+        from repro.launch.sharding import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None:
+            baxes = ("pod", "data") if "pod" in mesh.axis_names \
+                else ("data",)
+            bshard = 1
+            for a in baxes:
+                bshard *= mesh.shape[a]
+            if x.shape[0] % bshard == 0 and \
+                    cfg.moe.num_experts % mesh.shape["model"] == 0:
+                return _moe_apply_ep(p, x, cfg, prec, mesh, baxes)
+    return _moe_apply_dense(p, x, cfg, prec)
+
+
+def _moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
+                  mesh, baxes) -> tuple[jax.Array, jax.Array]:
+    """Explicit expert parallelism (beyond-paper §Perf):
+
+    Tokens stay sharded over the batch axes and *replicated* over ``model``;
+    each model-column shard owns E/model_size experts, routes its local
+    tokens, builds only its own experts' capacity buffers (sort-based, no
+    (T, E) one-hot), runs them, scatters back partial outputs, and a psum
+    over ``model`` combines expert contributions.  Expert weights stay
+    FSDP-sharded over ``data`` and are all-gathered *inside* (explicit,
+    overlappable).  Collective volume per layer: one (T_loc, D) psum + the
+    E_loc expert weights — vs. the XLA-SPMD fallback which replicates the
+    global (E, C, D) buffers (measured in EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:  # newer jax
+        from jax import shard_map
+
+    m = cfg.moe
+    b, n, d = x.shape
+    e = m.num_experts
+    kk = m.top_k
+    ep = mesh.shape["model"]
+    e_loc = e // ep
+
+    def local_fn(xl, router, w_up, w_gate, w_down):
+        # xl: (B_loc, N, D); experts FSDP-sharded over data -> all-gather
+        w_up = jax.lax.all_gather(w_up, "data", axis=1, tiled=True)
+        w_gate = jax.lax.all_gather(w_gate, "data", axis=1, tiled=True)
+        w_down = jax.lax.all_gather(w_down, "data", axis=2, tiled=True)
+        bl, nl, _ = xl.shape
+        t = bl * nl
+        xt = prec.cast(xl).reshape(t, d)
+        logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, kk)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, -1, keepdims=True), 1e-9
+        )
+        importance = jnp.mean(probs, axis=0)
+        onehot_top1 = jax.nn.one_hot(expert_ids[:, 0], e)
+        load = jnp.mean(onehot_top1, axis=0)
+        aux = e * jnp.sum(importance * load) * m.aux_loss_coef
+        aux = jax.lax.pmean(aux, baxes)
+
+        cap = int(max(1, (t * kk / e) * m.capacity_factor))
+        my_shard = jax.lax.axis_index("model")
+        lo = my_shard * e_loc
+        flat_e = expert_ids.reshape(t * kk)
+        tok_of_slot = jnp.repeat(jnp.arange(t, dtype=jnp.int32), kk)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(t * kk, dtype=jnp.int32) - starts[sorted_e]
+        local_e = sorted_e - lo
+        keep = (rank < cap) & (local_e >= 0) & (local_e < e_loc)
+        buf_idx = jnp.where(keep, local_e * cap + rank, e_loc * cap)
+
+        buf = jnp.zeros((e_loc * cap + 1, d), xt.dtype)
+        buf = buf.at[buf_idx].set(xt[tok_of_slot[order]])
+        buf = buf[: e_loc * cap].reshape(e_loc, cap, d)
+        out_buf = _expert_mlp(
+            {"w_up": w_up, "w_gate": w_gate, "w_down": w_down}
+            if "w_gate" in p["experts"] else
+            {"w_up": w_up, "w_down": w_down},
+            buf, prec, cfg.activation,
+        )
+        out_flat = jnp.concatenate(
+            [out_buf.reshape(e_loc * cap, d),
+             jnp.zeros((1, d), xt.dtype)], axis=0
+        )
+        slot_out_sorted = out_flat[buf_idx]
+        slot_out = jnp.zeros((t * kk, d), xt.dtype).at[order].set(
+            slot_out_sorted
+        )
+        y = jnp.einsum(
+            "tk,tkd->td", gate_vals.astype(xt.dtype),
+            slot_out.reshape(t, kk, d),
+        )
+        y = jax.lax.psum(y, "model")  # combine expert contributions
+        return y.reshape(bl, nl, d), aux
+
+    experts = p["experts"]
+    specs_in = (
+        P(baxes, None, None),                       # x
+        P(None, None),                              # router (replicated)
+        P("model", "data", None),                   # w_up (E, D, F)
+        P("model", "data", None) if "w_gate" in experts else P(None),
+        P("model", None, "data"),                   # w_down (E, F, D)
+    )
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=specs_in,
+        out_specs=(P(baxes, None, None), P()),
+        check_rep=False,
+    )
+    gate = experts.get("w_gate", jnp.zeros((1,), x.dtype))
+    y, aux = fn(x, p["router"], experts["w_up"], gate, experts["w_down"])
+    if m.shared_experts:
+        y = y + mlp_apply(
+            p["shared"], prec.cast(x).reshape(-1, d), prec,
+            activation=cfg.activation,
+        ).reshape(b, n, d)
+    return y, aux.astype(jnp.float32)
+
+
+def _moe_apply_dense(p, x: jax.Array, cfg: ModelConfig, prec: Precision
+                     ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, N, D) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, n, d = x.shape
+    t = b * n
+    e, kk = m.num_experts, m.top_k
+    xt = prec.cast(x).reshape(t, d)
+
+    # --- routing (f32 for stability)
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, kk)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9
+    )
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    importance = jnp.mean(probs, axis=0)                        # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_ids[:, 0], e)
+    load = jnp.mean(onehot_top1, axis=0)
+    aux = e * jnp.sum(importance * load) * m.aux_loss_coef
+
+    # --- sort-based capacity dispatch
+    cap = int(max(1, (t * kk / e) * m.capacity_factor))
+    flat_e = expert_ids.reshape(t * kk)                         # (TK,)
+    tok_of_slot = jnp.repeat(jnp.arange(t, dtype=jnp.int32), kk)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts                        # (E,)
+    rank = jnp.arange(t * kk, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < cap
+    buf_idx = jnp.where(keep, sorted_e * cap + rank, e * cap)   # dump row
+
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buf = buf.at[buf_idx].set(xt[tok_of_slot[order]])
+    buf = buf[: e * cap].reshape(e, cap, d)
+    buf = shard_activation(buf, ("expert", None, None))
+
+    out_buf = _expert_mlp(p["experts"], buf, prec, cfg.activation)
+    out_buf = shard_activation(out_buf, ("expert", None, None))
+
+    # --- combine
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(e * cap, d), jnp.zeros((1, d), xt.dtype)], axis=0
+    )
+    slot_out_sorted = out_flat[buf_idx]                         # (TK, D)
+    slot_out = jnp.zeros((t * kk, d), xt.dtype).at[order].set(slot_out_sorted)
+    slot_out = slot_out.reshape(t, kk, d)
+    y = jnp.einsum(
+        "tk,tkd->td", gate_vals.astype(xt.dtype), slot_out
+    )
+
+    if m.shared_experts:
+        y = y + mlp_apply(p["shared"], xt, prec, activation=cfg.activation)
+
+    return y.reshape(b, n, d), aux.astype(jnp.float32)

@@ -1,0 +1,45 @@
+"""Rotary position embeddings (+ sinusoidal features for ZETA projectors)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("head_dim", "theta"))
+def rope_table(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """positions: (N,) int -> (cos, sin) each (N, head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., N, head_dim); rotate pairs (x1, x2) -> (x1 c - x2 s, x2 c + x1 s)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    shape = (1,) * (x.ndim - 2) + cos.shape
+    c = cos.reshape(shape).astype(x.dtype)
+    s = sin.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_features(positions: jax.Array, dim: int,
+                        max_len: float = 1e6) -> jax.Array:
+    """Classic sin/cos position features, fed to ZETA's f_k/f_q projectors so
+    the Euclidean metric space can encode position (full-attention archs get
+    position via RoPE; ZETA's low-dim metric keys need an explicit signal)."""
+    half = dim // 2
+    freqs = jnp.exp(
+        -jnp.log(max_len) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
+    )
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    feats = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if feats.shape[-1] < dim:  # odd dim
+        feats = jnp.pad(feats, ((0, 0), (0, dim - feats.shape[-1])))
+    return feats

@@ -1,0 +1,226 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked parallel scan in JAX.
+
+Implements the minimal SSD algorithm (Dao & Gu 2024, Listing 1) with the
+usual block plumbing: in_proj -> [z | xBC | dt], causal depthwise conv on
+xBC, SSD recurrence, gated RMSNorm, out_proj.  Single-token recurrent decode
+is provided for serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import ModelConfig, SSMConfig
+from repro.nn.layers import rmsnorm_apply, rmsnorm_init
+from repro.nn.module import Precision, truncated_normal_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return s, d_inner, n_heads, conv_dim
+
+
+def ssd_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.state_dim + n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.exp(
+        jax.random.uniform(k4, (n_heads,))
+        * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+        + jnp.log(s.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": truncated_normal_init(k1, (d, d_in_proj), 1.0, dtype),
+        "conv_kernel": truncated_normal_init(
+            k2, (s.conv_width, conv_dim), 1.0, dtype
+        ),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D_skip": jnp.ones((n_heads,), dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "gate_norm": rmsnorm_init(d_inner, dtype=dtype),
+        "out_proj": truncated_normal_init(k3, (d_inner, d), 1.0, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, N, C); kernel: (W, C)."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    # windows: y[:, t] = sum_i xp[:, t+i] * kernel[i]
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + xp[:, i: i + x.shape[1]] * kernel[i]
+    return out
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., q) -> (..., q, q) lower-tri cumulative sums:
+    out[i, j] = sum_{j < s <= i} a[s], -inf above diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Chunked SSD.  x: (B,N,H,P); dt: (B,N,H); b,c: (B,N,G,S).
+    Returns y: (B,N,H,P)."""
+    bsz, n, h, p = x.shape
+    g = b.shape[2]
+    reps = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    dt32 = dt.astype(jnp.float32)
+    da = dt32 * a[None, None, :]                             # (B,N,H)
+    xdt = x.astype(jnp.float32) * dt32[..., None]
+
+    nc = n // chunk
+    q = chunk
+    xdt = xdt.reshape(bsz, nc, q, h, p)
+    da_c = da.reshape(bsz, nc, q, h)
+    b_c = jnp.repeat(b, reps, axis=2).astype(jnp.float32).reshape(
+        bsz, nc, q, h, -1
+    )
+    c_c = jnp.repeat(c, reps, axis=2).astype(jnp.float32).reshape(
+        bsz, nc, q, h, -1
+    )
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(da_c.transpose(0, 1, 3, 2)))          # (B,nc,H,q,q)
+    scores = jnp.einsum("bcihs,bcjhs->bchij", c_c, b_c) * L
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # chunk-final states
+    a_cum = jnp.cumsum(da_c, axis=2)                          # (B,nc,q,H)
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)      # (B,nc,q,H)
+    states = jnp.einsum(
+        "bcqhs,bcqh,bcqhp->bchps", b_c, decay_states, xdt
+    )                                                         # (B,nc,H,P,S)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                 # (B,nc,H)
+
+    def step(carry, inp):
+        s_c, dec = inp
+        new = dec[..., None, None] * carry + s_c
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, p, states.shape[-1]), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,S)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(a_cum)                              # (B,nc,q,H)
+    y_off = jnp.einsum(
+        "bcqhs,bchps,bcqh->bcqhp", c_c, prev_states, state_decay
+    )
+
+    y = (y_diag + y_off).reshape(bsz, n, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(
+        jnp.float32
+    )
+    return y.astype(x.dtype)
+
+
+def ssd_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision
+              ) -> jax.Array:
+    """x: (B, N, D) -> (B, N, D)."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    bsz, n, _ = x.shape
+    zxbcdt = jnp.dot(prec.cast(x), prec.cast(p["in_proj"]))
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1
+    )
+    xbc = jax.nn.silu(_causal_conv(xbc, prec.cast(p["conv_kernel"])))
+    xs, b, c = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    xs = xs.reshape(bsz, n, n_heads, s.head_dim)
+    b = b.reshape(bsz, n, s.n_groups, s.state_dim)
+    c = c.reshape(bsz, n, s.n_groups, s.state_dim)
+
+    chunk = min(s.chunk, n)
+    if n % chunk:
+        pad = chunk - n % chunk
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = ssd_scan(xs, dt, p["A_log"], b, c, p["D_skip"], chunk)[:, :n]
+    y = y.reshape(bsz, n, d_inner)
+    y = rmsnorm_apply(p["gate_norm"], y * jax.nn.silu(z))
+    return jnp.dot(y, prec.cast(p["out_proj"]))
+
+
+# ------------------------------------------------------------------ decode
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros(
+            (batch, n_heads, s.head_dim, s.state_dim), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssd_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
+                    prec: Precision):
+    """x_t: (B, 1, D) -> (y_t, new_cache): recurrent single-token update."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    bsz = x_t.shape[0]
+    zxbcdt = jnp.dot(prec.cast(x_t[:, 0]), prec.cast(p["in_proj"]))
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1
+    )
+    # conv over [cached window, current]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    kern = prec.cast(p["conv_kernel"])
+    xbc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, kern))
+    xs, b, c = jnp.split(
+        xbc_c, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                          # (B, H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])                              # (B, H)
+    xs = xs.reshape(bsz, n_heads, s.head_dim).astype(jnp.float32)
+    reps = n_heads // s.n_groups
+    b_h = jnp.repeat(
+        b.reshape(bsz, s.n_groups, s.state_dim), reps, axis=1
+    ).astype(jnp.float32)
+    c_h = jnp.repeat(
+        c.reshape(bsz, s.n_groups, s.state_dim), reps, axis=1
+    ).astype(jnp.float32)
+    new_state = (
+        da[..., None, None] * cache["state"]
+        + jnp.einsum("bhp,bhs->bhps", xs * dt[..., None], b_h)
+    )
+    y = jnp.einsum("bhps,bhs->bhp", new_state, c_h)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(bsz, d_inner).astype(x_t.dtype)
+    y = rmsnorm_apply(p["gate_norm"], y * jax.nn.silu(z))
+    out = jnp.dot(y, prec.cast(p["out_proj"]))[:, None, :]
+    new_cache = dict(
+        cache,
+        state=new_state,
+        conv=win[:, 1:],
+        length=cache["length"] + 1,
+    )
+    return out, new_cache

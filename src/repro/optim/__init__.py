@@ -1,0 +1,11 @@
+"""Optimizers (mini-optax: pure init/update transforms)."""
+
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import constant, warmup_cosine
+from repro.optim.transform import Transform, chain, clip_by_global_norm
+
+__all__ = [
+    "adamw", "adafactor", "constant", "warmup_cosine",
+    "Transform", "chain", "clip_by_global_norm",
+]

@@ -1,0 +1,85 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+Used for the 1T-class MoE configs where full Adam state (8 bytes/param of
+moments) cannot fit the assigned 256-chip pod; factoring reduces second
+moments from O(nm) to O(n+m) per matrix.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import Transform
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def adafactor(
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3,
+    min_dim_size_to_factor: int = 128,
+    decay_rate: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Transform:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def _factors(p):
+        """Factor the trailing two dims if both are big enough."""
+        if p.ndim >= 2 and min(p.shape[-2:]) >= min_dim_size_to_factor:
+            return True
+        return False
+
+    def init(params):
+        def one(p):
+            if _factors(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        stepf = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - stepf ** (-decay_rate)
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps
+                )
+                r = (vr / denom)[..., None]
+                c = vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(r * c + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)
+            upd = -lr_t * u
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_state = treedef.unflatten([o[1] for o in outs])
+        return updates, new_state
+
+    return Transform(init, update)

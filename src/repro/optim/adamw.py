@@ -1,0 +1,64 @@
+"""AdamW with decoupled weight decay and schedule support."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import Transform
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    mu_dtype=jnp.float32,
+) -> Transform:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=mu_dtype), params
+            ),
+            "nu": jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            ),
+        }
+
+    def update(grads, state, params, step):
+        stepf = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+            nu_n = b2 * nu + (1 - b2) * jnp.square(g32)
+            mhat = mu_n / bc1
+            nhat = nu_n / bc2
+            u = -lr_t * (
+                mhat / (jnp.sqrt(nhat) + eps)
+                + weight_decay * p.astype(jnp.float32)
+            )
+            return u, mu_n.astype(mu_dtype), nu_n
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [
+            upd(g, mu, nu, p)
+            for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)
+        ]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_mu = treedef.unflatten([o[1] for o in outs])
+        new_nu = treedef.unflatten([o[2] for o in outs])
+        return updates, {"mu": new_mu, "nu": new_nu}
+
+    return Transform(init, update)

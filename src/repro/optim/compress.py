@@ -1,0 +1,79 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+Cross-pod (data-centre interconnect) links are an order of magnitude slower
+than intra-pod ICI, so the multi-pod driver compresses the *pod-axis*
+gradient all-reduce:
+
+  * error-feedback top-k sparsification (memory carries the residual so the
+    compressor is unbiased over time; Stich et al. 2018), and/or
+  * int8 quantisation with per-tensor scale.
+
+Both are pure functions usable inside shard_map (see launch/train.py) and
+unit-tested against their contracts in tests/test_compression.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: jax.Array  # same shape as the gradient
+
+
+def ef_init(g: jax.Array) -> EFState:
+    return EFState(residual=jnp.zeros_like(g, dtype=jnp.float32))
+
+
+def topk_compress(
+    g: jax.Array, state: EFState, frac: float
+) -> tuple[jax.Array, jax.Array, EFState]:
+    """Error-feedback top-|frac| sparsification.
+
+    Returns (values, flat_indices, new_state); the dense reconstruction is
+    scatter(values -> indices).  The dropped mass stays in the residual.
+    """
+    acc = g.astype(jnp.float32) + state.residual
+    flat = acc.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    kept = jnp.zeros_like(flat).at[idx].set(sel)
+    new_state = EFState(residual=(flat - kept).reshape(g.shape))
+    return sel, idx, new_state
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    flat = jnp.zeros((int(jnp.prod(jnp.array(shape))),), jnp.float32)
+    return flat.at[idx].add(vals).reshape(shape)
+
+
+def int8_quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_pod(g: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed all-reduce over ``axis_name`` (for use in shard_map).
+
+    Quantise locally, all-gather the int8 payloads + scales (cheap: 1/4 the
+    bf16 bytes), dequantise and sum locally.  Exactness is traded for 4x
+    less cross-pod traffic; combine with error feedback at the caller for
+    unbiasedness across steps.
+    """
+    q, scale = int8_quantize(g)
+    qs = jax.lax.all_gather(q, axis_name)          # (pods, ...)
+    ss = jax.lax.all_gather(scale, axis_name)
+    deq = qs.astype(jnp.float32) * ss.reshape(
+        (-1,) + (1,) * (qs.ndim - 1)
+    )
+    return jnp.sum(deq, axis=0)

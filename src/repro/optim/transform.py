@@ -1,0 +1,54 @@
+"""Gradient-transform plumbing (tiny optax equivalent)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Transform(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (updates, new_state)
+
+
+def chain(*transforms: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params, step):
+        new_states = []
+        for t, s in zip(transforms, state):
+            grads, ns = t.update(grads, s, params, step)
+            new_states.append(ns)
+        return grads, tuple(new_states)
+
+    return Transform(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        leaves = [
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        ]
+        gnorm = jnp.sqrt(sum(leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+        return grads, state
+
+    return Transform(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(
+            p.dtype
+        ),
+        params, updates,
+    )

@@ -1,0 +1,5 @@
+"""Serving: decode step builder + batched engine."""
+
+from repro.serve.step import make_serve_step
+
+__all__ = ["make_serve_step"]

@@ -1,0 +1,91 @@
+"""Distributed ZETA decode over a sequence-sharded KV cache (SP).
+
+For long contexts (long_500k: one sequence of 524k tokens) the KV + z-code
+cache is sharded along the *sequence* axis.  ZETA's structure makes the
+distributed search cheap — this is the paper's mechanism mapped onto a
+mesh (DESIGN.md §4):
+
+  1. every shard keeps its local segment's codes SORTED locally,
+  2. the new query's z-code is broadcast (scalars),
+  3. each shard binary-searches its own sorted segment for its best k
+     candidates and computes their squared distances,
+  4. the (shards x k) candidate set — tiny: k distances + values row ids —
+     is combined with a global top-k, and the Cauchy softmax/weighted sum
+     uses only those k values.
+
+Per-token collective volume is O(shards * k * d_v) — independent of N.
+Implemented with shard_map + all_gather over the sharding axis; validated
+against the single-device oracle in tests/test_distributed_decode.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk as core_topk
+from repro.core.cauchy import cauchy_weights
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    from jax import shard_map
+
+
+def _local_candidates(sorted_kz, sorted_pos, length, qz, k):
+    """One shard's best-k candidates for one query code."""
+    sel = core_topk.prefix_topk_decode(
+        sorted_kz, sorted_pos, length, qz, k=k
+    )
+    return sel.idx[:, 0], sel.valid[:, 0]     # (B, k) local row ids
+
+
+def make_distributed_decode_attention(mesh, *, axis: str, k: int):
+    """Returns f(sorted_kz, sorted_pos, length, kv_local, qz, q, gamma2)
+    computing ZETA attention for ONE new token against a sequence-sharded
+    cache.
+
+    Shapes (global):
+      sorted_kz/sorted_pos: (B, N) int32 sharded P(None, axis) — each
+        shard's segment is independently sorted;
+      length: (shards,) live entries per shard, sharded P(axis);
+      kv_local: (B, N, dk + dv) raw keys+values by position P(None, axis);
+      qz: (B,) int32 query codes (replicated); q: (B, dk); gamma2 scalar.
+    Returns (B, dv).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def local_fn(skz, spos, length, kv, qz, q, gamma2):
+        b, n_loc = skz.shape
+        dk = q.shape[-1]
+        idx, valid = _local_candidates(
+            skz, spos, length[0], qz, k
+        )                                           # (B, k) local ids
+        cand = jnp.take_along_axis(kv, idx[..., None], axis=1)
+        k_cand = cand[..., :dk]
+        v_cand = cand[..., dk:]
+        d2 = jnp.sum((q[:, None, :] - k_cand) ** 2, axis=-1)
+        big = jnp.asarray(3.4e38, d2.dtype)
+        d2 = jnp.where(valid, d2, big)
+        # gather all shards' candidates: (shards, B, k, ...)
+        d2_all = jax.lax.all_gather(d2, axis)       # (S, B, k)
+        v_all = jax.lax.all_gather(v_cand, axis)    # (S, B, k, dv)
+        s, _, _ = d2_all.shape
+        d2_flat = jnp.moveaxis(d2_all, 0, 1).reshape(b, s * k)
+        v_flat = jnp.moveaxis(v_all, 0, 1).reshape(b, s * k, -1)
+        # global top-k by distance
+        neg, sel_idx = jax.lax.top_k(-d2_flat, k)
+        d2_sel = -neg
+        v_sel = jnp.take_along_axis(v_flat, sel_idx[..., None], axis=1)
+        w = cauchy_weights(d2_sel, gamma2, d2_sel < big)
+        return jnp.einsum("bk,bkd->bd", w, v_sel)
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(
+            P(None, axis), P(None, axis), P(axis), P(None, axis, None),
+            P(None), P(None, None), P(),
+        ),
+        out_specs=P(None, None),
+        check_rep=False,
+    )

@@ -1,0 +1,107 @@
+"""Batched serving engine with continuous-batching-lite.
+
+Fixed batch of B decode slots stepping in lock-step (one fused decode_step
+per tick, which is what the decode dry-run cells lower).  Finished or empty
+slots are refilled from the request queue; each slot keeps its own
+generated-token budget.  Prompt ingestion re-uses the decode path token by
+token (prefill-as-decode) — adequate for the demo scale and exactly
+cache-consistent with generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.nn.config import ModelConfig
+from repro.nn.module import Precision
+from repro.serve.step import make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    output: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, prec: Precision, *,
+                 batch_slots: int, max_len: int, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.prec = prec
+        self.b = batch_slots
+        self.max_len = max_len
+        self.step_fn = jax.jit(make_serve_step(cfg, prec, greedy=greedy))
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.slot_pending: list[deque[int]] = [deque() for _ in
+                                               range(batch_slots)]
+        self.cache = api.cache_init(cfg, batch_slots, max_len, jnp.float32)
+        self.done: list[Request] = []
+        self._tokens = np.zeros((batch_slots, 1), np.int32)
+        self.rng = jax.random.PRNGKey(0)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _refill(self) -> None:
+        # WAVE scheduling: the decode cache keeps a single global position
+        # counter, so new requests join only when the whole batch drained
+        # (then the cache is reset).  True continuous batching needs
+        # per-slot positions in the cache — documented future work.
+        if any(s is not None for s in self.slots):
+            return
+        if not self.queue:
+            return
+        self.cache = api.cache_init(
+            self.cfg, self.b, self.max_len, jnp.float32
+        )
+        for i in range(self.b):
+            if self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                # prompt tokens are fed through decode one by one
+                self.slot_pending[i] = deque(req.prompt)
+                self._tokens[i, 0] = self.slot_pending[i].popleft() \
+                    if self.slot_pending[i] else 0
+
+    def tick(self) -> bool:
+        """One decode step for the whole batch.  Returns False when idle."""
+        self._refill()
+        if all(s is None for s in self.slots):
+            return False
+        self.rng, sub = jax.random.split(self.rng)
+        nxt, logits, self.cache = self.step_fn(
+            self.params, self.cache, jnp.asarray(self._tokens), sub
+        )
+        nxt = np.asarray(nxt)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                self._tokens[i, 0] = 0
+                continue
+            if self.slot_pending[i]:
+                # still ingesting the prompt: feed next prompt token,
+                # ignore the model's suggestion
+                self._tokens[i, 0] = self.slot_pending[i].popleft()
+                continue
+            tok = int(nxt[i, 0])
+            req.output.append(tok)
+            self._tokens[i, 0] = tok
+            if len(req.output) >= req.max_new:
+                self.done.append(req)
+                self.slots[i] = None
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while self.tick() and ticks < max_ticks:
+            ticks += 1
+        return self.done

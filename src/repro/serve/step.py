@@ -1,0 +1,27 @@
+"""Serve (decode) step: one new token per sequence against a live KV/state
+cache.  This is what the ``decode_*`` / ``long_*`` dry-run cells lower."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.nn.config import ModelConfig
+from repro.nn.module import Precision
+
+
+def make_serve_step(cfg: ModelConfig, prec: Precision,
+                    greedy: bool = True) -> Callable:
+    def serve_step(params, cache, token_t: jax.Array, rng: jax.Array):
+        """token_t: (B, 1) -> (next_token (B, 1), logits, new_cache)."""
+        logits, new_cache = api.decode_step(params, cache, token_t, cfg, prec)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1:], axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, logits[:, -1:])
+        return nxt.astype(jnp.int32), logits, new_cache
+
+    return serve_step

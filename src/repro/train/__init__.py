@@ -1,0 +1,14 @@
+"""Training: loss, train-step builder, train state."""
+
+from repro.train.step import (
+    TrainState,
+    cross_entropy,
+    make_eval_step,
+    make_train_step,
+    init_train_state,
+)
+
+__all__ = [
+    "TrainState", "cross_entropy", "make_train_step", "make_eval_step",
+    "init_train_state",
+]

@@ -1,0 +1,116 @@
+"""Train / eval step builders.
+
+``train_step(state, batch) -> (state, metrics)`` is a pure function meant
+for ``jax.jit`` with donated state; under a mesh the launcher supplies
+in/out shardings (launch/train.py, launch/dryrun.py).
+
+Loss = masked token CE + MoE aux (load balance) + optional DeepSeek MTP
+head loss (weight 0.3).  Logits stay in f32 only through the log-softmax
+reduction; activations follow the Precision policy.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.lm import mtp_logits
+from repro.nn.config import ModelConfig
+from repro.nn.module import Precision
+from repro.optim.transform import Transform, apply_updates
+
+TrainState = dict  # {"params", "opt_state", "step", "rng"}
+
+MTP_WEIGHT = 0.3
+
+
+def init_train_state(key, cfg: ModelConfig, tx: Transform,
+                     dtype=jnp.float32) -> TrainState:
+    params = api.init_params(key, cfg, dtype)
+    return {
+        "params": params,
+        "opt_state": tx.init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.PRNGKey(0),
+    }
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """Masked mean CE.  logits (B, N, V) any float dtype; reduction in f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    nll = lse - gold
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array,
+                   mask: jax.Array) -> jax.Array:
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32) * mask
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, prec: Precision) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = api.apply_model(
+            params, batch, cfg, prec, return_hidden=cfg.mtp_depth > 0
+        )
+        ce = cross_entropy(logits, batch["labels"], batch["mask"])
+        loss = ce + aux.get("moe_aux", 0.0)
+        metrics = {"ce": ce, "moe_aux": aux.get("moe_aux", 0.0)}
+        if cfg.mtp_depth > 0:
+            # depth-1 MTP: combine h_t with emb(label_t)=token t+1 to
+            # predict token t+2 (= labels shifted one more).
+            next_tokens = batch["labels"]
+            mtp_lab = jnp.roll(batch["labels"], -1, axis=1)
+            mtp_mask = batch["mask"] * jnp.roll(batch["mask"], -1, axis=1)
+            mtp_mask = mtp_mask.at[:, -1].set(0.0)
+            lg = mtp_logits(params, cfg, prec, aux["hidden"], next_tokens)
+            mtp_ce = cross_entropy(lg, mtp_lab, mtp_mask)
+            loss = loss + MTP_WEIGHT * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tx: Transform,
+                    prec: Precision) -> Callable:
+    loss_fn = make_loss_fn(cfg, prec)
+
+    def train_step(state: TrainState, batch: dict[str, Any]):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (_, metrics), grads = grad_fn(state["params"], batch)
+        updates, new_opt = tx.update(
+            grads, state["opt_state"], state["params"], state["step"]
+        )
+        new_params = apply_updates(state["params"], updates)
+        new_state = {
+            "params": new_params,
+            "opt_state": new_opt,
+            "step": state["step"] + 1,
+            "rng": jax.random.fold_in(state["rng"], 0),
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, prec: Precision) -> Callable:
+    def eval_step(params, batch):
+        logits, _ = api.apply_model(params, batch, cfg, prec)
+        return {
+            "ce": cross_entropy(logits, batch["labels"], batch["mask"]),
+            "acc": token_accuracy(logits, batch["labels"], batch["mask"]),
+        }
+
+    return eval_step

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — tests
+run on the single real CPU device; only launch/dryrun.py fakes 512 devices.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

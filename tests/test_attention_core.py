@@ -1,0 +1,160 @@
+"""ZETA attention semantics: causality, normalisation, oracle equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cauchy, ref
+from repro.core.attention import zeta_attention, zeta_attention_noncausal
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    key = jax.random.PRNGKey(0)
+    b, h, n, dk, dv = 2, 2, 64, 3, 16
+    ks = jnp.tanh(jax.random.normal(key, (b, h, n, dk)))
+    qs = jnp.tanh(jax.random.normal(jax.random.PRNGKey(1), (b, h, n, dk)))
+    vs = jax.random.normal(jax.random.PRNGKey(2), (b, h, n, dv))
+    return qs, ks, vs
+
+
+def test_causality_token_granularity(qkv):
+    qs, ks, vs = qkv
+    out = zeta_attention(qs, ks, vs, 0.5, num_chunks=8, k=8)
+    for j in (9, 33, 57):
+        ks2 = ks.at[:, :, j].set(jnp.tanh(ks[:, :, j] + 10.0))
+        vs2 = vs.at[:, :, j].set(vs[:, :, j] - 3.0)
+        out2 = zeta_attention(qs, ks2, vs2, 0.5, num_chunks=8, k=8)
+        diff = jnp.abs(out2 - out).max(axis=-1)
+        assert float(diff[:, :, :j].max()) == 0.0
+
+
+def test_weights_rows_normalised(qkv):
+    d2 = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4, 7)))
+    valid = jnp.asarray([[True] * 7, [True] * 3 + [False] * 4,
+                         [False] * 7, [True] + [False] * 6])
+    w = cauchy.cauchy_weights(d2, 0.3, valid)
+    sums = np.asarray(jnp.sum(w, -1))
+    np.testing.assert_allclose(sums[[0, 1, 3]], 1.0, atol=1e-5)
+    assert sums[2] == 0.0
+    assert not np.asarray(w)[1, 3:].any()
+
+
+def test_matches_gathered_oracle(qkv):
+    """The XLA aggregation path must equal the dense gathered oracle given
+    the same candidate sets."""
+    from repro.core import topk, zorder
+
+    qs, ks, vs = qkv
+    b, h, n, dk = qs.shape
+    dv = vs.shape[-1]
+    f = b * h
+    qf, kf, vf = (a.reshape(f, n, -1) for a in (qs, ks, vs))
+    kz, qz = zorder.zorder_encode(kf, qf, bound=1.0)
+    sel = topk.chunked_causal_topk(kz, qz, num_chunks=8, k=8)
+    k_sel = jnp.take_along_axis(
+        kf[:, None], sel.idx[..., None], axis=-2
+    )
+    v_sel = jnp.take_along_axis(
+        vf[:, None], sel.idx[..., None], axis=-2
+    )
+    km = ref.history_mean(kf)[:, :, None, :]
+    vm = ref.history_mean(vf)[:, :, None, :]
+    k_all = jnp.concatenate([k_sel, km], -2)
+    v_all = jnp.concatenate([v_sel, vm], -2)
+    valid = jnp.concatenate(
+        [sel.valid, jnp.ones(sel.valid.shape[:-1] + (1,), bool)], -1
+    )
+    want = ref.gathered_cauchy_attention(qf, k_all, v_all, valid, 0.5)
+    got = zeta_attention(qs, ks, vs, 0.5, num_chunks=8, k=8)
+    np.testing.assert_allclose(
+        np.asarray(got.reshape(f, n, dv)), np.asarray(want),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_history_mean_only_for_chunk0(qkv):
+    """Chunk-0 queries attend only to the cumulative mean -> output equals
+    that mean exactly."""
+    qs, ks, vs = qkv
+    out = zeta_attention(qs, ks, vs, 0.5, num_chunks=8, k=8)
+    b, h, n, dv = out.shape
+    vm = ref.history_mean(vs.reshape(b * h, n, dv)).reshape(b, h, n, dv)
+    np.testing.assert_allclose(
+        np.asarray(out[:, :, :8]), np.asarray(vm[:, :, :8]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_local_window_only_adds_own_chunk(qkv):
+    qs, ks, vs = qkv
+    base = zeta_attention(qs, ks, vs, 0.5, num_chunks=8, k=8)
+    win = zeta_attention(
+        qs, ks, vs, 0.5, num_chunks=8, k=8, local_window=4
+    )
+    # still causal
+    j = 40
+    ks2 = ks.at[:, :, j].set(jnp.tanh(ks[:, :, j] + 10.0))
+    win2 = zeta_attention(
+        qs, ks2, vs, 0.5, num_chunks=8, k=8, local_window=4
+    )
+    diff = jnp.abs(win2 - win).max(axis=-1)
+    assert float(diff[:, :, :j].max()) == 0.0
+    # and it changes outputs (window candidates actually used)
+    assert float(jnp.abs(win - base).max()) > 0
+
+
+def test_noncausal_variant_sees_everything(qkv):
+    qs, ks, vs = qkv
+    out = zeta_attention_noncausal(qs, ks, vs, 0.5, k=8)
+    assert out.shape == vs.shape
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_grads_flow_and_finite(qkv):
+    qs, ks, vs = qkv
+
+    def loss(args):
+        q, k, v, th = args
+        g2 = jax.nn.sigmoid(th)
+        return jnp.sum(
+            zeta_attention(q, k, v, g2, num_chunks=8, k=8) ** 2
+        )
+
+    g = jax.grad(loss)((qs, ks, vs, jnp.asarray(0.0)))
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert float(jnp.abs(g[3])) > 0  # gamma receives gradient
+
+
+def test_recall_reasonable_at_dk3(qkv):
+    """Z-order window recall of exact Euclidean kNN under identical candidate
+    masks should be well above chance (paper Fig 3 regime)."""
+    from repro.core import topk, zorder
+
+    qs, ks, _ = qkv
+    b, h, n, dk = qs.shape
+    f = b * h
+    qf, kf = qs.reshape(f, n, dk), ks.reshape(f, n, dk)
+    kz, qz = zorder.zorder_encode(kf, qf, bound=1.0)
+    sel = topk.chunked_causal_topk(kz, qz, num_chunks=8, k=8)
+    d2 = ref.pairwise_sqdist(qf, kf)
+    allowed = ref.chunk_causal_mask(n, 8)
+    eidx, evalid = ref.exact_topk_indices(d2, allowed, 8)
+    sel_idx, sel_val = np.asarray(sel.idx), np.asarray(sel.valid)
+    eidx, evalid = np.asarray(eidx), np.asarray(evalid)
+    hits = tot = 0
+    for ff in range(f):
+        for i in range(n):
+            es = set(eidx[ff, i][evalid[ff, i]])
+            zs = set(sel_idx[ff, i][sel_val[ff, i]])
+            hits += len(es & zs)
+            tot += len(es)
+    recall = hits / max(tot, 1)
+    # average candidate pool is ~N/2=32 keys; random k=8 selection would
+    # overlap the exact top-8 at rate 8/32 = 0.25.  The z-order window must
+    # beat chance clearly (measured ~0.63 at these sizes).
+    chance = 8.0 / (n / 2)
+    assert recall > 1.8 * chance
+    assert recall > 0.35

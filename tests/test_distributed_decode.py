@@ -1,0 +1,79 @@
+"""Distributed (sequence-sharded) ZETA decode == single-device oracle.
+
+Runs in a subprocess with 4 fake devices (device count locks at jax init).
+"""
+
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import topk, zorder
+    from repro.core.cauchy import cauchy_weights
+    from repro.serve.distributed import make_distributed_decode_attention
+
+    B, N, dk, dv, K = 2, 64, 3, 8, 4
+    S = 4                     # shards
+    n_loc = N // S
+    key = jax.random.PRNGKey(0)
+    keys = jnp.tanh(jax.random.normal(key, (B, N, dk)))
+    vals = jax.random.normal(jax.random.PRNGKey(1), (B, N, dv))
+    q = jnp.tanh(jax.random.normal(jax.random.PRNGKey(2), (B, dk)))
+    nbits = zorder.bits_for_dim(dk, None)
+    kz = zorder.zorder_encode_with_bounds(keys, -1.0, 1.0, nbits)
+    qz = zorder.zorder_encode_with_bounds(q[:, None, :], -1.0, 1.0, nbits)[:, 0]
+
+    # build per-shard sorted segments
+    skz = np.full((B, N), int(topk.SENTINEL), np.int32)
+    spos = np.zeros((B, N), np.int32)
+    for s in range(S):
+        seg = slice(s * n_loc, (s + 1) * n_loc)
+        order = np.argsort(np.asarray(kz[:, seg]), axis=1, kind="stable")
+        skz[:, seg] = np.take_along_axis(np.asarray(kz[:, seg]), order, 1)
+        spos[:, seg] = order  # LOCAL row ids within the shard segment
+    length = jnp.full((S,), n_loc, jnp.int32)
+    kv = jnp.concatenate([keys, vals], axis=-1)
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4), ("seq",))
+    fn = make_distributed_decode_attention(mesh, axis="seq", k=K)
+    out = fn(jnp.asarray(skz), jnp.asarray(spos), length, kv, qz, q,
+             jnp.asarray(0.5))
+
+    # oracle: per-shard local best-K windows -> global top-K by distance
+    cand_d2, cand_v = [], []
+    for s in range(S):
+        seg = slice(s * n_loc, (s + 1) * n_loc)
+        for b in range(B):
+            ins = np.searchsorted(skz[b, seg], int(qz[b]))
+            start = min(max(ins - K // 2, 0), max(n_loc - K, 0))
+            ids = spos[b, seg][start:start + K]
+            kc = np.asarray(keys[b, seg][ids])
+            vc = np.asarray(vals[b, seg][ids])
+            d2 = ((np.asarray(q[b]) - kc) ** 2).sum(-1)
+            cand_d2.append((b, d2)); cand_v.append((b, vc))
+    want = np.zeros((B, dv))
+    for b in range(B):
+        d2s = np.concatenate([d for bb, d in cand_d2 if bb == b])
+        vs = np.concatenate([v for bb, v in cand_v if bb == b])
+        sel = np.argsort(d2s)[:K]
+        w = 1.0 / (d2s[sel] + 0.5 + 1e-9)
+        w = w / w.sum()
+        want[b] = (w[:, None] * vs[sel]).sum(0)
+    err = np.abs(np.asarray(out) - want).max()
+    assert err < 1e-4, err
+    print("DIST_DECODE_OK", err)
+""")
+
+
+def test_distributed_decode_matches_oracle():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=540,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert "DIST_DECODE_OK" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, assert shapes + finiteness (deliverable f).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_smoke, list_archs
+from repro.models import api
+from repro.nn.module import F32
+from repro.optim import adamw, chain, clip_by_global_norm
+from repro.train import init_train_state, make_train_step
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (2, 16, cfg.frontend_dim)
+        )
+    if cfg.frontend == "audio" and api.is_encdec(cfg):
+        batch["frames"] = jax.random.normal(
+            key, (2, cfg.enc_context, cfg.frontend_dim)
+        )
+    logits, aux = api.apply_model(params, batch, cfg, F32)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    tx = chain(clip_by_global_norm(1.0), adamw(1e-3))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tx)
+    step = jax.jit(make_train_step(cfg, tx, F32), donate_argnums=0)
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    batch = {
+        "tokens": toks,
+        "labels": jnp.roll(toks, -1, axis=1),
+        "mask": jnp.ones((2, 32), jnp.float32).at[:, -1].set(0.0),
+    }
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (2, 16, cfg.frontend_dim)
+        )
+    if cfg.frontend == "audio" and api.is_encdec(cfg):
+        batch["frames"] = jax.random.normal(
+            key, (2, cfg.enc_context, cfg.frontend_dim)
+        )
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state["step"]) == 1
+    # params actually changed
+    p0 = jax.tree.leaves(state["params"])[0]
+    assert bool(jnp.all(jnp.isfinite(p0)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned numbers (never
+    instantiated here — dry-run only)."""
+    cfg = get_config(arch)
+    expected = {
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "zeta-wt103-124m": (12, 768, 12, 12, 3072, 50257),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+    if arch == "mamba2-370m":
+        assert cfg.ssm.state_dim == 128
+    if arch == "hymba-1.5b":
+        assert cfg.ssm.state_dim == 16 and cfg.mixer == "hybrid"
+    if arch == "kimi-k2-1t-a32b":
+        assert cfg.moe.num_experts == 384 and cfg.moe.top_k == 8
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8
+        assert cfg.mla is not None and cfg.mtp_depth == 1
+    if arch == "qwen2-72b":
+        assert cfg.qkv_bias
+    if arch == "whisper-base":
+        assert cfg.enc_layers == 6
+
+
+def test_classifier_head():
+    """LRA-style classifier: forward + one grad step, finite."""
+    from repro.models.classifier import classifier_apply, classifier_init
+    from repro.nn.config import ModelConfig, ZetaConfig
+
+    cfg = ModelConfig(
+        name="cls", vocab=32, d_model=32, n_layers=2, n_heads=2,
+        n_kv_heads=2, d_ff=64, attention="zeta",
+        zeta=ZetaConfig(d_k=2, k=4, num_chunks=4, local_window=2),
+    )
+    params = classifier_init(jax.random.PRNGKey(0), cfg, 10)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 32)
+    logits = classifier_apply(params, toks, cfg, F32)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def loss(p):
+        return jnp.sum(classifier_apply(p, toks, cfg, F32) ** 2)
+
+    g = jax.grad(loss)(params)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))

@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cauchy, ref, topk, zorder
+from repro.core.attention import zeta_attention
+
+_floats = st.floats(-1.0, 1.0, allow_nan=False, width=32)
+
+
+@given(
+    st.lists(st.floats(0.0, 100.0, width=32), min_size=3, max_size=12),
+    st.floats(0.0625, 1.0, width=32),
+)
+@settings(max_examples=40, deadline=None)
+def test_cauchy_weights_simplex(d2_list, g2):
+    """Weights lie on the simplex; monotone decreasing in distance."""
+    d2 = jnp.asarray(d2_list)[None, :]
+    valid = jnp.ones_like(d2, bool)
+    w = np.asarray(cauchy.cauchy_weights(d2, g2, valid))[0]
+    assert abs(w.sum() - 1.0) < 1e-4
+    assert (w >= 0).all()
+    order_d = np.argsort(d2_list)
+    assert (np.diff(w[order_d]) <= 1e-6).all()  # closer => larger weight
+
+
+@given(st.integers(2, 64), st.floats(0.0625, 0.9375, width=32))
+@settings(max_examples=30, deadline=None)
+def test_cauchy_gamma_flattens(n, frac):
+    """Larger gamma^2 always flattens the distribution (higher entropy)."""
+    rng = np.random.default_rng(n)
+    d2 = jnp.asarray(rng.uniform(0, 10, n))[None]
+    valid = jnp.ones_like(d2, bool)
+    w_small = np.asarray(cauchy.cauchy_weights(d2, 0.05, valid))[0]
+    w_big = np.asarray(cauchy.cauchy_weights(d2, 5.0, valid))[0]
+
+    def entropy(w):
+        w = np.clip(w, 1e-12, 1)
+        return -(w * np.log(w)).sum()
+
+    assert entropy(w_big) >= entropy(w_small) - 1e-6
+
+
+@given(st.integers(0, 2**30 - 1), st.integers(0, 2**30 - 1))
+@settings(max_examples=50, deadline=None)
+def test_morton_1d_identity(a, b):
+    """d=1 Morton code == value: order fully preserved."""
+    x = jnp.asarray([[a], [b]], jnp.uint32)
+    codes = zorder.interleave_bits(x, 30)
+    assert (int(codes[0]) < int(codes[1])) == (a < b) or a == b
+
+
+@given(st.integers(1, 4), st.integers(2, 6))
+@settings(max_examples=25, deadline=None)
+def test_morton_quadrant_prefix(d, bits):
+    """Points sharing the top quadrant (same MSB per dim) share the code's
+    top d bits — the locality mechanism of the curve."""
+    rng = np.random.default_rng(d * 100 + bits)
+    pts = rng.integers(0, 2**bits, size=(32, d)).astype(np.uint32)
+    codes = np.asarray(zorder.interleave_bits(jnp.asarray(pts), bits))
+    msb = (pts >> (bits - 1)) & 1  # (32, d)
+    top = codes >> (bits * d - d)
+    for i in range(32):
+        expect = 0
+        for j in range(d):
+            expect = (expect << 1) | int(msb[i, j])
+        assert int(top[i]) == expect
+
+
+@given(st.integers(0, 10_000), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_zeta_output_in_value_convex_hull(seed, heads):
+    """Attention output is a convex combination: every output coordinate is
+    within [min(v), max(v)] over the causal prefix + history mean."""
+    key = jax.random.PRNGKey(seed)
+    b, n, dk, dv = 1, 32, 3, 4
+    q = jnp.tanh(jax.random.normal(key, (b, heads, n, dk)))
+    kk = jnp.tanh(jax.random.normal(jax.random.fold_in(key, 1),
+                                    (b, heads, n, dk)))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, heads, n, dv))
+    out = zeta_attention(q, kk, v, 0.5, num_chunks=4, k=4)
+    vmax = float(v.max()) + 1e-4
+    vmin = float(v.min()) - 1e-4
+    assert float(out.max()) <= vmax and float(out.min()) >= vmin
+
+
+@given(st.integers(0, 1_000))
+@settings(max_examples=15, deadline=None)
+def test_grouped_equals_repeated(seed):
+    """GQA-grouped search == repeated-KV search (selection semantics)."""
+    key = jax.random.PRNGKey(seed)
+    b, hq, hkv, n, dk, dv = 1, 4, 2, 32, 2, 4
+    g = hq // hkv
+    q = jnp.tanh(jax.random.normal(key, (b, hq, n, dk)))
+    kk = jnp.tanh(jax.random.normal(jax.random.fold_in(key, 1),
+                                    (b, hkv, n, dk)))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, n, dv))
+    k_rep = jnp.repeat(kk, g, axis=1)
+    v_rep = jnp.repeat(v, g, axis=1)
+    a = zeta_attention(q, k_rep, v_rep, 0.3, num_chunks=4, k=4)
+    bb = zeta_attention(q, kk, v, 0.3, num_chunks=4, k=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-6)
+
+
+@given(st.integers(0, 500), st.sampled_from([4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_causality_property(seed, chunks):
+    """Perturbing token j never changes outputs before j."""
+    key = jax.random.PRNGKey(seed)
+    b, h, n, dk, dv = 1, 2, 32, 3, 4
+    q = jnp.tanh(jax.random.normal(key, (b, h, n, dk)))
+    kk = jnp.tanh(jax.random.normal(jax.random.fold_in(key, 1),
+                                    (b, h, n, dk)))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, n, dv))
+    j = int(jax.random.randint(jax.random.fold_in(key, 3), (), 1, n))
+    out = zeta_attention(q, kk, v, 0.5, num_chunks=chunks, k=4)
+    kk2 = kk.at[:, :, j].set(-kk[:, :, j])
+    v2 = v.at[:, :, j].set(v[:, :, j] * 3 + 1)
+    out2 = zeta_attention(q, kk2, v2, 0.5, num_chunks=chunks, k=4)
+    diff = np.asarray(jnp.abs(out2 - out).max(axis=-1))
+    assert diff[:, :, :j].max() == 0.0
+
+
+@given(st.integers(0, 300))
+@settings(max_examples=10, deadline=None)
+def test_repeated_sorted_insert_stays_sorted(seed):
+    rng = np.random.default_rng(seed)
+    nmax = 24
+    skz = jnp.full((1, nmax), topk.SENTINEL, jnp.int32)
+    spos = jnp.zeros((1, nmax), jnp.int32)
+    for t in range(nmax):
+        code = int(rng.integers(0, 2**20))
+        skz, spos = topk.sorted_insert(
+            skz, spos, jnp.asarray([t], jnp.int32),
+            jnp.asarray([code], jnp.int32), jnp.asarray([t], jnp.int32),
+        )
+        vals = np.asarray(skz[0, : t + 1])
+        assert (np.diff(vals) >= 0).all()
+    assert set(np.asarray(spos[0]).tolist()) == set(range(nmax))

@@ -1,0 +1,224 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint, compression,
+elastic helpers, sharding rules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.mqar import mqar_batch
+from repro.data.synthetic import SyntheticLMLoader
+from repro.launch.elastic import HeartbeatMonitor, largest_grid
+from repro.launch.sharding import param_pspec
+from repro.optim import adafactor, adamw, chain, clip_by_global_norm, \
+    warmup_cosine
+from repro.optim.compress import (
+    ef_init,
+    int8_dequantize,
+    int8_quantize,
+    topk_compress,
+    topk_decompress,
+)
+from repro.optim.transform import apply_updates
+
+
+# ------------------------------------------------------------- optimizers
+
+
+def _quad_loss(params):
+    return jnp.sum((params["w"] - 3.0) ** 2)
+
+
+@pytest.mark.parametrize("make_tx", [
+    lambda: adamw(0.1, weight_decay=0.0),
+    lambda: adafactor(0.5),
+    lambda: chain(clip_by_global_norm(1.0), adamw(0.1, weight_decay=0.0)),
+])
+def test_optimizers_converge_on_quadratic(make_tx):
+    tx = make_tx()
+    params = {"w": jnp.asarray([0.0, 1.0, 5.0])}
+    state = tx.init(params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(200):
+        g = jax.grad(_quad_loss)(params)
+        upd, state = tx.update(g, state, params, step + i)
+        params = apply_updates(params, upd)
+    assert _quad_loss(params) < 0.05
+
+
+def test_adamw_weight_decay_shrinks_params():
+    tx = adamw(0.01, weight_decay=0.5)
+    params = {"w": jnp.asarray([10.0])}
+    state = tx.init(params)
+    upd, _ = tx.update({"w": jnp.asarray([0.0])}, state, params,
+                       jnp.zeros((), jnp.int32))
+    assert float(upd["w"][0]) < 0.0
+
+
+def test_clip_by_global_norm():
+    tx = clip_by_global_norm(1.0)
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    out, _ = tx.update(g, tx.init(g), g, jnp.zeros((), jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(out["a"]), np.asarray([0.6, 0.8]), rtol=1e-5
+    )
+
+
+def test_warmup_cosine_shape():
+    fn = warmup_cosine(1.0, 10, 100)
+    assert float(fn(jnp.asarray(0.0))) == 0.0
+    assert abs(float(fn(jnp.asarray(10.0))) - 1.0) < 1e-6
+    assert float(fn(jnp.asarray(100.0))) < 1e-6
+
+
+# ------------------------------------------------------------------ data
+
+
+def test_mqar_batch_structure():
+    b = mqar_batch(jax.random.PRNGKey(0), batch=4, seq_len=64, vocab=64,
+                   num_pairs=8, num_queries=4)
+    toks, labels, mask = b["tokens"], b["labels"], b["mask"]
+    assert toks.shape == (4, 64)
+    assert float(mask.sum()) == 4 * 4
+    # at masked positions, the token at pos+1 equals the label (teacher
+    # forcing) and the label is the value bound to that key earlier
+    tn, ln, mn = map(np.asarray, (toks, labels, mask))
+    for r in range(4):
+        qpos = np.where(mn[r] > 0)[0]
+        for qp in qpos:
+            key_tok = tn[r, qp]
+            val = ln[r, qp]
+            assert tn[r, qp + 1] == val
+            # the (key, value) pair appeared earlier in the sequence
+            earlier = np.where(tn[r, :qp] == key_tok)[0]
+            assert len(earlier) >= 1
+            assert tn[r, earlier[0] + 1] == val
+
+
+def test_loader_deterministic_and_resumable():
+    l1 = SyntheticLMLoader(batch=2, seq_len=16, vocab=97, seed=7)
+    batches = [next(l1) for _ in range(5)]
+    state = l1.state_dict()
+    after = [next(l1) for _ in range(3)]
+
+    l2 = SyntheticLMLoader(batch=2, seq_len=16, vocab=97, seed=7)
+    l2.load_state_dict(state)
+    resumed = [next(l2) for _ in range(3)]
+    for a, b in zip(after, resumed):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # different hosts get different data
+    l3 = SyntheticLMLoader(batch=2, seq_len=16, vocab=97, seed=7,
+                           host_index=1, num_hosts=2)
+    assert not np.array_equal(next(l3)["tokens"], batches[0]["tokens"])
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_save=False)
+    state = {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3)},
+        "step": jnp.asarray(5, jnp.int32),
+    }
+    for s in (1, 2, 3):
+        mgr.save(s, state, extra={"loader": {"step": s}})
+    assert mgr.latest_step() == 3
+    # keep_last=2 -> step 1 garbage-collected
+    assert not os.path.exists(os.path.join(str(tmp_path), "1"))
+    restored, extra = mgr.restore(3, state)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
+    assert extra["loader"]["step"] == 3
+
+
+def test_checkpoint_async_and_tmp_cleanup(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=3, async_save=True)
+    state = {"w": jnp.ones((4,))}
+    mgr.save(1, state)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    # a stale tmp dir (crash mid-save) is ignored and cleaned on init
+    os.makedirs(os.path.join(str(tmp_path), "9.tmp"), exist_ok=True)
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.latest_step() == 1
+    assert not os.path.exists(os.path.join(str(tmp_path), "9.tmp"))
+
+
+def test_checkpoint_restore_casts_dtype(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"w": jnp.ones((4,), jnp.float32)}
+    mgr.save(1, state)
+    template = {"w": jnp.zeros((4,), jnp.float32)}
+    restored, _ = mgr.restore(1, template)
+    assert restored["w"].dtype == jnp.float32
+
+
+# ----------------------------------------------------------- compression
+
+
+def test_int8_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.1
+    q, scale = int8_quantize(g)
+    deq = int8_dequantize(q, scale)
+    assert float(jnp.abs(deq - g).max()) <= float(scale) / 2 + 1e-9
+
+
+def test_topk_error_feedback_preserves_mass():
+    """EF invariant: transmitted + residual == accumulated gradient."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    st = ef_init(g)
+    vals, idx, st2 = topk_compress(g, st, frac=0.25)
+    dense = topk_decompress(vals, idx, g.shape)
+    np.testing.assert_allclose(
+        np.asarray(dense + st2.residual), np.asarray(g), rtol=1e-5,
+        atol=1e-6,
+    )
+    # second round: residual re-enters
+    g2 = jnp.zeros_like(g)
+    vals2, idx2, st3 = topk_compress(g2, st2, frac=1.0)
+    dense2 = topk_decompress(vals2, idx2, g.shape)
+    np.testing.assert_allclose(
+        np.asarray(dense2), np.asarray(st2.residual), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------- elastic
+
+
+def test_largest_grid_prefers_model_axis():
+    assert largest_grid(256, model_axis=16) == (16, 16)
+    assert largest_grid(192, model_axis=16) == (8, 16)   # 12->8 pow2 data
+    assert largest_grid(6, model_axis=4) == (2, 2)
+    assert largest_grid(3, model_axis=4) == (2, 1)
+
+
+def test_heartbeat_monitor():
+    t = [0.0]
+    mon = HeartbeatMonitor(timeout_s=5.0, clock=lambda: t[0])
+    mon.beat(0)
+    mon.beat(1)
+    t[0] = 3.0
+    mon.beat(0)
+    t[0] = 7.0
+    assert mon.dead_hosts() == [1]
+    assert mon.alive_hosts() == [0]
+
+
+# ---------------------------------------------------------------- sharding
+
+
+def test_param_pspec_rules():
+    from jax.sharding import PartitionSpec as P
+
+    assert param_pspec("embed/embedding", 2, False) == P("model", "data")
+    assert param_pspec("layers/mixer/wv/kernel", 3, True) == \
+        P(None, "data", "model")
+    assert param_pspec("layers/ffn/experts/w_up", 4, True) == \
+        P(None, "model", "data", None)
+    assert param_pspec("layers/norm1/scale", 2, True) == P(None, None)
+    assert param_pspec("layers/mixer/gamma_theta", 2, True) == P(None, None)

@@ -1,0 +1,95 @@
+"""Property tests for the Z-order (Morton) projection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import zorder
+
+
+def _ref_interleave(coords: np.ndarray, bits: int) -> int:
+    """Bit-level oracle straight from eq. (4)."""
+    d = len(coords)
+    out = 0
+    for b in range(bits):           # significance within coordinate
+        for j in range(d):          # dim 0 most significant in group
+            bit = (int(coords[j]) >> b) & 1
+            out |= bit << (b * d + (d - 1 - j))
+    return out
+
+
+@given(
+    st.integers(1, 4),
+    st.lists(st.integers(0, 2**7 - 1), min_size=4, max_size=4),
+)
+@settings(max_examples=50, deadline=None)
+def test_interleave_matches_bit_oracle(d, vals):
+    bits = min(7, 30 // d)
+    coords = np.array(vals[:d], np.uint32) % (2**bits)
+    got = zorder.interleave_bits(
+        jnp.asarray(coords, jnp.uint32)[None, :], bits
+    )[0]
+    assert int(got) == _ref_interleave(coords, bits)
+
+
+def test_interleave_is_injective_3d():
+    bits = 5
+    rng = np.random.default_rng(0)
+    pts = rng.integers(0, 2**bits, size=(512, 3)).astype(np.uint32)
+    pts = np.unique(pts, axis=0)
+    codes = np.asarray(
+        zorder.interleave_bits(jnp.asarray(pts), bits)
+    )
+    assert len(np.unique(codes)) == len(pts)
+
+
+def test_code_monotone_in_1d():
+    """For d=1 the Morton code is the quantised value itself -> sorting by
+    code == sorting by coordinate (exact kNN in 1-D)."""
+    x = jnp.linspace(-1, 1, 64)[None, :, None]
+    kz, _ = zorder.zorder_encode(x, x, bound=1.0)
+    assert bool(jnp.all(jnp.diff(kz[0]) >= 0))
+
+
+def test_fixed_bounds_are_causal():
+    """Changing one point must not change any other point's code (the
+    data-dependent-bounds causality leak regression test)."""
+    k = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 3))
+    kz1, _ = zorder.zorder_encode(k, k, bound=1.0)
+    k2 = k.at[0, 31].set(100.0)
+    kz2, _ = zorder.zorder_encode(k2, k2, bound=1.0)
+    np.testing.assert_array_equal(
+        np.asarray(kz1[0, :31]), np.asarray(kz2[0, :31])
+    )
+
+
+def test_locality_preservation_declines_with_dk():
+    """Fig 3's qualitative claim: neighbour overlap after projection is
+    higher for small d_K."""
+    rng = np.random.default_rng(0)
+    n, topn = 256, 16
+    overlaps = {}
+    for dk in (1, 3, 8):
+        pts = np.tanh(rng.standard_normal((n, dk))).astype(np.float32)
+        x = jnp.asarray(pts)[None]
+        kz, _ = zorder.zorder_encode(x, x, bound=1.0)
+        codes = np.asarray(kz[0]).astype(np.int64)
+        d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+        true_nn = np.argsort(d2, axis=1)[:, 1: topn + 1]
+        z_nn = np.argsort(np.abs(codes[:, None] - codes[None]), axis=1)[
+            :, 1: topn + 1
+        ]
+        overlaps[dk] = np.mean([
+            len(set(a) & set(b)) / topn for a, b in zip(true_nn, z_nn)
+        ])
+    assert overlaps[1] >= overlaps[3] >= overlaps[8] - 0.05
+    assert overlaps[3] > 0.2
+
+
+def test_bits_for_dim_limits():
+    assert zorder.bits_for_dim(3) == 10
+    assert zorder.bits_for_dim(1) == 30
+    with pytest.raises(ValueError):
+        zorder.bits_for_dim(3, requested=11)
