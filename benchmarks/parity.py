@@ -1,0 +1,22 @@
+"""Backend parity suite: max-abs-error between every registered ZETA
+backend pair on the standard small shapes, via repro.backend.parity.
+
+Rows: parity_<a>_vs_<b>_B..H..kv..N..,0,max_abs_err=...;dtype=...
+"""
+
+from __future__ import annotations
+
+from repro.backend import current_device, parity_rows, resolve_name
+
+
+def run() -> list[str]:
+    rows = parity_rows()
+    rows.append(
+        f"parity_resolved_backend,0,"
+        f"auto={resolve_name()};device={current_device()}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -7,8 +7,14 @@ Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+# make `benchmarks.*` importable when invoked as `python benchmarks/run.py`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 SUITES = {
     "fig2a": ("benchmarks.mqar", "MQAR accuracy: full vs zeta vs topk"),
@@ -20,9 +26,11 @@ SUITES = {
     "tab4": ("benchmarks.memory", "memory scaling vs full attention"),
     "recall": ("benchmarks.recall", "z-order window recall of exact kNN"),
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
+    "parity": ("benchmarks.parity",
+               "backend registry parity (reference/xla/pallas)"),
 }
 
-FAST_DEFAULT = ["fig3", "tab3", "tab4", "recall", "roofline"]
+FAST_DEFAULT = ["parity", "fig3", "tab3", "tab4", "recall", "roofline"]
 ALL = list(SUITES)
 
 
@@ -44,8 +52,6 @@ def main() -> None:
     # MQAR training figures take ~40 min on this CPU; when a cached run
     # exists (results/bench_mqar_figs.csv), replay it in the default set.
     if not args.only:
-        import os
-
         cached = os.path.join(
             os.path.dirname(__file__), "..", "results",
             "bench_mqar_figs.csv",
@@ -56,6 +62,9 @@ def main() -> None:
                     line = line.strip()
                     if line and not line.startswith("name,"):
                         print(f"{line} [cached]", flush=True)
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        sys.exit(f"unknown suite(s) {unknown}; available: {', '.join(ALL)}")
     for name in names:
         mod_name, desc = SUITES[name]
         t0 = time.time()

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point — used by CI and the README quickstart.
+#
+#   scripts/run_tests.sh            # fast set (slow-marked tests excluded)
+#   scripts/run_tests.sh --full     # everything, incl. slow kernel sweeps
+#   scripts/run_tests.sh <pytest args...>  # passthrough
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    shift
+    exec python -m pytest -q -m "" "$@"
+fi
+exec python -m pytest -x -q "$@"

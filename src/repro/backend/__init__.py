@@ -1,0 +1,37 @@
+"""Unified attention-backend dispatch (see docs/ARCHITECTURE.md).
+
+Public surface:
+
+  attention(q, k, v, cfg, gamma2=...)   — select a backend and run it
+  gathered_attention(...)               — dispatch only the scoring stage
+  register_backend(name, fn, caps)      — add a backend
+  list_backends() / get_backend(name)   — introspection
+  available_backends(request)           — capability-filtered, ranked
+  support_matrix[_markdown]()           — the README's backend matrix
+  resolve_name(cfg)                     — what dispatch would pick
+  default_interpret()                   — Pallas interpret-mode probe
+
+``python -m repro.backend`` prints the live support matrix.
+"""
+
+from repro.backend.registry import (  # noqa: F401
+    ENV_VAR,
+    AttentionRequest,
+    Backend,
+    Capabilities,
+    attention,
+    available_backends,
+    current_device,
+    default_interpret,
+    gathered_attention,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve_name,
+    select_backend,
+    support_matrix,
+    support_matrix_markdown,
+    unregister_backend,
+)
+from repro.backend import backends  # noqa: F401  (stock registrations)
+from repro.backend.parity import parity_check, parity_rows  # noqa: F401

@@ -1,0 +1,8 @@
+"""Print the live backend support matrix (used to regenerate README.md's
+table): ``PYTHONPATH=src python -m repro.backend``."""
+
+from repro.backend import current_device, support_matrix_markdown
+
+if __name__ == "__main__":
+    print(f"device: {current_device()}\n")
+    print(support_matrix_markdown())

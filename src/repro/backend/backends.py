@@ -1,0 +1,235 @@
+"""Stock backend registrations: reference / xla / pallas / flash.
+
+  reference — naive oracles from core/ref.py; always available, slow, the
+              ground truth every other backend is paritied against.
+  xla       — the pure-XLA ZETA pipeline (gather + masked Cauchy scoring
+              with the bf16-cotangent-pinned weighted sum).  Default off-TPU.
+  pallas    — same pipeline but the scoring stage runs the fused Pallas
+              kernel (kernels/cauchy_topk.py).  Compiled on TPU, interpret
+              mode elsewhere.  Default on TPU.
+  flash     — blocked online-softmax dense attention (kernels/flash.py),
+              the paper's full-attention baseline.  Softmax mechanism only.
+
+New backends (sharded, sequence-parallel, ...) are single
+``register_backend`` calls following the same pattern.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.backend.registry import (
+    Capabilities,
+    default_interpret,
+    register_backend,
+)
+from repro.core import ref
+from repro.core.attention import (
+    repeat_kv as _repeat_kv,
+    score_gathered_xla,
+    zeta_attention,
+    zeta_attention_noncausal,
+)
+
+_CAUCHY_ONLY = ("cauchy",)
+
+
+def _flatten_fnkd(q, k_sel, v_sel, valid, gamma2):
+    """Collapse arbitrary leading batch dims to the (F, N, K, d) layout the
+    Pallas kernel works in; returns arrays plus an un-flattener."""
+    lead = q.shape[:-2]
+    n, dk = q.shape[-2:]
+    kk, dv = k_sel.shape[-2], v_sel.shape[-1]
+    f = math.prod(lead) if lead else 1
+    g2 = jnp.broadcast_to(
+        jnp.asarray(gamma2, q.dtype), lead + (1, 1)
+    ).reshape(f)
+    args = (
+        q.reshape(f, n, dk),
+        k_sel.reshape(f, n, kk, dk),
+        v_sel.reshape(f, n, kk, dv),
+        valid.reshape(f, n, kk),
+        g2,
+    )
+    return args, lambda out: out.reshape(lead + (n, dv))
+
+
+# ------------------------------------------------------------------ zeta
+
+
+def _zeta_backend(impl: str):
+    """Full-attention entry for the ZETA pipeline with scoring stage
+    ``impl`` (a gathered-capable backend name)."""
+
+    def fn(q, k, v, gamma2, *, zcfg, causal, mechanism):
+        if causal:
+            return zeta_attention(
+                q, k, v, gamma2,
+                num_chunks=zcfg.num_chunks, k=zcfg.k, bits=zcfg.bits,
+                history_mean=zcfg.history_mean,
+                local_window=zcfg.local_window,
+                score=zcfg.score, impl=impl,
+                shard_search=zcfg.shard_search,
+            )
+        # the non-causal pipeline has no GQA-grouped search: repeat KV
+        groups = q.shape[1] // k.shape[1]
+        return zeta_attention_noncausal(
+            q, _repeat_kv(k, groups), _repeat_kv(v, groups), gamma2,
+            k=zcfg.k, bits=zcfg.bits, score=zcfg.score, impl=impl,
+        )
+
+    fn.__name__ = f"zeta_{impl}_attention"
+    return fn
+
+
+def _gathered_reference(q, k_sel, v_sel, valid, gamma2, *,
+                        score: str = "cauchy"):
+    if score != "cauchy":
+        raise NotImplementedError(
+            f"reference gathered scorer supports cauchy only, got {score!r}"
+        )
+    g2 = jnp.asarray(gamma2, jnp.float32)
+    return ref.gathered_cauchy_attention(
+        q.astype(jnp.float32),
+        k_sel.astype(jnp.float32),
+        v_sel.astype(jnp.float32),
+        valid,
+        g2,
+    ).astype(q.dtype)
+
+
+def _gathered_xla(q, k_sel, v_sel, valid, gamma2, *, score: str = "cauchy"):
+    return score_gathered_xla(q, k_sel, v_sel, valid, gamma2, score=score)
+
+
+def _gathered_pallas(q, k_sel, v_sel, valid, gamma2, *,
+                     score: str = "cauchy"):
+    if score != "cauchy":
+        raise NotImplementedError(
+            f"pallas gathered scorer supports cauchy only, got {score!r}"
+        )
+    lead = q.shape[:-2]
+    g2 = jnp.asarray(gamma2, q.dtype)
+    try:
+        per_row = jnp.broadcast_shapes(
+            g2.shape, lead + (1, 1)
+        ) == lead + (1, 1)
+    except ValueError:
+        per_row = False
+    if not per_row:
+        # per-(N, K) gamma is not expressible in the kernel's (F,) rows;
+        # honour the gathered contract via the xla scorer instead
+        return score_gathered_xla(q, k_sel, v_sel, valid, g2, score=score)
+    from repro.kernels import ops as kernel_ops
+
+    args, unflatten = _flatten_fnkd(q, k_sel, v_sel, valid, g2)
+    return unflatten(kernel_ops.cauchy_topk_attention(*args))
+
+
+# ------------------------------------------------------------------ softmax
+
+
+def _softmax_reference(q, k, v, gamma2, *, zcfg, causal, mechanism):
+    groups = q.shape[1] // k.shape[1]
+    out32 = ref.full_softmax_attention(
+        q.astype(jnp.float32),
+        _repeat_kv(k, groups).astype(jnp.float32),
+        _repeat_kv(v, groups).astype(jnp.float32),
+        causal=causal,
+    )
+    return out32.astype(q.dtype)
+
+
+def _flash(q, k, v, gamma2, *, zcfg, causal, mechanism):
+    from repro.kernels.flash import flash_attention
+
+    b, hq, n, hd = q.shape
+    groups = hq // k.shape[1]
+    kk = _repeat_kv(k, groups)
+    vv = _repeat_kv(v, groups)
+    dv = vv.shape[-1]
+    out = flash_attention(
+        q.reshape(b * hq, n, hd),
+        kk.reshape(b * hq, n, hd),
+        vv.reshape(b * hq, n, dv),
+        causal=causal,
+        interpret=default_interpret(),
+    )
+    return out.reshape(b, hq, n, dv)
+
+
+def _reference(q, k, v, gamma2, *, zcfg, causal, mechanism):
+    """Dense-oracle backend: dispatches on mechanism."""
+    if mechanism == "softmax":
+        return _softmax_reference(q, k, v, gamma2, zcfg=zcfg, causal=causal,
+                                  mechanism=mechanism)
+    return _zeta_backend("reference")(q, k, v, gamma2, zcfg=zcfg,
+                                      causal=causal, mechanism=mechanism)
+
+
+# ------------------------------------------------------------------ register
+
+
+def register_stock(overwrite: bool = False) -> None:
+    """(Re-)register the four stock backends.  Runs at import; the registry
+    also calls it with ``overwrite=True`` to repopulate after tests have
+    unregistered names (a re-import alone would be a cached no-op)."""
+    register_backend(
+        "reference",
+        _reference,
+        Capabilities(
+            mechanisms=("zeta", "softmax"),
+            scores=_CAUCHY_ONLY,
+            priority=0,
+            notes="naive oracle (core/ref.py); ground truth, O(N·K) einsums",
+        ),
+        gathered=_gathered_reference,
+        overwrite=overwrite,
+    )
+
+    register_backend(
+        "xla",
+        _zeta_backend("xla"),
+        Capabilities(
+            mechanisms=("zeta",),
+            priority=10,
+            notes="pure-XLA gather pipeline; bf16-pinned backward",
+        ),
+        gathered=_gathered_xla,
+        overwrite=overwrite,
+    )
+
+    register_backend(
+        "pallas",
+        _zeta_backend("pallas"),
+        Capabilities(
+            mechanisms=("zeta",),
+            scores=_CAUCHY_ONLY,
+            dtypes=("float32", "bfloat16"),
+            compiled_devices=("tpu",),
+            interpreted_devices=("cpu", "gpu"),
+            priority=20,
+            notes="fused Cauchy top-k kernel (Appendix-E backward)",
+        ),
+        gathered=_gathered_pallas,
+        overwrite=overwrite,
+    )
+
+    register_backend(
+        "flash",
+        _flash,
+        Capabilities(
+            mechanisms=("softmax",),
+            scores=(),  # softmax has no Euclidean score variants
+            compiled_devices=("tpu",),
+            interpreted_devices=("cpu", "gpu"),
+            priority=5,
+            notes="blocked online-softmax baseline (Tables 3/4)",
+        ),
+        overwrite=overwrite,
+    )
+
+
+register_stock()

@@ -1,0 +1,114 @@
+"""Backend parity harness: run two registered backends on identical inputs
+and report max-abs-error.  This is what makes the dispatch subsystem
+trustworthy — tests assert on it (tests/test_backend_dispatch.py) and the
+benchmark runner prints it (``python benchmarks/run.py --only parity``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# (B, Hq, Hkv, N, d_k, d_v) — small enough for CPU interpret mode.
+DEFAULT_SHAPES: tuple[tuple[int, int, int, int, int, int], ...] = (
+    (1, 2, 2, 64, 3, 8),
+    (2, 2, 1, 64, 3, 16),   # GQA: 2 query heads share 1 KV head
+    (1, 1, 1, 128, 2, 4),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityResult:
+    backend_a: str
+    backend_b: str
+    shape: tuple[int, int, int, int, int, int]
+    dtype: str
+    max_abs_err: float
+
+    def ok(self, threshold: float = 1e-4) -> bool:
+        return self.max_abs_err < threshold
+
+    def row(self) -> str:
+        b, hq, hkv, n, dk, dv = self.shape
+        return (
+            f"parity_{self.backend_a}_vs_{self.backend_b}"
+            f"_B{b}H{hq}kv{hkv}N{n},0,"
+            f"max_abs_err={self.max_abs_err:.3e};dtype={self.dtype}"
+        )
+
+
+def make_inputs(shape, dtype=jnp.float32, seed: int = 0):
+    """Standard harness inputs for a (B, Hq, Hkv, N, d_k, d_v) shape —
+    tanh-squashed q/k coordinates, normal values.  Tests reuse this so
+    parity thresholds and test tolerances see the same distribution."""
+    b, hq, hkv, n, dk, dv = shape
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jnp.tanh(jax.random.normal(ks[0], (b, hq, n, dk))).astype(dtype)
+    k = jnp.tanh(jax.random.normal(ks[1], (b, hkv, n, dk))).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, n, dv)).astype(dtype)
+    return q, k, v
+
+
+def parity_check(
+    backend_a: str,
+    backend_b: str,
+    *,
+    shapes: Sequence[tuple[int, int, int, int, int, int]] = DEFAULT_SHAPES,
+    cfg=None,
+    dtype=jnp.float32,
+    gamma2: float = 0.5,
+    causal: bool = True,
+    mechanism: str = "zeta",
+    seed: int = 0,
+) -> list[ParityResult]:
+    """Run ``backend_a`` and ``backend_b`` on the same random inputs for
+    every shape; returns one :class:`ParityResult` per shape.
+
+    Both backends see the exact same candidate selection (it is part of the
+    shared pipeline), so the error isolates the scoring/aggregation stage —
+    the part that differs between pure XLA, the fused kernel, and the
+    oracle.
+    """
+    from repro.backend import registry
+
+    results = []
+    for i, shape in enumerate(shapes):
+        q, k, v = make_inputs(shape, dtype, seed + i)
+        outs = {}
+        for name in (backend_a, backend_b):
+            outs[name] = registry.attention(
+                q, k, v, cfg, gamma2=jnp.asarray(gamma2, dtype),
+                causal=causal, mechanism=mechanism, backend=name,
+            )
+        err = float(
+            jnp.max(jnp.abs(outs[backend_a].astype(jnp.float32)
+                            - outs[backend_b].astype(jnp.float32)))
+        )
+        results.append(
+            ParityResult(
+                backend_a=backend_a,
+                backend_b=backend_b,
+                shape=shape,
+                dtype=jnp.dtype(dtype).name,
+                max_abs_err=err,
+            )
+        )
+    return results
+
+
+def parity_rows(
+    pairs: Sequence[tuple[str, str]] = (
+        ("reference", "xla"),
+        ("reference", "pallas"),
+        ("xla", "pallas"),
+    ),
+    **kw,
+) -> list[str]:
+    """CSV rows for benchmarks/run.py."""
+    rows = []
+    for a, b in pairs:
+        rows.extend(r.row() for r in parity_check(a, b, **kw))
+    return rows

@@ -1,0 +1,342 @@
+"""Attention-backend registry and dispatch.
+
+One selection policy for every caller (train, serve, bench, tests):
+
+  1. an explicit ``backend=`` argument or ``ZetaConfig.backend`` wins,
+  2. else the ``REPRO_ATTENTION_BACKEND`` environment variable,
+  3. else the highest-ranked backend whose :class:`Capabilities` match the
+     :class:`AttentionRequest` — compiled-on-this-device beats Pallas
+     interpret mode, then ``priority`` breaks ties.
+
+If a preferred backend exists but its capabilities don't match the request
+(e.g. ``pallas`` with a non-Cauchy score), dispatch *warns and falls back*
+instead of failing: the model still runs, just on a capable backend.
+
+Backends register two entry points:
+
+  ``attention(q, k, v, gamma2, *, zcfg, causal, mechanism)``
+      full attention on token-space inputs, q/k ``(B, H, N, d_k)``,
+      v ``(B, Hkv, N, d_v)``;
+  ``gathered(q, k_sel, v_sel, valid, gamma2, *, score)``  (optional)
+      the scoring stage on already-gathered candidates,
+      q ``(..., N, d_k)``, k_sel/v_sel ``(..., N, K, d)`` — this is what
+      the ZETA pipeline and the decode step dispatch through.
+
+Registration lives in :mod:`repro.backend.backends`; this module holds only
+the policy so kernels may import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Callable, Literal
+
+ENV_VAR = "REPRO_ATTENTION_BACKEND"
+
+Mechanism = Literal["zeta", "softmax"]
+
+
+def current_device() -> str:
+    """Capability probe: the platform jax places arrays on ("cpu"/"gpu"/"tpu")."""
+    import jax
+
+    return jax.default_backend()
+
+
+def default_interpret(device: str | None = None) -> bool:
+    """Pallas kernels run compiled on TPU and in interpret mode elsewhere.
+
+    This is THE single source of truth for the flag — kernels default their
+    ``interpret`` argument from here instead of hardcoding ``True``.
+    """
+    return (device or current_device()) != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionRequest:
+    """What a call site needs from a backend."""
+
+    mechanism: Mechanism = "zeta"
+    score: str = "cauchy"
+    dtype: str = "float32"
+    causal: bool = True
+    device: str = "cpu"
+    stage: Literal["full", "gathered"] = "full"
+
+    @classmethod
+    def probe(cls, **kw) -> "AttentionRequest":
+        kw.setdefault("device", current_device())
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can do; checked field-by-field against a request."""
+
+    mechanisms: tuple[str, ...]
+    scores: tuple[str, ...] = ("cauchy", "neg_euclid", "inverse_euclid")
+    dtypes: tuple[str, ...] = ("float32", "bfloat16", "float16")
+    causal: bool = True
+    noncausal: bool = True
+    compiled_devices: tuple[str, ...] = ("cpu", "gpu", "tpu")
+    interpreted_devices: tuple[str, ...] = ()
+    priority: int = 0
+    notes: str = ""
+
+    @property
+    def devices(self) -> tuple[str, ...]:
+        return self.compiled_devices + self.interpreted_devices
+
+    def supports(self, req: AttentionRequest) -> bool:
+        if req.mechanism not in self.mechanisms:
+            return False
+        if req.mechanism == "zeta" and req.score not in self.scores:
+            return False
+        if req.dtype not in self.dtypes:
+            return False
+        if req.causal and not self.causal:
+            return False
+        if not req.causal and not self.noncausal:
+            return False
+        if req.device not in self.devices:
+            return False
+        return True
+
+    def rank(self, req: AttentionRequest) -> tuple[int, int]:
+        """Sort key among capable backends: compiled beats interpreted,
+        then declared priority."""
+        compiled = 1 if req.device in self.compiled_devices else 0
+        return (compiled, self.priority)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    attention: Callable
+    caps: Capabilities
+    gathered: Callable | None = None
+
+    def supports(self, req: AttentionRequest) -> bool:
+        if req.stage == "gathered" and self.gathered is None:
+            return False
+        return self.caps.supports(req)
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
+                     gathered: Callable | None = None,
+                     overwrite: bool = False) -> Backend:
+    """Register ``fn`` under ``name``.  Re-registering an existing name
+    requires ``overwrite=True`` (tests use this to inject fakes)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"backend {name!r} already registered; pass overwrite=True"
+        )
+    be = Backend(name=name, attention=fn, caps=capabilities,
+                 gathered=gathered)
+    _REGISTRY[name] = be
+    return be
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown attention backend {name!r}; "
+            f"registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_backends() -> tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def available_backends(req: AttentionRequest) -> tuple[str, ...]:
+    """Capable backends for ``req``, best-ranked first."""
+    _ensure_registered()
+    capable = [b for b in _REGISTRY.values() if b.supports(req)]
+    capable.sort(key=lambda b: (b.caps.rank(req), b.name), reverse=True)
+    return tuple(b.name for b in capable)
+
+
+def select_backend(req: AttentionRequest,
+                   preferred: str | None = None) -> Backend:
+    """Resolve ``req`` to a backend (see module docstring for the policy)."""
+    _ensure_registered()
+    if preferred is not None:
+        be = get_backend(preferred)  # unknown explicit name is an error
+        if be.supports(req):
+            return be
+        warnings.warn(
+            f"attention backend {preferred!r} does not support {req}; "
+            f"falling back to automatic selection",
+            stacklevel=2,
+        )
+    env = os.environ.get(ENV_VAR)
+    if env and env != preferred:
+        be = _REGISTRY.get(env)
+        if be is None:
+            warnings.warn(
+                f"{ENV_VAR}={env!r} names no registered backend "
+                f"(have {sorted(_REGISTRY)}); ignoring",
+                stacklevel=2,
+            )
+        elif be.supports(req):
+            return be
+        else:
+            warnings.warn(
+                f"{ENV_VAR}={env!r} does not support {req}; ignoring",
+                stacklevel=2,
+            )
+    names = available_backends(req)
+    if not names:
+        raise LookupError(f"no registered attention backend supports {req}")
+    return _REGISTRY[names[0]]
+
+
+def _ensure_registered() -> None:
+    """Idempotently pull in the stock registrations (lazy to avoid cycles:
+    backends.py imports core/kernels modules which import this module).
+    Also repopulates after everything was unregistered — a plain re-import
+    would be a cached no-op."""
+    if not _REGISTRY:
+        from repro.backend import backends
+
+        if not _REGISTRY:
+            backends.register_stock(overwrite=True)
+
+
+# ------------------------------------------------------------------ dispatch
+
+
+def _zeta_cfg(cfg):
+    """Accept ModelConfig, ZetaConfig, or None."""
+    from repro.nn.config import ModelConfig, ZetaConfig
+
+    if cfg is None:
+        return ZetaConfig()
+    if isinstance(cfg, ModelConfig):
+        return cfg.zeta
+    if isinstance(cfg, ZetaConfig):
+        return cfg
+    raise TypeError(f"cfg must be ModelConfig | ZetaConfig | None, got {cfg!r}")
+
+
+def _mechanism_of(cfg, mechanism: Mechanism | None) -> Mechanism:
+    from repro.nn.config import ModelConfig
+
+    if mechanism is not None:
+        return mechanism
+    if isinstance(cfg, ModelConfig) and cfg.attention != "zeta":
+        return "softmax"
+    return "zeta"
+
+
+def attention(q, k, v, cfg=None, *, gamma2=None, causal: bool = True,
+              mechanism: Mechanism | None = None,
+              backend: str | None = None):
+    """Single public attention entry point — select a backend and run it.
+
+    q: (B, Hq, N, d_k); k: (B, Hkv, N, d_k); v: (B, Hkv, N, d_v) with
+    Hq % Hkv == 0.  ``cfg`` is a ModelConfig or ZetaConfig (or None for
+    paper defaults); ``gamma2`` is the Cauchy scale (scalar or (Hq,)),
+    required for the zeta mechanism and ignored by softmax backends.
+    Returns (B, Hq, N, d_v).
+    """
+    zcfg = _zeta_cfg(cfg)
+    mech = _mechanism_of(cfg, mechanism)
+    req = AttentionRequest.probe(
+        mechanism=mech,
+        score=zcfg.score,
+        dtype=str(q.dtype),
+        causal=causal,
+    )
+    be = select_backend(req, preferred=backend or zcfg.backend)
+    return be.attention(q, k, v, gamma2, zcfg=zcfg, causal=causal,
+                        mechanism=mech)
+
+
+def gathered_attention(q, k_sel, v_sel, valid, gamma2, *,
+                       score: str = "cauchy", cfg=None,
+                       backend: str | None = None):
+    """Dispatch the gathered-candidate scoring stage.
+
+    q: (..., N, d_k); k_sel: (..., N, K, d_k); v_sel: (..., N, K, d_v);
+    valid: (..., N, K) bool; gamma2 broadcastable to (..., N, K).
+    Used by the ZETA pipeline (core/attention.py) and the per-token decode
+    step so that both exercise the same backend selection.
+    """
+    zcfg = _zeta_cfg(cfg)
+    req = AttentionRequest.probe(
+        mechanism="zeta", score=score, dtype=str(q.dtype), stage="gathered",
+    )
+    be = select_backend(req, preferred=backend or zcfg.backend)
+    return be.gathered(q, k_sel, v_sel, valid, gamma2, score=score)
+
+
+def resolve_name(cfg=None, *, causal: bool = True,
+                 mechanism: Mechanism | None = None,
+                 backend: str | None = None,
+                 dtype: str = "float32") -> str:
+    """The backend ``attention`` would pick for this config — selection
+    logic shared with serve/bench so they can report/validate it up front."""
+    zcfg = _zeta_cfg(cfg)
+    req = AttentionRequest.probe(
+        mechanism=_mechanism_of(cfg, mechanism), score=zcfg.score,
+        dtype=dtype, causal=causal,
+    )
+    return select_backend(req, preferred=backend or zcfg.backend).name
+
+
+# ------------------------------------------------------------------ matrix
+
+
+def support_matrix() -> list[dict]:
+    """One row per backend: capabilities plus per-device execution mode."""
+    _ensure_registered()
+    rows = []
+    for name in sorted(_REGISTRY):
+        be = _REGISTRY[name]
+        caps = be.caps
+        row = {
+            "backend": name,
+            "mechanisms": "+".join(caps.mechanisms),
+            "scores": "+".join(caps.scores) or "—",
+            "dtypes": "+".join(d.replace("float", "f") for d in caps.dtypes),
+            "gathered": "yes" if be.gathered is not None else "no",
+            "notes": caps.notes,
+        }
+        for dev in ("cpu", "gpu", "tpu"):
+            if dev in caps.compiled_devices:
+                row[dev] = "compiled"
+            elif dev in caps.interpreted_devices:
+                row[dev] = "interpret"
+            else:
+                row[dev] = "—"
+        rows.append(row)
+    return rows
+
+
+def support_matrix_markdown() -> str:
+    """The README's backend support matrix, generated from live registrations
+    (regenerate with ``PYTHONPATH=src python -m repro.backend``)."""
+    cols = ["backend", "mechanisms", "scores", "dtypes",
+            "cpu", "gpu", "tpu", "gathered", "notes"]
+    rows = support_matrix()
+    head = "| " + " | ".join(cols) + " |"
+    sep = "|" + "|".join("---" for _ in cols) + "|"
+    body = [
+        "| " + " | ".join(str(r[c]) for c in cols) + " |" for r in rows
+    ]
+    return "\n".join([head, sep, *body])

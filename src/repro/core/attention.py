@@ -1,13 +1,19 @@
 """ZETA attention: Z-order top-k search + Adaptive Cauchy-Softmax (§3.2-3.4).
 
-Public entry point is :func:`zeta_attention`.  The pipeline:
+This module is the *pipeline implementation*; callers go through the
+dispatch layer, ``repro.backend.attention`` (docs/ARCHITECTURE.md), which
+selects a backend and invokes :func:`zeta_attention` with the matching
+``impl``.  The pipeline:
 
   1. Morton-encode low-dim keys & queries (core/zorder.py)
   2. chunked causal parallel top-k candidate search (core/topk.py)
   3. optional own-chunk local window (beyond-paper, default off)
   4. gather candidate K/V, append history-mean smoothing token
-  5. squared distances -> Adaptive Cauchy-Softmax -> weighted value sum
-     (step 5 runs either as pure-XLA ops or as the fused Pallas kernel)
+  5. squared distances -> Adaptive Cauchy-Softmax -> weighted value sum —
+     the scoring stage, dispatched through the backend registry's
+     ``gathered`` entry (pure-XLA ops, the fused Pallas kernel, or the
+     naive reference oracle; selection happened one level up, ``impl``
+     names the resolved backend)
 
 Layout convention: q, k are (B, H, N, d_k); v is (B, H, N, d_v).
 GQA is handled by the nn layer (keys are searched once per KV head).
@@ -22,6 +28,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cauchy, ref, topk, zorder
+
+
+def repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """GQA broadcast: (B, Hkv, N, d) -> (B, Hkv*groups, N, d)."""
+    if groups == 1:
+        return x
+    b, h, n, d = x.shape
+    return jnp.broadcast_to(
+        x[:, :, None], (b, h, groups, n, d)
+    ).reshape(b, h * groups, n, d)
 
 
 def _gather_kv(
@@ -91,6 +107,28 @@ def _ws_bwd(res, g):
 _weighted_sum.defvjp(_ws_fwd, _ws_bwd)
 
 
+def score_gathered_xla(q, k_sel, v_sel, valid, gamma2, *,
+                       score: str = "cauchy") -> jax.Array:
+    """Pure-XLA gathered scoring stage (the ``xla`` backend's ``gathered``
+    entry): q (..., N, dk), k_sel/v_sel (..., N, K, d), valid (..., N, K),
+    gamma2 broadcastable to (..., N, K)."""
+    g2 = jnp.asarray(gamma2, q.dtype)
+    d2 = jnp.sum((q[..., None, :] - k_sel) ** 2, axis=-1)
+    w = _score_weights(d2, g2, valid, score, q.dtype)
+    return _weighted_sum(w, v_sel)
+
+
+def _gathered_scorer(impl: str):
+    """Resolve the scoring-stage implementation through the backend
+    registry (lazy import: backends.py imports this module)."""
+    from repro.backend import registry
+
+    scorer = registry.get_backend(impl).gathered
+    if scorer is None:
+        raise ValueError(f"backend {impl!r} has no gathered scoring stage")
+    return scorer
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -111,7 +149,7 @@ def zeta_attention(
     history_mean: bool = True,
     local_window: int = 0,
     score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy",
-    impl: Literal["xla", "pallas"] = "xla",
+    impl: Literal["xla", "pallas", "reference"] = "xla",
     shard_search: bool = False,
 ) -> jax.Array:
     """Causal ZETA attention.
@@ -210,23 +248,11 @@ def zeta_attention(
     if g2.ndim == 1:  # per query head
         g2 = g2.reshape(1, Hkv, G, 1, 1)
 
-    # 5. score + aggregate.
-    if impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-
-        kp = k_sel.shape[-2]
-        f = B * Hkv * G
-        out = kernel_ops.cauchy_topk_attention(
-            qg.reshape(f, N, dk),
-            k_sel.reshape(f, N, kp, dk),
-            v_sel.reshape(f, N, kp, dv),
-            valid.reshape(f, N, kp),
-            jnp.broadcast_to(g2, (B, Hkv, G, 1, 1)).reshape(f),
-        ).reshape(B, Hkv, G, N, dv)
-    else:
-        d2 = jnp.sum((qg[..., None, :] - k_sel) ** 2, axis=-1)
-        w = _score_weights(d2, g2, valid, score, q.dtype)
-        out = _weighted_sum(w, v_sel)
+    # 5. score + aggregate — the registry's gathered scoring stage for the
+    # resolved backend (``impl``).  The xla scorer is rank-polymorphic so
+    # the (B, Hkv, G, ...) layout stays reshape-free; the pallas scorer
+    # flattens to (F, N, K, d) internally.
+    out = _gathered_scorer(impl)(qg, k_sel, v_sel, valid, g2, score=score)
 
     out = sa(out, ("batch", "model", None, None, None))
     return out.reshape(B, Hq, N, dv)
@@ -241,10 +267,17 @@ def zeta_attention_noncausal(
     k: int,
     bits: int | None = None,
     bound: float | None = None,
-    impl: Literal["xla", "pallas"] = "xla",
+    score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy",
+    impl: Literal["xla", "pallas", "reference"] = "xla",
 ) -> jax.Array:
     """Encoder-side (non-causal) ZETA: every query searches the *entire*
-    sorted key sequence — a single global sort, no chunk restriction."""
+    sorted key sequence — a single global sort, no chunk restriction.
+    Requires Hq == Hkv (callers repeat KV for GQA)."""
+    if kk.shape[1] != q.shape[1]:
+        raise ValueError(
+            f"non-causal ZETA needs repeated KV: Hq={q.shape[1]} vs "
+            f"Hkv={kk.shape[1]}"
+        )
     B, H, N, dk = q.shape
     dv = v.shape[-1]
     F = B * H
@@ -268,12 +301,5 @@ def zeta_attention_noncausal(
     g2 = jnp.asarray(gamma2, q.dtype)
     if g2.ndim == 1:  # per-head
         g2 = jnp.broadcast_to(g2[None, :], (B, H)).reshape(F, 1, 1)
-    if impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-
-        out = kernel_ops.cauchy_topk_attention(qf, k_sel, v_sel, valid, g2)
-    else:
-        d2 = cauchy.squared_distances(qf, k_sel)
-        w = cauchy.cauchy_weights(d2, g2, valid)
-        out = jnp.einsum("fnk,fnkd->fnd", w, v_sel)
+    out = _gathered_scorer(impl)(qf, k_sel, v_sel, valid, g2, score=score)
     return out.reshape(B, H, N, dv)

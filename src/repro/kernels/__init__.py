@@ -4,5 +4,7 @@ cauchy_topk  — fused gathered Cauchy top-k attention (fwd + Appendix-E bwd)
 zorder       — Morton encode (quantise + bit interleave)
 flash        — blocked causal softmax attention (Table 3/4 baseline)
 
-All validated against ref.py oracles with interpret=True on CPU.
+All validated against ref.py oracles (interpret mode on CPU).  Callers do
+not pick kernels directly: execution-path selection — including the
+interpret-vs-compiled decision — lives in the ``repro.backend`` registry.
 """

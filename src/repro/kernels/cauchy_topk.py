@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.backend.registry import default_interpret
+
 _EPS = 1e-9
 DEFAULT_BLOCK_N = 256
 
@@ -102,10 +104,14 @@ def _block_n(n: int, requested: int | None) -> int:
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def cauchy_topk_fwd(q, k_sel, v_sel, valid, gamma2, *,
-                    block_n: int | None = None, interpret: bool = True):
+                    block_n: int | None = None,
+                    interpret: bool | None = None):
     """q: (F, N, dk); k_sel: (F, N, K, dk); v_sel: (F, N, K, dv);
     valid: (F, N, K); gamma2: (F,) per-row (flattened batch*heads).
-    Returns (out (F, N, dv), z (F, N))."""
+    Returns (out (F, N, dv), z (F, N)).  ``interpret=None`` defers to the
+    registry's device probe (compiled on TPU, interpreted elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
     f, n, dk = q.shape
     kk = k_sel.shape[2]
     dv = v_sel.shape[-1]
@@ -137,7 +143,10 @@ def cauchy_topk_fwd(q, k_sel, v_sel, valid, gamma2, *,
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def cauchy_topk_bwd(q, k_sel, v_sel, valid, gamma2, g, *,
-                    block_n: int | None = None, interpret: bool = True):
+                    block_n: int | None = None,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
     f, n, dk = q.shape
     kk = k_sel.shape[2]
     dv = v_sel.shape[-1]

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.backend.registry import default_interpret
+
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
 NEG_INF = -1e30
@@ -70,8 +72,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
     jax.jit, static_argnames=("bq", "bk", "causal", "interpret")
 )
 def flash_attention(q, k, v, *, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                    causal: bool = True, interpret: bool = True):
-    """q, k: (F, N, hd); v: (F, N, dv) -> (F, N, dv)."""
+                    causal: bool = True, interpret: bool | None = None):
+    """q, k: (F, N, hd); v: (F, N, dv) -> (F, N, dv).  ``interpret=None``
+    defers to the registry's device probe."""
+    if interpret is None:
+        interpret = default_interpret()
     f, n, hd = q.shape
     dv = v.shape[-1]
     bq = min(bq, n)

@@ -4,7 +4,9 @@
 backward kernel; the gather that produced k_sel/v_sel lives *outside*, so
 its transpose (scatter-add to token space) is handled by XLA automatically.
 
-``interpret`` defaults to True on CPU (this container) and False on TPU.
+Interpret-vs-compiled is decided by the backend registry's capability probe
+(``repro.backend.registry.default_interpret``): compiled on TPU, interpret
+mode elsewhere.  Nothing in this module hardcodes the flag.
 """
 
 from __future__ import annotations
@@ -14,13 +16,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.backend.registry import default_interpret
 from repro.kernels import cauchy_topk as ck
 from repro.kernels.flash import flash_attention  # re-export  # noqa: F401
 from repro.kernels.zorder_kernel import zorder_encode_kernel  # noqa: F401
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _norm_gamma(gamma2, f, dtype):
@@ -43,7 +42,7 @@ def _fwd_impl(q, k_sel, v_sel, valid, gamma2):
     f = q.shape[0]
     g = _norm_gamma(gamma2, f, q.dtype)
     out, z = ck.cauchy_topk_fwd(
-        q, k_sel, v_sel, valid, g, interpret=_interpret_default()
+        q, k_sel, v_sel, valid, g, interpret=default_interpret()
     )
     return out, z
 
@@ -59,7 +58,7 @@ def _vjp_bwd(res, g_out):
     g = _norm_gamma(gamma2, f, q.dtype)
     dq, dks, dvs, dg2_rows = ck.cauchy_topk_bwd(
         q, k_sel, v_sel, valid, g, g_out,
-        interpret=_interpret_default(),
+        interpret=default_interpret(),
     )
     # gamma2 arrives broadcast as scalar / (F,) / (F,1,1): reduce to match.
     g2 = jnp.asarray(gamma2)

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.backend.registry import default_interpret
 from repro.core.zorder import bits_for_dim
 
 DEFAULT_BLOCK_N = 1024
@@ -37,8 +38,10 @@ def _encode_kernel(x_ref, out_ref, *, bits: int, lo: float, hi: float):
 )
 def zorder_encode_kernel(x, *, bits: int | None = None, lo: float = -1.0,
                          hi: float = 1.0, block_n: int | None = None,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """x: (F, N, d) float -> (F, N) int32 Morton codes (fixed bounds)."""
+    if interpret is None:
+        interpret = default_interpret()
     f, n, d = x.shape
     nbits = bits_for_dim(d, bits)
     bn = block_n or DEFAULT_BLOCK_N

@@ -12,11 +12,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.backend import attention as dispatch_attention
+from repro.backend import gathered_attention
 from repro.core import ref as core_ref
 from repro.core import topk as core_topk
 from repro.core import zorder as core_zorder
-from repro.core.attention import zeta_attention
-from repro.core.cauchy import cauchy_weights, gamma2_from_param
+from repro.core.attention import repeat_kv as _repeat_kv
+from repro.core.cauchy import gamma2_from_param
 from repro.nn.config import ModelConfig
 from repro.nn.layers import (
     linear_apply,
@@ -91,16 +93,6 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
 
 
-def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
-    """(B, Hkv, N, d) -> (B, Hkv*groups, N, d)."""
-    if groups == 1:
-        return x
-    b, h, n, d = x.shape
-    return jnp.broadcast_to(
-        x[:, :, None], (b, h, groups, n, d)
-    ).reshape(b, h * groups, n, d)
-
-
 def _mla_qkv(p, x, cfg: ModelConfig, prec: Precision, positions):
     """Returns (q (B,Hq,N,qk), k (B,Hq,N,qk), v (B,Hq,N,v), q_lat, kv_lat)."""
     m = cfg.mla
@@ -159,15 +151,11 @@ def attn_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
         if cfg.attention == "zeta":
             zq, zk = _zeta_coords(p, q_lat, kv_lat, cfg, prec, positions)
             g2 = gamma2_from_param(p["gamma_theta"]).astype(x.dtype)
-            z = cfg.zeta
-            out = zeta_attention(
-                zq, zk, v, g2,
-                num_chunks=z.num_chunks, k=z.k, bits=z.bits,
-                history_mean=z.history_mean, local_window=z.local_window,
-                score=z.score, impl=z.impl,
-            ) if causal else _zeta_noncausal(zq, zk, v, g2, z)
+            out = dispatch_attention(zq, zk, v, cfg, gamma2=g2,
+                                     causal=causal)
         else:
-            out = _softmax_attention(q, k, v, causal)
+            out = dispatch_attention(q, k, v, cfg, causal=causal,
+                                     mechanism="softmax")
         y = _merge_heads(out)
         return jnp.dot(y, prec.cast(p["wo"]))
 
@@ -182,48 +170,24 @@ def attn_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
         else:
             zk_s, vv_s = _repeat_kv(zk, groups), _repeat_kv(v, groups)
         g2 = gamma2_from_param(p["gamma_theta"]).astype(x.dtype)
-        if causal:
-            out = zeta_attention(
-                zq, zk_s, vv_s, g2,
-                num_chunks=z.num_chunks, k=z.k, bits=z.bits,
-                history_mean=z.history_mean, local_window=z.local_window,
-                score=z.score, impl=z.impl, shard_search=z.shard_search,
-            )
-        else:
-            # non-causal (encoder) path keeps the repeated-KV layout
-            out = _zeta_noncausal(
-                zq, _repeat_kv(zk, groups), _repeat_kv(v, groups), g2, z
-            )
+        out = dispatch_attention(zq, zk_s, vv_s, cfg, gamma2=g2,
+                                 causal=causal)
     else:
         q = _split_heads(linear_apply(p["wq"], x, prec), hq)
         k = _split_heads(linear_apply(p["wk"], x, prec), hkv)
         cos, sin = rope_table(positions, hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
-        k = _repeat_kv(k, groups)
-        vv = _repeat_kv(v, groups)
         if cfg.attention == "topk":
-            out = core_ref.gupta_topk_attention(q, k, vv, cfg.zeta.k)
+            out = core_ref.gupta_topk_attention(
+                q, _repeat_kv(k, groups), _repeat_kv(v, groups), cfg.zeta.k
+            )
         else:
-            out = _softmax_attention(q, k, vv, causal)
+            # GQA repeat happens inside the softmax backends
+            out = dispatch_attention(q, k, v, cfg, causal=causal,
+                                     mechanism="softmax")
 
     return jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
-
-
-def _zeta_noncausal(zq, zk, v, g2, z):
-    from repro.core.attention import zeta_attention_noncausal
-
-    return zeta_attention_noncausal(
-        zq, zk, v, g2, k=z.k, bits=z.bits, impl=z.impl
-    )
-
-
-def _softmax_attention(q, k, v, causal: bool) -> jax.Array:
-    out32 = core_ref.full_softmax_attention(
-        q.astype(jnp.float32), k.astype(jnp.float32),
-        v.astype(jnp.float32), causal=causal,
-    )
-    return out32.astype(q.dtype)
 
 
 # ------------------------------------------------------------------ cross
@@ -246,7 +210,8 @@ def cross_attn_apply(p, x, memory, cfg: ModelConfig, prec: Precision):
     q = _split_heads(linear_apply(p["wq"], x, prec), hq)
     k = _split_heads(linear_apply(p["wk"], memory, prec), hq)
     v = _split_heads(linear_apply(p["wv"], memory, prec), hq)
-    out = _softmax_attention(q, k, v, causal=False)
+    out = dispatch_attention(q, k, v, None, causal=False,
+                             mechanism="softmax")
     return jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
 
 
@@ -360,13 +325,14 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
             [valid, jnp.ones((fq, 1), bool)], axis=1
         )
         g2 = gamma2_from_param(p["gamma_theta"]).astype(x_t.dtype)
-        g2 = jnp.broadcast_to(g2[None], (b, hq)).reshape(fq, 1)
+        g2 = jnp.broadcast_to(g2[None], (b, hq)).reshape(fq, 1, 1)
         qf = zq_t.reshape(fq, z.d_k)
-        d2 = jnp.sum(
-            (qf[:, None, :] - k_sel.astype(qf.dtype)) ** 2, axis=-1
+        # same gathered scoring stage (and backend selection) as training
+        out = gathered_attention(
+            qf[:, None], k_sel[:, None].astype(qf.dtype),
+            v_sel[:, None].astype(qf.dtype), valid[:, None], g2,
+            score=z.score, cfg=cfg,
         )
-        w = cauchy_weights(d2, g2, valid)
-        out = jnp.einsum("fk,fkd->fd", w, v_sel.astype(qf.dtype))
         out = out.reshape(b, hq, 1, hd)
 
         # cache updates: write current raw key, then (if old enough) insert

@@ -19,7 +19,9 @@ class ZetaConfig:
     proj_hidden: int = 32            # hidden width of the 2-layer f_k / f_q
     pos_feat_dim: int = 8            # sinusoidal position features fed to f_k/f_q
     shared_qk: bool = False          # Reformer-style shared projection
-    impl: Literal["xla", "pallas"] = "xla"
+    # Attention backend name from repro.backend's registry ("reference" /
+    # "xla" / "pallas" / ...); None = capability-based auto-selection.
+    backend: str | None = None
     # ---- beyond-paper performance flags (see launch/optimized.py) ----
     shard_search: bool = False       # shard the z-search over batch*heads
     group_search: bool = False       # GQA: sort once per KV head, not per Q head

@@ -1,5 +1,12 @@
 """Serve (decode) step: one new token per sequence against a live KV/state
-cache.  This is what the ``decode_*`` / ``long_*`` dry-run cells lower."""
+cache.  This is what the ``decode_*`` / ``long_*`` dry-run cells lower.
+
+Backend selection is NOT done here: the decode path dispatches its scoring
+stage through ``repro.backend`` (the same registry train and bench use), so
+serving exercises identical selection logic.  ``make_serve_step`` resolves
+the backend once up front purely to fail fast on impossible requests (e.g.
+a config pinned to an unregistered backend) and to let callers log it.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +15,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import backend as attention_backend
 from repro.models import api
 from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
@@ -15,6 +23,13 @@ from repro.nn.module import Precision
 
 def make_serve_step(cfg: ModelConfig, prec: Precision,
                     greedy: bool = True) -> Callable:
+    # Resolving here fails fast (KeyError) on an unregistered
+    # cfg.zeta.backend at build time rather than from inside the jitted
+    # decode trace.  The name is the f32 resolution for logging; the decode
+    # dispatch re-probes with the actual cache dtype and may still
+    # capability-fall-back (with a warning) at trace time.
+    resolved = attention_backend.resolve_name(cfg)
+
     def serve_step(params, cache, token_t: jax.Array, rng: jax.Array):
         """token_t: (B, 1) -> (next_token (B, 1), logits, new_cache)."""
         logits, new_cache = api.decode_step(params, cache, token_t, cfg, prec)
@@ -24,4 +39,5 @@ def make_serve_step(cfg: ModelConfig, prec: Precision,
             nxt = jax.random.categorical(rng, logits[:, -1:])
         return nxt.astype(jnp.int32), logits, new_cache
 
+    serve_step.attention_backend = resolved
     return serve_step

@@ -1,0 +1,96 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo develops in cannot always ``pip install``; rather
+than skipping every property-based module at collection time we provide the
+tiny subset of the hypothesis API the test-suite uses (``given``,
+``settings``, ``strategies.{integers,floats,lists,sampled_from}``) backed by
+a deterministic PRNG.  Each ``@given`` test runs a fixed number of random
+examples (capped at ``REPRO_STUB_MAX_EXAMPLES``, default 5, to keep tier-1
+fast); with the real hypothesis installed (see pyproject.toml) this module
+is never imported — conftest.py only registers it on ImportError.
+
+Not implemented: shrinking, ``assume``, stateful testing, example databases.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import zlib
+
+_MAX_EXAMPLES = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "5"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis.strategies module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, *,
+               allow_nan: bool = False, width: int = 64) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+
+def settings(*, max_examples: int | None = None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        declared = getattr(fn, "_stub_max_examples", _MAX_EXAMPLES)
+        n_examples = min(declared, _MAX_EXAMPLES)
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        # No *args in the signature: pytest must see a zero-arg test, not
+        # fixture parameters.
+        def runner():
+            for i in range(n_examples):
+                rng = random.Random(seed * 1_000_003 + i)
+                args = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on stub example {i}: "
+                        f"args={args!r}"
+                    ) from e
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__qualname__ = fn.__qualname__
+        return runner
+
+    return deco
+
+
+HealthCheck = type("HealthCheck", (), {})
+__version__ = "0.0.0-repro-stub"

@@ -1,0 +1,199 @@
+"""Backend dispatch subsystem: registration/override, capability fallback,
+and reference<->xla<->pallas parity (see docs/ARCHITECTURE.md)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend
+from repro.backend import parity
+from repro.backend.registry import AttentionRequest, Capabilities
+from repro.nn.config import ModelConfig, ZetaConfig
+
+# the shapes the acceptance criterion quotes: (B, Hq, Hkv, N, d_k, d_v)
+SMALL_SHAPES = [(1, 2, 2, 64, 3, 8), (2, 2, 1, 64, 3, 16)]
+
+
+# same input distribution the parity harness uses
+_qkv = parity.make_inputs
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_stock_backends_registered():
+    names = backend.list_backends()
+    for want in ("reference", "xla", "pallas", "flash"):
+        assert want in names
+
+
+def test_register_override_unregister():
+    caps = Capabilities(mechanisms=("zeta",))
+
+    def fake(*a, **kw):
+        raise AssertionError("never called")
+
+    backend.register_backend("fake", fake, caps)
+    try:
+        assert "fake" in backend.list_backends()
+        with pytest.raises(ValueError):
+            backend.register_backend("fake", fake, caps)
+        be = backend.register_backend("fake", fake, caps, overwrite=True)
+        assert be.name == "fake"
+    finally:
+        backend.unregister_backend("fake")
+    assert "fake" not in backend.list_backends()
+
+
+def test_unknown_backend_is_an_error():
+    with pytest.raises(KeyError, match="unknown attention backend"):
+        backend.get_backend("definitely-not-registered")
+    q, k, v = _qkv(SMALL_SHAPES[0])
+    with pytest.raises(KeyError):
+        backend.attention(q, k, v, None, gamma2=0.5,
+                          backend="definitely-not-registered")
+
+
+def test_capabilities_supports_matrix():
+    import dataclasses
+
+    caps = backend.get_backend("pallas").caps
+    ok = AttentionRequest(mechanism="zeta", score="cauchy",
+                          dtype="float32", causal=True, device="cpu")
+    assert caps.supports(ok)
+    assert not caps.supports(dataclasses.replace(ok, score="neg_euclid"))
+    assert not caps.supports(dataclasses.replace(ok, mechanism="softmax"))
+    assert not backend.get_backend("flash").caps.supports(ok)
+
+
+# ------------------------------------------------------------------ selection
+
+
+def test_config_override_wins():
+    assert backend.resolve_name(ZetaConfig(backend="pallas")) == "pallas"
+    assert backend.resolve_name(ZetaConfig(backend="reference")) == "reference"
+
+
+def test_auto_selection_prefers_compiled_on_device():
+    # on CPU/GPU the pure-XLA pipeline outranks interpret-mode pallas;
+    # on TPU pallas (compiled, higher priority) wins.
+    name = backend.resolve_name()
+    if backend.current_device() == "tpu":
+        assert name == "pallas"
+    else:
+        assert name == "xla"
+
+
+def test_env_override(monkeypatch):
+    monkeypatch.setenv(backend.ENV_VAR, "reference")
+    assert backend.resolve_name() == "reference"
+    # explicit config preference still beats the environment
+    assert backend.resolve_name(ZetaConfig(backend="pallas")) == "pallas"
+
+
+def test_env_unknown_name_warns_and_falls_back(monkeypatch):
+    monkeypatch.setenv(backend.ENV_VAR, "not-a-backend")
+    with pytest.warns(UserWarning, match="names no registered backend"):
+        assert backend.resolve_name() in ("xla", "pallas")
+
+
+def test_capability_fallback_on_score():
+    # pallas scores cauchy only -> a neg_euclid request must fall back to
+    # the only capable backend (xla), with a warning.
+    cfg = ZetaConfig(backend="pallas", score="neg_euclid")
+    with pytest.warns(UserWarning, match="falling back"):
+        assert backend.resolve_name(cfg) == "xla"
+
+
+def test_mechanism_derived_from_model_config():
+    full = ModelConfig(name="t", vocab=8, d_model=16, n_layers=1,
+                       n_heads=2, n_kv_heads=2, d_ff=32, attention="full")
+    zeta = full.replace(attention="zeta")
+    if backend.current_device() == "tpu":
+        assert backend.resolve_name(full) == "flash"  # compiled, priority 5
+    else:
+        assert backend.resolve_name(full) == "reference"
+    assert backend.resolve_name(zeta) in ("xla", "pallas")
+
+
+# ------------------------------------------------------------------ dispatch
+
+
+@pytest.mark.parametrize("name", ["reference", "xla", "pallas"])
+def test_zeta_dispatch_runs_all_backends(name):
+    q, k, v = _qkv(SMALL_SHAPES[0])
+    out = backend.attention(q, k, v, None, gamma2=0.5, backend=name)
+    assert out.shape == (1, 2, 64, 8)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_noncausal_dispatch_gqa_and_score():
+    # regression: the non-causal path must repeat KV for GQA inputs and
+    # honour the configured score variant (both were dropped once)
+    q, k, v = _qkv((1, 4, 2, 32, 3, 8))
+    out = backend.attention(q, k, v, ZetaConfig(k=4), gamma2=0.5,
+                            causal=False)
+    assert out.shape == (1, 4, 32, 8)
+    a = backend.attention(q, k, v, ZetaConfig(k=4, score="cauchy"),
+                          gamma2=0.5, causal=False)
+    b = backend.attention(q, k, v, ZetaConfig(k=4, score="neg_euclid"),
+                          gamma2=0.5, causal=False)
+    assert float(jnp.abs(a - b).max()) > 1e-3
+
+
+def test_registry_repopulates_after_full_unregistration():
+    for name in list(backend.list_backends()):
+        backend.unregister_backend(name)
+    assert backend.list_backends() == ("flash", "pallas", "reference", "xla")
+
+
+def test_flash_dispatch_matches_reference_softmax():
+    q, k, v = _qkv((1, 2, 2, 64, 16, 16))
+    ref = backend.attention(q, k, v, None, mechanism="softmax",
+                            backend="reference")
+    fl = backend.attention(q, k, v, None, mechanism="softmax",
+                           backend="flash")
+    np.testing.assert_allclose(np.asarray(fl), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_gathered_dispatch_parity():
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    f, n, kk, dk, dv = 3, 8, 5, 3, 4
+    q = jnp.tanh(jax.random.normal(ks[0], (f, n, dk)))
+    k_sel = jnp.tanh(jax.random.normal(ks[1], (f, n, kk, dk)))
+    v_sel = jax.random.normal(ks[2], (f, n, kk, dv))
+    valid = jax.random.bernoulli(ks[3], 0.8, (f, n, kk))
+    outs = {
+        name: np.asarray(backend.gathered_attention(
+            q, k_sel, v_sel, valid, 0.5, backend=name))
+        for name in ("reference", "xla", "pallas")
+    }
+    np.testing.assert_allclose(outs["xla"], outs["reference"], atol=1e-5)
+    np.testing.assert_allclose(outs["pallas"], outs["reference"], atol=1e-5)
+
+
+# ------------------------------------------------------------------ parity
+
+
+@pytest.mark.parametrize("pair", [
+    ("reference", "xla"),
+    ("reference", "pallas"),
+    ("xla", "pallas"),
+])
+def test_backend_parity_f32(pair):
+    """Acceptance: reference<->pallas max-abs-error < 1e-4 (f32, CPU
+    interpret) on SMALL_SHAPES — via the same harness benchmarks use."""
+    results = parity.parity_check(*pair, shapes=SMALL_SHAPES)
+    for r in results:
+        assert r.ok(1e-4), f"{pair} parity failed: {r}"
+
+
+def test_parity_rows_format():
+    rows = parity.parity_rows(pairs=[("reference", "xla")],
+                              shapes=[SMALL_SHAPES[0]])
+    assert len(rows) == 1
+    name, us, derived = rows[0].split(",", 2)
+    assert name.startswith("parity_reference_vs_xla")
+    assert "max_abs_err=" in derived

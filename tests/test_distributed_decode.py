@@ -7,6 +7,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# multi-device subprocess test: minutes of wall time on a small CPU box
+pytestmark = pytest.mark.slow
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

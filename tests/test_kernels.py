@@ -24,8 +24,10 @@ def _mk(f, n, k, dk, dv, dtype, seed=0):
 CAUCHY_SHAPES = [
     (1, 16, 4, 1, 8),
     (2, 64, 9, 3, 16),
-    (3, 128, 33, 3, 64),
-    (2, 96, 17, 4, 32),   # n not divisible by default block
+    # large-N interpret-mode sweeps: slow-marked, run with `-m ""`
+    pytest.param(3, 128, 33, 3, 64, marks=pytest.mark.slow),
+    pytest.param(2, 96, 17, 4, 32,  # n not divisible by default block
+                 marks=pytest.mark.slow),
 ]
 
 
@@ -83,7 +85,10 @@ def test_zorder_kernel_exact(d, n):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@pytest.mark.parametrize("n,hd", [(64, 32), (128, 64), (256, 128)])
+@pytest.mark.parametrize("n,hd", [
+    (64, 32), (128, 64),
+    pytest.param(256, 128, marks=pytest.mark.slow),  # large-N interpret run
+])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_attention(n, hd, causal):
     ks = jax.random.split(jax.random.PRNGKey(n), 3)
