@@ -28,9 +28,12 @@ SUITES = {
     "roofline": ("benchmarks.roofline", "dry-run roofline table"),
     "parity": ("benchmarks.parity",
                "backend registry parity (reference/xla/pallas)"),
+    "serve": ("benchmarks.serve",
+              "serve engine: wave vs continuous batching (BENCH_serve.json)"),
 }
 
-FAST_DEFAULT = ["parity", "fig3", "tab3", "tab4", "recall", "roofline"]
+FAST_DEFAULT = ["parity", "fig3", "tab3", "tab4", "recall", "roofline",
+                "serve"]
 ALL = list(SUITES)
 
 

@@ -1,0 +1,138 @@
+"""Serve-engine benchmark: wave vs continuous batching under mixed-length
+arrivals.
+
+Reports tokens/s, time-to-first-token (wall seconds and engine ticks), and
+slot occupancy for both schedulers on the same request trace, and writes the
+machine-readable summary to ``BENCH_serve.json`` (CI uploads it as a build
+artifact).
+
+    PYTHONPATH=src python benchmarks/serve.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+
+from repro.models import api  # noqa: E402
+from repro.nn.config import ModelConfig, ZetaConfig  # noqa: E402
+from repro.nn.module import F32  # noqa: E402
+from repro.serve.engine import Request, ServeEngine  # noqa: E402
+
+SLOTS = 2
+MAX_LEN = 64
+PREFILL_CHUNK = 8
+
+
+def _model() -> ModelConfig:
+    return ModelConfig(
+        name="bench-serve", vocab=128, d_model=32, n_layers=2, n_heads=4,
+        n_kv_heads=2, d_ff=64, attention="zeta",
+        zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+    )
+
+
+def _trace(n_requests: int, seed: int = 0) -> list[Request]:
+    """Mixed-length arrivals: prompts 1..24 tokens, 2..8 new tokens."""
+    import random
+
+    rng = random.Random(seed)
+    out = []
+    for rid in range(n_requests):
+        plen = rng.choice([1, 3, 6, 12, 24])
+        out.append(Request(
+            rid=rid,
+            prompt=[rng.randrange(1, 127) for _ in range(plen)],
+            max_new=rng.randrange(2, 9),
+        ))
+    return out
+
+
+def _run(params, cfg, scheduler: str, n_requests: int) -> dict:
+    eng = ServeEngine(params, cfg, F32, batch_slots=SLOTS, max_len=MAX_LEN,
+                      scheduler=scheduler, prefill_chunk=PREFILL_CHUNK)
+    # warm the jit caches (prefill / masked decode / slot reset) so the
+    # timed trace measures steady-state serving, not compilation
+    eng.submit(Request(rid=-1, prompt=[1, 2, 3], max_new=2))
+    eng.run_to_completion()
+    eng.done.clear()
+    eng.ticks = eng.prefill_calls = eng.decode_calls = 0
+    eng.busy_slot_ticks = 0
+    trace = _trace(n_requests)
+    # staggered arrivals: a new request every other tick
+    t0 = time.perf_counter()
+    first_token_wall: dict[int, float] = {}
+    arrival_wall: dict[int, float] = {}
+    i = 0
+    while i < len(trace) or any(s is not None for s in eng.slots) \
+            or eng.queue:
+        if i < len(trace) and eng.ticks >= 2 * i:
+            arrival_wall[trace[i].rid] = time.perf_counter()
+            eng.submit(trace[i])
+            i += 1
+        if not eng.tick() and i >= len(trace):
+            break
+        for r in eng.done:
+            if r.rid not in first_token_wall and r.first_token_tick >= 0:
+                first_token_wall[r.rid] = time.perf_counter()
+    wall = time.perf_counter() - t0
+    s = eng.stats()
+    ttft_wall = [first_token_wall[r] - arrival_wall[r]
+                 for r in first_token_wall if r in arrival_wall]
+    s.update(
+        wall_s=wall,
+        tokens_per_s=s["tokens_generated"] / wall if wall else 0.0,
+        ttft_wall_s_mean=(sum(ttft_wall) / len(ttft_wall)
+                          if ttft_wall else 0.0),
+        prefill_chunk=PREFILL_CHUNK,
+        batch_slots=SLOTS,
+    )
+    return s
+
+
+def run(smoke: bool = False, out_path: str | None = None):
+    """Yield CSV rows (benchmarks/run.py protocol) and write the JSON."""
+    cfg = _model()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n_requests = 4 if smoke else 10
+    results = {}
+    for sched in ("wave", "continuous"):
+        s = _run(params, cfg, sched, n_requests)
+        results[sched] = s
+        yield (f"serve_{sched}_tokens_per_s,"
+               f"{1e6 / max(s['tokens_per_s'], 1e-9):.0f},"
+               f"{s['tokens_per_s']:.2f} tok/s")
+        yield (f"serve_{sched}_ttft,{1e6 * s['ttft_wall_s_mean']:.0f},"
+               f"{s['ttft_ticks_mean']:.1f} ticks mean TTFT")
+        yield (f"serve_{sched}_occupancy,0,"
+               f"{s['slot_occupancy']:.3f} busy-slot fraction")
+        yield (f"serve_{sched}_model_calls,0,"
+               f"{s['model_calls']} ({s['prefill_calls']} prefill)")
+    out_path = out_path or os.path.join(os.getcwd(), "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    yield f"serve_json,0,{out_path}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="4-request trace (CI)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke, out_path=args.out):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

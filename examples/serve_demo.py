@@ -1,6 +1,8 @@
-"""Batched serving demo: ZETA decode with the wave-scheduled engine.
+"""Batched serving demo: ZETA decode with continuous batching (per-slot
+caches, chunked prefill, mid-flight admission).
 
     PYTHONPATH=src python examples/serve_demo.py --requests 6 --slots 2
+    PYTHONPATH=src python examples/serve_demo.py --scheduler wave   # legacy
 """
 
 import argparse
@@ -19,6 +21,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--scheduler", choices=["continuous", "wave"],
+                    default="continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -28,7 +33,8 @@ def main() -> None:
     )
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, F32, batch_slots=args.slots,
-                         max_len=64)
+                         max_len=64, scheduler=args.scheduler,
+                         prefill_chunk=args.prefill_chunk)
     for rid in range(args.requests):
         engine.submit(Request(
             rid=rid, prompt=[1 + rid, 2 + rid, 3 + rid],
@@ -40,6 +46,11 @@ def main() -> None:
     total_tokens = sum(len(r.output) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s on CPU)")
+    s = engine.stats()
+    print(f"  scheduler={s['scheduler']}  model_calls={s['model_calls']} "
+          f"({s['prefill_calls']} prefill)  "
+          f"occupancy={s['slot_occupancy']:.2f}  "
+          f"ttft={s['ttft_ticks_mean']:.1f} ticks")
     for r in sorted(done, key=lambda r: r.rid):
         print(f"  req {r.rid}: prompt={r.prompt} -> {r.output}")
 

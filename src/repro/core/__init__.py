@@ -6,7 +6,14 @@ from repro.core.cauchy import (
     gamma2_from_param,
     squared_distances,
 )
-from repro.core.topk import chunked_causal_topk, prefix_topk_decode, sorted_insert
+from repro.core.topk import (
+    chunked_causal_topk,
+    invalid_distance,
+    prefix_topk_bulk,
+    prefix_topk_decode,
+    sorted_build,
+    sorted_insert,
+)
 from repro.core.zorder import zorder_encode, zorder_encode_with_bounds
 
 __all__ = [
@@ -16,7 +23,10 @@ __all__ = [
     "gamma2_from_param",
     "squared_distances",
     "chunked_causal_topk",
+    "invalid_distance",
+    "prefix_topk_bulk",
     "prefix_topk_decode",
+    "sorted_build",
     "sorted_insert",
     "zorder_encode",
     "zorder_encode_with_bounds",

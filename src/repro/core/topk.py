@@ -29,6 +29,16 @@ import jax.numpy as jnp
 SENTINEL = jnp.int32(2**31 - 1)  # sorts after every valid 30-bit code
 
 
+def invalid_distance(dtype) -> jax.Array:
+    """Dtype-aware "infinitely far" squared-distance sentinel for masking
+    gathered candidates.  ``jnp.finfo(dtype).max`` stays finite (and
+    representable) in bf16/f16/f32 alike, unlike a hard-coded ``3.4e38``
+    which overflows to ``inf`` in half precision and breaks ``d2 < big``
+    validity tests.  Shared by ``serve/distributed.py`` and any masking
+    that compares against "worst possible distance"."""
+    return jnp.asarray(jnp.finfo(dtype).max, dtype)
+
+
 class TopkResult(NamedTuple):
     idx: jax.Array    # (..., N, k) int32 original key positions
     valid: jax.Array  # (..., N, k) bool  slot holds a real (causal) key
@@ -247,10 +257,14 @@ def sorted_insert(
     length: jax.Array,
     new_kz: jax.Array,
     new_pos: jax.Array,
+    update_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Insert one code per batch row into a sorted cache (O(N) shift, fixed
     shapes — decode-friendly).  Entries at/after the insertion point move one
     slot right; the tail sentinel is overwritten.
+
+    ``update_mask``: optional (B,) bool — rows where it is False are returned
+    unchanged (inactive serve slots must not mutate their sorted cache).
     """
     B, Nmax = sorted_kz.shape
     ins = _searchsorted_batched(sorted_kz, new_kz[:, None])[:, 0]  # (B,)
@@ -263,4 +277,91 @@ def sorted_insert(
     at = ar == ins[:, None]
     out_kz = jnp.where(at, new_kz[:, None], out_kz)
     out_pos = jnp.where(at, new_pos[:, None], out_pos)
+    if update_mask is not None:
+        keep = ~update_mask[:, None]
+        out_kz = jnp.where(keep, sorted_kz, out_kz)
+        out_pos = jnp.where(keep, sorted_pos, out_pos)
     return out_kz, out_pos
+
+
+def sorted_build(
+    kz_by_pos: jax.Array,
+    length: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Build a sorted decode cache in ONE shot from position-indexed codes
+    (the bulk counterpart of repeated ``sorted_insert`` — used by chunked
+    prefill).
+
+    kz_by_pos: (B, Nmax) int32 codes where entry p is the code of original
+    position p; length: (B,) live counts.  Entries at positions >= length are
+    ignored.  Returns (sorted_kz, sorted_pos) with SENTINEL/0 tails, matching
+    the layout ``attn_cache_init`` creates and ``prefix_topk_decode`` reads.
+
+    Tie order among equal codes is ascending position (stable sort), whereas
+    incremental ``sorted_insert`` places the newest equal code first; with
+    30-bit codes from continuous projections collisions are vanishingly rare
+    and selection differs only among colliding keys.
+    """
+    B, Nmax = kz_by_pos.shape
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    pos = jnp.arange(Nmax, dtype=jnp.int32)
+    live = pos[None, :] < length[:, None]
+    masked = jnp.where(live, kz_by_pos, SENTINEL)
+    svals, perm = _sort_with_perm(masked)
+    spos = jnp.where(pos[None, :] < length[:, None], perm, 0)
+    return svals, spos
+
+
+def reset_rows(
+    sorted_kz: jax.Array,
+    sorted_pos: jax.Array,
+    row_mask: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Reset the selected rows of a sorted cache to the empty state
+    (all-SENTINEL codes, zero positions) without touching other rows —
+    single-slot reset for continuous batching."""
+    m = row_mask[:, None]
+    return (
+        jnp.where(m, SENTINEL, sorted_kz),
+        jnp.where(m, 0, sorted_pos),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def prefix_topk_bulk(
+    kz_by_pos: jax.Array,
+    thresholds: jax.Array,
+    qz: jax.Array,
+    *,
+    k: int,
+) -> TopkResult:
+    """Prefill-time search: P queries per row, each against its own causal
+    prefix of position-indexed codes (the bulk counterpart of P sequential
+    ``prefix_topk_decode`` calls against an incrementally grown cache).
+
+    kz_by_pos:  (B, Nmax) int32 codes by original position
+    thresholds: (B, P) int32 — query j's candidate pool is positions
+                < thresholds[:, j] (the decode path's ``searchable`` count)
+    qz:         (B, P) int32 query codes
+    Returns idx/valid of shape (B, P, k).
+
+    Work is P parallel masked sorts of length Nmax per row — the same
+    prefix-sort realisation as ``chunked_causal_topk``, with per-query
+    instead of per-chunk prefixes (sequential decode pools grow by one
+    token, not one chunk).
+    """
+    B, Nmax = kz_by_pos.shape
+    P = qz.shape[1]
+    positions = jnp.arange(Nmax, dtype=jnp.int32)
+    in_pool = positions[None, None, :] < thresholds[..., None]     # (B,P,N)
+    masked = jnp.where(in_pool, kz_by_pos[:, None, :], SENTINEL)
+    svals, perm = _sort_with_perm(masked)                          # (B,P,N)
+    ins = _searchsorted_batched(svals, qz[..., None])[..., 0]      # (B,P)
+    L = jnp.maximum(thresholds, 0)
+    start = jnp.clip(ins - (k // 2), 0, jnp.maximum(L - k, 0))
+    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)      # (B,P,k)
+    valid = slots < L[..., None]
+    slots = jnp.minimum(slots, Nmax - 1)
+    idx = jnp.take_along_axis(perm, slots, axis=-1)
+    idx = jnp.where(valid, idx, 0)
+    return TopkResult(idx=idx, valid=valid)

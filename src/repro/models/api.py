@@ -15,13 +15,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.nn.attention import attn_cache_init, attn_decode_step
+from repro.nn.attention import attn_cache_init, attn_decode_step, attn_prefill
 from repro.nn.config import ModelConfig
-from repro.nn.hybrid import hybrid_cache_init, hybrid_decode_step
+from repro.nn.hybrid import hybrid_cache_init, hybrid_decode_step, hybrid_prefill
 from repro.nn.layers import embedding_attend, mlp_apply
 from repro.nn.module import Precision
 from repro.nn.moe import moe_apply
-from repro.nn.ssd import ssd_cache_init, ssd_decode_step
+from repro.nn.ssd import ssd_cache_init, ssd_decode_step, ssd_prefill
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.models.lm import _norm_apply  # shared norm dispatch
@@ -64,14 +64,18 @@ def _layer_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return hybrid_cache_init(cfg, batch, max_len, dtype)
 
 
-def _block_decode(lp, lc, x_t, cfg: ModelConfig, prec: Precision, moe: bool):
+def _block_decode(lp, lc, x_t, cfg: ModelConfig, prec: Precision, moe: bool,
+                  slot_mask=None):
     h = _norm_apply(cfg, lp["norm1"], x_t)
     if cfg.mixer == "attn":
-        mixed, lc = attn_decode_step(lp["mixer"], lc, h, cfg, prec)
+        mixed, lc = attn_decode_step(lp["mixer"], lc, h, cfg, prec,
+                                     slot_mask)
     elif cfg.mixer == "ssd":
-        mixed, lc = ssd_decode_step(lp["mixer"], lc, h, cfg, prec)
+        mixed, lc = ssd_decode_step(lp["mixer"], lc, h, cfg, prec,
+                                    slot_mask)
     else:
-        mixed, lc = hybrid_decode_step(lp["mixer"], lc, h, cfg, prec)
+        mixed, lc = hybrid_decode_step(lp["mixer"], lc, h, cfg, prec,
+                                       slot_mask)
     x_t = x_t + mixed
     if "ffn" in lp:
         h2 = _norm_apply(cfg, lp["norm2"], x_t)
@@ -81,6 +85,27 @@ def _block_decode(lp, lc, x_t, cfg: ModelConfig, prec: Precision, moe: bool):
             y = mlp_apply(lp["ffn"], h2, prec, activation=cfg.activation)
         x_t = x_t + y
     return x_t, lc
+
+
+def _block_prefill(lp, lc, x_c, cfg: ModelConfig, prec: Precision,
+                   moe: bool, token_mask=None):
+    h = _norm_apply(cfg, lp["norm1"], x_c)
+    if cfg.mixer == "attn":
+        mixed, lc = attn_prefill(lp["mixer"], lc, h, cfg, prec, token_mask)
+    elif cfg.mixer == "ssd":
+        mixed, lc = ssd_prefill(lp["mixer"], lc, h, cfg, prec, token_mask)
+    else:
+        mixed, lc = hybrid_prefill(lp["mixer"], lc, h, cfg, prec,
+                                   token_mask)
+    x_c = x_c + mixed
+    if "ffn" in lp:
+        h2 = _norm_apply(cfg, lp["norm2"], x_c)
+        if moe:
+            y, _ = moe_apply(lp["ffn"], h2, cfg, prec)
+        else:
+            y = mlp_apply(lp["ffn"], h2, prec, activation=cfg.activation)
+        x_c = x_c + y
+    return x_c, lc
 
 
 def cache_init(cfg: ModelConfig, batch: int, max_len: int,
@@ -112,17 +137,14 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-def decode_step(params: Params, cache: Params, token_t: jax.Array,
-                cfg: ModelConfig, prec: Precision):
-    """token_t: (B, 1) int32 -> (logits (B, 1, V), new_cache)."""
-    if is_encdec(cfg):
-        logits, new_self = encdec_mod.encdec_decode_step(
-            params, cache["self"], cache["memory"], token_t, cfg, prec
-        )
-        return logits, dict(cache, self=new_self)
-
+def _lm_step(params: Params, cache: Params, tokens: jax.Array,
+             cfg: ModelConfig, prec: Precision, block_fn, mask):
+    """Shared LM scaffolding for decode_step (tokens (B, 1), block_fn =
+    _block_decode, mask = slot_mask) and prefill (tokens (B, P), block_fn =
+    _block_prefill, mask = token_mask): embed -> scanned blocks threading
+    per-layer caches -> final norm -> lm head."""
     x = jnp.take(
-        params["embed"]["embedding"], token_t, axis=0
+        params["embed"]["embedding"], tokens, axis=0
     ).astype(prec.compute_dtype)
 
     def _scan(body, x0, xs):
@@ -140,7 +162,7 @@ def decode_step(params: Params, cache: Params, token_t: jax.Array,
     if "layers" in params:
         def body(h, scanned):
             lp, lc = scanned
-            h, lc = _block_decode(lp, lc, h, cfg, prec, moe=False)
+            h, lc = block_fn(lp, lc, h, cfg, prec, False, mask)
             return h, lc
 
         x, new_cache["layers"] = _scan(
@@ -149,7 +171,7 @@ def decode_step(params: Params, cache: Params, token_t: jax.Array,
     if "moe_layers" in params:
         def body_moe(h, scanned):
             lp, lc = scanned
-            h, lc = _block_decode(lp, lc, h, cfg, prec, moe=True)
+            h, lc = block_fn(lp, lc, h, cfg, prec, True, mask)
             return h, lc
 
         x, new_cache["moe_layers"] = _scan(
@@ -164,3 +186,109 @@ def decode_step(params: Params, cache: Params, token_t: jax.Array,
             h.astype(jnp.float32), params["lm_head"].astype(jnp.float32)
         )
     return logits, new_cache
+
+
+def decode_step(params: Params, cache: Params, token_t: jax.Array,
+                cfg: ModelConfig, prec: Precision,
+                slot_mask: jax.Array | None = None):
+    """token_t: (B, 1) int32 -> (logits (B, 1, V), new_cache).
+
+    ``slot_mask``: optional (B,) bool — inactive serve slots compute
+    garbage logits (discarded by the engine) and leave their cache rows,
+    including sorted z-code caches, untouched."""
+    if is_encdec(cfg):
+        logits, new_self = encdec_mod.encdec_decode_step(
+            params, cache["self"], cache["memory"], token_t, cfg, prec,
+            slot_mask,
+        )
+        return logits, dict(cache, self=new_self)
+
+    return _lm_step(params, cache, token_t, cfg, prec, _block_decode,
+                    slot_mask)
+
+
+def prefill(params: Params, cache: Params, tokens: jax.Array,
+            cfg: ModelConfig, prec: Precision,
+            token_mask: jax.Array | None = None):
+    """Chunked prefill: ingest P prompt tokens per slot in ONE model call.
+
+    tokens: (B, P) int32 — each row is the next P prompt tokens of that
+    slot, starting at its own cache position; token_mask: (B, P) bool with
+    valid tokens left-aligned (rows may ingest fewer than P tokens; an
+    all-False row is untouched).  Returns (logits (B, P, V), new_cache) —
+    logits at each *valid* position match what sequential ``decode_step``
+    calls would have produced, and the cache advances by each row's valid
+    count.  A P-token prompt therefore costs ceil(P/chunk) model calls
+    instead of P (ZETA's parallel top-k search does the whole chunk at
+    once; see ``attn_prefill``)."""
+    if token_mask is None:
+        token_mask = jnp.ones(tokens.shape, bool)
+    if is_encdec(cfg):
+        logits, new_self = encdec_mod.encdec_prefill(
+            params, cache["self"], cache["memory"], tokens, cfg, prec,
+            token_mask,
+        )
+        return logits, dict(cache, self=new_self)
+
+    return _lm_step(params, cache, tokens, cfg, prec, _block_prefill,
+                    token_mask)
+
+
+def cache_reset_slots(cfg: ModelConfig, cache: Params,
+                      slot_mask: jax.Array) -> Params:
+    """Reset the selected batch rows of a stacked decode cache to the
+    freshly-initialised state without touching other rows — the slot
+    recycling primitive of continuous batching (a finished request's row is
+    wiped while its neighbours keep generating).
+
+    slot_mask: (B,) bool — True rows are reset.  Works on every cache
+    family (attn / ssd / hybrid / enc-dec, any dtype): each leaf's row
+    dimension is either B or B*Hkv (the flat sorted z-code rows), detected
+    by shape."""
+    slot_mask = jnp.asarray(slot_mask, bool)
+    B = int(slot_mask.shape[0])
+
+    def _reset(stacked, fresh):
+        rows = fresh.shape[0] if fresh.ndim else 1
+        if fresh.ndim and rows != B and rows % B == 0:
+            m = jnp.repeat(slot_mask, rows // B)
+        else:
+            m = slot_mask
+        m = m.reshape(m.shape + (1,) * (fresh.ndim - 1))
+        return jnp.where(m, fresh.astype(stacked.dtype), stacked)
+
+    if is_encdec(cfg):
+        sample = cache["self"]["v" if "v" in cache["self"] else "kv_lat"]
+        max_len = sample.shape[3] if "v" in cache["self"] else sample.shape[2]
+        fresh = attn_cache_init(cfg, B, max_len, sample.dtype)
+        new_self = jax.tree.map(
+            lambda old, fr: _reset(old, fr), cache["self"], fresh
+        )
+        memory = jnp.where(
+            slot_mask[:, None, None], 0.0, cache["memory"]
+        ).astype(cache["memory"].dtype)
+        return dict(cache, self=new_self, memory=memory)
+
+    def _family_reset(stacked_family):
+        if cfg.mixer == "ssd":
+            fresh = ssd_cache_init(
+                cfg, B, stacked_family["conv"].dtype
+            )
+        else:
+            attn_part = (stacked_family["attn"] if cfg.mixer == "hybrid"
+                         else stacked_family)
+            if cfg.mla is not None:
+                max_len = attn_part["kv_lat"].shape[2]
+                dtype = attn_part["kv_lat"].dtype
+            else:
+                max_len = attn_part["v"].shape[3]
+                dtype = attn_part["v"].dtype
+            fresh = _layer_cache_init(cfg, B, max_len, dtype)
+        return jax.tree.map(
+            lambda old, fr: _reset(old, fr), stacked_family, fresh
+        )
+
+    new_cache: Params = {}
+    for key in cache:
+        new_cache[key] = _family_reset(cache[key])
+    return new_cache

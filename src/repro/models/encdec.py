@@ -16,6 +16,7 @@ from repro.nn.attention import (
     attn_cache_init,
     attn_decode_step,
     attn_init,
+    attn_prefill,
     cross_attn_apply,
     cross_attn_init,
 )
@@ -156,22 +157,67 @@ def encdec_cache_init(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def encdec_decode_step(p, cache, memory, token_t: jax.Array,
-                       cfg: ModelConfig, prec: Precision):
-    """token_t: (B, 1) -> (logits (B, 1, V), new_cache)."""
+                       cfg: ModelConfig, prec: Precision,
+                       slot_mask: jax.Array | None = None):
+    """token_t: (B, 1) -> (logits (B, 1, V), new_cache).
+
+    ``cache["length"]`` is stacked per layer and PER-SLOT: (L, B)."""
     x = jnp.take(p["embed"]["embedding"], token_t, axis=0).astype(
         prec.compute_dtype
     )
-    t = cache["length"][0] if isinstance(cache["length"], jax.Array) and \
-        cache["length"].ndim else cache["length"]
-    pos = sinusoidal_features(
-        jnp.arange(1, dtype=jnp.int32) + t, cfg.d_model
+    b = x.shape[0]
+    # per-slot positions: every layer's length agrees, take layer 0's
+    t = jnp.broadcast_to(
+        jnp.asarray(cache["length"], jnp.int32)[0], (b,)
     )
-    x = x + pos[None].astype(x.dtype)
+    pos = sinusoidal_features(t[:, None], cfg.d_model)         # (B, 1, D)
+    x = x + pos.astype(x.dtype)
 
     def body(h, scanned):
         lp, lc = scanned
         a, lc = attn_decode_step(
-            lp["self_attn"], lc, layernorm_apply(lp["norm1"], h), cfg, prec
+            lp["self_attn"], lc, layernorm_apply(lp["norm1"], h), cfg, prec,
+            slot_mask,
+        )
+        h = h + a
+        c = cross_attn_apply(
+            lp["cross"], layernorm_apply(lp["norm_c"], h), memory, cfg, prec
+        )
+        h = h + c
+        f = mlp_apply(lp["ffn"], layernorm_apply(lp["norm2"], h), prec,
+                      activation=cfg.activation)
+        return h + f, lc
+
+    x, new_cache = jax.lax.scan(
+        lambda carry, sc: body(carry, sc),
+        x,
+        (p["dec_layers"], cache),
+    )
+    h = layernorm_apply(p["final_norm"], x)
+    logits = embedding_attend(p["embed"], h, None)
+    return logits, new_cache
+
+
+def encdec_prefill(p, cache, memory, tokens: jax.Array, cfg: ModelConfig,
+                   prec: Precision, token_mask: jax.Array):
+    """Chunked decoder-prompt prefill: P forced tokens per slot in one call
+    (the encoder side is already 'prefilled' by ``encode`` into memory)."""
+    x = jnp.take(p["embed"]["embedding"], tokens, axis=0).astype(
+        prec.compute_dtype
+    )
+    b, P = tokens.shape
+    t0 = jnp.broadcast_to(
+        jnp.asarray(cache["length"], jnp.int32)[0], (b,)
+    )
+    positions = t0[:, None] + jnp.arange(P, dtype=jnp.int32)   # (B, P)
+    pos = sinusoidal_features(positions, cfg.d_model)          # (B, P, D)
+    x = x + pos.astype(x.dtype)
+
+    def body(h, scanned):
+        lp, lc = scanned
+        a, lc = attn_prefill(
+            lp["self_attn"], lc, layernorm_apply(lp["norm1"], h), cfg, prec,
+            token_mask,
         )
         h = h + a
         c = cross_attn_apply(

@@ -119,13 +119,16 @@ def _mla_qkv(p, x, cfg: ModelConfig, prec: Precision, positions):
 def _zeta_coords(p, src_q, src_k, cfg: ModelConfig, prec: Precision,
                  positions):
     """Project hidden states (+ position feats) into d_k metric coords.
-    src_q: (B, N, Dq); src_k: (B, N, Dk).  Returns zq (B,Hq,N,d_k),
-    zk (B,Hkv,N,d_k)."""
+    src_q: (B, N, Dq); src_k: (B, N, Dk); positions: (N,) shared or (B, N)
+    per-sequence (decode slots at different offsets).  Returns
+    zq (B,Hq,N,d_k), zk (B,Hkv,N,d_k)."""
     z = cfg.zeta
     feats = sinusoidal_features(positions, z.pos_feat_dim)
-    feats = jnp.broadcast_to(
-        feats[None], (src_q.shape[0],) + feats.shape
-    ).astype(src_q.dtype)
+    if feats.ndim == 2:
+        feats = jnp.broadcast_to(
+            feats[None], (src_q.shape[0],) + feats.shape
+        )
+    feats = feats.astype(src_q.dtype)
     zq = proj2_apply(p["zq_proj"], jnp.concatenate([src_q, feats], -1), prec)
     zk = proj2_apply(p["zk_proj"], jnp.concatenate([src_k, feats], -1), prec)
     hq = cfg.n_heads
@@ -220,7 +223,12 @@ def cross_attn_apply(p, x, memory, cfg: ModelConfig, prec: Precision):
 
 def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
                     dtype=jnp.bfloat16):
-    """Per-layer decode cache (unstacked; models stack over layers)."""
+    """Per-layer decode cache (unstacked; models stack over layers).
+
+    ``length`` is PER-SLOT, shape (batch,): every sequence in the batch sits
+    at its own position, which is what lets the serve engine admit a new
+    request into one slot while the others are mid-generation (continuous
+    batching) instead of draining the whole batch."""
     hkv, hd = cfg.kv_heads, cfg.resolved_head_dim
     if cfg.mla is not None:
         m = cfg.mla
@@ -249,13 +257,50 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
                                else cfg.mla.v_head_dim * cfg.n_heads),
                               jnp.float32),
         })
-    cache["length"] = jnp.zeros((), jnp.int32)
+    cache["length"] = jnp.zeros((batch,), jnp.int32)
     return cache
 
 
+def _row_write(cache_arr: jax.Array, new_vals: jax.Array, t: jax.Array,
+               active: jax.Array) -> jax.Array:
+    """Write one timestep per batch row at per-row position t.
+
+    cache_arr: (B, h, N, d); new_vals: (B, h, 1, d); t: (B,); active: (B,)
+    bool — inactive rows are left untouched (scatter index dropped)."""
+    B = cache_arr.shape[0]
+    n_max = cache_arr.shape[2]
+    b_idx = jnp.arange(B, dtype=jnp.int32)
+    pos = jnp.where(active, t, n_max)  # OOB -> dropped
+    return cache_arr.at[b_idx, :, pos].set(
+        new_vals[:, :, 0].astype(cache_arr.dtype), mode="drop"
+    )
+
+
+def _chunk_write(cache_arr: jax.Array, new_vals: jax.Array,
+                 positions: jax.Array, token_mask: jax.Array) -> jax.Array:
+    """Bulk-write a prefill chunk at per-row offsets.
+
+    cache_arr: (B, h, N, d); new_vals: (B, h, P, d); positions: (B, P)
+    per-token write positions; token_mask: (B, P) — masked tokens are
+    dropped (their scatter index is pushed out of bounds)."""
+    B = cache_arr.shape[0]
+    n_max = cache_arr.shape[2]
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    wpos = jnp.where(token_mask, positions, n_max)
+    return cache_arr.at[b_idx, :, wpos].set(
+        new_vals.transpose(0, 2, 1, 3).astype(cache_arr.dtype), mode="drop"
+    )
+
+
 def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
-                     prec: Precision):
+                     prec: Precision, slot_mask: jax.Array | None = None):
     """One-token decode.  x_t: (B, 1, D).  Returns (y_t, new_cache).
+
+    Every slot carries its own position (``cache["length"]`` is (B,)), so
+    the batch rows may sit at unrelated points of unrelated requests.
+    ``slot_mask``: (B,) bool — rows where it is False compute garbage (which
+    the engine discards) and leave their cache row, including the sorted
+    z-code cache, untouched.
 
     The ZETA path searches the incrementally-maintained sorted z-code cache
     (O(log N) search + O(k) aggregation per token) instead of re-sorting.
@@ -263,11 +308,13 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
     b = x_t.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
     groups = hq // hkv
-    t = cache["length"]
-    pos_t = jnp.full((1,), t, jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(cache["length"], jnp.int32), (b,))
+    active = (jnp.ones((b,), bool) if slot_mask is None
+              else jnp.asarray(slot_mask, bool))
+    pos_t = t[:, None]                                         # (B, 1)
 
     if cfg.mla is not None:
-        return _mla_decode_step(p, cache, x_t, cfg, prec, pos_t)
+        return _mla_decode_step(p, cache, x_t, cfg, prec, pos_t, active)
 
     v_t = _split_heads(linear_apply(p["wv"], x_t, prec), hkv)  # (B,hkv,1,hd)
 
@@ -284,7 +331,7 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
         # the training pool {0..floor(t/M)*M-1} — never *more* history than
         # training saw, at O(1) sorted-insert work per token.
         delay = cache["zk"].shape[2] // max(z.num_chunks, 1)
-        searchable = jnp.maximum(t - delay, 0)
+        searchable = jnp.maximum(t - delay, 0)                 # (B,)
         fq = b * hq
         qz_t = core_zorder.zorder_encode_with_bounds(
             zq_t.reshape(fq, 1, z.d_k).astype(jnp.float32), -1.0, 1.0, nbits
@@ -293,7 +340,7 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
         skz = jnp.repeat(cache["zk_sorted"], groups, axis=0)
         spos = jnp.repeat(cache["pos_sorted"], groups, axis=0)
         sel = core_topk.prefix_topk_decode(
-            skz, spos, searchable, qz_t, k=z.k
+            skz, spos, jnp.repeat(searchable, hq), qz_t, k=z.k
         )
         idx = sel.idx[:, 0]                                    # (Fq, k)
         valid = sel.valid[:, 0]
@@ -308,7 +355,7 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
         new_vsum = cache["vsum"].reshape(b, hkv, hd) + (
             v_t[:, :, 0].astype(jnp.float32)
         )
-        denom = (t + 1).astype(jnp.float32)
+        denom = (t + 1).astype(jnp.float32)[:, None, None]     # (B,1,1)
         km = jnp.repeat(
             (new_ksum / denom).reshape(f, 1, z.d_k), groups, axis=0
         )
@@ -337,33 +384,35 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
 
         # cache updates: write current raw key, then (if old enough) insert
         # the key that just became ``delay`` steps old into the sorted cache.
-        zk_cache = cache["zk"].at[:, :, t].set(zk_t[:, :, 0])
-        t_ins = jnp.maximum(t - delay, 0)
+        zk_cache = _row_write(cache["zk"], zk_t, t, active)
+        t_ins = jnp.maximum(t - delay, 0)                      # (B,)
+        t_ins_f = jnp.repeat(t_ins, hkv)
         ins_key = jnp.take_along_axis(
             zk_cache.reshape(f, -1, z.d_k),
-            jnp.broadcast_to(t_ins, (f, 1))[..., None],
+            t_ins_f[:, None, None],
             axis=1,
         )                                                      # (f,1,d_k)
         ins_kz = core_zorder.zorder_encode_with_bounds(
             ins_key.astype(jnp.float32), -1.0, 1.0, nbits
         )[:, 0]
-        cand_skz, cand_spos = core_topk.sorted_insert(
+        new_skz, new_spos = core_topk.sorted_insert(
             cache["zk_sorted"], cache["pos_sorted"],
-            jnp.broadcast_to(searchable, (f,)), ins_kz,
-            jnp.broadcast_to(t_ins, (f,)).astype(jnp.int32),
+            jnp.repeat(searchable, hkv), ins_kz,
+            t_ins_f.astype(jnp.int32),
+            update_mask=jnp.repeat((t >= delay) & active, hkv),
         )
-        do_insert = t >= delay
-        new_skz = jnp.where(do_insert, cand_skz, cache["zk_sorted"])
-        new_spos = jnp.where(do_insert, cand_spos, cache["pos_sorted"])
+        act_b = active[:, None, None]
         new_cache = dict(
             cache,
             zk=zk_cache,
-            v=cache["v"].at[:, :, t].set(v_t[:, :, 0]),
+            v=_row_write(cache["v"], v_t, t, active),
             zk_sorted=new_skz,
             pos_sorted=new_spos,
-            ksum=new_ksum,
-            vsum=new_vsum.reshape(cache["vsum"].shape),
-            length=t + 1,
+            ksum=jnp.where(act_b, new_ksum, cache["ksum"]),
+            vsum=jnp.where(
+                act_b, new_vsum.reshape(cache["vsum"].shape), cache["vsum"]
+            ),
+            length=jnp.where(active, t + 1, t),
         )
     else:
         q_t = _split_heads(linear_apply(p["wq"], x_t, prec), hq)
@@ -371,8 +420,8 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
         cos, sin = rope_table(pos_t, hd, cfg.rope_theta)
         q_t = apply_rope(q_t, cos, sin)
         k_t = apply_rope(k_t, cos, sin)
-        k_cache = cache["k"].at[:, :, t].set(k_t[:, :, 0])
-        v_cache = cache["v"].at[:, :, t].set(v_t[:, :, 0])
+        k_cache = _row_write(cache["k"], k_t, t, active)
+        v_cache = _row_write(cache["v"], v_t, t, active)
         kk = _repeat_kv(k_cache, groups)
         vv = _repeat_kv(v_cache, groups)
         logits = jnp.einsum(
@@ -380,25 +429,235 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
             kk.astype(jnp.float32),
         ) / jnp.sqrt(float(hd))
         n_max = kk.shape[2]
-        live = jnp.arange(n_max) <= t
-        logits = jnp.where(live[None, None, None, :], logits, -jnp.inf)
+        live = jnp.arange(n_max)[None, :] <= t[:, None]        # (B, n_max)
+        logits = jnp.where(live[:, None, None, :], logits, -jnp.inf)
         w = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum(
             "bhqk,bhkd->bhqd", w, vv.astype(jnp.float32)
         ).astype(x_t.dtype)
-        new_cache = dict(cache, k=k_cache, v=v_cache, length=t + 1)
+        new_cache = dict(cache, k=k_cache, v=v_cache,
+                         length=jnp.where(active, t + 1, t))
 
     y = jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
     return y, new_cache
 
 
+def attn_prefill(p, cache, x_chunk: jax.Array, cfg: ModelConfig,
+                 prec: Precision, token_mask: jax.Array):
+    """Chunked prefill: ingest P prompt tokens per slot in ONE call.
+
+    x_chunk: (B, P, D); token_mask: (B, P) bool, valid tokens left-aligned
+    (slot b ingests its next ``token_mask[b].sum()`` prompt tokens, starting
+    at its own ``cache["length"][b]``).  Returns (y (B, P, D), new_cache)
+    where y matches what P sequential ``attn_decode_step`` calls would have
+    produced and new_cache is the state those calls would have left behind
+    (the ZETA sorted z-code cache is rebuilt in one sort instead of P
+    inserts; tie order among colliding codes may differ — see
+    ``core_topk.sorted_build``).
+
+    The ZETA path runs the paper's *parallel* mechanism over the whole
+    chunk: every chunk position searches its own causal prefix of the
+    z-code cache at once (``prefix_topk_bulk``), which is what makes a
+    P-token prompt cost ceil(P/chunk) model calls instead of P.
+    """
+    b, P, _ = x_chunk.shape
+    hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    groups = hq // hkv
+    t0 = jnp.broadcast_to(jnp.asarray(cache["length"], jnp.int32), (b,))
+    token_mask = jnp.asarray(token_mask, bool)
+    n_valid = token_mask.sum(axis=-1).astype(jnp.int32)        # (B,)
+    active = n_valid > 0
+    positions = t0[:, None] + jnp.arange(P, dtype=jnp.int32)   # (B, P)
+
+    if cfg.mla is not None:
+        return _mla_prefill(p, cache, x_chunk, cfg, prec, positions,
+                            token_mask, n_valid)
+
+    v_c = _split_heads(linear_apply(p["wv"], x_chunk, prec), hkv)
+
+    if cfg.attention == "zeta":
+        z = cfg.zeta
+        zq_c, zk_c = _zeta_coords(p, x_chunk, x_chunk, cfg, prec, positions)
+        nbits = core_zorder.bits_for_dim(z.d_k, z.bits)
+        f, fq = b * hkv, b * hq
+        n_max = cache["zk"].shape[2]
+        delay = n_max // max(z.num_chunks, 1)
+
+        # bulk-write the chunk's raw keys/values, then search the updated
+        # cache: within-chunk candidates occur exactly when decode would
+        # have inserted them (position older than ``delay`` steps).
+        zk_cache = _chunk_write(cache["zk"], zk_c, positions, token_mask)
+        v_cache = _chunk_write(cache["v"], v_c, positions, token_mask)
+
+        kz_by_pos = core_zorder.zorder_encode_with_bounds(
+            zk_cache.reshape(f, n_max, z.d_k).astype(jnp.float32),
+            -1.0, 1.0, nbits,
+        )                                                      # (f, N)
+        qz_c = core_zorder.zorder_encode_with_bounds(
+            zq_c.reshape(fq, P, z.d_k).astype(jnp.float32), -1.0, 1.0, nbits
+        )                                                      # (fq, P)
+        # per-query candidate pool: positions < (t0 + j) - delay, the same
+        # ``searchable`` count sequential decode sees at step t0 + j
+        thresholds = jnp.maximum(positions - delay, 0)         # (B, P)
+        sel = core_topk.prefix_topk_bulk(
+            jnp.repeat(kz_by_pos, groups, axis=0),
+            jnp.repeat(thresholds, hq, axis=0),
+            qz_c, k=z.k,
+        )
+        idx, valid = sel.idx, sel.valid                        # (fq, P, k)
+
+        zk_all = jnp.repeat(zk_cache.reshape(f, n_max, z.d_k), groups,
+                            axis=0)
+        v_all = jnp.repeat(v_cache.reshape(f, n_max, hd), groups, axis=0)
+        def _gather(src, d):
+            return jnp.take_along_axis(
+                src, idx.reshape(fq, P * z.k)[..., None], axis=1
+            ).reshape(fq, P, z.k, d)
+
+        k_sel = _gather(zk_all, z.d_k)
+        v_sel = _gather(v_all, hd)
+
+        # running history-mean token: mean over positions 0..t0+j inclusive
+        tm = token_mask[:, None, :, None]
+        cumk = jnp.cumsum(
+            jnp.where(tm, zk_c.astype(jnp.float32), 0.0), axis=2
+        )                                                      # (B,hkv,P,dk)
+        cumv = jnp.cumsum(
+            jnp.where(tm, v_c.astype(jnp.float32), 0.0), axis=2
+        )
+        ksum_run = cache["ksum"][:, :, None, :] + cumk
+        vsum_prior = cache["vsum"].reshape(b, hkv, hd)
+        vsum_run = vsum_prior[:, :, None, :] + cumv
+        denom = (positions + 1).astype(jnp.float32)[:, None, :, None]
+        km = jnp.repeat(
+            (ksum_run / denom).reshape(f, P, 1, z.d_k), groups, axis=0
+        )
+        vm = jnp.repeat(
+            (vsum_run / denom).reshape(f, P, 1, hd), groups, axis=0
+        )
+        k_sel = jnp.concatenate([k_sel, km.astype(k_sel.dtype)], axis=2)
+        v_sel = jnp.concatenate([v_sel, vm.astype(v_sel.dtype)], axis=2)
+        valid = jnp.concatenate(
+            [valid, jnp.ones((fq, P, 1), bool)], axis=2
+        )
+
+        g2 = gamma2_from_param(p["gamma_theta"]).astype(x_chunk.dtype)
+        g2 = jnp.broadcast_to(g2[None], (b, hq)).reshape(fq, 1, 1)
+        qf = zq_c.reshape(fq, P, z.d_k)
+        out = gathered_attention(
+            qf, k_sel.astype(qf.dtype), v_sel.astype(qf.dtype), valid, g2,
+            score=z.score, cfg=cfg,
+        )
+        out = out.reshape(b, hq, P, hd)
+
+        # rebuild the sorted z-code cache in one shot: after the chunk,
+        # decode would have inserted every key up to (t0+n_valid-1) - delay
+        new_len_sorted = jnp.maximum(t0 + n_valid - delay, 0)
+        built_kz, built_pos = core_topk.sorted_build(
+            kz_by_pos, jnp.repeat(new_len_sorted, hkv)
+        )
+        row_act = jnp.repeat(active, hkv)[:, None]
+        new_skz = jnp.where(row_act, built_kz, cache["zk_sorted"])
+        new_spos = jnp.where(row_act, built_pos, cache["pos_sorted"])
+        act_b = active[:, None, None]
+        new_cache = dict(
+            cache,
+            zk=zk_cache,
+            v=v_cache,
+            zk_sorted=new_skz,
+            pos_sorted=new_spos,
+            ksum=jnp.where(act_b, cache["ksum"] + cumk[:, :, -1],
+                           cache["ksum"]),
+            vsum=jnp.where(
+                act_b, (vsum_prior + cumv[:, :, -1]).reshape(
+                    cache["vsum"].shape), cache["vsum"]
+            ),
+            length=t0 + n_valid,
+        )
+    else:
+        q_c = _split_heads(linear_apply(p["wq"], x_chunk, prec), hq)
+        k_c = _split_heads(linear_apply(p["wk"], x_chunk, prec), hkv)
+        cos, sin = rope_table(positions, hd, cfg.rope_theta)
+        q_c = apply_rope(q_c, cos, sin)
+        k_c = apply_rope(k_c, cos, sin)
+        k_cache = _chunk_write(cache["k"], k_c, positions, token_mask)
+        v_cache = _chunk_write(cache["v"], v_c, positions, token_mask)
+        kk = _repeat_kv(k_cache, groups)
+        vv = _repeat_kv(v_cache, groups)
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", q_c.astype(jnp.float32),
+            kk.astype(jnp.float32),
+        ) / jnp.sqrt(float(hd))
+        n_max = kk.shape[2]
+        causal = (jnp.arange(n_max)[None, None, :]
+                  <= positions[:, :, None])                    # (B, P, N)
+        logits = jnp.where(causal[:, None], logits, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhqk,bhkd->bhqd", w, vv.astype(jnp.float32)
+        ).astype(x_chunk.dtype)
+        new_cache = dict(cache, k=k_cache, v=v_cache, length=t0 + n_valid)
+
+    y = jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
+    return y, new_cache
+
+
+def _mla_prefill(p, cache, x_chunk, cfg: ModelConfig, prec: Precision,
+                 positions, token_mask, n_valid):
+    """MLA chunked prefill: bulk-write latent + rope-key caches, absorbed
+    attention over the causal prefix per chunk position."""
+    m = cfg.mla
+    b, P, _ = x_chunk.shape
+    hq = cfg.n_heads
+    xc = prec.cast(x_chunk)
+    q_lat = rmsnorm_apply(p["q_norm"], xc @ prec.cast(p["w_dq"]))
+    q = _split_heads(q_lat @ prec.cast(p["w_uq"]), hq)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    kv_lat = rmsnorm_apply(p["kv_norm"], xc @ prec.cast(p["w_dkv"]))
+    k_rope_c = xc @ prec.cast(p["w_kr"])                       # (B, P, rope)
+    cos, sin = rope_table(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_c = apply_rope(k_rope_c, cos, sin)
+
+    n_max = cache["kv_lat"].shape[1]
+    b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    wpos = jnp.where(token_mask, positions, n_max)
+    kv_cache = cache["kv_lat"].at[b_idx, wpos].set(
+        kv_lat.astype(cache["kv_lat"].dtype), mode="drop"
+    )
+    kr_cache = cache["k_rope"].at[b_idx, wpos].set(
+        k_rope_c.astype(cache["k_rope"].dtype), mode="drop"
+    )
+
+    w_uk = prec.cast(p["w_uk"]).reshape(m.kv_lora_rank, hq, m.nope_head_dim)
+    q_abs = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)
+    logits = (
+        jnp.einsum("bhqr,bnr->bhqn", q_abs.astype(jnp.float32),
+                   kv_cache.astype(jnp.float32))
+        + jnp.einsum("bhqd,bnd->bhqn", q_rope.astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    ) / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    causal = jnp.arange(n_max)[None, None, :] <= positions[:, :, None]
+    logits = jnp.where(causal[:, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqn,bnr->bhqr", w, kv_cache.astype(jnp.float32))
+    w_uv = prec.cast(p["w_uv"]).reshape(m.kv_lora_rank, hq, m.v_head_dim)
+    out = jnp.einsum("bhqr,rhd->bhqd", ctx.astype(x_chunk.dtype), w_uv)
+    y = jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
+    t0 = positions[:, 0]
+    new_cache = dict(cache, kv_lat=kv_cache, k_rope=kr_cache,
+                     length=t0 + n_valid)
+    return y, new_cache
+
+
 def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
-                     pos_t):
-    """MLA decode: cache the latent + rope key only (DeepSeek's trick)."""
+                     pos_t, active):
+    """MLA decode: cache the latent + rope key only (DeepSeek's trick).
+    pos_t: (B, 1) per-slot positions; active: (B,) slot mask."""
     m = cfg.mla
     b = x_t.shape[0]
     hq = cfg.n_heads
-    t = cache["length"]
+    t = pos_t[:, 0]                                            # (B,)
     xc = prec.cast(x_t)
     q_lat = rmsnorm_apply(p["q_norm"], xc @ prec.cast(p["w_dq"]))
     q = _split_heads(q_lat @ prec.cast(p["w_uq"]), hq)
@@ -407,10 +666,17 @@ def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
     k_rope_t = xc @ prec.cast(p["w_kr"])
     cos, sin = rope_table(pos_t, m.rope_head_dim, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin)
-    k_rope_t = apply_rope(k_rope_t[:, None], cos, sin)[:, 0]
+    k_rope_t = apply_rope(k_rope_t, cos, sin)
 
-    kv_cache = cache["kv_lat"].at[:, t].set(kv_lat[:, 0])
-    kr_cache = cache["k_rope"].at[:, t].set(k_rope_t[:, 0])
+    b_idx = jnp.arange(b, dtype=jnp.int32)
+    n_max = cache["kv_lat"].shape[1]
+    wpos = jnp.where(active, t, n_max)  # OOB -> dropped
+    kv_cache = cache["kv_lat"].at[b_idx, wpos].set(
+        kv_lat[:, 0].astype(cache["kv_lat"].dtype), mode="drop"
+    )
+    kr_cache = cache["k_rope"].at[b_idx, wpos].set(
+        k_rope_t[:, 0].astype(cache["k_rope"].dtype), mode="drop"
+    )
 
     # absorbed attention: logits = q_nope^T W_uk c_j + q_rope^T k_rope_j
     w_uk = prec.cast(p["w_uk"]).reshape(m.kv_lora_rank, hq, m.nope_head_dim)
@@ -421,9 +687,8 @@ def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
         + jnp.einsum("bhqd,bnd->bhqn", q_rope.astype(jnp.float32),
                      kr_cache.astype(jnp.float32))
     ) / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
-    n_max = kv_cache.shape[1]
-    live = jnp.arange(n_max) <= t
-    logits = jnp.where(live[None, None, None, :], logits, -jnp.inf)
+    live = jnp.arange(n_max)[None, :] <= t[:, None]            # (B, n_max)
+    logits = jnp.where(live[:, None, None, :], logits, -jnp.inf)
     w = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum(
         "bhqn,bnr->bhqr", w, kv_cache.astype(jnp.float32)
@@ -431,5 +696,6 @@ def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
     w_uv = prec.cast(p["w_uv"]).reshape(m.kv_lora_rank, hq, m.v_head_dim)
     out = jnp.einsum("bhqr,rhd->bhqd", ctx.astype(x_t.dtype), w_uv)
     y = jnp.dot(_merge_heads(out), prec.cast(p["wo"]))
-    new_cache = dict(cache, kv_lat=kv_cache, k_rope=kr_cache, length=t + 1)
+    new_cache = dict(cache, kv_lat=kv_cache, k_rope=kr_cache,
+                     length=jnp.where(active, t + 1, t))
     return y, new_cache

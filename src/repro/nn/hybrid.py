@@ -15,11 +15,18 @@ from repro.nn.attention import (
     attn_cache_init,
     attn_decode_step,
     attn_init,
+    attn_prefill,
 )
 from repro.nn.config import ModelConfig
 from repro.nn.layers import rmsnorm_apply, rmsnorm_init
 from repro.nn.module import Precision
-from repro.nn.ssd import ssd_apply, ssd_cache_init, ssd_decode_step, ssd_init
+from repro.nn.ssd import (
+    ssd_apply,
+    ssd_cache_init,
+    ssd_decode_step,
+    ssd_init,
+    ssd_prefill,
+)
 
 
 def hybrid_init(key, cfg: ModelConfig, dtype=jnp.float32):
@@ -52,9 +59,26 @@ def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-def hybrid_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision):
-    ya, attn_cache = attn_decode_step(p["attn"], cache["attn"], x_t, cfg, prec)
-    ys, ssm_cache = ssd_decode_step(p["ssm"], cache["ssm"], x_t, cfg, prec)
+def hybrid_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
+                       slot_mask=None):
+    ya, attn_cache = attn_decode_step(p["attn"], cache["attn"], x_t, cfg,
+                                      prec, slot_mask)
+    ys, ssm_cache = ssd_decode_step(p["ssm"], cache["ssm"], x_t, cfg, prec,
+                                    slot_mask)
+    y = 0.5 * (
+        rmsnorm_apply(p["attn_norm"], ya) * prec.cast(p["beta_attn"])
+        + rmsnorm_apply(p["ssm_norm"], ys) * prec.cast(p["beta_ssm"])
+    )
+    return y, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def hybrid_prefill(p, cache, x_chunk, cfg: ModelConfig, prec: Precision,
+                   token_mask):
+    """Chunked prefill of both branches over P tokens per slot."""
+    ya, attn_cache = attn_prefill(p["attn"], cache["attn"], x_chunk, cfg,
+                                  prec, token_mask)
+    ys, ssm_cache = ssd_prefill(p["ssm"], cache["ssm"], x_chunk, cfg, prec,
+                                token_mask)
     y = 0.5 * (
         rmsnorm_apply(p["attn_norm"], ya) * prec.cast(p["beta_attn"])
         + rmsnorm_apply(p["ssm_norm"], ys) * prec.cast(p["beta_ssm"])

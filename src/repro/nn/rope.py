@@ -10,20 +10,28 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnames=("head_dim", "theta"))
 def rope_table(positions: jax.Array, head_dim: int, theta: float = 10000.0):
-    """positions: (N,) int -> (cos, sin) each (N, head_dim//2) f32."""
+    """positions: (N,) or (B, N) int -> (cos, sin) each (..., N, head_dim//2)
+    f32.  The batched form carries per-sequence decode positions (continuous
+    batching: every serve slot sits at its own offset)."""
     half = head_dim // 2
     freqs = 1.0 / (
         theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
     )
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs
     return jnp.cos(ang), jnp.sin(ang)
 
 
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
-    """x: (..., N, head_dim); rotate pairs (x1, x2) -> (x1 c - x2 s, x2 c + x1 s)."""
+    """x: (..., N, head_dim); rotate pairs (x1, x2) -> (x1 c - x2 s, x2 c + x1 s).
+
+    cos/sin: (N, half) shared across the batch, or (B, N, half) per-sequence
+    (broadcast over the head axes between batch and sequence)."""
     half = x.shape[-1] // 2
     x1, x2 = x[..., :half], x[..., half:]
-    shape = (1,) * (x.ndim - 2) + cos.shape
+    if cos.ndim == 2:
+        shape = (1,) * (x.ndim - 2) + cos.shape
+    else:  # (B, N, half): keep batch leading, broadcast head axes
+        shape = cos.shape[:1] + (1,) * (x.ndim - 3) + cos.shape[1:]
     c = cos.reshape(shape).astype(x.dtype)
     s = sin.reshape(shape).astype(x.dtype)
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
@@ -33,13 +41,17 @@ def sinusoidal_features(positions: jax.Array, dim: int,
                         max_len: float = 1e6) -> jax.Array:
     """Classic sin/cos position features, fed to ZETA's f_k/f_q projectors so
     the Euclidean metric space can encode position (full-attention archs get
-    position via RoPE; ZETA's low-dim metric keys need an explicit signal)."""
+    position via RoPE; ZETA's low-dim metric keys need an explicit signal).
+
+    positions: (N,) -> (N, dim), or (B, N) per-sequence decode positions
+    -> (B, N, dim)."""
     half = dim // 2
     freqs = jnp.exp(
         -jnp.log(max_len) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
     )
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs
     feats = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
     if feats.shape[-1] < dim:  # odd dim
-        feats = jnp.pad(feats, ((0, 0), (0, dim - feats.shape[-1])))
+        pad = [(0, 0)] * (feats.ndim - 1) + [(0, dim - feats.shape[-1])]
+        feats = jnp.pad(feats, pad)
     return feats

@@ -69,9 +69,16 @@ def _segsum(a: jax.Array) -> jax.Array:
     return jnp.where(mask, diff, -jnp.inf)
 
 
-def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int):
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int, *,
+             initial_state=None, return_final_state: bool = False):
     """Chunked SSD.  x: (B,N,H,P); dt: (B,N,H); b,c: (B,N,G,S).
-    Returns y: (B,N,H,P)."""
+    Returns y: (B,N,H,P), or (y, final_state) when ``return_final_state``.
+
+    ``initial_state``: optional (B,H,P,S) f32 carry entering position 0 —
+    chunked *prefill* resumes the recurrence from a live decode cache
+    instead of zeros.  Positions with dt == 0 are exact no-ops on the state
+    (decay 1, update 0), which is how ragged/masked prefill chunks keep
+    inactive tail tokens from polluting the carry."""
     bsz, n, h, p = x.shape
     g = b.shape[2]
     reps = h // g
@@ -111,8 +118,11 @@ def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int):
         new = dec[..., None, None] * carry + s_c
         return new, carry  # emit state *entering* the chunk
 
-    init = jnp.zeros((bsz, h, p, states.shape[-1]), jnp.float32)
-    _, prev_states = jax.lax.scan(
+    if initial_state is None:
+        init = jnp.zeros((bsz, h, p, states.shape[-1]), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+    final_state, prev_states = jax.lax.scan(
         step,
         init,
         (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
@@ -129,6 +139,8 @@ def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int):
     y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(
         jnp.float32
     )
+    if return_final_state:
+        return y.astype(x.dtype), final_state
     return y.astype(x.dtype)
 
 
@@ -175,13 +187,15 @@ def ssd_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
             (batch, n_heads, s.head_dim, s.state_dim), jnp.float32
         ),
         "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
-        "length": jnp.zeros((), jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
     }
 
 
 def ssd_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
-                    prec: Precision):
-    """x_t: (B, 1, D) -> (y_t, new_cache): recurrent single-token update."""
+                    prec: Precision, slot_mask: jax.Array | None = None):
+    """x_t: (B, 1, D) -> (y_t, new_cache): recurrent single-token update.
+    ``slot_mask``: (B,) bool — masked rows leave state/conv/length
+    untouched (their output is garbage the engine discards)."""
     s, d_inner, n_heads, conv_dim = _dims(cfg)
     bsz = x_t.shape[0]
     zxbcdt = jnp.dot(prec.cast(x_t[:, 0]), prec.cast(p["in_proj"]))
@@ -217,10 +231,91 @@ def ssd_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
     y = y.reshape(bsz, d_inner).astype(x_t.dtype)
     y = rmsnorm_apply(p["gate_norm"], y * jax.nn.silu(z))
     out = jnp.dot(y, prec.cast(p["out_proj"]))[:, None, :]
+    length = jnp.broadcast_to(
+        jnp.asarray(cache["length"], jnp.int32), (bsz,)
+    )
+    if slot_mask is None:
+        new_cache = dict(
+            cache, state=new_state, conv=win[:, 1:], length=length + 1,
+        )
+    else:
+        act = jnp.asarray(slot_mask, bool)
+        new_cache = dict(
+            cache,
+            state=jnp.where(act[:, None, None, None], new_state,
+                            cache["state"]),
+            conv=jnp.where(act[:, None, None], win[:, 1:], cache["conv"]),
+            length=jnp.where(act, length + 1, length),
+        )
+    return out, new_cache
+
+
+def ssd_prefill(p, cache, x_chunk: jax.Array, cfg: ModelConfig,
+                prec: Precision, token_mask: jax.Array):
+    """Chunked prefill: advance the SSD recurrence over P tokens per slot in
+    one parallel-scan call.  x_chunk: (B, P, D); token_mask: (B, P) bool with
+    valid tokens left-aligned.  Returns (y (B, P, D), new_cache).
+
+    Masked tokens are neutralised by zeroing their dt (state decay 1,
+    update 0), so ragged rows advance by exactly their own valid count; the
+    causal-conv window is re-seeded from the cache and the new window is
+    gathered to end at each row's last valid token."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    bsz, P, _ = x_chunk.shape
+    token_mask = jnp.asarray(token_mask, bool)
+    n_valid = token_mask.sum(axis=-1).astype(jnp.int32)
+    length = jnp.broadcast_to(
+        jnp.asarray(cache["length"], jnp.int32), (bsz,)
+    )
+
+    zxbcdt = jnp.dot(prec.cast(x_chunk), prec.cast(p["in_proj"]))
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1
+    )
+    # causal conv seeded with the cached window instead of zero padding
+    kern = prec.cast(p["conv_kernel"])
+    w = kern.shape[0]
+    padded = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_out = jnp.zeros_like(xbc)
+    for i in range(w):
+        conv_out = conv_out + padded[:, i: i + P] * kern[i]
+    xbc_c = jax.nn.silu(conv_out)
+    xs, b, c = jnp.split(
+        xbc_c, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    dt = jnp.where(token_mask[..., None], dt, 0.0)  # masked -> state no-op
+    xs = xs.reshape(bsz, P, n_heads, s.head_dim)
+    b = b.reshape(bsz, P, s.n_groups, s.state_dim)
+    c = c.reshape(bsz, P, s.n_groups, s.state_dim)
+
+    chunk = min(s.chunk, P)
+    pad = (chunk - P % chunk) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, final_state = ssd_scan(
+        xs, dt, p["A_log"], b, c, p["D_skip"], chunk,
+        initial_state=cache["state"], return_final_state=True,
+    )
+    y = y[:, :P].reshape(bsz, P, d_inner)
+    y = rmsnorm_apply(p["gate_norm"], y * jax.nn.silu(z))
+    out = jnp.dot(y, prec.cast(p["out_proj"]))
+
+    # new conv window: the last (w-1) *valid* inputs per row.  In ``padded``
+    # the last valid token of row b sits at index (w-1) + n_valid[b] - 1, so
+    # the window is padded[n_valid : n_valid + w-1] — for n_valid == 0 that
+    # is exactly the old cached window.
+    gidx = n_valid[:, None] + jnp.arange(w - 1, dtype=jnp.int32)[None, :]
+    new_conv = jnp.take_along_axis(padded, gidx[..., None], axis=1)
     new_cache = dict(
         cache,
-        state=new_state,
-        conv=win[:, 1:],
-        length=cache["length"] + 1,
+        state=final_state,
+        conv=new_conv.astype(cache["conv"].dtype),
+        length=length + n_valid,
     )
     return out, new_cache

@@ -65,7 +65,10 @@ def make_distributed_decode_attention(mesh, *, axis: str, k: int):
         k_cand = cand[..., :dk]
         v_cand = cand[..., dk:]
         d2 = jnp.sum((q[:, None, :] - k_cand) ** 2, axis=-1)
-        big = jnp.asarray(3.4e38, d2.dtype)
+        # dtype-aware "infinitely far" sentinel: finite in bf16/f16/f32
+        # alike (a hard-coded 3.4e38 overflows to inf below f32 and breaks
+        # the `d2 < big` validity test after the all-gather)
+        big = core_topk.invalid_distance(d2.dtype)
         d2 = jnp.where(valid, d2, big)
         # gather all shards' candidates: (shards, B, k, ...)
         d2_all = jax.lax.all_gather(d2, axis)       # (S, B, k)

@@ -1,11 +1,17 @@
-"""Batched serving engine with continuous-batching-lite.
+"""Batched serving engine with TRUE continuous batching.
 
-Fixed batch of B decode slots stepping in lock-step (one fused decode_step
-per tick, which is what the decode dry-run cells lower).  Finished or empty
-slots are refilled from the request queue; each slot keeps its own
-generated-token budget.  Prompt ingestion re-uses the decode path token by
-token (prefill-as-decode) — adequate for the demo scale and exactly
-cache-consistent with generation.
+Fixed batch of B decode slots; per-slot cache positions (``length: (B,)``
+all the way down the cache pytree) mean a slot is recycled the moment its
+request finishes — new requests are admitted mid-flight while neighbouring
+slots keep generating, with no whole-batch drain.  Prompts are ingested
+through the chunked-prefill path (one model call per ``prefill_chunk``
+tokens, running ZETA's parallel top-k search over the whole chunk) instead
+of token-by-token decode, so time-to-first-token is ceil(P/chunk) calls.
+
+``scheduler="wave"`` preserves the legacy behaviour (whole-batch drain,
+prefill-as-decode) as an equivalence oracle: both schedulers produce
+identical greedy outputs per request, which `tests/test_serve_engine.py`
+pins.
 """
 
 from __future__ import annotations
@@ -20,7 +26,7 @@ import numpy as np
 from repro.models import api
 from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
-from repro.serve.step import make_serve_step
+from repro.serve.step import make_prefill_step, make_serve_step
 
 
 @dataclasses.dataclass
@@ -29,34 +35,159 @@ class Request:
     prompt: list[int]
     max_new: int
     output: list[int] = dataclasses.field(default_factory=list)
+    # scheduling stats (ticks are engine steps, not wall time)
+    arrival_tick: int = -1
+    admit_tick: int = -1
+    first_token_tick: int = -1
+    finish_tick: int = -1
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, prec: Precision, *,
-                 batch_slots: int, max_len: int, greedy: bool = True):
+                 batch_slots: int, max_len: int, greedy: bool = True,
+                 scheduler: str = "continuous", prefill_chunk: int = 8):
+        if scheduler not in ("continuous", "wave"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.params = params
         self.cfg = cfg
         self.prec = prec
         self.b = batch_slots
         self.max_len = max_len
+        self.scheduler = scheduler
+        self.prefill_chunk = prefill_chunk
         self.step_fn = jax.jit(make_serve_step(cfg, prec, greedy=greedy))
+        self.prefill_fn = jax.jit(
+            make_prefill_step(cfg, prec, greedy=greedy)
+        )
+        self.reset_fn = jax.jit(
+            lambda cache, mask: api.cache_reset_slots(cfg, cache, mask)
+        )
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * batch_slots
         self.slot_pending: list[deque[int]] = [deque() for _ in
                                                range(batch_slots)]
+        self.slot_phase: list[str] = ["idle"] * batch_slots
         self.cache = api.cache_init(cfg, batch_slots, max_len, jnp.float32)
         self.done: list[Request] = []
         self._tokens = np.zeros((batch_slots, 1), np.int32)
         self.rng = jax.random.PRNGKey(0)
+        # counters for benchmarks / tests
+        self.ticks = 0
+        self.prefill_calls = 0
+        self.decode_calls = 0
+        self.busy_slot_ticks = 0
 
     def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new
+        if need > self.max_len:
+            # the per-slot scatter writes drop out-of-bounds positions, so
+            # an over-length request would complete with silently wrong
+            # output instead of failing — reject it up front
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
+                f"({req.max_new}) = {need} exceeds max_len={self.max_len}"
+            )
+        req.arrival_tick = self.ticks
         self.queue.append(req)
 
-    def _refill(self) -> None:
-        # WAVE scheduling: the decode cache keeps a single global position
-        # counter, so new requests join only when the whole batch drained
-        # (then the cache is reset).  True continuous batching needs
-        # per-slot positions in the cache — documented future work.
+    # ------------------------------------------------------------ helpers
+
+    def _finish(self, i: int) -> None:
+        req = self.slots[i]
+        req.finish_tick = self.ticks
+        self.done.append(req)
+        self.slots[i] = None
+        self.slot_phase[i] = "idle"
+
+    def _admit(self) -> np.ndarray:
+        """Fill every free slot from the queue; returns the reset mask."""
+        admit = np.zeros((self.b,), bool)
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                req.admit_tick = self.ticks
+                self.slots[i] = req
+                # an empty prompt degenerates to the BOS-0 the wave
+                # scheduler feeds, keeping the two schedulers comparable
+                self.slot_pending[i] = deque(req.prompt or [0])
+                self.slot_phase[i] = "prefill"
+                admit[i] = True
+        return admit
+
+    # ------------------------------------------------------------ ticking
+
+    def tick(self) -> bool:
+        """One scheduling step.  Returns False when fully idle."""
+        if self.scheduler == "wave":
+            return self._tick_wave()
+        admit = self._admit()
+        if all(s is None for s in self.slots):
+            return False
+        if admit.any():
+            # recycle only the admitted rows; neighbours keep their state
+            self.cache = self.reset_fn(self.cache, jnp.asarray(admit))
+        self.busy_slot_ticks += sum(s is not None for s in self.slots)
+
+        # ---- chunked prefill of every slot that still has prompt tokens
+        pre_rows = [i for i in range(self.b) if self.slot_pending[i]]
+        if pre_rows:
+            P = self.prefill_chunk
+            tokens = np.zeros((self.b, P), np.int32)
+            mask = np.zeros((self.b, P), bool)
+            for i in pre_rows:
+                take = min(P, len(self.slot_pending[i]))
+                for j in range(take):
+                    tokens[i, j] = self.slot_pending[i].popleft()
+                    mask[i, j] = True
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, _, self.cache = self.prefill_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(mask), sub,
+            )
+            self.prefill_calls += 1
+            nxt = np.asarray(nxt)
+            for i in pre_rows:
+                if self.slot_pending[i]:
+                    continue  # more prompt chunks to go
+                req = self.slots[i]
+                tok = int(nxt[i, 0])  # first token, same call as the
+                req.output.append(tok)  # final prompt chunk (TTFT win)
+                req.first_token_tick = self.ticks
+                self._tokens[i, 0] = tok
+                self.slot_phase[i] = "decode"
+                if len(req.output) >= req.max_new:
+                    self._finish(i)
+
+        # ---- one decode step for every generating slot
+        dec = np.array(
+            [self.slot_phase[i] == "decode" for i in range(self.b)]
+        )
+        if dec.any():
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, _, self.cache = self.step_fn(
+                self.params, self.cache, jnp.asarray(self._tokens), sub,
+                jnp.asarray(dec),
+            )
+            self.decode_calls += 1
+            nxt = np.asarray(nxt)
+            for i in range(self.b):
+                if not dec[i]:
+                    continue
+                req = self.slots[i]
+                tok = int(nxt[i, 0])
+                req.output.append(tok)
+                self._tokens[i, 0] = tok
+                if len(req.output) >= req.max_new:
+                    self._finish(i)
+        self.ticks += 1
+        return True
+
+    # ------------------------------------------------------ wave (oracle)
+
+    def _refill_wave(self) -> None:
+        # WAVE scheduling (legacy): new requests join only when the whole
+        # batch drained, then every cache row is reset; prompts are fed
+        # through the decode path one token at a time.
         if any(s is not None for s in self.slots):
             return
         if not self.queue:
@@ -67,21 +198,22 @@ class ServeEngine:
         for i in range(self.b):
             if self.queue:
                 req = self.queue.popleft()
+                req.admit_tick = self.ticks
                 self.slots[i] = req
-                # prompt tokens are fed through decode one by one
                 self.slot_pending[i] = deque(req.prompt)
                 self._tokens[i, 0] = self.slot_pending[i].popleft() \
                     if self.slot_pending[i] else 0
 
-    def tick(self) -> bool:
-        """One decode step for the whole batch.  Returns False when idle."""
-        self._refill()
+    def _tick_wave(self) -> bool:
+        self._refill_wave()
         if all(s is None for s in self.slots):
             return False
+        self.busy_slot_ticks += sum(s is not None for s in self.slots)
         self.rng, sub = jax.random.split(self.rng)
         nxt, logits, self.cache = self.step_fn(
-            self.params, self.cache, jnp.asarray(self._tokens), sub
+            self.params, self.cache, jnp.asarray(self._tokens), sub,
         )
+        self.decode_calls += 1
         nxt = np.asarray(nxt)
         for i, req in enumerate(self.slots):
             if req is None:
@@ -93,12 +225,36 @@ class ServeEngine:
                 self._tokens[i, 0] = self.slot_pending[i].popleft()
                 continue
             tok = int(nxt[i, 0])
+            if not req.output:
+                req.first_token_tick = self.ticks
             req.output.append(tok)
             self._tokens[i, 0] = tok
             if len(req.output) >= req.max_new:
-                self.done.append(req)
-                self.slots[i] = None
+                self._finish(i)
+        self.ticks += 1
         return True
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        total = sum(len(r.output) for r in self.done)
+        ttft = [r.first_token_tick - r.arrival_tick for r in self.done
+                if r.first_token_tick >= 0]
+        return {
+            "scheduler": self.scheduler,
+            "requests_done": len(self.done),
+            "tokens_generated": total,
+            "ticks": self.ticks,
+            "model_calls": self.prefill_calls + self.decode_calls,
+            "prefill_calls": self.prefill_calls,
+            "decode_calls": self.decode_calls,
+            "slot_occupancy": (
+                self.busy_slot_ticks / (self.ticks * self.b)
+                if self.ticks else 0.0
+            ),
+            "ttft_ticks_mean": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_ticks_max": float(np.max(ttft)) if ttft else 0.0,
+        }
 
     def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0

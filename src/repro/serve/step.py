@@ -30,9 +30,16 @@ def make_serve_step(cfg: ModelConfig, prec: Precision,
     # capability-fall-back (with a warning) at trace time.
     resolved = attention_backend.resolve_name(cfg)
 
-    def serve_step(params, cache, token_t: jax.Array, rng: jax.Array):
-        """token_t: (B, 1) -> (next_token (B, 1), logits, new_cache)."""
-        logits, new_cache = api.decode_step(params, cache, token_t, cfg, prec)
+    def serve_step(params, cache, token_t: jax.Array, rng: jax.Array,
+                   slot_mask: jax.Array | None = None):
+        """token_t: (B, 1) -> (next_token (B, 1), logits, new_cache).
+
+        ``slot_mask``: (B,) bool — False rows (empty / prefilling slots)
+        produce garbage tokens the engine ignores and leave their cache
+        rows untouched."""
+        logits, new_cache = api.decode_step(
+            params, cache, token_t, cfg, prec, slot_mask
+        )
         if greedy:
             nxt = jnp.argmax(logits[:, -1:], axis=-1)
         else:
@@ -41,3 +48,34 @@ def make_serve_step(cfg: ModelConfig, prec: Precision,
 
     serve_step.attention_backend = resolved
     return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, prec: Precision,
+                      greedy: bool = True) -> Callable:
+    """Chunked-prefill step: ingest up to P prompt tokens per slot in one
+    model call and propose each slot's first generated token from the
+    logits at its last valid position (so a request whose prompt fits in
+    the chunk gets its first token out of the SAME call — that is the
+    time-to-first-token win over prefill-as-decode)."""
+    resolved = attention_backend.resolve_name(cfg)
+
+    def prefill_step(params, cache, tokens: jax.Array,
+                     token_mask: jax.Array, rng: jax.Array):
+        """tokens/token_mask: (B, P) -> (next_token (B, 1),
+        last_logits (B, 1, V), new_cache)."""
+        logits, new_cache = api.prefill(
+            params, cache, tokens, cfg, prec, token_mask=token_mask
+        )
+        n_valid = token_mask.sum(axis=-1).astype(jnp.int32)
+        last = jnp.maximum(n_valid - 1, 0)
+        last_logits = jnp.take_along_axis(
+            logits, last[:, None, None], axis=1
+        )                                                      # (B, 1, V)
+        if greedy:
+            nxt = jnp.argmax(last_logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, last_logits)
+        return nxt.astype(jnp.int32), last_logits, new_cache
+
+    prefill_step.attention_backend = resolved
+    return prefill_step

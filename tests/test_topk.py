@@ -138,3 +138,99 @@ def test_searchsorted_matches_numpy_oracle(seed):
         jnp.asarray(row)[None], jnp.asarray(qs)[None]
     ))[0]
     assert (want == got).all()
+
+
+# ------------------------------------------- per-slot / bulk primitives
+
+
+@given(st.integers(0, 5_000))
+@settings(max_examples=15, deadline=None)
+def test_sorted_build_matches_incremental_inserts(seed):
+    """One bulk sort == the cache that per-token sorted_insert grows
+    (codes drawn without collisions so tie order cannot differ)."""
+    rng = np.random.default_rng(seed)
+    nmax = 24
+    live = int(rng.integers(0, nmax + 1))
+    codes = rng.choice(2**20, size=nmax, replace=False).astype(np.int32)
+    skz = jnp.full((1, nmax), topk.SENTINEL, jnp.int32)
+    spos = jnp.zeros((1, nmax), jnp.int32)
+    for t in range(live):
+        skz, spos = topk.sorted_insert(
+            skz, spos, jnp.asarray([t], jnp.int32),
+            jnp.asarray(codes[t: t + 1]), jnp.asarray([t], jnp.int32),
+        )
+    built_kz, built_pos = topk.sorted_build(
+        jnp.asarray(codes)[None], jnp.asarray([live], jnp.int32)
+    )
+    np.testing.assert_array_equal(np.asarray(built_kz), np.asarray(skz))
+    np.testing.assert_array_equal(
+        np.asarray(built_pos[0, :live]), np.asarray(spos[0, :live])
+    )
+
+
+@given(st.integers(0, 5_000))
+@settings(max_examples=15, deadline=None)
+def test_prefix_topk_bulk_matches_sequential_decode(seed):
+    """Every query of a bulk call selects exactly what prefix_topk_decode
+    selects against the equivalent incrementally-built cache."""
+    rng = np.random.default_rng(seed)
+    nmax, k, P = 32, 4, 6
+    codes = rng.choice(2**20, size=nmax, replace=False).astype(np.int32)
+    qcodes = rng.integers(0, 2**20, size=P).astype(np.int32)
+    thresholds = np.sort(rng.integers(0, nmax + 1, size=P)).astype(np.int32)
+    bulk = topk.prefix_topk_bulk(
+        jnp.asarray(codes)[None], jnp.asarray(thresholds)[None],
+        jnp.asarray(qcodes)[None], k=k,
+    )
+    for j in range(P):
+        skz, spos = topk.sorted_build(
+            jnp.asarray(codes)[None],
+            jnp.asarray([thresholds[j]], jnp.int32),
+        )
+        one = topk.prefix_topk_decode(
+            skz, spos, jnp.asarray([thresholds[j]], jnp.int32),
+            jnp.asarray(qcodes[j: j + 1]), k=k,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(bulk.valid[0, j]), np.asarray(one.valid[0, 0])
+        )
+        v = np.asarray(one.valid[0, 0])
+        np.testing.assert_array_equal(
+            np.asarray(bulk.idx[0, j])[v], np.asarray(one.idx[0, 0])[v]
+        )
+
+
+def test_sorted_insert_update_mask_freezes_rows():
+    nmax = 8
+    skz = jnp.full((2, nmax), topk.SENTINEL, jnp.int32)
+    spos = jnp.zeros((2, nmax), jnp.int32)
+    out_kz, out_pos = topk.sorted_insert(
+        skz, spos, jnp.zeros((2,), jnp.int32),
+        jnp.asarray([5, 7], jnp.int32), jnp.asarray([0, 0], jnp.int32),
+        update_mask=jnp.asarray([True, False]),
+    )
+    assert int(out_kz[0, 0]) == 5                       # row 0 inserted
+    np.testing.assert_array_equal(                      # row 1 untouched
+        np.asarray(out_kz[1]), np.asarray(skz[1])
+    )
+
+
+def test_reset_rows_clears_only_selected():
+    skz = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    spos = jnp.asarray([[0, 1, 2], [2, 1, 0]], jnp.int32)
+    out_kz, out_pos = topk.reset_rows(
+        skz, spos, jnp.asarray([False, True])
+    )
+    np.testing.assert_array_equal(np.asarray(out_kz[0]), [1, 2, 3])
+    assert (np.asarray(out_kz[1]) == int(topk.SENTINEL)).all()
+    assert (np.asarray(out_pos[1]) == 0).all()
+    np.testing.assert_array_equal(np.asarray(out_pos[0]), [0, 1, 2])
+
+
+def test_invalid_distance_is_finite_in_half_precision():
+    for dt in (jnp.bfloat16, jnp.float16, jnp.float32):
+        big = topk.invalid_distance(dt)
+        assert big.dtype == dt
+        assert bool(jnp.isfinite(big))
+        # masking contract: any real squared distance compares below it
+        assert bool(jnp.asarray(1e4, dt) < big)
