@@ -30,10 +30,13 @@ SUITES = {
                "backend registry parity (reference/xla/pallas)"),
     "serve": ("benchmarks.serve",
               "serve engine: wave vs continuous batching (BENCH_serve.json)"),
+    "selection": ("benchmarks.selection",
+                  "selection core: train vs prefill vs decode tokens/s "
+                  "(BENCH_selection.json)"),
 }
 
 FAST_DEFAULT = ["parity", "fig3", "tab3", "tab4", "recall", "roofline",
-                "serve"]
+                "serve", "selection"]
 ALL = list(SUITES)
 
 

@@ -1,0 +1,132 @@
+"""Selection-core microbenchmark: train vs prefill vs decode tokens/s for
+one ZETA attention layer.
+
+The three execution modes are one implementation (`repro.core.selection`),
+so this benchmark tracks the per-mode cost of that shared core from day
+one: full-sequence train-mode attention, chunked prefill ingestion, and
+token-by-token decode, all through the real `nn/attention.py` layer entry
+points (projections included).  Writes the machine-readable summary to
+``BENCH_selection.json`` (CI uploads it as a build artifact).
+
+    PYTHONPATH=src python benchmarks/selection.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.nn.attention import (  # noqa: E402
+    attn_apply,
+    attn_cache_init,
+    attn_decode_step,
+    attn_init,
+    attn_prefill,
+)
+from repro.nn.config import ModelConfig, ZetaConfig  # noqa: E402
+from repro.nn.module import F32  # noqa: E402
+
+B = 2
+N = 128
+PREFILL_CHUNK = 32
+
+
+def _cfg() -> ModelConfig:
+    return ModelConfig(
+        name="bench-selection", vocab=128, d_model=64, n_layers=1,
+        n_heads=4, n_kv_heads=2, d_ff=128, attention="zeta",
+        zeta=ZetaConfig(d_k=3, k=8, num_chunks=4),
+    )
+
+
+def _timeit(fn, iters: int) -> float:
+    jax.block_until_ready(fn())  # warm the jit cache, drain the warm-up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def run(smoke: bool = False, out_path: str | None = None):
+    """Yield CSV rows (benchmarks/run.py protocol) and write the JSON."""
+    cfg = _cfg()
+    iters = 2 if smoke else 10
+    key = jax.random.PRNGKey(0)
+    params = attn_init(key, cfg)
+    x = jax.random.normal(key, (B, N, cfg.d_model), jnp.float32)
+    results = {}
+
+    # train mode: one full-sequence parallel call over all N positions
+    train_fn = jax.jit(lambda: attn_apply(params, x, cfg, F32))
+    dt = _timeit(lambda: train_fn(), iters)
+    results["train"] = {"tokens_per_s": B * N / dt, "wall_s_per_pass": dt}
+
+    # prefill mode: ingest N tokens in ceil(N / PREFILL_CHUNK) bulk calls
+    mask = jnp.ones((B, PREFILL_CHUNK), bool)
+    pf_step = jax.jit(
+        lambda c, xc: attn_prefill(params, c, xc, cfg, F32, mask)
+    )
+
+    def prefill_pass():
+        cache = attn_cache_init(cfg, B, N, jnp.float32)
+        y = None
+        for s in range(0, N, PREFILL_CHUNK):
+            y, cache = pf_step(cache, x[:, s:s + PREFILL_CHUNK])
+        return y
+
+    dt = _timeit(prefill_pass, iters)
+    results["prefill"] = {
+        "tokens_per_s": B * N / dt, "wall_s_per_pass": dt,
+        "chunk": PREFILL_CHUNK,
+    }
+
+    # decode mode: N single-token incremental steps
+    dec_step = jax.jit(
+        lambda c, xt: attn_decode_step(params, c, xt, cfg, F32)
+    )
+
+    def decode_pass():
+        cache = attn_cache_init(cfg, B, N, jnp.float32)
+        y = None
+        for t in range(N):
+            y, cache = dec_step(cache, x[:, t:t + 1])
+        return y
+
+    dt = _timeit(decode_pass, iters)
+    results["decode"] = {"tokens_per_s": B * N / dt, "wall_s_per_pass": dt}
+
+    for mode, r in results.items():
+        yield (f"selection_{mode}_tokens_per_s,"
+               f"{1e6 / max(r['tokens_per_s'], 1e-9):.1f},"
+               f"{r['tokens_per_s']:.0f} tok/s over {B}x{N}")
+    results["meta"] = {"batch": B, "seq_len": N, "iters": iters,
+                      "d_model": cfg.d_model, "k": cfg.zeta.k,
+                      "num_chunks": cfg.zeta.num_chunks}
+    out_path = out_path or os.path.join(os.getcwd(), "BENCH_selection.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    yield f"selection_json,0,{out_path}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="2 iters (CI)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke, out_path=args.out):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,7 @@ def _zeta_backend(impl: str):
             return zeta_attention(
                 q, k, v, gamma2,
                 num_chunks=zcfg.num_chunks, k=zcfg.k, bits=zcfg.bits,
+                bound=zcfg.bound,
                 history_mean=zcfg.history_mean,
                 local_window=zcfg.local_window,
                 score=zcfg.score, impl=impl,

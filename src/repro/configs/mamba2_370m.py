@@ -1,8 +1,9 @@
 """mamba2-370m [ssm]: 48L d_model=1024 (attn-free) vocab=50280,
 ssm_state=128 — SSD [arXiv:2405.21060; unverified].
 
-ZETA is INAPPLICABLE here (no attention tokens to select) — see DESIGN.md
-§Arch-applicability.  The arch still runs every shape natively (O(N))."""
+ZETA is INAPPLICABLE here (no attention tokens to select) — the mixer
+families and their cache shapes are catalogued in docs/ARCHITECTURE.md §3
+(per-slot cache layout).  The arch still runs every shape natively (O(N))."""
 from repro.nn.config import ModelConfig, SSMConfig
 
 CONFIG = ModelConfig(

@@ -15,8 +15,10 @@ from repro.core.topk import (
     sorted_insert,
 )
 from repro.core.zorder import zorder_encode, zorder_encode_with_bounds
+from repro.core import selection  # noqa: F401  (the mode-parametric core)
 
 __all__ = [
+    "selection",
     "zeta_attention",
     "zeta_attention_noncausal",
     "cauchy_weights",

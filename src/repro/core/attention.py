@@ -1,19 +1,18 @@
 """ZETA attention: Z-order top-k search + Adaptive Cauchy-Softmax (§3.2-3.4).
 
-This module is the *pipeline implementation*; callers go through the
-dispatch layer, ``repro.backend.attention`` (docs/ARCHITECTURE.md), which
-selects a backend and invokes :func:`zeta_attention` with the matching
-``impl``.  The pipeline:
+This module is the *train-mode entry* plus the shared gathered scoring
+stage.  Callers go through the dispatch layer, ``repro.backend.attention``
+(docs/ARCHITECTURE.md §2), which selects a backend and invokes
+:func:`zeta_attention` with the matching ``impl``.  The pipeline itself —
+Morton encoding, causal candidate search, the optional own-chunk window,
+history-mean assembly, and scoring dispatch — lives in
+:mod:`repro.core.selection`, the ONE implementation shared with the
+prefill and decode execution modes (docs/ARCHITECTURE.md §1a).
 
-  1. Morton-encode low-dim keys & queries (core/zorder.py)
-  2. chunked causal parallel top-k candidate search (core/topk.py)
-  3. optional own-chunk local window (beyond-paper, default off)
-  4. gather candidate K/V, append history-mean smoothing token
-  5. squared distances -> Adaptive Cauchy-Softmax -> weighted value sum —
-     the scoring stage, dispatched through the backend registry's
-     ``gathered`` entry (pure-XLA ops, the fused Pallas kernel, or the
-     naive reference oracle; selection happened one level up, ``impl``
-     names the resolved backend)
+This file keeps what belongs to the *scoring stage* contract: the pure-XLA
+gathered scorer (``score_gathered_xla``) with its bf16-cotangent-pinned
+weighted sum, which the backend registry exposes as the ``xla`` backend's
+``gathered`` entry.
 
 Layout convention: q, k are (B, H, N, d_k); v is (B, H, N, d_v).
 GQA is handled by the nn layer (keys are searched once per KV head).
@@ -27,7 +26,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core import cauchy, ref, topk, zorder
+from repro.core import cauchy, selection
 
 
 def repeat_kv(x: jax.Array, groups: int) -> jax.Array:
@@ -48,23 +47,6 @@ def _gather_kv(
     k_sel = jnp.take_along_axis(k[:, None, :, :], idx[..., None], axis=-2)
     v_sel = jnp.take_along_axis(v[:, None, :, :], idx[..., None], axis=-2)
     return k_sel, v_sel
-
-
-def _local_window_indices(
-    n: int, num_chunks: int, window: int
-) -> tuple[jax.Array, jax.Array]:
-    """Own-chunk sliding-window candidate indices (beyond-paper option).
-
-    Returns idx (N, window) and valid (N, window); positions clamped to
-    [chunk_start(i), i] so they never overlap the z-order candidates (which
-    live in strictly earlier chunks)."""
-    m = n // num_chunks
-    i = jnp.arange(n, dtype=jnp.int32)[:, None]
-    off = jnp.arange(window, dtype=jnp.int32)[None, :]
-    j = i - off                               # i, i-1, ..., i-window+1
-    lo = (i // m) * m
-    valid = j >= lo
-    return jnp.where(valid, j, 0), valid
 
 
 def _score_weights(d2, g2, valid, score, dtype):
@@ -118,17 +100,6 @@ def score_gathered_xla(q, k_sel, v_sel, valid, gamma2, *,
     return _weighted_sum(w, v_sel)
 
 
-def _gathered_scorer(impl: str):
-    """Resolve the scoring-stage implementation through the backend
-    registry (lazy import: backends.py imports this module)."""
-    from repro.backend import registry
-
-    scorer = registry.get_backend(impl).gathered
-    if scorer is None:
-        raise ValueError(f"backend {impl!r} has no gathered scoring stage")
-    return scorer
-
-
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -152,110 +123,22 @@ def zeta_attention(
     impl: Literal["xla", "pallas", "reference"] = "xla",
     shard_search: bool = False,
 ) -> jax.Array:
-    """Causal ZETA attention.
+    """Causal ZETA attention — the selection core's *train* mode.
 
     q: (B, Hq, N, d_k); kk: (B, Hkv, N, d_k); v: (B, Hkv, N, d_v) with
-    Hq % Hkv == 0.  When Hq > Hkv the GQA-grouped search runs: keys are
-    sorted once per KV head and all Hq/Hkv query heads of the group search
-    the same sorted prefixes (beyond-paper §Perf optimization; selection
-    semantics identical to repeating the keys).
-
-    ``shard_search=True`` annotates every search intermediate with a
-    (batch->data, kv_heads->model) sharding — aligned with the TP layout
-    of v, so no resharding — which stops XLA replicating the prefix sorts
-    across the model axis (§Perf iteration 6).
-
-    gamma2: scalar or (Hq,).  Returns (B, Hq, N, d_v).
+    Hq % Hkv == 0.  ``bound`` is the fixed symmetric quantisation range
+    (``ZetaConfig.bound``); it must be data-independent to preserve
+    causality.  gamma2: scalar or (Hq,).  Returns (B, Hq, N, d_v).
+    See :func:`repro.core.selection.attend_train` for the pipeline.
     """
-    from repro.launch.sharding import shard_activation as _sa
-
-    B, Hq, N, dk = q.shape
-    Hkv = kk.shape[1]
-    G = Hq // Hkv
-    dv = v.shape[-1]
-
-    def sa(x, spec):
-        return _sa(x, spec) if shard_search else x
-
-    # Everything below is RESHAPE-FREE in the (B, H) leading dims: sorts,
-    # binary searches, and gathers align with the trailing axis so the SPMD
-    # partitioner preserves batch/head shardings (no involuntary remat).
-    kf = sa(kk, ("batch", "model", None, None))          # (B, Hkv, N, dk)
-    vf = sa(v, ("batch", "model", None, None))           # (B, Hkv, N, dv)
-    qg = sa(
-        q.reshape(B, Hkv, G, N, dk),
-        ("batch", "model", None, None, None),
-    )
-
-    # 1-2. Morton codes + parallel causal candidate search.  ``bound`` must
-    # be fixed (not data-dependent) to preserve causality — see zorder.py.
     if bound is None:
         raise ValueError("causal ZETA requires fixed quantisation bounds")
-    nbits = zorder.bits_for_dim(dk, bits)
-    kz = zorder.zorder_encode_with_bounds(kf, -bound, bound, nbits)
-    qz = zorder.zorder_encode_with_bounds(qg, -bound, bound, nbits)
-    kz = sa(kz, ("batch", "model", None))                # (B, Hkv, N)
-    qz = sa(qz, ("batch", "model", None, None))          # (B, Hkv, G, N)
-    sel = topk.chunked_causal_topk_grouped(
-        kz, qz, num_chunks=num_chunks, k=k
+    return selection.attend_train(
+        q, kk, v, gamma2,
+        num_chunks=num_chunks, k=k, bits=bits, bound=bound,
+        history_mean=history_mean, local_window=local_window,
+        score=score, impl=impl, shard_search=shard_search,
     )
-    idx = sa(sel.idx, ("batch", "model", None, None, None))
-    valid = sa(sel.valid, ("batch", "model", None, None, None))
-
-    # 3. optional own-chunk local window.
-    if local_window > 0:
-        lw_idx, lw_valid = _local_window_indices(N, num_chunks, local_window)
-        idx = jnp.concatenate(
-            [idx, jnp.broadcast_to(lw_idx, (B, Hkv, G, N, local_window))],
-            axis=-1,
-        )
-        valid = jnp.concatenate(
-            [valid,
-             jnp.broadcast_to(lw_valid, (B, Hkv, G, N, local_window))],
-            axis=-1,
-        )
-
-    # 4. gather candidates (per query; XLA gather — see DESIGN.md §3).
-    kk_ = idx.shape[-1]
-    flat = idx.reshape(B, Hkv, G * N * kk_)              # trailing merge
-    k_sel = jnp.take_along_axis(
-        kf, flat[..., None], axis=2
-    ).reshape(B, Hkv, G, N, kk_, dk)
-    v_sel = jnp.take_along_axis(
-        vf, flat[..., None], axis=2
-    ).reshape(B, Hkv, G, N, kk_, dv)
-
-    # history-mean smoothing token (§3.4): cumulative mean of keys gives the
-    # token's coordinate, cumulative mean of values its payload.
-    if history_mean:
-        km = ref.history_mean(kf)[:, :, None, :, None, :]  # (B,Hkv,1,N,1,dk)
-        vm = ref.history_mean(vf)[:, :, None, :, None, :]
-        k_sel = jnp.concatenate(
-            [k_sel, jnp.broadcast_to(km, k_sel.shape[:4] + (1, dk))],
-            axis=-2,
-        )
-        v_sel = jnp.concatenate(
-            [v_sel, jnp.broadcast_to(vm, v_sel.shape[:4] + (1, dv))],
-            axis=-2,
-        )
-        valid = jnp.concatenate(
-            [valid, jnp.ones(valid.shape[:-1] + (1,), bool)], axis=-1
-        )
-    k_sel = sa(k_sel, ("batch", "model") + (None,) * 4)
-    v_sel = sa(v_sel, ("batch", "model") + (None,) * 4)
-
-    g2 = jnp.asarray(gamma2, q.dtype)
-    if g2.ndim == 1:  # per query head
-        g2 = g2.reshape(1, Hkv, G, 1, 1)
-
-    # 5. score + aggregate — the registry's gathered scoring stage for the
-    # resolved backend (``impl``).  The xla scorer is rank-polymorphic so
-    # the (B, Hkv, G, ...) layout stays reshape-free; the pallas scorer
-    # flattens to (F, N, K, d) internally.
-    out = _gathered_scorer(impl)(qg, k_sel, v_sel, valid, g2, score=score)
-
-    out = sa(out, ("batch", "model", None, None, None))
-    return out.reshape(B, Hq, N, dv)
 
 
 def zeta_attention_noncausal(
@@ -271,8 +154,9 @@ def zeta_attention_noncausal(
     impl: Literal["xla", "pallas", "reference"] = "xla",
 ) -> jax.Array:
     """Encoder-side (non-causal) ZETA: every query searches the *entire*
-    sorted key sequence — a single global sort, no chunk restriction.
-    Requires Hq == Hkv (callers repeat KV for GQA)."""
+    sorted key sequence — a single global sort, no chunk restriction
+    (``selection.search_global``).  Requires Hq == Hkv (callers repeat KV
+    for GQA)."""
     if kk.shape[1] != q.shape[1]:
         raise ValueError(
             f"non-causal ZETA needs repeated KV: Hq={q.shape[1]} vs "
@@ -285,21 +169,12 @@ def zeta_attention_noncausal(
     kf = kk.reshape(F, N, dk)
     vf = v.reshape(F, N, dv)
 
-    kz, qz = zorder.zorder_encode(kf, qf, bits=bits, bound=bound)
-    iota = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), kz.shape)
-    skz, perm = jax.lax.sort((kz, iota), dimension=-1, num_keys=1)
-    # batched search: every query row against its own sorted key row
-    ins = topk._searchsorted_batched(skz, qz)                  # (F, N)
-    start = jnp.clip(ins - (k // 2), 0, max(N - k, 0))
-    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)  # (F, N, k)
-    valid = slots < N
-    idx = jnp.take_along_axis(
-        perm, jnp.minimum(slots, N - 1).reshape(F, N * k), axis=-1
-    ).reshape(F, N, k)
-
-    k_sel, v_sel = _gather_kv(kf, vf, idx)
+    sel = selection.search_global(kf, qf, k=k, bits=bits, bound=bound)
+    k_sel, v_sel = _gather_kv(kf, vf, sel.idx)
     g2 = jnp.asarray(gamma2, q.dtype)
     if g2.ndim == 1:  # per-head
         g2 = jnp.broadcast_to(g2[None, :], (B, H)).reshape(F, 1, 1)
-    out = _gathered_scorer(impl)(qf, k_sel, v_sel, valid, g2, score=score)
+    out = selection.score_gathered(
+        qf, k_sel, v_sel, sel.valid, g2, score=score, impl=impl
+    )
     return out.reshape(B, H, N, dv)

@@ -1,0 +1,592 @@
+"""ZETA selection core — ONE implementation for train / prefill / decode.
+
+The paper's mechanism (ZETA §3.2-3.4) has a parallel training form and an
+incremental decode form which must be *the same computation*; Gupta et
+al.'s top-k attention (PAPERS.md) makes the same train/inference-parity
+argument.  Before this module the pipeline existed as three hand-maintained
+copies (train in ``core/attention.py``, prefill and decode in
+``nn/attention.py``) that had already drifted: decode/prefill ignored
+``history_mean=False`` and ``local_window>0`` and hard-coded the
+quantisation bounds training took as a parameter.  This module owns every
+stage once, parametrised by execution mode:
+
+  stage                 train              prefill             decode
+  --------------------  -----------------  ------------------  -----------------
+  Morton encoding       morton_codes (bounds-fixed, shared by all modes)
+  candidate search      chunked_causal_    prefix_topk_bulk    prefix_topk_
+                        topk_grouped       (delayed-insertion  decode +
+                        (per-chunk prefix  thresholds)         sorted_insert
+                        sorts)
+  candidate pool @ pos  < (i//M)*M         < i - M             < t - M
+  cost per token        O(C log N) am.     O(N log N) masked   O(log N) search
+                                           sort per query      + O(N) ins shift
+  GQA group-dedup       sort/search once per KV head; G query heads share it
+  own-chunk window      own_chunk_window (positions clamped to [chunk_start, i])
+  history-mean token    cumulative mean    cached sums +       cached running
+                        (ref.history_      in-chunk cumsum     sums + current
+                        mean)                                  token
+  scoring               backend registry ``gathered`` stage (xla / pallas /
+                        reference), selected identically in every mode
+
+M = N // num_chunks is the chunk size; the prefill/decode pool uses
+*delayed insertion* (a key becomes searchable once it is M steps old), a
+conservative subset of the training pool — see ``attend_decode``.  With
+equal pools the three modes select identically and score to the same
+output (``tests/test_selection_modes.py`` pins this).
+
+Callers outside this module never touch ``zorder_encode*``,
+``prefix_topk_*`` or ``sorted_insert`` directly — the layers
+(``nn/attention.py``), the sharded decode (``serve/distributed.py``) and
+the train pipeline (``core/attention.py``) are thin wrappers over the
+entry points here.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import state
+from repro.core import ref, topk, zorder
+from repro.core.topk import SENTINEL, TopkResult  # noqa: F401  (re-export)
+
+
+# ------------------------------------------------------------------ encode
+
+
+def morton_codes(x: jax.Array, *, bits: int | None = None,
+                 bound: float = 1.0) -> jax.Array:
+    """Bounds-fixed Morton encoding, the one entry every mode uses.
+
+    x: (..., N, d) float coords -> (..., N) int32 codes.  Quantisation runs
+    in f32 over the fixed symmetric range [-bound, bound]: the bounds must
+    be data-independent to preserve causality (data min/max leaks future
+    information into past codes) and step-independent so decode-cache codes
+    stay comparable across time.  ``bound`` comes from ``ZetaConfig.bound``
+    (the projectors are tanh-squashed, so 1.0 loses nothing).
+    """
+    if bound is None:
+        raise ValueError("causal ZETA requires fixed quantisation bounds")
+    nbits = zorder.bits_for_dim(x.shape[-1], bits)
+    return zorder.zorder_encode_with_bounds(
+        x.astype(jnp.float32), -bound, bound, nbits
+    )
+
+
+# ------------------------------------------------------------------ search
+
+
+def search_train(kz: jax.Array, qz: jax.Array, *, num_chunks: int,
+                 k: int) -> TopkResult:
+    """Train-mode search: C parallel per-chunk prefix sorts, GQA-grouped.
+    kz: (B, H, N); qz: (B, H, G, N) -> idx/valid (B, H, G, N, k)."""
+    return topk.chunked_causal_topk_grouped(
+        kz, qz, num_chunks=num_chunks, k=k
+    )
+
+
+def search_prefill(kz_by_pos: jax.Array, thresholds: jax.Array,
+                   qz: jax.Array, *, k: int) -> TopkResult:
+    """Prefill-mode search: P queries per row, each against its own causal
+    prefix (pool = positions < thresholds[:, j]).  (B, Nmax), (B, P),
+    (B, P) -> idx/valid (B, P, k)."""
+    return topk.prefix_topk_bulk(kz_by_pos, thresholds, qz, k=k)
+
+
+def search_decode(sorted_kz: jax.Array, sorted_pos: jax.Array,
+                  length: jax.Array, qz: jax.Array, *,
+                  k: int) -> TopkResult:
+    """Decode-mode search: one query per row against an incrementally
+    maintained sorted cache (O(log N)).  Also the per-shard primitive of
+    the sequence-parallel distributed decode (serve/distributed.py)."""
+    return topk.prefix_topk_decode(sorted_kz, sorted_pos, length, qz, k=k)
+
+
+def search_global(kf: jax.Array, qf: jax.Array, *, k: int,
+                  bits: int | None = None,
+                  bound: float | None = None) -> TopkResult:
+    """Non-causal (encoder) search: every query against the entire sorted
+    key sequence — one global sort, no chunk restriction.  kf/qf:
+    (F, N, d) -> idx/valid (F, Nq, k).  ``bound=None`` uses data min/max
+    bounds (safe here: no causality to protect)."""
+    F, N, _ = kf.shape
+    kz, qz = zorder.zorder_encode(kf, qf, bits=bits, bound=bound)
+    iota = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), kz.shape)
+    skz, perm = jax.lax.sort((kz, iota), dimension=-1, num_keys=1)
+    ins = topk._searchsorted_batched(skz, qz)                  # (F, Nq)
+    start = jnp.clip(ins - (k // 2), 0, max(N - k, 0))
+    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)  # (F, Nq, k)
+    valid = slots < N
+    nq = qz.shape[-1]
+    idx = jnp.take_along_axis(
+        perm, jnp.minimum(slots, N - 1).reshape(F, nq * k), axis=-1
+    ).reshape(F, nq, k)
+    return TopkResult(idx=jnp.where(valid, idx, 0), valid=valid)
+
+
+# ------------------------------------------------------------- local window
+
+
+def own_chunk_window(positions: jax.Array, *, chunk: int,
+                     window: int) -> tuple[jax.Array, jax.Array]:
+    """Own-chunk sliding-window candidates (beyond-paper, default off).
+
+    positions: (...,) int32 global query positions -> idx/valid
+    (..., window): candidates i, i-1, ..., i-window+1 clamped to the
+    query's own chunk [(i//chunk)*chunk, i].  They therefore never overlap
+    the z-order candidates, which live in strictly earlier chunks (train)
+    or at least one chunk in the past (delayed-insertion prefill/decode).
+    """
+    off = jnp.arange(window, dtype=jnp.int32)
+    j = positions[..., None] - off                 # i, i-1, ...
+    lo = (positions // chunk) * chunk
+    valid = j >= lo[..., None]
+    return jnp.where(valid, j, 0), valid
+
+
+def _append_window(idx, valid, positions, *, chunk, window, repeat_to=None):
+    """Concat own-chunk window candidates onto search results.  positions'
+    shape must broadcast-match idx's leading dims after an optional leading
+    ``jnp.repeat`` (GQA query-head fan-out)."""
+    w_idx, w_valid = own_chunk_window(positions, chunk=chunk, window=window)
+    if repeat_to is not None:
+        w_idx = jnp.repeat(w_idx, repeat_to, axis=0)
+        w_valid = jnp.repeat(w_valid, repeat_to, axis=0)
+    return (
+        jnp.concatenate([idx, jnp.broadcast_to(
+            w_idx, idx.shape[:-1] + (window,))], axis=-1),
+        jnp.concatenate([valid, jnp.broadcast_to(
+            w_valid, valid.shape[:-1] + (window,))], axis=-1),
+    )
+
+
+# ------------------------------------------------------------ history mean
+
+
+def append_history_mean(k_sel, v_sel, valid, km, vm):
+    """Append the §3.4 smoothing token as one extra always-valid candidate.
+    k_sel/v_sel: (..., K, d); km/vm broadcastable to (..., 1, d)."""
+    k_sel = jnp.concatenate(
+        [k_sel, jnp.broadcast_to(
+            km.astype(k_sel.dtype), k_sel.shape[:-2] + (1, k_sel.shape[-1])
+        )], axis=-2,
+    )
+    v_sel = jnp.concatenate(
+        [v_sel, jnp.broadcast_to(
+            vm.astype(v_sel.dtype), v_sel.shape[:-2] + (1, v_sel.shape[-1])
+        )], axis=-2,
+    )
+    valid = jnp.concatenate(
+        [valid, jnp.ones(valid.shape[:-1] + (1,), bool)], axis=-1
+    )
+    return k_sel, v_sel, valid
+
+
+# ---------------------------------------------------------------- scoring
+
+
+def score_gathered(q, k_sel, v_sel, valid, gamma2, *, score: str = "cauchy",
+                   impl: str | None = None, zcfg=None):
+    """Dispatch the gathered-candidate scoring stage through the backend
+    registry — the SAME selection logic in every mode.  ``impl`` names a
+    resolved backend (train passes the one the full-attention dispatch
+    picked); otherwise capability-based selection runs, honouring
+    ``zcfg.backend``.  Lazy import: backends register the pipeline."""
+    from repro.backend import registry
+
+    if impl is not None:
+        scorer = registry.get_backend(impl).gathered
+        if scorer is None:
+            raise ValueError(
+                f"backend {impl!r} has no gathered scoring stage"
+            )
+        return scorer(q, k_sel, v_sel, valid, gamma2, score=score)
+    return registry.gathered_attention(
+        q, k_sel, v_sel, valid, gamma2, score=score, cfg=zcfg
+    )
+
+
+def _gamma2_rows(gamma2, B, Hq, dtype):
+    """Broadcast scalar / (Hq,) gamma^2 to flat (B*Hq, 1, 1) rows."""
+    g2 = jnp.asarray(gamma2, dtype)
+    if g2.ndim == 1:
+        g2 = jnp.broadcast_to(g2[None], (B, Hq))
+    else:
+        g2 = jnp.broadcast_to(g2, (B, Hq))
+    return g2.reshape(B * Hq, 1, 1)
+
+
+# ------------------------------------------------------------- train mode
+
+
+def attend_train(
+    q: jax.Array,
+    kk: jax.Array,
+    v: jax.Array,
+    gamma2: jax.Array,
+    *,
+    num_chunks: int,
+    k: int,
+    bits: int | None = None,
+    bound: float = 1.0,
+    history_mean: bool = True,
+    local_window: int = 0,
+    score: str = "cauchy",
+    impl: str = "xla",
+    shard_search: bool = False,
+) -> jax.Array:
+    """Full-sequence causal ZETA (the paper's parallel mechanism).
+
+    q: (B, Hq, N, d_k); kk: (B, Hkv, N, d_k); v: (B, Hkv, N, d_v) with
+    Hq % Hkv == 0.  When Hq > Hkv the GQA-grouped search runs: keys are
+    sorted once per KV head and all Hq/Hkv query heads of the group search
+    the same sorted prefixes (selection semantics identical to repeating
+    the keys).  ``shard_search=True`` annotates every search intermediate
+    with a (batch->data, kv_heads->model) sharding — aligned with the TP
+    layout of v, so no resharding — which stops XLA replicating the prefix
+    sorts across the model axis (§Perf iteration 6).
+    gamma2: scalar or (Hq,).  Returns (B, Hq, N, d_v).
+    """
+    from repro.launch.sharding import shard_activation as _sa
+
+    B, Hq, N, dk = q.shape
+    Hkv = kk.shape[1]
+    G = Hq // Hkv
+    dv = v.shape[-1]
+
+    def sa(x, spec):
+        return _sa(x, spec) if shard_search else x
+
+    # Everything below is RESHAPE-FREE in the (B, H) leading dims: sorts,
+    # binary searches, and gathers align with the trailing axis so the SPMD
+    # partitioner preserves batch/head shardings (no involuntary remat).
+    kf = sa(kk, ("batch", "model", None, None))          # (B, Hkv, N, dk)
+    vf = sa(v, ("batch", "model", None, None))           # (B, Hkv, N, dv)
+    qg = sa(
+        q.reshape(B, Hkv, G, N, dk),
+        ("batch", "model", None, None, None),
+    )
+
+    # 1-2. Morton codes + parallel causal candidate search.
+    kz = sa(morton_codes(kf, bits=bits, bound=bound),
+            ("batch", "model", None))                    # (B, Hkv, N)
+    qz = sa(morton_codes(qg, bits=bits, bound=bound),
+            ("batch", "model", None, None))              # (B, Hkv, G, N)
+    sel = search_train(kz, qz, num_chunks=num_chunks, k=k)
+    idx = sa(sel.idx, ("batch", "model", None, None, None))
+    valid = sa(sel.valid, ("batch", "model", None, None, None))
+
+    # 3. optional own-chunk local window.
+    if local_window > 0:
+        idx, valid = _append_window(
+            idx, valid, jnp.arange(N, dtype=jnp.int32),
+            chunk=N // num_chunks, window=local_window,
+        )
+
+    # 4. gather candidates (per query; one XLA gather with the trailing
+    # dims merged — docs/ARCHITECTURE.md §4, layout conventions).
+    kk_ = idx.shape[-1]
+    flat = idx.reshape(B, Hkv, G * N * kk_)              # trailing merge
+    k_sel = jnp.take_along_axis(
+        kf, flat[..., None], axis=2
+    ).reshape(B, Hkv, G, N, kk_, dk)
+    v_sel = jnp.take_along_axis(
+        vf, flat[..., None], axis=2
+    ).reshape(B, Hkv, G, N, kk_, dv)
+
+    # history-mean smoothing token (§3.4): cumulative mean of keys gives
+    # the token's coordinate, cumulative mean of values its payload.
+    if history_mean:
+        km = ref.history_mean(kf)[:, :, None, :, None, :]  # (B,Hkv,1,N,1,dk)
+        vm = ref.history_mean(vf)[:, :, None, :, None, :]
+        k_sel, v_sel, valid = append_history_mean(
+            k_sel, v_sel, valid, km, vm
+        )
+    k_sel = sa(k_sel, ("batch", "model") + (None,) * 4)
+    v_sel = sa(v_sel, ("batch", "model") + (None,) * 4)
+
+    g2 = jnp.asarray(gamma2, q.dtype)
+    if g2.ndim == 1:  # per query head
+        g2 = g2.reshape(1, Hkv, G, 1, 1)
+
+    # 5. score + aggregate — the registry's gathered scoring stage for the
+    # resolved backend (``impl``).  The xla scorer is rank-polymorphic so
+    # the (B, Hkv, G, ...) layout stays reshape-free; the pallas scorer
+    # flattens to (F, N, K, d) internally.
+    out = score_gathered(qg, k_sel, v_sel, valid, g2, score=score,
+                         impl=impl)
+
+    out = sa(out, ("batch", "model", None, None, None))
+    return out.reshape(B, Hq, N, dv)
+
+
+# ---------------------------------------------------- prefill/decode state
+
+
+class ZetaCache(NamedTuple):
+    """The ZETA slice of a decode cache (a *view* over the mixer's cache
+    dict — see ``attn_cache_spec`` in nn/attention.py for the field specs).
+
+    zk:         (B, Hkv, Nmax, d_k)  raw metric keys by position
+    v:          (B, Hkv, Nmax, d_v)  raw values by position
+    zk_sorted:  (B*Hkv, Nmax) int32  sorted Morton codes (SENTINEL tail)
+    pos_sorted: (B*Hkv, Nmax) int32  original position of each sorted code
+    ksum/vsum:  (B, Hkv, d)   f32    running history-mean numerators
+    """
+
+    zk: jax.Array
+    v: jax.Array
+    zk_sorted: jax.Array
+    pos_sorted: jax.Array
+    ksum: jax.Array
+    vsum: jax.Array
+
+
+def _gather_candidates(zk_cache, v_cache, idx, groups):
+    """Gather (k_sel, v_sel) from position-indexed per-KV-head caches.
+    zk_cache: (B, Hkv, Nmax, dk); idx: (B*Hq, ..., K) positions."""
+    B, Hkv, Nmax, dk = zk_cache.shape
+    dv = v_cache.shape[-1]
+    f = B * Hkv
+    lead = idx.shape[1:-1]
+    kk_ = idx.shape[-1]
+    flat = idx.reshape(f * groups, -1)
+    zk_all = jnp.repeat(zk_cache.reshape(f, Nmax, dk), groups, axis=0)
+    v_all = jnp.repeat(v_cache.reshape(f, Nmax, dv), groups, axis=0)
+    k_sel = jnp.take_along_axis(
+        zk_all, flat[..., None], axis=1
+    ).reshape((f * groups,) + lead + (kk_, dk))
+    v_sel = jnp.take_along_axis(
+        v_all, flat[..., None], axis=1
+    ).reshape((f * groups,) + lead + (kk_, dv))
+    return k_sel, v_sel
+
+
+# ------------------------------------------------------------ decode mode
+
+
+def attend_decode(
+    cache: ZetaCache,
+    zq_t: jax.Array,
+    zk_t: jax.Array,
+    v_t: jax.Array,
+    gamma2: jax.Array,
+    t: jax.Array,
+    active: jax.Array,
+    *,
+    zcfg,
+) -> tuple[jax.Array, ZetaCache]:
+    """One-token incremental ZETA against a live cache.
+
+    zq_t: (B, Hq, 1, d_k); zk_t: (B, Hkv, 1, d_k); v_t: (B, Hkv, 1, d_v);
+    t: (B,) per-slot positions; active: (B,) bool (inactive rows compute
+    garbage and leave their cache rows untouched).  Returns
+    (out (B, Hq, 1, d_v), new ZetaCache).
+
+    Delayed insertion keeps decode *conservative* w.r.t. training: during
+    training a query in chunk m sees keys of strictly earlier chunks
+    (positions < m*M).  At decode, key j becomes searchable once it is M
+    steps old, so the decode pool {0..t-M-1} is always a subset of the
+    training pool {0..floor(t/M)*M-1} — never *more* history than training
+    saw, at O(1) sorted-insert work per token.
+    """
+    z = zcfg
+    B, Hq = zq_t.shape[0], zq_t.shape[1]
+    Hkv = zk_t.shape[1]
+    G = Hq // Hkv
+    dk, dv = zk_t.shape[-1], v_t.shape[-1]
+    Nmax = cache.zk.shape[2]
+    f, fq = B * Hkv, B * Hq
+    M = Nmax // max(z.num_chunks, 1)
+    searchable = jnp.maximum(t - M, 0)                     # (B,)
+
+    # 0. write the current raw key/value at position t first, so the
+    # own-chunk window (which includes the current token) can gather them.
+    zk_cache = state.row_write(cache.zk, zk_t, t, active)
+    v_cache = state.row_write(cache.v, v_t, t, active)
+
+    # 1-2. encode the query, search the sorted cache.  Queries of a GQA
+    # group search their KV head's sorted rows (same dedup as training).
+    qz_t = morton_codes(
+        zq_t.reshape(fq, 1, dk), bits=z.bits, bound=z.bound
+    )[:, 0]
+    sel = search_decode(
+        jnp.repeat(cache.zk_sorted, G, axis=0),
+        jnp.repeat(cache.pos_sorted, G, axis=0),
+        jnp.repeat(searchable, Hq), qz_t, k=z.k,
+    )
+    idx, valid = sel.idx[:, 0], sel.valid[:, 0]            # (fq, k)
+
+    # 3. optional own-chunk local window (positions clamped to the current
+    # chunk — identical semantics to training's _append_window).
+    if z.local_window > 0:
+        idx, valid = _append_window(
+            idx, valid, t, chunk=M, window=z.local_window, repeat_to=Hq,
+        )
+
+    # 4. gather + history-mean token over past tokens (+ current).
+    k_sel, v_sel = _gather_candidates(zk_cache, v_cache, idx, G)
+    new_ksum = cache.ksum + zk_t[:, :, 0].astype(jnp.float32)
+    new_vsum = cache.vsum + v_t[:, :, 0].astype(jnp.float32)
+    if z.history_mean:
+        denom = (t + 1).astype(jnp.float32)[:, None, None]  # (B,1,1)
+        km = jnp.repeat((new_ksum / denom).reshape(f, 1, dk), G, axis=0)
+        vm = jnp.repeat((new_vsum / denom).reshape(f, 1, dv), G, axis=0)
+        k_sel, v_sel, valid = append_history_mean(
+            k_sel, v_sel, valid, km, vm
+        )
+
+    # 5. score — same gathered stage (and backend selection) as training.
+    qf = zq_t.reshape(fq, dk)
+    g2 = _gamma2_rows(gamma2, B, Hq, zq_t.dtype)
+    out = score_gathered(
+        qf[:, None], k_sel[:, None].astype(qf.dtype),
+        v_sel[:, None].astype(qf.dtype), valid[:, None], g2,
+        score=z.score, zcfg=z,
+    ).reshape(B, Hq, 1, dv)
+
+    # 6. sorted-cache maintenance: insert the key that just became M steps
+    # old (it is now outside every future query's own-chunk horizon).
+    t_ins = jnp.maximum(t - M, 0)                          # (B,)
+    t_ins_f = jnp.repeat(t_ins, Hkv)
+    ins_key = jnp.take_along_axis(
+        zk_cache.reshape(f, Nmax, dk), t_ins_f[:, None, None], axis=1
+    )                                                      # (f, 1, dk)
+    ins_kz = morton_codes(ins_key, bits=z.bits, bound=z.bound)[:, 0]
+    new_skz, new_spos = topk.sorted_insert(
+        cache.zk_sorted, cache.pos_sorted,
+        jnp.repeat(searchable, Hkv), ins_kz, t_ins_f.astype(jnp.int32),
+        update_mask=jnp.repeat((t >= M) & active, Hkv),
+    )
+    act_b = active[:, None, None]
+    return out, ZetaCache(
+        zk=zk_cache,
+        v=v_cache,
+        zk_sorted=new_skz,
+        pos_sorted=new_spos,
+        ksum=jnp.where(act_b, new_ksum, cache.ksum),
+        vsum=jnp.where(act_b, new_vsum, cache.vsum),
+    )
+
+
+# ----------------------------------------------------------- prefill mode
+
+
+def attend_prefill(
+    cache: ZetaCache,
+    zq_c: jax.Array,
+    zk_c: jax.Array,
+    v_c: jax.Array,
+    gamma2: jax.Array,
+    positions: jax.Array,
+    token_mask: jax.Array,
+    *,
+    zcfg,
+    thresholds: jax.Array | None = None,
+) -> tuple[jax.Array, ZetaCache]:
+    """Bulk ingest of P tokens per slot — the paper's *parallel* mechanism
+    run against a live cache, equivalent to P sequential ``attend_decode``
+    calls (the sorted z-code cache is rebuilt in one sort instead of P
+    inserts; tie order among colliding codes may differ — see
+    ``core.topk.sorted_build``).
+
+    zq_c: (B, Hq, P, d_k); zk_c: (B, Hkv, P, d_k); v_c: (B, Hkv, P, d_v);
+    positions: (B, P) global token positions (t0 + j); token_mask: (B, P)
+    bool, valid tokens left-aligned.  ``thresholds`` overrides the
+    per-query candidate-pool bound (positions < thresholds[b, j]); the
+    default is the delayed-insertion pool ``positions - M`` sequential
+    decode sees — the mode-equivalence test passes the training pool
+    ``(positions // M) * M`` instead to prove train == prefill exactly.
+    Returns (out (B, Hq, P, d_v), new ZetaCache).
+    """
+    z = zcfg
+    B, Hq, P = zq_c.shape[0], zq_c.shape[1], zq_c.shape[2]
+    Hkv = zk_c.shape[1]
+    G = Hq // Hkv
+    dk, dv = zk_c.shape[-1], v_c.shape[-1]
+    Nmax = cache.zk.shape[2]
+    f, fq = B * Hkv, B * Hq
+    M = Nmax // max(z.num_chunks, 1)
+    token_mask = jnp.asarray(token_mask, bool)
+    n_valid = token_mask.sum(axis=-1).astype(jnp.int32)    # (B,)
+    active = n_valid > 0
+    t0 = positions[:, 0]
+
+    # 0-1. bulk-write the chunk's raw keys/values, then encode the updated
+    # cache: within-chunk candidates occur exactly when decode would have
+    # inserted them (position older than M steps).
+    zk_cache = state.chunk_write(cache.zk, zk_c, positions, token_mask)
+    v_cache = state.chunk_write(cache.v, v_c, positions, token_mask)
+    kz_by_pos = morton_codes(
+        zk_cache.reshape(f, Nmax, dk), bits=z.bits, bound=z.bound
+    )                                                      # (f, Nmax)
+    qz_c = morton_codes(
+        zq_c.reshape(fq, P, dk), bits=z.bits, bound=z.bound
+    )                                                      # (fq, P)
+
+    # 2. per-query candidate pools: positions < (t0 + j) - M, the same
+    # ``searchable`` count sequential decode sees at step t0 + j.
+    if thresholds is None:
+        thresholds = jnp.maximum(positions - M, 0)         # (B, P)
+    sel = search_prefill(
+        jnp.repeat(kz_by_pos, G, axis=0),
+        jnp.repeat(thresholds, Hq, axis=0), qz_c, k=z.k,
+    )
+    idx, valid = sel.idx, sel.valid                        # (fq, P, k)
+
+    # 3. optional own-chunk local window.
+    if z.local_window > 0:
+        idx, valid = _append_window(
+            idx, valid, positions, chunk=M, window=z.local_window,
+            repeat_to=Hq,
+        )
+
+    # 4. gather + running history-mean token (mean over 0..t0+j inclusive).
+    k_sel, v_sel = _gather_candidates(zk_cache, v_cache, idx, G)
+    tm = token_mask[:, None, :, None]
+    cumk = jnp.cumsum(
+        jnp.where(tm, zk_c.astype(jnp.float32), 0.0), axis=2
+    )                                                      # (B,Hkv,P,dk)
+    cumv = jnp.cumsum(
+        jnp.where(tm, v_c.astype(jnp.float32), 0.0), axis=2
+    )
+    if z.history_mean:
+        ksum_run = cache.ksum[:, :, None, :] + cumk
+        vsum_run = cache.vsum[:, :, None, :] + cumv
+        denom = (positions + 1).astype(jnp.float32)[:, None, :, None]
+        km = jnp.repeat(
+            (ksum_run / denom).reshape(f, P, 1, dk), G, axis=0
+        )
+        vm = jnp.repeat(
+            (vsum_run / denom).reshape(f, P, 1, dv), G, axis=0
+        )
+        k_sel, v_sel, valid = append_history_mean(
+            k_sel, v_sel, valid, km, vm
+        )
+
+    # 5. score.
+    qf = zq_c.reshape(fq, P, dk)
+    g2 = _gamma2_rows(gamma2, B, Hq, zq_c.dtype)
+    out = score_gathered(
+        qf, k_sel.astype(qf.dtype), v_sel.astype(qf.dtype), valid, g2,
+        score=z.score, zcfg=z,
+    ).reshape(B, Hq, P, dv)
+
+    # 6. rebuild the sorted z-code cache in one shot: after the chunk,
+    # decode would have inserted every key up to (t0+n_valid-1) - M.
+    new_len_sorted = jnp.maximum(t0 + n_valid - M, 0)
+    built_kz, built_pos = topk.sorted_build(
+        kz_by_pos, jnp.repeat(new_len_sorted, Hkv)
+    )
+    row_act = jnp.repeat(active, Hkv)[:, None]
+    act_b = active[:, None, None]
+    return out, ZetaCache(
+        zk=zk_cache,
+        v=v_cache,
+        zk_sorted=jnp.where(row_act, built_kz, cache.zk_sorted),
+        pos_sorted=jnp.where(row_act, built_pos, cache.pos_sorted),
+        ksum=jnp.where(act_b, cache.ksum + cumk[:, :, -1], cache.ksum),
+        vsum=jnp.where(act_b, cache.vsum + cumv[:, :, -1], cache.vsum),
+    )

@@ -1,7 +1,8 @@
 """Fused sparse Cauchy top-k attention — Pallas TPU kernel.
 
 This is ZETA's compute hot-spot (Appendix D implements it in Triton on GPU;
-see DESIGN.md §3 for the TPU adaptation).  The kernel consumes *gathered*
+see docs/ARCHITECTURE.md §1, scoring stage, for where this sits in the
+pipeline).  The kernel consumes *gathered*
 candidates — the Z-order search and the HBM gather stay in XLA where TPU is
 already optimal — and fuses, per query tile resident in VMEM:
 
@@ -13,7 +14,8 @@ already optimal — and fuses, per query tile resident in VMEM:
 Backward implements the closed-form gradients of Appendix E as a second
 kernel producing *dense* grads in the gathered (N, K, .) layout; the
 scatter-add back to token space happens in XLA via the gather's transpose
-(TPU Pallas has no HBM atomics — by design, see DESIGN.md).
+(TPU Pallas has no HBM atomics; docs/ARCHITECTURE.md §4, layout
+conventions, covers the kernel-space layout this relies on).
 
 Block shapes: queries are tiled by BLOCK_N; K (the k+1 candidates) and d_v
 live fully in VMEM per tile.  VMEM budget per tile (f32):

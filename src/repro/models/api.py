@@ -15,13 +15,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.nn.attention import attn_cache_init, attn_decode_step, attn_prefill
+from repro import state
+from repro.nn.attention import attn_cache_spec, attn_decode_step, attn_prefill
 from repro.nn.config import ModelConfig
-from repro.nn.hybrid import hybrid_cache_init, hybrid_decode_step, hybrid_prefill
+from repro.nn.hybrid import hybrid_cache_spec, hybrid_decode_step, hybrid_prefill
 from repro.nn.layers import embedding_attend, mlp_apply
 from repro.nn.module import Precision
 from repro.nn.moe import moe_apply
-from repro.nn.ssd import ssd_cache_init, ssd_decode_step, ssd_prefill
+from repro.nn.ssd import ssd_cache_spec, ssd_decode_step, ssd_prefill
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.models.lm import _norm_apply  # shared norm dispatch
@@ -56,12 +57,33 @@ def apply_model(params: Params, batch: dict, cfg: ModelConfig,
 # ------------------------------------------------------------------ decode
 
 
-def _layer_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+def _layer_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """One layer's declared decode-cache fields (repro.state spec)."""
     if cfg.mixer == "attn":
-        return attn_cache_init(cfg, batch, max_len, dtype)
+        return attn_cache_spec(cfg, batch, max_len, dtype)
     if cfg.mixer == "ssd":
-        return ssd_cache_init(cfg, batch, dtype)
-    return hybrid_cache_init(cfg, batch, max_len, dtype)
+        return ssd_cache_spec(cfg, batch, dtype)
+    return hybrid_cache_spec(cfg, batch, max_len, dtype)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """The whole model's declared cache structure, UNstacked per layer
+    (stacked cache leaves carry an extra leading layer dim that broadcasts
+    against the spec — see ``repro.state.reset_slots``)."""
+    if is_encdec(cfg):
+        return {
+            "self": attn_cache_spec(cfg, batch, max_len, dtype),
+            "memory": state.CacheField(
+                (batch, cfg.enc_context, cfg.d_model), dtype
+            ),
+        }
+    spec: Params = {}
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    if cfg.n_layers - n_moe:
+        spec["layers"] = _layer_cache_spec(cfg, batch, max_len, dtype)
+    if n_moe:
+        spec["moe_layers"] = _layer_cache_spec(cfg, batch, max_len, dtype)
+    return spec
 
 
 def _block_decode(lp, lc, x_t, cfg: ModelConfig, prec: Precision, moe: bool,
@@ -121,14 +143,11 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int,
         }
     n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
     n_dense = cfg.n_layers - n_moe
+    layer_spec = _layer_cache_spec(cfg, batch, max_len, dtype)
     cache: Params = {}
 
     def stack(n):
-        return jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[_layer_cache_init(cfg, batch, max_len, dtype)
-              for _ in range(n)],
-        )
+        return state.stack_layers(n, lambda: state.init_cache(layer_spec))
 
     if n_dense:
         cache["layers"] = stack(n_dense)
@@ -242,53 +261,29 @@ def cache_reset_slots(cfg: ModelConfig, cache: Params,
     wiped while its neighbours keep generating).
 
     slot_mask: (B,) bool — True rows are reset.  Works on every cache
-    family (attn / ssd / hybrid / enc-dec, any dtype): each leaf's row
-    dimension is either B or B*Hkv (the flat sorted z-code rows), detected
-    by shape."""
+    family (attn / ssd / hybrid / enc-dec, any dtype): each field's fill
+    value and per-slot row layout come from its declared ``repro.state``
+    spec (``cache_spec``); only max_len and the cache dtype are read off
+    the live cache (they are not recorded anywhere else)."""
     slot_mask = jnp.asarray(slot_mask, bool)
     B = int(slot_mask.shape[0])
 
-    def _reset(stacked, fresh):
-        rows = fresh.shape[0] if fresh.ndim else 1
-        if fresh.ndim and rows != B and rows % B == 0:
-            m = jnp.repeat(slot_mask, rows // B)
-        else:
-            m = slot_mask
-        m = m.reshape(m.shape + (1,) * (fresh.ndim - 1))
-        return jnp.where(m, fresh.astype(stacked.dtype), stacked)
+    def _live_dims(tree):
+        """(max_len, dtype) from the live cache leaves."""
+        if cfg.mixer == "ssd" and not is_encdec(cfg):
+            return 0, tree["conv"].dtype  # pure-SSD: max_len unused
+        attn_part = tree["attn"] if cfg.mixer == "hybrid" else tree
+        if cfg.mla is not None:
+            return attn_part["kv_lat"].shape[-2], attn_part["kv_lat"].dtype
+        return attn_part["v"].shape[-2], attn_part["v"].dtype
 
     if is_encdec(cfg):
-        sample = cache["self"]["v" if "v" in cache["self"] else "kv_lat"]
-        max_len = sample.shape[3] if "v" in cache["self"] else sample.shape[2]
-        fresh = attn_cache_init(cfg, B, max_len, sample.dtype)
-        new_self = jax.tree.map(
-            lambda old, fr: _reset(old, fr), cache["self"], fresh
-        )
-        memory = jnp.where(
-            slot_mask[:, None, None], 0.0, cache["memory"]
-        ).astype(cache["memory"].dtype)
-        return dict(cache, self=new_self, memory=memory)
-
-    def _family_reset(stacked_family):
-        if cfg.mixer == "ssd":
-            fresh = ssd_cache_init(
-                cfg, B, stacked_family["conv"].dtype
-            )
-        else:
-            attn_part = (stacked_family["attn"] if cfg.mixer == "hybrid"
-                         else stacked_family)
-            if cfg.mla is not None:
-                max_len = attn_part["kv_lat"].shape[2]
-                dtype = attn_part["kv_lat"].dtype
-            else:
-                max_len = attn_part["v"].shape[3]
-                dtype = attn_part["v"].dtype
-            fresh = _layer_cache_init(cfg, B, max_len, dtype)
-        return jax.tree.map(
-            lambda old, fr: _reset(old, fr), stacked_family, fresh
-        )
-
-    new_cache: Params = {}
-    for key in cache:
-        new_cache[key] = _family_reset(cache[key])
-    return new_cache
+        max_len, dtype = _live_dims(cache["self"])
+    else:
+        max_len, dtype = _live_dims(next(iter(cache.values())))
+    spec = cache_spec(cfg, B, max_len, dtype)
+    assert is_encdec(cfg) or set(spec) == set(cache), (
+        f"cache families {sorted(cache)} disagree with cfg-derived spec "
+        f"{sorted(spec)}"
+    )
+    return state.reset_slots(spec, cache, slot_mask)

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import state
 from repro.launch.sharding import shard_activation
 from repro.nn.attention import (
     attn_apply,
@@ -147,12 +148,8 @@ def encdec_apply(p, frames, tokens, cfg: ModelConfig, prec: Precision):
 def encdec_cache_init(cfg: ModelConfig, batch: int, max_len: int,
                       dtype=jnp.bfloat16):
     """Stacked self-attn caches for all decoder layers."""
-    def one(_):
-        return attn_cache_init(cfg, batch, max_len, dtype)
-
-    return jax.tree.map(
-        lambda *xs: jnp.stack(xs),
-        *[one(i) for i in range(cfg.n_layers)],
+    return state.stack_layers(
+        cfg.n_layers, lambda: attn_cache_init(cfg, batch, max_len, dtype)
     )
 
 

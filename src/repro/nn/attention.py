@@ -5,6 +5,15 @@ keys are produced by two-layer tanh projectors into d_k dims (paper §4.2),
 fed by the hidden state concatenated with sinusoidal position features (the
 Euclidean metric space needs an explicit position signal; RoPE applies only
 to the full-attention path).
+
+The ZETA selection pipeline itself (Morton encoding, candidate search,
+local window, history-mean token, scoring dispatch) is NOT implemented
+here: all three execution modes are thin callers of the selection core
+(``repro.core.selection`` — train via the backend dispatch, prefill via
+``attend_prefill``, decode via ``attend_decode``), so the phases cannot
+drift.  Decode-cache fields are declared as a ``repro.state`` spec
+(``attn_cache_spec``); the masked write/reset/stacking primitives live in
+that module.
 """
 
 from __future__ import annotations
@@ -12,11 +21,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import state
 from repro.backend import attention as dispatch_attention
-from repro.backend import gathered_attention
 from repro.core import ref as core_ref
-from repro.core import topk as core_topk
-from repro.core import zorder as core_zorder
+from repro.core import selection
 from repro.core.attention import repeat_kv as _repeat_kv
 from repro.core.cauchy import gamma2_from_param
 from repro.nn.config import ModelConfig
@@ -136,6 +144,19 @@ def _zeta_coords(p, src_q, src_k, cfg: ModelConfig, prec: Precision,
     return _split_heads(zq, hq), _split_heads(zk, hkv)
 
 
+def _zeta_gamma2(p, dtype):
+    return gamma2_from_param(p["gamma_theta"]).astype(dtype)
+
+
+def _zeta_cache_view(cache) -> selection.ZetaCache:
+    """The ZETA slice of the layer cache as the selection core's view."""
+    return selection.ZetaCache(
+        zk=cache["zk"], v=cache["v"], zk_sorted=cache["zk_sorted"],
+        pos_sorted=cache["pos_sorted"], ksum=cache["ksum"],
+        vsum=cache["vsum"],
+    )
+
+
 # ------------------------------------------------------------------ apply
 
 
@@ -153,8 +174,8 @@ def attn_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
         q, k, v, q_lat, kv_lat = _mla_qkv(p, x, cfg, prec, positions)
         if cfg.attention == "zeta":
             zq, zk = _zeta_coords(p, q_lat, kv_lat, cfg, prec, positions)
-            g2 = gamma2_from_param(p["gamma_theta"]).astype(x.dtype)
-            out = dispatch_attention(zq, zk, v, cfg, gamma2=g2,
+            out = dispatch_attention(zq, zk, v, cfg,
+                                     gamma2=_zeta_gamma2(p, x.dtype),
                                      causal=causal)
         else:
             out = dispatch_attention(q, k, v, cfg, causal=causal,
@@ -172,8 +193,8 @@ def attn_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
             zk_s, vv_s = zk, v
         else:
             zk_s, vv_s = _repeat_kv(zk, groups), _repeat_kv(v, groups)
-        g2 = gamma2_from_param(p["gamma_theta"]).astype(x.dtype)
-        out = dispatch_attention(zq, zk_s, vv_s, cfg, gamma2=g2,
+        out = dispatch_attention(zq, zk_s, vv_s, cfg,
+                                 gamma2=_zeta_gamma2(p, x.dtype),
                                  causal=causal)
     else:
         q = _split_heads(linear_apply(p["wq"], x, prec), hq)
@@ -221,75 +242,51 @@ def cross_attn_apply(p, x, memory, cfg: ModelConfig, prec: Precision):
 # ------------------------------------------------------------------ decode
 
 
-def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16):
-    """Per-layer decode cache (unstacked; models stack over layers).
+def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict[str, state.CacheField]:
+    """Declared per-layer decode-cache fields (repro.state spec).
 
     ``length`` is PER-SLOT, shape (batch,): every sequence in the batch sits
     at its own position, which is what lets the serve engine admit a new
     request into one slot while the others are mid-generation (continuous
-    batching) instead of draining the whole batch."""
+    batching) instead of draining the whole batch.  The sorted z-code rows
+    are flat (batch * Hkv, N) — declared with ``rows_per_slot=Hkv`` so the
+    per-slot reset rule needs no shape detection."""
     hkv, hd = cfg.kv_heads, cfg.resolved_head_dim
+    F = state.CacheField
     if cfg.mla is not None:
         m = cfg.mla
-        cache = {
-            "kv_lat": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
-            "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+        spec = {
+            "kv_lat": F((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": F((batch, max_len, m.rope_head_dim), dtype),
         }
         hkv_eff = 1
-        dk_src = m.kv_lora_rank
     else:
-        cache = {"v": jnp.zeros((batch, hkv, max_len, hd), dtype)}
+        spec = {"v": F((batch, hkv, max_len, hd), dtype)}
         if cfg.attention != "zeta":
             # ZETA never uses full-dim keys; only materialise them otherwise.
-            cache["k"] = jnp.zeros((batch, hkv, max_len, hd), dtype)
+            spec["k"] = F((batch, hkv, max_len, hd), dtype)
         hkv_eff = hkv
     if cfg.attention == "zeta":
         z = cfg.zeta
-        cache.update({
-            "zk": jnp.zeros((batch, hkv_eff, max_len, z.d_k), dtype),
-            "zk_sorted": jnp.full(
-                (batch * hkv_eff, max_len), core_topk.SENTINEL, jnp.int32
-            ),
-            "pos_sorted": jnp.zeros((batch * hkv_eff, max_len), jnp.int32),
-            "ksum": jnp.zeros((batch, hkv_eff, z.d_k), jnp.float32),
-            "vsum": jnp.zeros((batch, hkv_eff, hd if cfg.mla is None
-                               else cfg.mla.v_head_dim * cfg.n_heads),
-                              jnp.float32),
+        dv = hd if cfg.mla is None else cfg.mla.v_head_dim * cfg.n_heads
+        spec.update({
+            "zk": F((batch, hkv_eff, max_len, z.d_k), dtype),
+            "zk_sorted": F((batch * hkv_eff, max_len), jnp.int32,
+                           fill=selection.SENTINEL, rows_per_slot=hkv_eff),
+            "pos_sorted": F((batch * hkv_eff, max_len), jnp.int32,
+                            rows_per_slot=hkv_eff),
+            "ksum": F((batch, hkv_eff, z.d_k), jnp.float32),
+            "vsum": F((batch, hkv_eff, dv), jnp.float32),
         })
-    cache["length"] = jnp.zeros((batch,), jnp.int32)
-    return cache
+    spec["length"] = F((batch,), jnp.int32)
+    return spec
 
 
-def _row_write(cache_arr: jax.Array, new_vals: jax.Array, t: jax.Array,
-               active: jax.Array) -> jax.Array:
-    """Write one timestep per batch row at per-row position t.
-
-    cache_arr: (B, h, N, d); new_vals: (B, h, 1, d); t: (B,); active: (B,)
-    bool — inactive rows are left untouched (scatter index dropped)."""
-    B = cache_arr.shape[0]
-    n_max = cache_arr.shape[2]
-    b_idx = jnp.arange(B, dtype=jnp.int32)
-    pos = jnp.where(active, t, n_max)  # OOB -> dropped
-    return cache_arr.at[b_idx, :, pos].set(
-        new_vals[:, :, 0].astype(cache_arr.dtype), mode="drop"
-    )
-
-
-def _chunk_write(cache_arr: jax.Array, new_vals: jax.Array,
-                 positions: jax.Array, token_mask: jax.Array) -> jax.Array:
-    """Bulk-write a prefill chunk at per-row offsets.
-
-    cache_arr: (B, h, N, d); new_vals: (B, h, P, d); positions: (B, P)
-    per-token write positions; token_mask: (B, P) — masked tokens are
-    dropped (their scatter index is pushed out of bounds)."""
-    B = cache_arr.shape[0]
-    n_max = cache_arr.shape[2]
-    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
-    wpos = jnp.where(token_mask, positions, n_max)
-    return cache_arr.at[b_idx, :, wpos].set(
-        new_vals.transpose(0, 2, 1, 3).astype(cache_arr.dtype), mode="drop"
-    )
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    """Per-layer decode cache (unstacked; models stack over layers)."""
+    return state.init_cache(attn_cache_spec(cfg, batch, max_len, dtype))
 
 
 def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
@@ -302,8 +299,9 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
     the engine discards) and leave their cache row, including the sorted
     z-code cache, untouched.
 
-    The ZETA path searches the incrementally-maintained sorted z-code cache
-    (O(log N) search + O(k) aggregation per token) instead of re-sorting.
+    The ZETA branch is a thin caller of the selection core's *decode* mode
+    (incremental O(log N) search of the sorted z-code cache; see
+    ``selection.attend_decode``).
     """
     b = x_t.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
@@ -319,100 +317,13 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
     v_t = _split_heads(linear_apply(p["wv"], x_t, prec), hkv)  # (B,hkv,1,hd)
 
     if cfg.attention == "zeta":
-        z = cfg.zeta
         zq_t, zk_t = _zeta_coords(p, x_t, x_t, cfg, prec, pos_t)
-        nbits = core_zorder.bits_for_dim(z.d_k, z.bits)
-        f = b * hkv
-        # Delayed insertion keeps decode *conservative* w.r.t. training:
-        # during training a query in chunk m sees keys of strictly earlier
-        # chunks (positions < m*M, i.e. between 0 and M-1 recent keys
-        # excluded).  At decode, key j becomes searchable once it is M steps
-        # old, so the decode candidate pool {0..t-M-1} is always a subset of
-        # the training pool {0..floor(t/M)*M-1} — never *more* history than
-        # training saw, at O(1) sorted-insert work per token.
-        delay = cache["zk"].shape[2] // max(z.num_chunks, 1)
-        searchable = jnp.maximum(t - delay, 0)                 # (B,)
-        fq = b * hq
-        qz_t = core_zorder.zorder_encode_with_bounds(
-            zq_t.reshape(fq, 1, z.d_k).astype(jnp.float32), -1.0, 1.0, nbits
-        )[:, 0]
-        # queries of a GQA group search their kv head's sorted cache
-        skz = jnp.repeat(cache["zk_sorted"], groups, axis=0)
-        spos = jnp.repeat(cache["pos_sorted"], groups, axis=0)
-        sel = core_topk.prefix_topk_decode(
-            skz, spos, jnp.repeat(searchable, hq), qz_t, k=z.k
+        out, zc = selection.attend_decode(
+            _zeta_cache_view(cache), zq_t, zk_t, v_t,
+            _zeta_gamma2(p, x_t.dtype), t, active, zcfg=cfg.zeta,
         )
-        idx = sel.idx[:, 0]                                    # (Fq, k)
-        valid = sel.valid[:, 0]
-        zk_all = cache["zk"].reshape(f, -1, z.d_k)
-        zk_all = jnp.repeat(zk_all, groups, axis=0)
-        v_all = cache["v"].reshape(f, -1, hd)
-        v_all = jnp.repeat(v_all, groups, axis=0)
-        k_sel = jnp.take_along_axis(zk_all, idx[..., None], axis=1)
-        v_sel = jnp.take_along_axis(v_all, idx[..., None], axis=1)
-        # history-mean token over past tokens (+ current key/value)
-        new_ksum = cache["ksum"] + zk_t[:, :, 0].astype(jnp.float32)
-        new_vsum = cache["vsum"].reshape(b, hkv, hd) + (
-            v_t[:, :, 0].astype(jnp.float32)
-        )
-        denom = (t + 1).astype(jnp.float32)[:, None, None]     # (B,1,1)
-        km = jnp.repeat(
-            (new_ksum / denom).reshape(f, 1, z.d_k), groups, axis=0
-        )
-        vm = jnp.repeat(
-            (new_vsum / denom).reshape(f, 1, hd), groups, axis=0
-        )
-        k_sel = jnp.concatenate(
-            [k_sel, km.astype(k_sel.dtype)], axis=1
-        )
-        v_sel = jnp.concatenate(
-            [v_sel, vm.astype(v_sel.dtype)], axis=1
-        )
-        valid = jnp.concatenate(
-            [valid, jnp.ones((fq, 1), bool)], axis=1
-        )
-        g2 = gamma2_from_param(p["gamma_theta"]).astype(x_t.dtype)
-        g2 = jnp.broadcast_to(g2[None], (b, hq)).reshape(fq, 1, 1)
-        qf = zq_t.reshape(fq, z.d_k)
-        # same gathered scoring stage (and backend selection) as training
-        out = gathered_attention(
-            qf[:, None], k_sel[:, None].astype(qf.dtype),
-            v_sel[:, None].astype(qf.dtype), valid[:, None], g2,
-            score=z.score, cfg=cfg,
-        )
-        out = out.reshape(b, hq, 1, hd)
-
-        # cache updates: write current raw key, then (if old enough) insert
-        # the key that just became ``delay`` steps old into the sorted cache.
-        zk_cache = _row_write(cache["zk"], zk_t, t, active)
-        t_ins = jnp.maximum(t - delay, 0)                      # (B,)
-        t_ins_f = jnp.repeat(t_ins, hkv)
-        ins_key = jnp.take_along_axis(
-            zk_cache.reshape(f, -1, z.d_k),
-            t_ins_f[:, None, None],
-            axis=1,
-        )                                                      # (f,1,d_k)
-        ins_kz = core_zorder.zorder_encode_with_bounds(
-            ins_key.astype(jnp.float32), -1.0, 1.0, nbits
-        )[:, 0]
-        new_skz, new_spos = core_topk.sorted_insert(
-            cache["zk_sorted"], cache["pos_sorted"],
-            jnp.repeat(searchable, hkv), ins_kz,
-            t_ins_f.astype(jnp.int32),
-            update_mask=jnp.repeat((t >= delay) & active, hkv),
-        )
-        act_b = active[:, None, None]
         new_cache = dict(
-            cache,
-            zk=zk_cache,
-            v=_row_write(cache["v"], v_t, t, active),
-            zk_sorted=new_skz,
-            pos_sorted=new_spos,
-            ksum=jnp.where(act_b, new_ksum, cache["ksum"]),
-            vsum=jnp.where(
-                act_b, new_vsum.reshape(cache["vsum"].shape), cache["vsum"]
-            ),
-            length=jnp.where(active, t + 1, t),
+            cache, **zc._asdict(), length=jnp.where(active, t + 1, t),
         )
     else:
         q_t = _split_heads(linear_apply(p["wq"], x_t, prec), hq)
@@ -420,8 +331,8 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
         cos, sin = rope_table(pos_t, hd, cfg.rope_theta)
         q_t = apply_rope(q_t, cos, sin)
         k_t = apply_rope(k_t, cos, sin)
-        k_cache = _row_write(cache["k"], k_t, t, active)
-        v_cache = _row_write(cache["v"], v_t, t, active)
+        k_cache = state.row_write(cache["k"], k_t, t, active)
+        v_cache = state.row_write(cache["v"], v_t, t, active)
         kk = _repeat_kv(k_cache, groups)
         vv = _repeat_kv(v_cache, groups)
         logits = jnp.einsum(
@@ -450,15 +361,12 @@ def attn_prefill(p, cache, x_chunk: jax.Array, cfg: ModelConfig,
     (slot b ingests its next ``token_mask[b].sum()`` prompt tokens, starting
     at its own ``cache["length"][b]``).  Returns (y (B, P, D), new_cache)
     where y matches what P sequential ``attn_decode_step`` calls would have
-    produced and new_cache is the state those calls would have left behind
-    (the ZETA sorted z-code cache is rebuilt in one sort instead of P
-    inserts; tie order among colliding codes may differ — see
-    ``core_topk.sorted_build``).
+    produced and new_cache is the state those calls would have left behind.
 
-    The ZETA path runs the paper's *parallel* mechanism over the whole
-    chunk: every chunk position searches its own causal prefix of the
-    z-code cache at once (``prefix_topk_bulk``), which is what makes a
-    P-token prompt cost ceil(P/chunk) model calls instead of P.
+    The ZETA branch is a thin caller of the selection core's *prefill*
+    mode — the paper's parallel mechanism over the whole chunk
+    (``selection.attend_prefill``), which is what makes a P-token prompt
+    cost ceil(P/chunk) model calls instead of P.
     """
     b, P, _ = x_chunk.shape
     hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
@@ -466,7 +374,6 @@ def attn_prefill(p, cache, x_chunk: jax.Array, cfg: ModelConfig,
     t0 = jnp.broadcast_to(jnp.asarray(cache["length"], jnp.int32), (b,))
     token_mask = jnp.asarray(token_mask, bool)
     n_valid = token_mask.sum(axis=-1).astype(jnp.int32)        # (B,)
-    active = n_valid > 0
     positions = t0[:, None] + jnp.arange(P, dtype=jnp.int32)   # (B, P)
 
     if cfg.mla is not None:
@@ -476,112 +383,21 @@ def attn_prefill(p, cache, x_chunk: jax.Array, cfg: ModelConfig,
     v_c = _split_heads(linear_apply(p["wv"], x_chunk, prec), hkv)
 
     if cfg.attention == "zeta":
-        z = cfg.zeta
         zq_c, zk_c = _zeta_coords(p, x_chunk, x_chunk, cfg, prec, positions)
-        nbits = core_zorder.bits_for_dim(z.d_k, z.bits)
-        f, fq = b * hkv, b * hq
-        n_max = cache["zk"].shape[2]
-        delay = n_max // max(z.num_chunks, 1)
-
-        # bulk-write the chunk's raw keys/values, then search the updated
-        # cache: within-chunk candidates occur exactly when decode would
-        # have inserted them (position older than ``delay`` steps).
-        zk_cache = _chunk_write(cache["zk"], zk_c, positions, token_mask)
-        v_cache = _chunk_write(cache["v"], v_c, positions, token_mask)
-
-        kz_by_pos = core_zorder.zorder_encode_with_bounds(
-            zk_cache.reshape(f, n_max, z.d_k).astype(jnp.float32),
-            -1.0, 1.0, nbits,
-        )                                                      # (f, N)
-        qz_c = core_zorder.zorder_encode_with_bounds(
-            zq_c.reshape(fq, P, z.d_k).astype(jnp.float32), -1.0, 1.0, nbits
-        )                                                      # (fq, P)
-        # per-query candidate pool: positions < (t0 + j) - delay, the same
-        # ``searchable`` count sequential decode sees at step t0 + j
-        thresholds = jnp.maximum(positions - delay, 0)         # (B, P)
-        sel = core_topk.prefix_topk_bulk(
-            jnp.repeat(kz_by_pos, groups, axis=0),
-            jnp.repeat(thresholds, hq, axis=0),
-            qz_c, k=z.k,
+        out, zc = selection.attend_prefill(
+            _zeta_cache_view(cache), zq_c, zk_c, v_c,
+            _zeta_gamma2(p, x_chunk.dtype), positions, token_mask,
+            zcfg=cfg.zeta,
         )
-        idx, valid = sel.idx, sel.valid                        # (fq, P, k)
-
-        zk_all = jnp.repeat(zk_cache.reshape(f, n_max, z.d_k), groups,
-                            axis=0)
-        v_all = jnp.repeat(v_cache.reshape(f, n_max, hd), groups, axis=0)
-        def _gather(src, d):
-            return jnp.take_along_axis(
-                src, idx.reshape(fq, P * z.k)[..., None], axis=1
-            ).reshape(fq, P, z.k, d)
-
-        k_sel = _gather(zk_all, z.d_k)
-        v_sel = _gather(v_all, hd)
-
-        # running history-mean token: mean over positions 0..t0+j inclusive
-        tm = token_mask[:, None, :, None]
-        cumk = jnp.cumsum(
-            jnp.where(tm, zk_c.astype(jnp.float32), 0.0), axis=2
-        )                                                      # (B,hkv,P,dk)
-        cumv = jnp.cumsum(
-            jnp.where(tm, v_c.astype(jnp.float32), 0.0), axis=2
-        )
-        ksum_run = cache["ksum"][:, :, None, :] + cumk
-        vsum_prior = cache["vsum"].reshape(b, hkv, hd)
-        vsum_run = vsum_prior[:, :, None, :] + cumv
-        denom = (positions + 1).astype(jnp.float32)[:, None, :, None]
-        km = jnp.repeat(
-            (ksum_run / denom).reshape(f, P, 1, z.d_k), groups, axis=0
-        )
-        vm = jnp.repeat(
-            (vsum_run / denom).reshape(f, P, 1, hd), groups, axis=0
-        )
-        k_sel = jnp.concatenate([k_sel, km.astype(k_sel.dtype)], axis=2)
-        v_sel = jnp.concatenate([v_sel, vm.astype(v_sel.dtype)], axis=2)
-        valid = jnp.concatenate(
-            [valid, jnp.ones((fq, P, 1), bool)], axis=2
-        )
-
-        g2 = gamma2_from_param(p["gamma_theta"]).astype(x_chunk.dtype)
-        g2 = jnp.broadcast_to(g2[None], (b, hq)).reshape(fq, 1, 1)
-        qf = zq_c.reshape(fq, P, z.d_k)
-        out = gathered_attention(
-            qf, k_sel.astype(qf.dtype), v_sel.astype(qf.dtype), valid, g2,
-            score=z.score, cfg=cfg,
-        )
-        out = out.reshape(b, hq, P, hd)
-
-        # rebuild the sorted z-code cache in one shot: after the chunk,
-        # decode would have inserted every key up to (t0+n_valid-1) - delay
-        new_len_sorted = jnp.maximum(t0 + n_valid - delay, 0)
-        built_kz, built_pos = core_topk.sorted_build(
-            kz_by_pos, jnp.repeat(new_len_sorted, hkv)
-        )
-        row_act = jnp.repeat(active, hkv)[:, None]
-        new_skz = jnp.where(row_act, built_kz, cache["zk_sorted"])
-        new_spos = jnp.where(row_act, built_pos, cache["pos_sorted"])
-        act_b = active[:, None, None]
-        new_cache = dict(
-            cache,
-            zk=zk_cache,
-            v=v_cache,
-            zk_sorted=new_skz,
-            pos_sorted=new_spos,
-            ksum=jnp.where(act_b, cache["ksum"] + cumk[:, :, -1],
-                           cache["ksum"]),
-            vsum=jnp.where(
-                act_b, (vsum_prior + cumv[:, :, -1]).reshape(
-                    cache["vsum"].shape), cache["vsum"]
-            ),
-            length=t0 + n_valid,
-        )
+        new_cache = dict(cache, **zc._asdict(), length=t0 + n_valid)
     else:
         q_c = _split_heads(linear_apply(p["wq"], x_chunk, prec), hq)
         k_c = _split_heads(linear_apply(p["wk"], x_chunk, prec), hkv)
         cos, sin = rope_table(positions, hd, cfg.rope_theta)
         q_c = apply_rope(q_c, cos, sin)
         k_c = apply_rope(k_c, cos, sin)
-        k_cache = _chunk_write(cache["k"], k_c, positions, token_mask)
-        v_cache = _chunk_write(cache["v"], v_c, positions, token_mask)
+        k_cache = state.chunk_write(cache["k"], k_c, positions, token_mask)
+        v_cache = state.chunk_write(cache["v"], v_c, positions, token_mask)
         kk = _repeat_kv(k_cache, groups)
         vv = _repeat_kv(v_cache, groups)
         logits = jnp.einsum(
@@ -619,16 +435,12 @@ def _mla_prefill(p, cache, x_chunk, cfg: ModelConfig, prec: Precision,
     q_rope = apply_rope(q_rope, cos, sin)
     k_rope_c = apply_rope(k_rope_c, cos, sin)
 
-    n_max = cache["kv_lat"].shape[1]
-    b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
-    wpos = jnp.where(token_mask, positions, n_max)
-    kv_cache = cache["kv_lat"].at[b_idx, wpos].set(
-        kv_lat.astype(cache["kv_lat"].dtype), mode="drop"
-    )
-    kr_cache = cache["k_rope"].at[b_idx, wpos].set(
-        k_rope_c.astype(cache["k_rope"].dtype), mode="drop"
-    )
+    kv_cache = state.chunk_write(cache["kv_lat"], kv_lat, positions,
+                                 token_mask, seq_axis=1)
+    kr_cache = state.chunk_write(cache["k_rope"], k_rope_c, positions,
+                                 token_mask, seq_axis=1)
 
+    n_max = kv_cache.shape[1]
     w_uk = prec.cast(p["w_uk"]).reshape(m.kv_lora_rank, hq, m.nope_head_dim)
     q_abs = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)
     logits = (
@@ -655,7 +467,6 @@ def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
     """MLA decode: cache the latent + rope key only (DeepSeek's trick).
     pos_t: (B, 1) per-slot positions; active: (B,) slot mask."""
     m = cfg.mla
-    b = x_t.shape[0]
     hq = cfg.n_heads
     t = pos_t[:, 0]                                            # (B,)
     xc = prec.cast(x_t)
@@ -668,15 +479,11 @@ def _mla_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,
     q_rope = apply_rope(q_rope, cos, sin)
     k_rope_t = apply_rope(k_rope_t, cos, sin)
 
-    b_idx = jnp.arange(b, dtype=jnp.int32)
-    n_max = cache["kv_lat"].shape[1]
-    wpos = jnp.where(active, t, n_max)  # OOB -> dropped
-    kv_cache = cache["kv_lat"].at[b_idx, wpos].set(
-        kv_lat[:, 0].astype(cache["kv_lat"].dtype), mode="drop"
-    )
-    kr_cache = cache["k_rope"].at[b_idx, wpos].set(
-        k_rope_t[:, 0].astype(cache["k_rope"].dtype), mode="drop"
-    )
+    kv_cache = state.row_write(cache["kv_lat"], kv_lat, t, active,
+                               seq_axis=1)
+    kr_cache = state.row_write(cache["k_rope"], k_rope_t, t, active,
+                               seq_axis=1)
+    n_max = kv_cache.shape[1]
 
     # absorbed attention: logits = q_nope^T W_uk c_j + q_rope^T k_rope_j
     w_uk = prec.cast(p["w_uk"]).reshape(m.kv_lora_rank, hq, m.nope_head_dim)

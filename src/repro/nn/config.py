@@ -13,6 +13,11 @@ class ZetaConfig:
     k: int = 32
     num_chunks: int = 16
     bits: int | None = None          # default: floor(30 / d_k)
+    # Fixed symmetric quantisation range [-bound, bound] for the Morton
+    # encoding — must be data-independent (causality) and step-independent
+    # (decode-cache codes stay comparable).  The tanh projectors keep
+    # coords in [-1, 1], so 1.0 loses nothing.
+    bound: float = 1.0
     local_window: int = 0            # beyond-paper own-chunk window (0 = off)
     history_mean: bool = True
     score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy"

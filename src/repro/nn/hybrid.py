@@ -10,9 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import state
 from repro.nn.attention import (
     attn_apply,
-    attn_cache_init,
+    attn_cache_spec,
     attn_decode_step,
     attn_init,
     attn_prefill,
@@ -22,7 +23,7 @@ from repro.nn.layers import rmsnorm_apply, rmsnorm_init
 from repro.nn.module import Precision
 from repro.nn.ssd import (
     ssd_apply,
-    ssd_cache_init,
+    ssd_cache_spec,
     ssd_decode_step,
     ssd_init,
     ssd_prefill,
@@ -51,12 +52,18 @@ def hybrid_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision,
     )
 
 
+def hybrid_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Both branches' declared cache fields, nested (repro.state spec)."""
+    return {
+        "attn": attn_cache_spec(cfg, batch, max_len, dtype),
+        "ssm": ssd_cache_spec(cfg, batch, dtype),
+    }
+
+
 def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int,
                       dtype=jnp.bfloat16):
-    return {
-        "attn": attn_cache_init(cfg, batch, max_len, dtype),
-        "ssm": ssd_cache_init(cfg, batch, dtype),
-    }
+    return state.init_cache(hybrid_cache_spec(cfg, batch, max_len, dtype))
 
 
 def hybrid_decode_step(p, cache, x_t, cfg: ModelConfig, prec: Precision,

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import state as state_mod
 from repro.nn.config import ModelConfig, SSMConfig
 from repro.nn.layers import rmsnorm_apply, rmsnorm_init
 from repro.nn.module import Precision, truncated_normal_init
@@ -180,15 +181,21 @@ def ssd_apply(p, x: jax.Array, cfg: ModelConfig, prec: Precision
 # ------------------------------------------------------------------ decode
 
 
-def ssd_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+def ssd_cache_spec(cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> dict[str, state_mod.CacheField]:
+    """Declared decode-cache fields (repro.state spec): the SSD recurrence
+    carry (always f32), the causal-conv window, and the per-slot length."""
     s, d_inner, n_heads, conv_dim = _dims(cfg)
+    F = state_mod.CacheField
     return {
-        "state": jnp.zeros(
-            (batch, n_heads, s.head_dim, s.state_dim), jnp.float32
-        ),
-        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
-        "length": jnp.zeros((batch,), jnp.int32),
+        "state": F((batch, n_heads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": F((batch, s.conv_width - 1, conv_dim), dtype),
+        "length": F((batch,), jnp.int32),
     }
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return state_mod.init_cache(ssd_cache_spec(cfg, batch, dtype))
 
 
 def ssd_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,

@@ -3,7 +3,7 @@
 For long contexts (long_500k: one sequence of 524k tokens) the KV + z-code
 cache is sharded along the *sequence* axis.  ZETA's structure makes the
 distributed search cheap — this is the paper's mechanism mapped onto a
-mesh (DESIGN.md §4):
+mesh (docs/ARCHITECTURE.md §3, decode):
 
   1. every shard keeps its local segment's codes SORTED locally,
   2. the new query's z-code is broadcast (scalars),
@@ -23,6 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import selection
 from repro.core import topk as core_topk
 from repro.core.cauchy import cauchy_weights
 
@@ -33,8 +34,9 @@ except ImportError:  # pragma: no cover
 
 
 def _local_candidates(sorted_kz, sorted_pos, length, qz, k):
-    """One shard's best-k candidates for one query code."""
-    sel = core_topk.prefix_topk_decode(
+    """One shard's best-k candidates for one query code — the selection
+    core's decode-mode search against the shard's sorted segment."""
+    sel = selection.search_decode(
         sorted_kz, sorted_pos, length, qz, k=k
     )
     return sel.idx[:, 0], sel.valid[:, 0]     # (B, k) local row ids

@@ -1,0 +1,25 @@
+"""Declarative cache-state subsystem (docs/ARCHITECTURE.md §3a).
+
+Mixers declare their decode-cache fields as :class:`CacheField` specs;
+init / per-slot reset / masked writes / layer stacking live here, once.
+"""
+
+from repro.state.spec import (  # noqa: F401
+    CacheField,
+    chunk_write,
+    init_cache,
+    is_field,
+    reset_slots,
+    row_write,
+    stack_layers,
+)
+
+__all__ = [
+    "CacheField",
+    "chunk_write",
+    "init_cache",
+    "is_field",
+    "reset_slots",
+    "row_write",
+    "stack_layers",
+]

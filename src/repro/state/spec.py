@@ -1,0 +1,143 @@
+"""Declarative decode-cache state (see docs/ARCHITECTURE.md §3a).
+
+Every mixer (attn, MLA, ssd, hybrid, enc-dec) declares its decode-cache
+fields as a *spec*: a pytree whose leaves are :class:`CacheField` records
+carrying shape, dtype, fill value, and the per-slot row layout.  The
+operations on that state — initialisation, per-slot reset (continuous
+batching's slot recycling), masked per-row and per-chunk scatter writes,
+and per-layer stacking — are implemented ONCE here and shared by every
+cache family.  Before this module each mixer hand-rolled its own copies
+(`nn/attention.py` had `_row_write`/`_chunk_write`, `models/api.py`
+detected row layouts by shape); a spec makes the reset rule a declaration
+instead of a heuristic.
+
+Conventions:
+
+- a field's leading dimension is ``rows_per_slot * batch`` — ``1`` for
+  ordinary per-slot leaves (``length`` is ``(B,)``, KV is ``(B, H, N, d)``),
+  ``Hkv`` for the flat sorted z-code rows ``(B*Hkv, N)``;
+- resetting a slot writes the declared ``fill`` into that slot's rows —
+  every cache in the tree initialises to a constant (zeros, or the int32
+  sort SENTINEL), which is what makes reset expressible as a fill;
+- stacked caches (leaves ``(L, rows, ...)`` for L scanned layers) reset
+  through the same spec: the mask broadcasts from the rows dimension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheField:
+    """One declared decode-cache array.
+
+    shape: concrete per-layer shape, leading dim = rows_per_slot * batch;
+    dtype: array dtype;
+    fill:  constant initial value (also the per-slot reset value);
+    rows_per_slot: how many leading-dim rows belong to one serve slot.
+    """
+
+    shape: tuple[int, ...]
+    dtype: Any
+    fill: float | int = 0
+    rows_per_slot: int = 1
+
+
+def is_field(x) -> bool:
+    return isinstance(x, CacheField)
+
+
+def _tree_map(fn, spec, *rest):
+    return jax.tree.map(fn, spec, *rest, is_leaf=is_field)
+
+
+def init_cache(spec):
+    """Materialise a spec tree: every CacheField becomes a filled array."""
+    return _tree_map(
+        lambda f: jnp.full(f.shape, f.fill, dtype=f.dtype), spec
+    )
+
+
+def reset_slots(spec, cache, slot_mask: jax.Array):
+    """Reset the selected slots of ``cache`` to each field's declared fill.
+
+    slot_mask: (B,) bool — True rows are wiped, False rows untouched.
+    ``cache`` leaves may carry extra *leading* stacked dims (layers): the
+    row mask aligns with the field's own leading dim and broadcasts across
+    anything stacked in front of it.
+    """
+    slot_mask = jnp.asarray(slot_mask, bool)
+
+    def one(field: CacheField, arr: jax.Array) -> jax.Array:
+        m = slot_mask
+        if field.rows_per_slot != 1:
+            m = jnp.repeat(m, field.rows_per_slot)
+        m = m.reshape(m.shape + (1,) * (len(field.shape) - 1))
+        return jnp.where(m, jnp.asarray(field.fill, arr.dtype), arr)
+
+    return _tree_map(one, spec, cache)
+
+
+def stack_layers(n: int, init_fn):
+    """Stack ``n`` per-layer caches into one pytree with (n, ...) leaves —
+    the layout ``jax.lax.scan`` over layers threads."""
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[init_fn() for _ in range(n)]
+    )
+
+
+# ----------------------------------------------------------- masked writes
+
+
+def row_write(cache_arr: jax.Array, new_vals: jax.Array, t: jax.Array,
+              active: jax.Array, *, seq_axis: int = 2) -> jax.Array:
+    """Write one timestep per batch row at per-row position ``t``.
+
+    seq_axis=2: cache (B, h, N, d), new_vals (B, h, 1, d);
+    seq_axis=1: cache (B, N, d),    new_vals (B, 1, d).
+    t: (B,); active: (B,) bool — inactive rows are left untouched (their
+    scatter index is pushed out of bounds and dropped).
+    """
+    B = cache_arr.shape[0]
+    n_max = cache_arr.shape[seq_axis]
+    b_idx = jnp.arange(B, dtype=jnp.int32)
+    pos = jnp.where(active, t, n_max)  # OOB -> dropped
+    if seq_axis == 1:
+        return cache_arr.at[b_idx, pos].set(
+            new_vals[:, 0].astype(cache_arr.dtype), mode="drop"
+        )
+    if seq_axis != 2:
+        raise ValueError(f"seq_axis must be 1 or 2, got {seq_axis}")
+    return cache_arr.at[b_idx, :, pos].set(
+        new_vals[:, :, 0].astype(cache_arr.dtype), mode="drop"
+    )
+
+
+def chunk_write(cache_arr: jax.Array, new_vals: jax.Array,
+                positions: jax.Array, token_mask: jax.Array, *,
+                seq_axis: int = 2) -> jax.Array:
+    """Bulk-write a prefill chunk at per-row offsets.
+
+    seq_axis=2: cache (B, h, N, d), new_vals (B, h, P, d);
+    seq_axis=1: cache (B, N, d),    new_vals (B, P, d).
+    positions: (B, P) per-token write positions; token_mask: (B, P) —
+    masked tokens are dropped (scatter index pushed out of bounds).
+    """
+    B = cache_arr.shape[0]
+    n_max = cache_arr.shape[seq_axis]
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    wpos = jnp.where(token_mask, positions, n_max)
+    if seq_axis == 1:
+        return cache_arr.at[b_idx, wpos].set(
+            new_vals.astype(cache_arr.dtype), mode="drop"
+        )
+    if seq_axis != 2:
+        raise ValueError(f"seq_axis must be 1 or 2, got {seq_axis}")
+    return cache_arr.at[b_idx, :, wpos].set(
+        new_vals.transpose(0, 2, 1, 3).astype(cache_arr.dtype), mode="drop"
+    )

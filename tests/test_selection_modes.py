@@ -1,0 +1,222 @@
+"""Mode-equivalence property tests for the ZETA selection core.
+
+The refactor's safety net: train / prefill / decode are ONE computation
+(``repro.core.selection``), so given equal candidate pools they must select
+the same keys and score to the same output — across every feature flag
+(history_mean on/off, local_window on/off, score variant, GQA groups).
+
+Pool bookkeeping (M = N // num_chunks):
+
+- train pools are chunk-quantised: query i searches positions < (i//M)*M;
+- prefill/decode pools use delayed insertion: query at position t searches
+  positions < t - M (a conservative subset of the training pool).
+
+The equivalence chain therefore runs:
+
+  train == prefill(thresholds = training pools)       [parallel == bulk]
+  prefill(default pools) == sequential decode         [bulk == incremental]
+
+which, with prefill being a single parametric implementation, proves all
+three modes compute the same function of the candidate pool.
+
+The layer-level tests at the bottom pin the satellite parity fixes: decode
+and prefill must honor ``history_mean=False`` and ``local_window>0``
+(positions < M see identical candidate sets in all paths, so first-chunk
+logits must agree exactly — both flags changed first-chunk behaviour and
+were silently ignored by decode/prefill before the selection core).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection
+from repro.core.attention import zeta_attention
+from repro.models import api
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.nn.module import F32
+
+B, HKV, N, DK, DV, CHUNKS, K = 2, 2, 16, 3, 8, 4, 4
+M = N // CHUNKS
+
+
+def _inputs(groups, seed=0):
+    hq = HKV * groups
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    zq = jnp.tanh(jax.random.normal(k1, (B, hq, N, DK)))
+    zk = jnp.tanh(jax.random.normal(k2, (B, HKV, N, DK)))
+    v = jax.random.normal(k3, (B, HKV, N, DV))
+    gamma2 = jax.random.uniform(k4, (hq,), minval=0.2, maxval=0.8)
+    return zq, zk, v, gamma2
+
+
+def _empty_cache():
+    return selection.ZetaCache(
+        zk=jnp.zeros((B, HKV, N, DK), jnp.float32),
+        v=jnp.zeros((B, HKV, N, DV), jnp.float32),
+        zk_sorted=jnp.full((B * HKV, N), selection.SENTINEL, jnp.int32),
+        pos_sorted=jnp.zeros((B * HKV, N), jnp.int32),
+        ksum=jnp.zeros((B, HKV, DK), jnp.float32),
+        vsum=jnp.zeros((B, HKV, DV), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("groups", [1, 2], ids=["mha", "gqa2"])
+@pytest.mark.parametrize("score", ["cauchy", "neg_euclid"])
+@pytest.mark.parametrize("local_window", [0, 3], ids=["nowin", "win3"])
+@pytest.mark.parametrize("history_mean", [True, False], ids=["hm", "nohm"])
+def test_train_prefill_decode_equivalence(history_mean, local_window,
+                                          score, groups):
+    zcfg = ZetaConfig(d_k=DK, k=K, num_chunks=CHUNKS, bound=1.0,
+                      history_mean=history_mean, local_window=local_window,
+                      score=score, backend="xla")
+    zq, zk, v, gamma2 = _inputs(groups)
+    positions = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    all_valid = jnp.ones((B, N), bool)
+
+    out_train = zeta_attention(
+        zq, zk, v, gamma2, num_chunks=CHUNKS, k=K, bound=zcfg.bound,
+        history_mean=history_mean, local_window=local_window, score=score,
+        impl="xla",
+    )
+
+    # prefill with the TRAINING pools: bulk parallel == train exactly
+    train_pools = (positions // M) * M
+    out_bulk, _ = selection.attend_prefill(
+        _empty_cache(), zq, zk, v, gamma2, positions, all_valid,
+        zcfg=zcfg, thresholds=train_pools,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_bulk), np.asarray(out_train), rtol=2e-5, atol=2e-5,
+    )
+
+    # prefill with the DEFAULT (delayed-insertion) pools == sequential
+    # decode growing the sorted cache one insert at a time
+    out_pf, cache_pf = selection.attend_prefill(
+        _empty_cache(), zq, zk, v, gamma2, positions, all_valid, zcfg=zcfg,
+    )
+    step = jax.jit(functools.partial(selection.attend_decode, zcfg=zcfg))
+    cache_d = _empty_cache()
+    outs = []
+    active = jnp.ones((B,), bool)
+    for t in range(N):
+        o, cache_d = step(
+            cache_d, zq[:, :, t:t + 1], zk[:, :, t:t + 1], v[:, :, t:t + 1],
+            gamma2, jnp.full((B,), t, jnp.int32), active,
+        )
+        outs.append(o)
+    out_dec = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(
+        np.asarray(out_dec), np.asarray(out_pf), rtol=2e-5, atol=2e-5,
+    )
+    # and the caches the two paths leave behind agree (sorted content may
+    # permute only among colliding codes — vanishingly rare on floats)
+    for name in ("zk", "v", "zk_sorted", "pos_sorted"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(cache_d, name)),
+            np.asarray(getattr(cache_pf, name)), rtol=1e-6, atol=1e-6,
+        )
+    np.testing.assert_allclose(
+        np.asarray(cache_d.ksum), np.asarray(cache_pf.ksum),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_selection_identical_given_equal_pools():
+    """Selection (not just output) parity: the three search primitives pick
+    the SAME candidate positions when handed the same pools."""
+    zq, zk, _, _ = _inputs(groups=1)
+    kz = selection.morton_codes(zk)                          # (B, HKV, N)
+    qz = selection.morton_codes(zq.reshape(B, HKV, 1, N, DK))
+    train = selection.search_train(kz, qz, num_chunks=CHUNKS, k=K)
+
+    positions = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    pools = (positions // M) * M
+    f = B * HKV
+    bulk = selection.search_prefill(
+        kz.reshape(f, N), jnp.repeat(pools, HKV, axis=0),
+        qz.reshape(f, N), k=K,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(train.idx.reshape(f, N, K)), np.asarray(bulk.idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(train.valid.reshape(f, N, K)), np.asarray(bulk.valid)
+    )
+
+
+# ------------------------------------------------- layer-level flag parity
+
+
+def _flag_cfg(**zeta_kw):
+    return ModelConfig(name="z", vocab=64, d_model=32, n_layers=2,
+                       n_heads=4, n_kv_heads=2, d_ff=64,
+                       zeta=ZetaConfig(d_k=3, k=4, num_chunks=4, **zeta_kw))
+
+
+@pytest.mark.parametrize("zeta_kw", [
+    dict(history_mean=False),
+    dict(local_window=3),
+    dict(history_mean=False, local_window=3),
+], ids=["nohm", "win3", "nohm-win3"])
+def test_decode_and_prefill_honor_flags(zeta_kw):
+    """Regression for the train<->decode parity bugs: decode and prefill
+    must apply ``history_mean=False`` / ``local_window>0``.  Positions < M
+    see identical candidate sets in every path (empty z-pool + the same
+    window/mean flags), so first-chunk logits must agree with training —
+    they did not while decode/prefill silently ignored the flags."""
+    cfg = _flag_cfg(**zeta_kw)
+    n = 32
+    m = n // cfg.zeta.num_chunks
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, n), 0, cfg.vocab)
+    train_logits, _ = api.apply_model(params, {"tokens": toks}, cfg, F32)
+
+    # sequential decode
+    step = jax.jit(lambda pp, cc, tt: api.decode_step(pp, cc, tt, cfg, F32))
+    cache = api.cache_init(cfg, 2, n, jnp.float32)
+    dec = []
+    for i in range(n):
+        lg, cache = step(params, cache, toks[:, i:i + 1])
+        dec.append(lg)
+    dec = jnp.concatenate(dec, axis=1)
+
+    # chunked prefill
+    cache_p = api.cache_init(cfg, 2, n, jnp.float32)
+    pf = []
+    P = 8
+    for start in range(0, n, P):
+        lg, cache_p = api.prefill(
+            params, cache_p, toks[:, start:start + P], cfg, F32,
+            token_mask=jnp.ones((2, P), bool),
+        )
+        pf.append(lg)
+    pf = jnp.concatenate(pf, axis=1)
+
+    # prefill == decode everywhere; both == train on the first chunk
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(dec[:, :m]), np.asarray(train_logits[:, :m]),
+        rtol=2e-4, atol=2e-4,
+    )
+    assert bool(jnp.all(jnp.isfinite(dec)))
+
+    # the flags must actually change decode output vs. paper defaults
+    # (guards against a future path quietly dropping them again)
+    cfg_def = _flag_cfg()
+    cache_def = api.cache_init(cfg_def, 2, n, jnp.float32)
+    step_def = jax.jit(
+        lambda pp, cc, tt: api.decode_step(pp, cc, tt, cfg_def, F32)
+    )
+    dec_def = []
+    for i in range(n):
+        lg, cache_def = step_def(params, cache_def, toks[:, i:i + 1])
+        dec_def.append(lg)
+    dec_def = jnp.concatenate(dec_def, axis=1)
+    assert not np.allclose(np.asarray(dec), np.asarray(dec_def),
+                           rtol=2e-4, atol=2e-4)
