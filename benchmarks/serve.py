@@ -1,10 +1,13 @@
 """Serve-engine benchmark: wave vs continuous batching under mixed-length
-arrivals.
+arrivals, plus greedy vs full-sampler decode throughput.
 
 Reports tokens/s, time-to-first-token (wall seconds and engine ticks), and
-slot occupancy for both schedulers on the same request trace, and writes the
-machine-readable summary to ``BENCH_serve.json`` (CI uploads it as a build
-artifact).
+slot occupancy for both schedulers on the same request trace; the
+``sampled`` variant re-runs the continuous trace with every request on the
+full device-side sampling pipeline (temperature / top-p / repetition
+penalty / per-request seeds) to price the sampler against argmax.  The
+machine-readable summary goes to ``BENCH_serve.json`` (CI uploads it as a
+build artifact).
 
     PYTHONPATH=src python benchmarks/serve.py [--smoke] [--out PATH]
 """
@@ -26,6 +29,7 @@ import jax  # noqa: E402
 from repro.models import api  # noqa: E402
 from repro.nn.config import ModelConfig, ZetaConfig  # noqa: E402
 from repro.nn.module import F32  # noqa: E402
+from repro.sample import GenerationParams  # noqa: E402
 from repro.serve.engine import Request, ServeEngine  # noqa: E402
 
 SLOTS = 2
@@ -41,23 +45,33 @@ def _model() -> ModelConfig:
     )
 
 
-def _trace(n_requests: int, seed: int = 0) -> list[Request]:
-    """Mixed-length arrivals: prompts 1..24 tokens, 2..8 new tokens."""
+def _trace(n_requests: int, seed: int = 0,
+           sampled: bool = False) -> list[Request]:
+    """Mixed-length arrivals: prompts 1..24 tokens, 2..8 new tokens.
+    ``sampled``: every request runs the full sampler pipeline instead of
+    greedy argmax (temperature + nucleus + repetition penalty, its own
+    seed)."""
     import random
 
     rng = random.Random(seed)
     out = []
     for rid in range(n_requests):
         plen = rng.choice([1, 3, 6, 12, 24])
+        max_new = rng.randrange(2, 9)
+        gen = GenerationParams(
+            max_new=max_new, temperature=0.8, top_p=0.9,
+            repetition_penalty=1.1, seed=rid,
+        ) if sampled else GenerationParams(max_new=max_new)
         out.append(Request(
             rid=rid,
             prompt=[rng.randrange(1, 127) for _ in range(plen)],
-            max_new=rng.randrange(2, 9),
+            gen=gen,
         ))
     return out
 
 
-def _run(params, cfg, scheduler: str, n_requests: int) -> dict:
+def _run(params, cfg, scheduler: str, n_requests: int,
+         sampled: bool = False) -> dict:
     eng = ServeEngine(params, cfg, F32, batch_slots=SLOTS, max_len=MAX_LEN,
                       scheduler=scheduler, prefill_chunk=PREFILL_CHUNK)
     # warm the jit caches (prefill / masked decode / slot reset) so the
@@ -67,7 +81,7 @@ def _run(params, cfg, scheduler: str, n_requests: int) -> dict:
     eng.done.clear()
     eng.ticks = eng.prefill_calls = eng.decode_calls = 0
     eng.busy_slot_ticks = 0
-    trace = _trace(n_requests)
+    trace = _trace(n_requests, sampled=sampled)
     # staggered arrivals: a new request every other tick
     t0 = time.perf_counter()
     first_token_wall: dict[int, float] = {}
@@ -105,17 +119,21 @@ def run(smoke: bool = False, out_path: str | None = None):
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     n_requests = 4 if smoke else 10
     results = {}
-    for sched in ("wave", "continuous"):
-        s = _run(params, cfg, sched, n_requests)
-        results[sched] = s
-        yield (f"serve_{sched}_tokens_per_s,"
+    # "sampled" = the continuous trace with every request on the full
+    # sampler pipeline — prices the device-side sampler against argmax
+    variants = [("wave", "wave", False), ("continuous", "continuous", False),
+                ("sampled", "continuous", True)]
+    for name, sched, sampled in variants:
+        s = _run(params, cfg, sched, n_requests, sampled=sampled)
+        results[name] = s
+        yield (f"serve_{name}_tokens_per_s,"
                f"{1e6 / max(s['tokens_per_s'], 1e-9):.0f},"
                f"{s['tokens_per_s']:.2f} tok/s")
-        yield (f"serve_{sched}_ttft,{1e6 * s['ttft_wall_s_mean']:.0f},"
+        yield (f"serve_{name}_ttft,{1e6 * s['ttft_wall_s_mean']:.0f},"
                f"{s['ttft_ticks_mean']:.1f} ticks mean TTFT")
-        yield (f"serve_{sched}_occupancy,0,"
+        yield (f"serve_{name}_occupancy,0,"
                f"{s['slot_occupancy']:.3f} busy-slot fraction")
-        yield (f"serve_{sched}_model_calls,0,"
+        yield (f"serve_{name}_model_calls,0,"
                f"{s['model_calls']} ({s['prefill_calls']} prefill)")
     out_path = out_path or os.path.join(os.getcwd(), "BENCH_serve.json")
     with open(out_path, "w") as f:

@@ -4,14 +4,13 @@
 """
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import generate
 from repro.data.synthetic import SyntheticLMLoader
-from repro.models import api
 from repro.nn.config import ModelConfig, ZetaConfig
 from repro.nn.module import F32
 from repro.optim import adamw, chain, clip_by_global_norm
-from repro.serve.step import make_serve_step
+from repro.sample import GenerationParams
 from repro.train import init_train_state, make_train_step
 
 
@@ -33,16 +32,18 @@ def main() -> None:
         if (i + 1) % 5 == 0:
             print(f"step {i + 1:3d}  loss {float(metrics['loss']):.3f}")
 
-    # greedy generation from the trained model
-    serve = jax.jit(make_serve_step(cfg, F32))
-    cache = api.cache_init(cfg, 1, 64, jnp.float32)
-    tok = jnp.asarray([[5]], jnp.int32)
-    out = []
-    rng = jax.random.PRNGKey(0)
-    for _ in range(16):
-        tok, _, cache = serve(state["params"], cache, tok, rng)
-        out.append(int(tok[0, 0]))
-    print("generated:", out)
+    # generation from the trained model through the request-level facade:
+    # one greedy and one sampled completion of the same prompt, decoded
+    # side by side in a single batch
+    results = generate(
+        state["params"], cfg, prompts=[[5], [5]],
+        gen_params=[GenerationParams(max_new=16),            # greedy
+                    GenerationParams(max_new=16, temperature=0.8,
+                                     top_p=0.9, seed=1)],
+        prec=F32, max_len=64,
+    )
+    print("greedy :", results[0].tokens)
+    print("sampled:", results[1].tokens)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,40 @@
-"""Batched serving demo: ZETA decode with continuous batching (per-slot
-caches, chunked prefill, mid-flight admission).
+"""Batched serving demo: ONE continuous-batching engine decodes a batch
+mixing greedy, temperature/top-p-sampled, min-p-sampled, and
+stop-sequence requests — per-request GenerationParams, one jitted step,
+no retrace — and streams tokens as they are emitted.
 
     PYTHONPATH=src python examples/serve_demo.py --requests 6 --slots 2
-    PYTHONPATH=src python examples/serve_demo.py --scheduler wave   # legacy
+    PYTHONPATH=src python examples/serve_demo.py --stream        # live tokens
+    PYTHONPATH=src python examples/serve_demo.py --out demo.json # CI artifact
 """
 
 import argparse
+import json
 import time
 
 import jax
 
+from repro.api import generate
 from repro.models import api
 from repro.nn.config import ModelConfig, ZetaConfig
 from repro.nn.module import F32
-from repro.serve.engine import Request, ServeEngine
+from repro.sample import GenerationParams
+
+
+def _gen_params(rid: int, max_new: int) -> GenerationParams:
+    """Cycle through heterogeneous per-request sampling styles."""
+    kinds = [
+        GenerationParams(max_new=max_new),                     # greedy
+        GenerationParams(max_new=max_new, temperature=0.8,
+                         top_p=0.9, seed=rid),                 # nucleus
+        GenerationParams(max_new=max_new, temperature=1.0,
+                         min_p=0.1, repetition_penalty=1.2,
+                         seed=rid),                            # min-p
+        GenerationParams(max_new=max_new, temperature=0.7,
+                         top_k=16, seed=rid,
+                         stop=((7, 7),)),                      # stop-seq
+    ]
+    return kinds[rid % len(kinds)]
 
 
 def main() -> None:
@@ -24,35 +45,62 @@ def main() -> None:
     ap.add_argument("--scheduler", choices=["continuous", "wave"],
                     default="continuous")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens live as they are emitted")
+    ap.add_argument("--out", default=None,
+                    help="write a JSON transcript (CI artifact)")
     args = ap.parse_args()
 
     cfg = ModelConfig(
         name="serve-demo", vocab=256, d_model=64, n_layers=2, n_heads=4,
         n_kv_heads=2, d_ff=128, attention="zeta",
-        zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+        zeta=ZetaConfig(d_k=3, k=4, num_chunks=4), bos_id=0,
     )
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, F32, batch_slots=args.slots,
-                         max_len=64, scheduler=args.scheduler,
-                         prefill_chunk=args.prefill_chunk)
-    for rid in range(args.requests):
-        engine.submit(Request(
-            rid=rid, prompt=[1 + rid, 2 + rid, 3 + rid],
-            max_new=args.max_new,
-        ))
+    prompts = [[1 + rid, 2 + rid, 3 + rid] for rid in range(args.requests)]
+    gens = [_gen_params(rid, args.max_new) for rid in range(args.requests)]
+
+    streamed: list[tuple[int, int]] = []
+
+    def on_token(rid: int, tok: int) -> None:
+        streamed.append((rid, tok))
+        if args.stream:
+            print(f"    [stream] req {rid} -> {tok}")
+
     t0 = time.time()
-    done = engine.run_to_completion()
+    results = generate(
+        params, cfg, prompts, gens, prec=F32, seed=args.seed,
+        batch_slots=args.slots, max_len=64,
+        prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
+        on_token=on_token,
+    )
     dt = time.time() - t0
-    total_tokens = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests, {total_tokens} tokens in "
-          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s on CPU)")
-    s = engine.stats()
-    print(f"  scheduler={s['scheduler']}  model_calls={s['model_calls']} "
-          f"({s['prefill_calls']} prefill)  "
-          f"occupancy={s['slot_occupancy']:.2f}  "
-          f"ttft={s['ttft_ticks_mean']:.1f} ticks")
-    for r in sorted(done, key=lambda r: r.rid):
-        print(f"  req {r.rid}: prompt={r.prompt} -> {r.output}")
+    total_tokens = sum(len(r.tokens) for r in results)
+    print(f"served {len(results)} requests, {total_tokens} tokens in "
+          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s on CPU), "
+          f"{len(streamed)} streamed")
+    for r in results:
+        g = r.gen
+        style = ("greedy" if g.temperature == 0 else
+                 f"T={g.temperature} top_k={g.top_k} top_p={g.top_p} "
+                 f"min_p={g.min_p}")
+        extra = f" stop={g.stop}" if g.stop else ""
+        print(f"  req {r.rid} [{style}{extra}] prompt={r.prompt} -> "
+              f"{r.tokens} ({r.finish_reason})")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({
+                "requests": [{
+                    "rid": r.rid, "prompt": r.prompt, "tokens": r.tokens,
+                    "finish_reason": r.finish_reason,
+                    "temperature": r.gen.temperature,
+                } for r in results],
+                "streamed_tokens": len(streamed),
+                "tokens_per_s": total_tokens / dt,
+            }, f, indent=2)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

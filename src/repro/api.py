@@ -1,0 +1,117 @@
+"""Request-level generation facade — the documented one-call entry point.
+
+``generate(params, cfg, prompts, gen_params)`` wraps engine construction
+(slot/table sizing derived from the requests), submission, and decoding:
+
+    from repro.api import generate
+    from repro.sample import GenerationParams
+
+    results = generate(params, cfg,
+                       prompts=[[1, 2, 3], [7, 8]],
+                       gen_params=[GenerationParams(max_new=16),      # greedy
+                                   GenerationParams(temperature=0.8,
+                                                    top_p=0.9, seed=1,
+                                                    eos_ids=(0,))])
+    for r in results:
+        print(r.tokens, r.finish_reason)
+
+Every request samples with its own parameters inside ONE jitted serve
+step (see ``repro.sample``); outputs are reproducible per request — the
+same (engine seed, request seed, prompt) triple gives the same tokens
+regardless of batch composition, slot placement, or admission order.
+The flip side: best-of-n over one prompt needs distinct per-request
+seeds (``GenerationParams(seed=i)``), or every sample is identical.
+
+For streaming / incremental control, drive :class:`repro.serve.engine.
+ServeEngine` directly (``engine.stream()`` yields ``(rid, token)``;
+``run_to_completion(on_token=...)`` is the callback form) — ``generate``
+exposes the callback through ``on_token``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.nn.config import ModelConfig
+from repro.nn.module import F32, Precision
+from repro.sample import GenerationParams
+from repro.serve.engine import Request, ServeEngine
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    rid: int
+    prompt: list[int]
+    tokens: list[int]
+    finish_reason: str | None   # "length" | "eos" | "stop"
+    gen: GenerationParams | None = None
+
+
+def generate(params, cfg: ModelConfig,
+             prompts: Sequence[Sequence[int]],
+             gen_params: GenerationParams | Sequence[GenerationParams]
+             | None = None, *,
+             prec: Precision = F32, seed: int = 0,
+             batch_slots: int | None = None, max_len: int | None = None,
+             prefill_chunk: int = 8, scheduler: str = "continuous",
+             bos_id: int | None = None, history_len: int = 32,
+             on_token: Callable[[int, int], None] | None = None,
+             max_ticks: int = 10_000) -> list[GenerationResult]:
+    """Generate completions for ``prompts`` (token-id lists).
+
+    ``gen_params``: one :class:`GenerationParams` shared by all prompts, a
+    list with one entry per prompt, or None (greedy, default budget).
+    ``seed`` keys the engine's base RNG; per-request streams additionally
+    fold in each request's ``GenerationParams.seed``.  ``batch_slots`` /
+    ``max_len`` and the padded eos/stop table capacities default to the
+    smallest sizes that fit the given requests.  ``on_token(rid, token)``
+    streams tokens as they are emitted.  Results come back in prompt
+    order.
+    """
+    prompts = [list(p) for p in prompts]
+    if not prompts:
+        return []
+    if gen_params is None:
+        gens: list[GenerationParams] = [GenerationParams()] * len(prompts)
+    elif isinstance(gen_params, GenerationParams):
+        gens = [gen_params] * len(prompts)
+    else:
+        gens = list(gen_params)
+        if len(gens) != len(prompts):
+            raise ValueError(
+                f"{len(gens)} gen_params for {len(prompts)} prompts"
+            )
+
+    eff_bos = cfg.bos_id if bos_id is None else bos_id
+    lens = [len(p) or 1 for p in prompts]  # empty prompt -> [bos]
+    need_len = max(n + g.max_new for n, g in zip(lens, gens))
+    max_stop_len = max(
+        [len(s) for g in gens for s in g.stop], default=1)
+    engine = ServeEngine(
+        params, cfg, prec,
+        batch_slots=batch_slots or min(len(prompts), 8),
+        max_len=max_len or need_len,
+        seed=seed, scheduler=scheduler, prefill_chunk=prefill_chunk,
+        bos_id=eff_bos,
+        max_eos=max([len(g.eos_ids) for g in gens], default=1) or 1,
+        max_stops=max([len(g.stop) for g in gens], default=1) or 1,
+        max_stop_len=max_stop_len,
+        history_len=max(history_len, max_stop_len),
+    )
+    for rid, (p, g) in enumerate(zip(prompts, gens)):
+        engine.submit(Request(rid=rid, prompt=p, gen=g))
+    done = engine.run_to_completion(max_ticks=max_ticks, on_token=on_token)
+    by_rid = {r.rid: r for r in done}
+    if len(by_rid) != len(prompts):
+        raise RuntimeError(
+            f"engine finished {len(by_rid)}/{len(prompts)} requests within "
+            f"max_ticks={max_ticks}"
+        )
+    return [
+        GenerationResult(
+            rid=rid, prompt=prompts[rid], tokens=by_rid[rid].output,
+            finish_reason=by_rid[rid].finish_reason, gen=by_rid[rid].gen,
+        )
+        for rid in range(len(prompts))
+    ]

@@ -123,14 +123,15 @@ def _build_lowered(arch: str, shape_name: str, mesh, *, zeta_overrides=None):
     c_shapes = S.cache_specs(cfg, SHAPES[shape_name])
     c_shard = S.cache_shardings(mesh, c_shapes, cell)
     tok = S.token_specs(cell)
+    sp_shapes, hist = S.sample_specs(cell)
     rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
     fn = jax.jit(
         serve,
-        in_shardings=(p_shard, c_shard, None, None),
-        out_shardings=(None, None, c_shard),
+        in_shardings=(p_shard, c_shard, None, None, None, None),
+        out_shardings=(None, None, c_shard, None),
         donate_argnums=(1,),
     )
-    return fn.lower(p_shapes, c_shapes, tok, rng)
+    return fn.lower(p_shapes, c_shapes, tok, sp_shapes, hist, rng)
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,

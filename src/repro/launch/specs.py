@@ -208,5 +208,17 @@ def token_specs(cell: ShapeCell) -> SDS:
     return SDS((cell.global_batch, 1), jnp.int32)
 
 
+def sample_specs(cell: ShapeCell, *, history_len: int = 32):
+    """Abstract (SlotParams, token_history) inputs of the serve step —
+    per-slot sampling parameters are replicated host-state-sized arrays,
+    never sharded."""
+    from repro import sample
+
+    spec = sample.slot_spec(cell.global_batch)
+    sp = jax.eval_shape(lambda: sample.init_slot_params(spec))
+    hist = SDS((cell.global_batch, history_len), jnp.int32)
+    return sp, hist
+
+
 def precision_for(cfg: ModelConfig) -> Precision:
     return BF16

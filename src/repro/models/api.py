@@ -6,6 +6,12 @@
 
 Decode ("serve") state is a pytree of stacked per-layer caches; one
 ``decode_step`` consumes one new token per sequence.
+
+This module is the MODEL-level API (logits in, cache out).  Request-level
+generation — per-request sampling parameters, EOS/stop conditions,
+streaming — lives one layer up: ``repro.api.generate`` (one-call facade)
+over ``repro.serve.engine.ServeEngine`` and the ``repro.sample``
+subsystem.
 """
 
 from __future__ import annotations

@@ -91,6 +91,9 @@ class ModelConfig:
     activation: str = "swiglu"
     norm: Literal["rms", "layer"] = "rms"
     tie_embeddings: bool = True
+    # BOS token fed for empty prompts (serving); None = engine rejects
+    # empty prompts unless ServeEngine(bos_id=...) overrides.
+    bos_id: int | None = None
     first_k_dense: int = 0           # leading dense layers before MoE stack
     dense_ff: int | None = None      # d_ff of those dense layers
     mtp_depth: int = 0               # DeepSeek multi-token-prediction heads

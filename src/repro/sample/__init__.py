@@ -1,0 +1,42 @@
+"""Device-side sampling subsystem (docs/ARCHITECTURE.md "Generation API").
+
+``GenerationParams`` is the per-request contract; ``SlotParams`` its
+per-slot struct-of-arrays device form (declared with ``repro.state``
+CacheField specs); ``sample_logits`` / ``check_finished`` the vectorized
+sampling + termination pipeline one jitted serve step runs for a batch of
+heterogeneous requests with no retrace.
+"""
+
+from repro.sample.params import (  # noqa: F401
+    GenerationParams,
+    SlotParams,
+    init_slot_params,
+    pack,
+    reset_slots,
+    slot_spec,
+    update_slot,
+    validate_fits,
+)
+from repro.sample.sampler import (  # noqa: F401
+    apply_repetition_penalty,
+    check_finished,
+    filter_logits,
+    sample_logits,
+    slot_keys,
+)
+
+__all__ = [
+    "GenerationParams",
+    "SlotParams",
+    "apply_repetition_penalty",
+    "check_finished",
+    "filter_logits",
+    "init_slot_params",
+    "pack",
+    "reset_slots",
+    "sample_logits",
+    "slot_keys",
+    "slot_spec",
+    "update_slot",
+    "validate_fits",
+]

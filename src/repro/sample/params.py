@@ -1,0 +1,254 @@
+"""Request-level generation parameters and their per-slot SoA device form.
+
+Two representations of the same contract:
+
+- :class:`GenerationParams` — the frozen, host-side, per-REQUEST dataclass
+  users attach to a :class:`repro.serve.engine.Request` (and the argument
+  of ``repro.api.generate``).  Greedy decoding is simply
+  ``temperature=0.0`` — it is the temperature-0 limit of the sampler, not
+  a separate mode.
+- :class:`SlotParams` — the struct-of-arrays pytree the jitted serve step
+  consumes: every field is a per-SLOT device array, so ONE trace serves a
+  batch mixing greedy, temperature/top-p, min-p, and stop-sequence
+  requests with no retrace between ticks.
+
+The SoA is declared with the same :class:`repro.state.CacheField` spec
+machinery the decode caches use: each field carries its neutral fill
+(temperature 0 = greedy, ``top_p`` 1 = off, id tables filled with the -1
+pad), which makes ``reset_slots`` — slot recycling — the same masked-fill
+primitive as cache recycling.
+
+Variable-length request fields are packed into fixed-capacity padded
+tables so shapes stay static across admissions:
+
+- ``eos_ids``: ``(B, max_eos)`` int32, pad -1 (never a valid token id);
+- ``stop``:    ``(B, max_stops, max_stop_len)`` int32, pad -1, each stop
+  sequence RIGHT-aligned so suffix matching compares position-wise
+  against the tail of the token history.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import state
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationParams:
+    """Per-request sampling and stopping contract.
+
+    temperature: 0 = greedy (argmax); > 0 softens the distribution.
+    top_k:       keep the k highest-logit tokens (0 = off).
+    top_p:       nucleus sampling — smallest prefix of the sorted
+                 distribution with cumulative probability >= top_p
+                 (1.0 = off).
+    min_p:       drop tokens whose probability < min_p * max-probability
+                 (0.0 = off).
+    repetition_penalty: logits of recently seen tokens (prompt tail +
+                 generated, within the engine's history window) are
+                 divided (if positive) / multiplied (if negative) by this
+                 (1.0 = off).
+    seed:        per-request RNG stream — folded into the engine's base
+                 key together with the per-request step index, so output
+                 is reproducible regardless of slot placement or
+                 admission order.  Reproducibility cuts both ways:
+                 requests sharing (prompt, params, seed) produce
+                 IDENTICAL tokens, so give concurrent samples distinct
+                 seeds (e.g. the request id) for best-of-n variety.
+    eos_ids:     sampling any of these ids terminates the request; the
+                 EOS token is NOT appended to the output.
+    stop:        stop token-sequences; generation stops when the tail of
+                 (prompt + output) matches one, and the matched suffix is
+                 trimmed from the output.
+    max_new:     generated-token budget (finish_reason "length").
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    repetition_penalty: float = 1.0
+    seed: int = 0
+    eos_ids: tuple[int, ...] = ()
+    stop: tuple[tuple[int, ...], ...] = ()
+    max_new: int = 16
+
+    def __post_init__(self):
+        object.__setattr__(self, "eos_ids", tuple(int(e) for e in self.eos_ids))
+        object.__setattr__(
+            self, "stop",
+            tuple(tuple(int(t) for t in s) for s in self.stop),
+        )
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not 0.0 <= self.min_p < 1.0:
+            raise ValueError(f"min_p must be in [0, 1), got {self.min_p}")
+        if self.repetition_penalty <= 0:
+            raise ValueError(
+                f"repetition_penalty must be > 0, got {self.repetition_penalty}"
+            )
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        if any(e < 0 for e in self.eos_ids):
+            raise ValueError(f"eos_ids must be >= 0, got {self.eos_ids}")
+        for s in self.stop:
+            if not s:
+                raise ValueError("stop sequences must be non-empty")
+            if any(t < 0 for t in s):
+                # negative ids would collide with the -1 pad sentinel of
+                # the packed per-slot stop table
+                raise ValueError(f"stop token ids must be >= 0, got {s}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    def replace(self, **kw) -> "GenerationParams":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlotParams:
+    """Struct-of-arrays form of :class:`GenerationParams`, one row per
+    serve slot.  As a *spec* every field is a :class:`repro.state.CacheField`;
+    packed, every field is a device array.
+
+    ``step`` is the per-request sample index (== number of tokens already
+    emitted for the request in that slot); the engine refreshes it each
+    tick, and the sampler folds it into the request seed so token j of a
+    request draws the same randomness wherever and whenever it runs.
+    """
+
+    temperature: jax.Array
+    top_k: jax.Array
+    top_p: jax.Array
+    min_p: jax.Array
+    repetition_penalty: jax.Array
+    seed: jax.Array
+    step: jax.Array
+    eos_ids: jax.Array
+    stop: jax.Array
+
+    def replace(self, **kw) -> "SlotParams":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def batch(self) -> int:
+        return self.temperature.shape[0]
+
+
+def slot_spec(batch: int, *, max_eos: int = 4, max_stops: int = 4,
+              max_stop_len: int = 8) -> SlotParams:
+    """Declare the SoA layout for ``batch`` slots (fills = neutral/greedy)."""
+    if min(max_eos, max_stops, max_stop_len) < 1:
+        raise ValueError("max_eos / max_stops / max_stop_len must be >= 1")
+    f32, i32 = jnp.float32, jnp.int32
+    return SlotParams(
+        temperature=state.CacheField((batch,), f32, 0.0),
+        top_k=state.CacheField((batch,), i32, 0),
+        top_p=state.CacheField((batch,), f32, 1.0),
+        min_p=state.CacheField((batch,), f32, 0.0),
+        repetition_penalty=state.CacheField((batch,), f32, 1.0),
+        seed=state.CacheField((batch,), i32, 0),
+        step=state.CacheField((batch,), i32, 0),
+        eos_ids=state.CacheField((batch, max_eos), i32, -1),
+        stop=state.CacheField((batch, max_stops, max_stop_len), i32, -1),
+    )
+
+
+def init_slot_params(spec: SlotParams) -> SlotParams:
+    """Materialise a spec: every slot at its neutral (greedy) fill."""
+    return state.init_cache(spec)
+
+
+def validate_fits(gp: GenerationParams, spec: SlotParams) -> None:
+    """Raise ValueError when ``gp`` exceeds the declared padded capacity
+    (``spec`` may be the CacheField spec or a packed SoA — both expose
+    ``.shape``)."""
+    max_eos = spec.eos_ids.shape[1]
+    _, max_stops, max_stop_len = spec.stop.shape
+    if len(gp.eos_ids) > max_eos:
+        raise ValueError(
+            f"{len(gp.eos_ids)} eos ids exceed engine capacity max_eos="
+            f"{max_eos}"
+        )
+    if len(gp.stop) > max_stops:
+        raise ValueError(
+            f"{len(gp.stop)} stop sequences exceed engine capacity "
+            f"max_stops={max_stops}"
+        )
+    for s in gp.stop:
+        if len(s) > max_stop_len:
+            raise ValueError(
+                f"stop sequence of length {len(s)} exceeds engine capacity "
+                f"max_stop_len={max_stop_len}"
+            )
+
+
+def _row_values(gp: GenerationParams, spec: SlotParams):
+    """Host-side numpy row for one request (padded tables included)."""
+    max_eos = spec.eos_ids.shape[1]
+    _, max_stops, max_stop_len = spec.stop.shape
+    eos = np.full((max_eos,), -1, np.int32)
+    eos[:len(gp.eos_ids)] = gp.eos_ids
+    stop = np.full((max_stops, max_stop_len), -1, np.int32)
+    for j, s in enumerate(gp.stop):
+        stop[j, max_stop_len - len(s):] = s  # right-aligned suffix
+    return {
+        "temperature": np.float32(gp.temperature),
+        "top_k": np.int32(gp.top_k),
+        "top_p": np.float32(gp.top_p),
+        "min_p": np.float32(gp.min_p),
+        "repetition_penalty": np.float32(gp.repetition_penalty),
+        "seed": np.int32(gp.seed),
+        "step": np.int32(0),
+        "eos_ids": eos,
+        "stop": stop,
+    }
+
+
+def pack(spec: SlotParams,
+         gps: Sequence[GenerationParams | None]) -> SlotParams:
+    """Pack one :class:`GenerationParams` per slot into the SoA (None rows
+    stay at the neutral fill)."""
+    arrs = jax.tree.map(
+        lambda f: np.full(f.shape, f.fill, dtype=np.dtype(f.dtype)),
+        spec, is_leaf=state.is_field,
+    )
+    for i, gp in enumerate(gps):
+        if gp is None:
+            continue
+        validate_fits(gp, spec)
+        row = _row_values(gp, spec)
+        for name, val in row.items():
+            getattr(arrs, name)[i] = val
+    return jax.tree.map(jnp.asarray, arrs)
+
+
+def update_slot(spec: SlotParams, sp: SlotParams, i: int,
+                gp: GenerationParams) -> SlotParams:
+    """Functionally overwrite slot ``i`` with ``gp`` (host-side, outside
+    jit — this is the admission-time packing step)."""
+    validate_fits(gp, spec)
+    row = _row_values(gp, spec)
+    return SlotParams(**{
+        name: getattr(sp, name).at[i].set(val) for name, val in row.items()
+    })
+
+
+def reset_slots(spec: SlotParams, sp: SlotParams,
+                slot_mask) -> SlotParams:
+    """Reset masked slots to the neutral fill — same masked-fill primitive
+    as decode-cache slot recycling (``repro.state.reset_slots``)."""
+    return state.reset_slots(spec, sp, slot_mask)

@@ -1,0 +1,157 @@
+"""Vectorized per-slot sampling pipeline (device-side, retrace-free).
+
+One pass over ``(B, V)`` logits with per-slot parameter arrays — the
+request-level analogue of ZETA's batched top-k selection: heterogeneity
+(greedy next to temperature/top-p next to min-p) lives in DATA, not in
+control flow, so one jitted trace serves every mix of requests.
+
+Pipeline (order per request contract):
+
+1. temperature — realised as Gumbel-max with temperature-SCALED noise:
+   ``argmax(logits + T * gumbel)`` equals categorical sampling from
+   ``softmax(logits / T)`` for T > 0 and degenerates to exact argmax at
+   T = 0, making greedy the temperature-0 limit of the same code path.
+   (Sign-based repetition penalty commutes with the positive scaling, so
+   steps 1 and 2 compose in either order.)
+2. repetition penalty over the token-history window (prompt tail +
+   generated): positive logits divided, negative multiplied (CTRL / HF
+   convention).
+3. top-k -> top-p (nucleus) -> min-p filtering, each per-slot and
+   neutral-by-default (k<=0, p>=1, min_p<=0); filtered tokens get -inf.
+   Ties at a threshold are kept (``>=`` comparisons).
+4. categorical draw via the per-slot key
+   ``fold_in(fold_in(base_key, seed), step)`` — a pure function of the
+   REQUEST (its seed and its sample index), never of the slot index,
+   engine tick, or admission order.
+
+Termination is the same kind of data-parallel check:
+:func:`check_finished` flags slots whose freshly sampled token is one of
+the request's ``eos_ids`` or completes one of its (right-aligned padded)
+``stop`` sequences against the history tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sample.params import SlotParams
+
+
+def apply_repetition_penalty(logits: jax.Array, token_history: jax.Array,
+                             penalty: jax.Array) -> jax.Array:
+    """Penalise every token id present in ``token_history``.
+
+    logits: (B, V) f32; token_history: (B, H) int32, -1 = empty;
+    penalty: (B,) — 1.0 is a no-op.
+    """
+    B, V = logits.shape
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    hist = jnp.where(token_history >= 0, token_history, V)
+    seen = jnp.zeros((B, V + 1), bool).at[b_idx, hist].set(True)[:, :V]
+    p = penalty[:, None]
+    return jnp.where(
+        seen, jnp.where(logits > 0, logits / p, logits * p), logits
+    )
+
+
+def filter_logits(logits: jax.Array, slot_params: SlotParams,
+                  token_history: jax.Array) -> jax.Array:
+    """Repetition penalty + top-k/top-p/min-p masking; returns the
+    penalized logits with filtered entries at -inf (the distribution the
+    categorical draw samples, before temperature noise)."""
+    x = apply_repetition_penalty(
+        logits.astype(jnp.float32), token_history,
+        slot_params.repetition_penalty,
+    )
+    V = x.shape[-1]
+    # p-thresholds are defined on the temperature-scaled distribution;
+    # t_safe keeps T=0 rows finite (their filters are irrelevant: every
+    # filter keeps the argmax, which is all a T=0 row samples).
+    t_safe = jnp.where(slot_params.temperature > 0,
+                       slot_params.temperature, 1.0)[:, None]
+    scaled = x / t_safe
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+
+    k = jnp.clip(slot_params.top_k, 1, V) - 1
+    kth = jnp.take_along_axis(sorted_desc, k[:, None], axis=-1)
+    keep = (slot_params.top_k[:, None] <= 0) | (scaled >= kth)
+
+    probs_sorted = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs_sorted, axis=-1)
+    in_nucleus = (cum - probs_sorted) < slot_params.top_p[:, None]
+    thr_p = jnp.min(jnp.where(in_nucleus, sorted_desc, jnp.inf),
+                    axis=-1, keepdims=True)
+    keep &= (slot_params.top_p[:, None] >= 1.0) | (scaled >= thr_p)
+
+    max_s = jnp.max(scaled, axis=-1, keepdims=True)
+    log_min_p = jnp.log(jnp.maximum(slot_params.min_p, 1e-38))[:, None]
+    keep &= (slot_params.min_p[:, None] <= 0) | (scaled >= max_s + log_min_p)
+
+    return jnp.where(keep, x, -jnp.inf)
+
+
+def slot_keys(rng: jax.Array, slot_params: SlotParams) -> jax.Array:
+    """Per-slot PRNG keys: base key x request seed x sample step."""
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(rng, slot_params.seed)
+    return jax.vmap(jax.random.fold_in)(keys, slot_params.step)
+
+
+def sample_logits(logits: jax.Array, slot_params: SlotParams,
+                  rng: jax.Array, token_history: jax.Array) -> jax.Array:
+    """Draw one token per slot.
+
+    logits: (B, V) or (B, 1, V); rng: the engine's BASE key (constant
+    across ticks — all per-tick variation comes from ``step``);
+    token_history: (B, H) int32 recent prompt/generated tokens, -1 pad.
+    Returns (B,) int32.
+    """
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    x = logits.astype(jnp.float32)
+
+    def fast(x):
+        return jnp.argmax(x, axis=-1).astype(jnp.int32)
+
+    def full(x):
+        masked = filter_logits(x, slot_params, token_history)
+        keys = slot_keys(rng, slot_params)
+        gumbel = jax.vmap(
+            lambda k: jax.random.gumbel(k, x.shape[-1:], jnp.float32)
+        )(keys)
+        z = masked + slot_params.temperature[:, None] * gumbel
+        return jnp.argmax(z, axis=-1).astype(jnp.int32)
+
+    # Runtime (data, not trace-static) fast path: an all-greedy batch with
+    # no repetition penalty reduces exactly to argmax — every filter keeps
+    # the max, and the noise term is scaled by T=0 — so skip the sort /
+    # softmax / gumbel work.  One trace either way; heterogeneous batches
+    # take the full branch.
+    neutral = jnp.all(slot_params.temperature <= 0) \
+        & jnp.all(slot_params.repetition_penalty == 1.0)
+    return jax.lax.cond(neutral, fast, full, x)
+
+
+def check_finished(slot_params: SlotParams, token_history: jax.Array,
+                   tokens: jax.Array) -> jax.Array:
+    """Per-slot termination mask for freshly sampled ``tokens`` (B,):
+    True where the token is one of the slot's eos ids, or where it
+    completes one of the slot's stop sequences against the history tail.
+    Requires ``token_history`` width >= max_stop_len - 1."""
+    tok = tokens.reshape(-1)
+    eos_hit = jnp.any(slot_params.eos_ids == tok[:, None], axis=-1)
+
+    L = slot_params.stop.shape[-1]
+    if token_history.shape[-1] < L - 1:
+        raise ValueError(
+            f"token_history width {token_history.shape[-1]} < "
+            f"max_stop_len - 1 = {L - 1}"
+        )
+    ext = jnp.concatenate(
+        [token_history[:, -(L - 1):] if L > 1
+         else token_history[:, :0], tok[:, None]], axis=-1,
+    )[:, None, :]                                        # (B, 1, L)
+    valid = slot_params.stop >= 0                        # (B, S, L)
+    match = jnp.all(~valid | (slot_params.stop == ext), axis=-1) \
+        & jnp.any(valid, axis=-1)
+    return eos_hit | jnp.any(match, axis=-1)

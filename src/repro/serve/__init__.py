@@ -1,5 +1,6 @@
-"""Serving: decode step builder + batched engine."""
+"""Serving: decode/prefill step builders + batched engine."""
 
-from repro.serve.step import make_serve_step
+from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.step import make_prefill_step, make_serve_step  # noqa: F401
 
-__all__ = ["make_serve_step"]
+__all__ = ["Request", "ServeEngine", "make_prefill_step", "make_serve_step"]

@@ -1,4 +1,5 @@
-"""Batched serving engine with TRUE continuous batching.
+"""Batched serving engine with TRUE continuous batching and per-request
+generation parameters.
 
 Fixed batch of B decode slots; per-slot cache positions (``length: (B,)``
 all the way down the cache pytree) mean a slot is recycled the moment its
@@ -8,21 +9,37 @@ through the chunked-prefill path (one model call per ``prefill_chunk``
 tokens, running ZETA's parallel top-k search over the whole chunk) instead
 of token-by-token decode, so time-to-first-token is ceil(P/chunk) calls.
 
+Sampling is request-level: every :class:`Request` carries a
+:class:`repro.sample.GenerationParams` (temperature / top-k / top-p /
+min-p / repetition penalty / seed / eos / stop / max_new).  At admission
+the engine packs it into the :class:`repro.sample.SlotParams` SoA, so ONE
+jitted step serves a batch of heterogeneous requests — greedy next to
+temperature-0.9/top-p next to min-p — with no retrace; EOS / stop
+termination is detected device-side (``finished`` mask) and folded into
+the same slot-recycling path that ``max_new`` exhaustion uses.  Per-slot
+RNG streams are ``fold_in(fold_in(PRNGKey(engine seed), request seed),
+sample step)``: resubmitting a request reproduces its output regardless
+of slot placement or admission order.
+
 ``scheduler="wave"`` preserves the legacy behaviour (whole-batch drain,
 prefill-as-decode) as an equivalence oracle: both schedulers produce
-identical greedy outputs per request, which `tests/test_serve_engine.py`
-pins.
+identical outputs per request (greedy AND sampled — the per-request
+streams are scheduler-independent), which `tests/test_serve_engine.py`
+and `tests/test_sampling.py` pin.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sample
 from repro.models import api
 from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
@@ -33,21 +50,65 @@ from repro.serve.step import make_prefill_step, make_serve_step
 class Request:
     rid: int
     prompt: list[int]
-    max_new: int
+    max_new: int | None = None          # deprecated alias of gen.max_new
+    gen: sample.GenerationParams | None = None
     output: list[int] = dataclasses.field(default_factory=list)
+    finish_reason: str | None = None    # "length" | "eos" | "stop"
     # scheduling stats (ticks are engine steps, not wall time)
     arrival_tick: int = -1
     admit_tick: int = -1
     first_token_tick: int = -1
     finish_tick: int = -1
 
+    def __post_init__(self):
+        # gen is the source of truth; max_new alone is the deprecated
+        # spelling.  A gen-less request inherits the engine's default
+        # GenerationParams at submit() time.
+        if self.gen is not None:
+            if self.max_new is not None and self.max_new != self.gen.max_new:
+                raise ValueError(
+                    f"request {self.rid}: conflicting budgets — "
+                    f"max_new={self.max_new} vs gen.max_new="
+                    f"{self.gen.max_new}; set it on GenerationParams only"
+                )
+            self.max_new = self.gen.max_new
+
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, prec: Precision, *,
-                 batch_slots: int, max_len: int, greedy: bool = True,
-                 scheduler: str = "continuous", prefill_chunk: int = 8):
+                 batch_slots: int, max_len: int, seed: int = 0,
+                 greedy: bool | None = None,
+                 scheduler: str = "continuous", prefill_chunk: int = 8,
+                 bos_id: int | None = None, max_eos: int = 4,
+                 max_stops: int = 4, max_stop_len: int = 8,
+                 history_len: int = 32):
+        """``seed`` keys the engine's base PRNG stream; ``bos_id``
+        (default ``cfg.bos_id``) is fed for empty prompts; ``max_eos`` /
+        ``max_stops`` / ``max_stop_len`` size the padded per-slot
+        eos/stop tables; ``history_len`` is the token-history window the
+        repetition penalty and stop matching see (prompt tail +
+        generated).  ``greedy`` is a deprecated shim: it becomes the
+        default GenerationParams (temperature 0 or 1) of requests that
+        carry none."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if history_len < max_stop_len - 1:
+            raise ValueError(
+                f"history_len={history_len} cannot hold stop sequences of "
+                f"up to {max_stop_len} tokens (needs >= max_stop_len - 1)"
+            )
+        if greedy is None:
+            self._default_gen = sample.GenerationParams()
+        else:
+            warnings.warn(
+                "ServeEngine(greedy=...) is deprecated; attach a "
+                "repro.sample.GenerationParams to each Request (greedy =="
+                " temperature 0) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+            self._default_gen = sample.GenerationParams(
+                temperature=0.0 if greedy else 1.0
+            )
         self.params = params
         self.cfg = cfg
         self.prec = prec
@@ -55,10 +116,11 @@ class ServeEngine:
         self.max_len = max_len
         self.scheduler = scheduler
         self.prefill_chunk = prefill_chunk
-        self.step_fn = jax.jit(make_serve_step(cfg, prec, greedy=greedy))
-        self.prefill_fn = jax.jit(
-            make_prefill_step(cfg, prec, greedy=greedy)
-        )
+        self.bos_id = cfg.bos_id if bos_id is None else bos_id
+        self._raw_step = make_serve_step(cfg, prec)
+        self._raw_prefill = make_prefill_step(cfg, prec)
+        self.step_fn = jax.jit(self._raw_step)
+        self.prefill_fn = jax.jit(self._raw_prefill)
         self.reset_fn = jax.jit(
             lambda cache, mask: api.cache_reset_slots(cfg, cache, mask)
         )
@@ -68,36 +130,145 @@ class ServeEngine:
                                                range(batch_slots)]
         self.slot_phase: list[str] = ["idle"] * batch_slots
         self.cache = api.cache_init(cfg, batch_slots, max_len, jnp.float32)
+        self.slot_spec = sample.slot_spec(
+            batch_slots, max_eos=max_eos, max_stops=max_stops,
+            max_stop_len=max_stop_len,
+        )
+        self.slot_params = sample.init_slot_params(self.slot_spec)
         self.done: list[Request] = []
         self._tokens = np.zeros((batch_slots, 1), np.int32)
-        self.rng = jax.random.PRNGKey(0)
+        self._history = np.full((batch_slots, history_len), -1, np.int32)
+        # base key only — per-slot streams fold in request seed + step, so
+        # results do not depend on tick counts or slot placement
+        self.rng = jax.random.PRNGKey(seed)
+        self._events: list[tuple[int, int]] = []
+        self._on_token: Callable[[int, int], None] | None = None
+        self._submitted = 0
         # counters for benchmarks / tests
         self.ticks = 0
         self.prefill_calls = 0
         self.decode_calls = 0
         self.busy_slot_ticks = 0
 
+    # ----------------------------------------------------------- counters
+
+    @property
+    def decode_traces(self) -> int:
+        """Times the decode step was (re)traced — 1 == no retrace."""
+        return self._raw_step.traces
+
+    @property
+    def prefill_traces(self) -> int:
+        return self._raw_prefill.traces
+
+    # ------------------------------------------------------------- submit
+
     def submit(self, req: Request) -> None:
-        need = len(req.prompt) + req.max_new
+        if not req.prompt and self.bos_id is None:
+            raise ValueError(
+                f"request {req.rid}: empty prompt and no bos_id configured "
+                "(set ModelConfig.bos_id or ServeEngine(bos_id=...))"
+            )
+        if req.gen is None:  # deprecated max_new-only spelling
+            req.gen = self._default_gen if req.max_new is None \
+                else self._default_gen.replace(max_new=req.max_new)
+            if self._default_gen.temperature > 0:
+                # legacy sampled engines drew independent noise per row;
+                # give each gen-less request its own stream
+                req.gen = req.gen.replace(seed=self._submitted)
+            req.max_new = req.gen.max_new
+        self._submitted += 1
+        plen = len(req.prompt) or 1  # empty prompt becomes [bos_id]
+        need = plen + req.gen.max_new
         if need > self.max_len:
             # the per-slot scatter writes drop out-of-bounds positions, so
             # an over-length request would complete with silently wrong
             # output instead of failing — reject it up front
             raise ValueError(
-                f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
-                f"({req.max_new}) = {need} exceeds max_len={self.max_len}"
+                f"request {req.rid}: prompt ({plen}) + max_new "
+                f"({req.gen.max_new}) = {need} exceeds max_len={self.max_len}"
             )
+        # reject params that overflow the padded eos/stop tables up front
+        sample.validate_fits(req.gen, self.slot_spec)
+        # a resubmitted (finished) request starts over — its stream is a
+        # function of (engine seed, gen.seed, step), so the rerun
+        # reproduces the original output
+        req.output = []
+        req.finish_reason = None
+        req.first_token_tick = req.admit_tick = req.finish_tick = -1
         req.arrival_tick = self.ticks
         self.queue.append(req)
 
     # ------------------------------------------------------------ helpers
 
-    def _finish(self, i: int) -> None:
+    def _effective_prompt(self, req: Request) -> list[int]:
+        return list(req.prompt) or [self.bos_id]
+
+    def _seed_slot(self, i: int, req: Request) -> None:
+        """Admission-time packing: params row + history window."""
+        self.slot_params = sample.update_slot(
+            self.slot_spec, self.slot_params, i, req.gen
+        )
+        self._history[i] = -1
+        tail = self._effective_prompt(req)[-self._history.shape[1]:]
+        if tail:
+            self._history[i, -len(tail):] = tail
+
+    def _finish(self, i: int, reason: str) -> None:
         req = self.slots[i]
+        req.finish_reason = reason
         req.finish_tick = self.ticks
         self.done.append(req)
         self.slots[i] = None
         self.slot_phase[i] = "idle"
+
+    def _steps_array(self) -> jax.Array:
+        """Per-slot sample step index == tokens already emitted."""
+        return jnp.asarray(
+            [len(r.output) if r is not None else 0 for r in self.slots],
+            jnp.int32,
+        )
+
+    def _slot_params_now(self) -> sample.SlotParams:
+        return self.slot_params.replace(step=self._steps_array())
+
+    def _trim_stop(self, req: Request) -> None:
+        """Host-side identification of WHICH stop sequence the device-side
+        mask matched, so the matched suffix can be cut from the output
+        (matches may span the prompt/output boundary)."""
+        full = self._effective_prompt(req) + req.output
+        for s in sorted(map(list, req.gen.stop), key=len, reverse=True):
+            if len(full) >= len(s) and full[-len(s):] == s:
+                drop = min(len(s), len(req.output))
+                if drop:
+                    del req.output[-drop:]
+                return
+
+    def _push_history(self, i: int, tok: int) -> None:
+        self._history[i, :-1] = self._history[i, 1:]
+        self._history[i, -1] = tok
+
+    def _accept(self, i: int, tok: int, finished: bool) -> None:
+        """Fold one sampled token into slot ``i``'s request: emit it (or
+        swallow an EOS), and recycle the slot on any finish condition —
+        device-detected EOS/stop or the host-side max_new budget."""
+        req = self.slots[i]
+        if req.first_token_tick < 0:
+            req.first_token_tick = self.ticks
+        if finished and tok in req.gen.eos_ids:
+            self._finish(i, "eos")
+            return
+        req.output.append(tok)
+        self._events.append((req.rid, tok))
+        if self._on_token is not None:
+            self._on_token(req.rid, tok)
+        self._push_history(i, tok)
+        self._tokens[i, 0] = tok
+        if finished:
+            self._trim_stop(req)
+            self._finish(i, "stop")
+        elif len(req.output) >= req.gen.max_new:
+            self._finish(i, "length")
 
     def _admit(self) -> np.ndarray:
         """Fill every free slot from the queue; returns the reset mask."""
@@ -107,10 +278,9 @@ class ServeEngine:
                 req = self.queue.popleft()
                 req.admit_tick = self.ticks
                 self.slots[i] = req
-                # an empty prompt degenerates to the BOS-0 the wave
-                # scheduler feeds, keeping the two schedulers comparable
-                self.slot_pending[i] = deque(req.prompt or [0])
+                self.slot_pending[i] = deque(self._effective_prompt(req))
                 self.slot_phase[i] = "prefill"
+                self._seed_slot(i, req)
                 admit[i] = True
         return admit
 
@@ -118,6 +288,7 @@ class ServeEngine:
 
     def tick(self) -> bool:
         """One scheduling step.  Returns False when fully idle."""
+        self._events = []
         if self.scheduler == "wave":
             return self._tick_wave()
         admit = self._admit()
@@ -131,6 +302,8 @@ class ServeEngine:
         # ---- chunked prefill of every slot that still has prompt tokens
         pre_rows = [i for i in range(self.b) if self.slot_pending[i]]
         if pre_rows:
+            hist = jnp.asarray(self._history)
+            sp = self._slot_params_now()
             P = self.prefill_chunk
             tokens = np.zeros((self.b, P), np.int32)
             mask = np.zeros((self.b, P), bool)
@@ -139,46 +312,37 @@ class ServeEngine:
                 for j in range(take):
                     tokens[i, j] = self.slot_pending[i].popleft()
                     mask[i, j] = True
-            self.rng, sub = jax.random.split(self.rng)
-            nxt, _, self.cache = self.prefill_fn(
+            nxt, _, self.cache, fin = self.prefill_fn(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(mask), sub,
+                jnp.asarray(mask), sp, hist, self.rng,
             )
             self.prefill_calls += 1
-            nxt = np.asarray(nxt)
+            nxt, fin = np.asarray(nxt), np.asarray(fin)
             for i in pre_rows:
                 if self.slot_pending[i]:
                     continue  # more prompt chunks to go
-                req = self.slots[i]
-                tok = int(nxt[i, 0])  # first token, same call as the
-                req.output.append(tok)  # final prompt chunk (TTFT win)
-                req.first_token_tick = self.ticks
-                self._tokens[i, 0] = tok
+                # first token sampled in the SAME call as the final
+                # prompt chunk (TTFT win)
                 self.slot_phase[i] = "decode"
-                if len(req.output) >= req.max_new:
-                    self._finish(i)
+                self._accept(i, int(nxt[i, 0]), bool(fin[i]))
 
         # ---- one decode step for every generating slot
         dec = np.array(
-            [self.slot_phase[i] == "decode" for i in range(self.b)]
+            [self.slot_phase[i] == "decode" and self.slots[i] is not None
+             for i in range(self.b)]
         )
         if dec.any():
-            self.rng, sub = jax.random.split(self.rng)
-            nxt, _, self.cache = self.step_fn(
-                self.params, self.cache, jnp.asarray(self._tokens), sub,
-                jnp.asarray(dec),
+            nxt, _, self.cache, fin = self.step_fn(
+                self.params, self.cache, jnp.asarray(self._tokens),
+                self._slot_params_now(), jnp.asarray(self._history),
+                self.rng, jnp.asarray(dec),
             )
             self.decode_calls += 1
-            nxt = np.asarray(nxt)
+            nxt, fin = np.asarray(nxt), np.asarray(fin)
             for i in range(self.b):
                 if not dec[i]:
                     continue
-                req = self.slots[i]
-                tok = int(nxt[i, 0])
-                req.output.append(tok)
-                self._tokens[i, 0] = tok
-                if len(req.output) >= req.max_new:
-                    self._finish(i)
+                self._accept(i, int(nxt[i, 0]), bool(fin[i]))
         self.ticks += 1
         return True
 
@@ -200,21 +364,21 @@ class ServeEngine:
                 req = self.queue.popleft()
                 req.admit_tick = self.ticks
                 self.slots[i] = req
-                self.slot_pending[i] = deque(req.prompt)
-                self._tokens[i, 0] = self.slot_pending[i].popleft() \
-                    if self.slot_pending[i] else 0
+                self._seed_slot(i, req)
+                self.slot_pending[i] = deque(self._effective_prompt(req))
+                self._tokens[i, 0] = self.slot_pending[i].popleft()
 
     def _tick_wave(self) -> bool:
         self._refill_wave()
         if all(s is None for s in self.slots):
             return False
         self.busy_slot_ticks += sum(s is not None for s in self.slots)
-        self.rng, sub = jax.random.split(self.rng)
-        nxt, logits, self.cache = self.step_fn(
-            self.params, self.cache, jnp.asarray(self._tokens), sub,
+        nxt, _, self.cache, fin = self.step_fn(
+            self.params, self.cache, jnp.asarray(self._tokens),
+            self._slot_params_now(), jnp.asarray(self._history), self.rng,
         )
         self.decode_calls += 1
-        nxt = np.asarray(nxt)
+        nxt, fin = np.asarray(nxt), np.asarray(fin)
         for i, req in enumerate(self.slots):
             if req is None:
                 self._tokens[i, 0] = 0
@@ -224,13 +388,7 @@ class ServeEngine:
                 # ignore the model's suggestion
                 self._tokens[i, 0] = self.slot_pending[i].popleft()
                 continue
-            tok = int(nxt[i, 0])
-            if not req.output:
-                req.first_token_tick = self.ticks
-            req.output.append(tok)
-            self._tokens[i, 0] = tok
-            if len(req.output) >= req.max_new:
-                self._finish(i)
+            self._accept(i, int(nxt[i, 0]), bool(fin[i]))
         self.ticks += 1
         return True
 
@@ -256,8 +414,33 @@ class ServeEngine:
             "ttft_ticks_max": float(np.max(ttft)) if ttft else 0.0,
         }
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
-        ticks = 0
-        while self.tick() and ticks < max_ticks:
-            ticks += 1
+    # ------------------------------------------------------------ driving
+
+    def run_to_completion(
+            self, max_ticks: int = 10_000,
+            on_token: Callable[[int, int], None] | None = None,
+    ) -> list[Request]:
+        """Drive ticks until idle.  ``on_token(rid, token)`` is invoked for
+        every emitted token (streaming callback; EOS tokens are swallowed,
+        stop-sequence tokens stream raw before the final output is
+        trimmed)."""
+        self._on_token = on_token
+        try:
+            ticks = 0
+            while self.tick() and ticks < max_ticks:
+                ticks += 1
+        finally:
+            self._on_token = None
         return self.done
+
+    def stream(self, max_ticks: int = 10_000) -> Iterator[tuple[int, int]]:
+        """Iterator form of :meth:`run_to_completion`: yields
+        ``(rid, token)`` in emission order, interleaved across the batch,
+        driving one engine tick per drained burst."""
+        ticks = 0
+        while ticks <= max_ticks:
+            alive = self.tick()
+            yield from self._events
+            if not alive:
+                return
+            ticks += 1

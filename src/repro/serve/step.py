@@ -1,28 +1,66 @@
-"""Serve (decode) step: one new token per sequence against a live KV/state
-cache.  This is what the ``decode_*`` / ``long_*`` dry-run cells lower.
+"""Serve (decode) and chunked-prefill step builders.
+
+Steps take a :class:`repro.sample.SlotParams` SoA (per-slot device
+sampling parameters) instead of a build-time ``greedy`` flag: ONE jitted
+trace serves a batch mixing greedy, temperature/top-p, min-p, and
+stop-sequence requests, and never retraces between ticks (pinned by
+``tests/test_sampling.py``).  Each step returns the sampled next tokens,
+the logits, the advanced cache, and a per-slot ``finished`` mask
+(EOS / stop-sequence termination, computed device-side by
+``repro.sample.check_finished``).
 
 Backend selection is NOT done here: the decode path dispatches its scoring
 stage through ``repro.backend`` (the same registry train and bench use), so
-serving exercises identical selection logic.  ``make_serve_step`` resolves
-the backend once up front purely to fail fast on impossible requests (e.g.
-a config pinned to an unregistered backend) and to let callers log it.
+serving exercises identical selection logic.  The builders resolve the
+backend once up front purely to fail fast on impossible requests (e.g. a
+config pinned to an unregistered backend) and to let callers log it.
+
+``make_serve_step(cfg, prec, greedy=...)`` (pre-GenerationParams API) is
+kept as a deprecation shim: it returns a step with the OLD
+``(params, cache, token_t, rng[, slot_mask])`` signature that packs the
+equivalent ``GenerationParams`` internally — greedy=True is
+temperature 0, greedy=False a shared temperature-1 categorical.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro import backend as attention_backend
+from repro import sample
 from repro.models import api
 from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
 
 
 def make_serve_step(cfg: ModelConfig, prec: Precision,
-                    greedy: bool = True) -> Callable:
+                    greedy: bool | None = None) -> Callable:
+    """Build the one-token decode step.
+
+    New contract (``greedy`` unset)::
+
+        step(params, cache, token_t (B,1), slot_params: SlotParams,
+             history (B,H) int32, rng, slot_mask (B,)|None)
+          -> (next_token (B,1) int32, logits (B,1,V), new_cache,
+              finished (B,) bool)
+
+    ``rng`` is the engine's BASE key (constant across ticks); per-slot
+    streams come from folding in each slot's request seed and sample step.
+    ``slot_mask``: False rows (empty / prefilling slots) produce garbage
+    tokens the engine ignores and leave their cache rows untouched.
+    """
+    if greedy is not None:
+        warnings.warn(
+            "make_serve_step(greedy=...) is deprecated; build the step "
+            "without `greedy` and pass a repro.sample.SlotParams batch "
+            "(greedy == temperature 0) instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        return _make_legacy_step(cfg, prec, bool(greedy), prefill=False)
     # Resolving here fails fast (KeyError) on an unregistered
     # cfg.zeta.backend at build time rather than from inside the jitted
     # decode trace.  The name is the f32 resolution for logging; the decode
@@ -30,39 +68,48 @@ def make_serve_step(cfg: ModelConfig, prec: Precision,
     # capability-fall-back (with a warning) at trace time.
     resolved = attention_backend.resolve_name(cfg)
 
-    def serve_step(params, cache, token_t: jax.Array, rng: jax.Array,
-                   slot_mask: jax.Array | None = None):
-        """token_t: (B, 1) -> (next_token (B, 1), logits, new_cache).
-
-        ``slot_mask``: (B,) bool — False rows (empty / prefilling slots)
-        produce garbage tokens the engine ignores and leave their cache
-        rows untouched."""
+    def serve_step(params, cache, token_t: jax.Array,
+                   slot_params: sample.SlotParams, history: jax.Array,
+                   rng: jax.Array, slot_mask: jax.Array | None = None):
+        serve_step.traces += 1  # trace-time only: retrace detector
         logits, new_cache = api.decode_step(
             params, cache, token_t, cfg, prec, slot_mask
         )
-        if greedy:
-            nxt = jnp.argmax(logits[:, -1:], axis=-1)
-        else:
-            nxt = jax.random.categorical(rng, logits[:, -1:])
-        return nxt.astype(jnp.int32), logits, new_cache
+        nxt = sample.sample_logits(logits[:, -1], slot_params, rng, history)
+        finished = sample.check_finished(slot_params, history, nxt)
+        return nxt[:, None], logits, new_cache, finished
 
+    serve_step.traces = 0
     serve_step.attention_backend = resolved
     return serve_step
 
 
 def make_prefill_step(cfg: ModelConfig, prec: Precision,
-                      greedy: bool = True) -> Callable:
+                      greedy: bool | None = None) -> Callable:
     """Chunked-prefill step: ingest up to P prompt tokens per slot in one
-    model call and propose each slot's first generated token from the
+    model call and SAMPLE each slot's first generated token from the
     logits at its last valid position (so a request whose prompt fits in
     the chunk gets its first token out of the SAME call — that is the
-    time-to-first-token win over prefill-as-decode)."""
+    time-to-first-token win over prefill-as-decode).  Same SlotParams /
+    history / finished contract as :func:`make_serve_step`.
+    """
+    if greedy is not None:
+        warnings.warn(
+            "make_prefill_step(greedy=...) is deprecated; build the step "
+            "without `greedy` and pass a repro.sample.SlotParams batch "
+            "(greedy == temperature 0) instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        return _make_legacy_step(cfg, prec, bool(greedy), prefill=True)
     resolved = attention_backend.resolve_name(cfg)
 
     def prefill_step(params, cache, tokens: jax.Array,
-                     token_mask: jax.Array, rng: jax.Array):
+                     token_mask: jax.Array,
+                     slot_params: sample.SlotParams, history: jax.Array,
+                     rng: jax.Array):
         """tokens/token_mask: (B, P) -> (next_token (B, 1),
-        last_logits (B, 1, V), new_cache)."""
+        last_logits (B, 1, V), new_cache, finished (B,))."""
+        prefill_step.traces += 1
         logits, new_cache = api.prefill(
             params, cache, tokens, cfg, prec, token_mask=token_mask
         )
@@ -71,11 +118,59 @@ def make_prefill_step(cfg: ModelConfig, prec: Precision,
         last_logits = jnp.take_along_axis(
             logits, last[:, None, None], axis=1
         )                                                      # (B, 1, V)
-        if greedy:
-            nxt = jnp.argmax(last_logits, axis=-1)
-        else:
-            nxt = jax.random.categorical(rng, last_logits)
-        return nxt.astype(jnp.int32), last_logits, new_cache
+        nxt = sample.sample_logits(
+            last_logits[:, 0], slot_params, rng, history
+        )
+        finished = sample.check_finished(slot_params, history, nxt)
+        return nxt[:, None], last_logits, new_cache, finished
 
+    prefill_step.traces = 0
     prefill_step.attention_backend = resolved
     return prefill_step
+
+
+def _make_legacy_step(cfg: ModelConfig, prec: Precision, greedy: bool,
+                      *, prefill: bool) -> Callable:
+    """Old-signature shim over the SlotParams step: every slot gets the
+    same GenerationParams (temperature 0 for greedy, else 1), zero
+    history, and the caller-supplied rng as the base key.  Greedy output
+    is token-for-token identical to the new path (parity pinned by
+    ``tests/test_sampling.py``); the sampled path draws from the same
+    temperature-1 categorical but a different stream than the pre-shim
+    code (shared `categorical(rng, ...)` became per-slot fold-in)."""
+    gp = sample.GenerationParams(temperature=0.0 if greedy else 1.0)
+
+    def _sp(batch: int) -> sample.SlotParams:
+        # distinct per-row seeds keep the sampled shim's batch rows
+        # decorrelated, like the shared-categorical path it replaces
+        return sample.pack(
+            sample.slot_spec(batch),
+            [gp.replace(seed=i) for i in range(batch)],
+        )
+
+    if prefill:
+        new_step = make_prefill_step(cfg, prec)
+
+        def prefill_step(params, cache, tokens, token_mask, rng):
+            B = tokens.shape[0]
+            hist = jnp.full((B, 8), -1, jnp.int32)
+            nxt, last_logits, new_cache, _fin = new_step(
+                params, cache, tokens, token_mask, _sp(B), hist, rng
+            )
+            return nxt, last_logits, new_cache
+
+        prefill_step.attention_backend = new_step.attention_backend
+        return prefill_step
+
+    new_step = make_serve_step(cfg, prec)
+
+    def serve_step(params, cache, token_t, rng, slot_mask=None):
+        B = token_t.shape[0]
+        hist = jnp.full((B, 8), -1, jnp.int32)
+        nxt, logits, new_cache, _fin = new_step(
+            params, cache, token_t, _sp(B), hist, rng, slot_mask
+        )
+        return nxt, logits, new_cache
+
+    serve_step.attention_backend = new_step.attention_backend
+    return serve_step

@@ -1,0 +1,396 @@
+"""Device-side sampling subsystem tests (repro.sample + serve integration).
+
+Pins the request-level generation contract:
+
+1. the sampler pipeline against NumPy references — temperature-0 ==
+   argmax, top-k/top-p/min-p filter sets, repetition-penalty
+   monotonicity;
+2. per-request seed reproducibility: outputs are a function of
+   (engine seed, request seed, prompt), never of slot placement or
+   admission order;
+3. EOS / stop-sequence termination mid-batch without perturbing
+   neighbour slots;
+4. ONE jitted step for heterogeneous batches — greedy, temperature/
+   top-p, min-p, stop-sequence requests in the same tick with no retrace
+   (trace-count assertion), and a heterogeneous batch equals per-request
+   sequential runs token-for-token;
+5. the deprecated greedy shims (`ServeEngine(greedy=...)`,
+   `make_serve_step(cfg, prec, greedy=...)`) match the new path
+   token-for-token.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sample
+from repro.api import generate
+from repro.models import api
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.nn.module import F32
+from repro.sample import GenerationParams
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.step import make_serve_step
+
+PREC = F32
+MAXLEN = 32
+
+
+def _zeta_cfg():
+    return ModelConfig(name="z", vocab=64, d_model=32, n_layers=2,
+                       n_heads=4, n_kv_heads=2, d_ff=64,
+                       zeta=ZetaConfig(d_k=3, k=4, num_chunks=4))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _zeta_cfg()
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(params, cfg, slots=2, **kw):
+    kw.setdefault("prefill_chunk", 4)
+    return ServeEngine(params, cfg, PREC, batch_slots=slots,
+                       max_len=MAXLEN, **kw)
+
+
+def _run(params, cfg, reqs, slots=2, **kw):
+    eng = _engine(params, cfg, slots, **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_to_completion()
+    assert len(done) == len(reqs)
+    return {r.rid: r for r in done}, eng
+
+
+# ------------------------------------------------- sampler vs numpy refs
+
+
+def _sp(gps, **spec_kw):
+    spec = sample.slot_spec(len(gps), **spec_kw)
+    return sample.pack(spec, gps)
+
+
+def test_temperature_zero_is_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 32)) * 3
+    sp = _sp([GenerationParams(),                       # plain greedy
+              GenerationParams(top_k=5),                # filters keep argmax
+              GenerationParams(top_p=0.5),
+              GenerationParams(min_p=0.3)])
+    hist = jnp.full((4, 8), -1, jnp.int32)
+    tok = sample.sample_logits(logits, sp, jax.random.PRNGKey(0), hist)
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(logits, -1))
+    )
+
+
+def _np_allowed(logits, temperature, top_k, top_p, min_p):
+    """NumPy reference of the keep-mask (ties at thresholds kept)."""
+    V = logits.shape[-1]
+    t = temperature if temperature > 0 else 1.0
+    scaled = logits / t
+    keep = np.ones(V, bool)
+    if top_k > 0:
+        kth = np.sort(scaled)[::-1][min(top_k, V) - 1]
+        keep &= scaled >= kth
+    if top_p < 1.0:
+        order = np.argsort(-scaled)
+        p = np.exp(scaled - scaled.max())
+        p /= p.sum()
+        cum = np.cumsum(p[order])
+        nucleus = (cum - p[order]) < top_p
+        thr = np.min(np.where(nucleus, scaled[order], np.inf))
+        keep &= scaled >= thr
+    if min_p > 0:
+        p = np.exp(scaled - scaled.max())
+        p /= p.sum()
+        keep &= p >= min_p * p.max()
+    return keep
+
+
+@pytest.mark.parametrize("gp", [
+    GenerationParams(temperature=1.0, top_k=3),
+    GenerationParams(temperature=0.7, top_p=0.6),
+    GenerationParams(temperature=1.3, min_p=0.15),
+    GenerationParams(temperature=0.9, top_k=8, top_p=0.8, min_p=0.05),
+], ids=["topk", "topp", "minp", "combined"])
+def test_filtering_matches_numpy_reference(gp):
+    logits = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(2), (3, 24)) * 2.5, np.float32
+    )
+    sp = _sp([gp] * 3)
+    hist = jnp.full((3, 8), -1, jnp.int32)
+    masked = np.asarray(sample.filter_logits(jnp.asarray(logits), sp, hist))
+    for b in range(3):
+        want = _np_allowed(logits[b], gp.temperature, gp.top_k, gp.top_p,
+                           gp.min_p)
+        got = np.isfinite(masked[b])
+        np.testing.assert_array_equal(got, want)
+        # surviving logits pass through unchanged (penalty off)
+        np.testing.assert_allclose(masked[b][got], logits[b][want],
+                                   rtol=1e-6)
+
+
+def test_repetition_penalty_monotonic():
+    """The penalised token's probability strictly decreases as the
+    penalty grows; unseen tokens are untouched."""
+    logits = jnp.asarray([[2.0, 1.0, 0.5, -1.0]])
+    hist = jnp.asarray([[-1, -1, 0, 3]], jnp.int32)  # tokens 0 and 3 seen
+    probs = []
+    for pen in (1.0, 1.3, 1.7, 2.5):
+        sp = _sp([GenerationParams(temperature=1.0,
+                                   repetition_penalty=pen)])
+        masked = sample.filter_logits(logits, sp, hist)
+        p = np.asarray(jax.nn.softmax(masked, -1))[0]
+        probs.append(p)
+    for lo, hi in zip(probs, probs[1:]):
+        assert hi[0] < lo[0]          # positive-logit seen token: divided
+        assert hi[3] < lo[3]          # negative-logit seen token: multiplied
+    # penalty=1.0 is a no-op
+    np.testing.assert_allclose(
+        probs[0], np.asarray(jax.nn.softmax(logits, -1))[0], rtol=1e-6
+    )
+
+
+# ------------------------------------------- engine-level reproducibility
+
+
+def _mixed_reqs():
+    return [
+        Request(rid=0, prompt=[1, 2, 3],
+                gen=GenerationParams(max_new=5)),                # greedy
+        Request(rid=1, prompt=[7, 8],
+                gen=GenerationParams(temperature=0.9, top_p=0.9, seed=3,
+                                     max_new=4)),
+        Request(rid=2, prompt=[9, 10, 11, 12, 13],
+                gen=GenerationParams(temperature=1.2, top_k=8, seed=5,
+                                     max_new=6)),
+        Request(rid=3, prompt=[4],
+                gen=GenerationParams(temperature=1.0, min_p=0.1,
+                                     repetition_penalty=1.2, seed=7,
+                                     max_new=4)),
+    ]
+
+
+def test_seed_reproducible_under_shuffled_slots(model):
+    """Same requests, different admission orders and slot counts ->
+    bit-identical per-request outputs (per-slot RNG folds in the REQUEST
+    seed and step, never the slot index or tick)."""
+    cfg, params = model
+    base, _ = _run(params, cfg, _mixed_reqs(), slots=2)
+    shuffled, _ = _run(params, cfg, list(reversed(_mixed_reqs())), slots=3)
+    for rid in range(4):
+        assert base[rid].output == shuffled[rid].output
+    # resubmitting into a FRESH engine with the same engine seed also
+    # reproduces (satellite: seed constructor argument)
+    again, _ = _run(params, cfg, _mixed_reqs(), slots=2)
+    for rid in range(4):
+        assert base[rid].output == again[rid].output
+    # ... and a different engine seed changes sampled streams
+    other, _ = _run(params, cfg, _mixed_reqs(), slots=2, seed=123)
+    assert base[0].output == other[0].output  # greedy: seed-independent
+    assert any(base[r].output != other[r].output for r in (1, 2, 3))
+
+
+def test_heterogeneous_batch_equals_sequential(model):
+    """A batch mixing greedy / top-p / top-k / min-p requests produces
+    exactly what each request produces running alone in its own engine."""
+    cfg, params = model
+    batch, _ = _run(params, cfg, _mixed_reqs(), slots=4)
+    for req in _mixed_reqs():
+        solo, _ = _run(params, cfg, [req], slots=1)
+        assert solo[req.rid].output == batch[req.rid].output
+
+
+def test_one_trace_for_heterogeneous_batch(model):
+    """The jit trace-count assertion: mixed greedy + sampled + stop
+    requests, admitted mid-flight, never retrace the decode or prefill
+    step."""
+    cfg, params = model
+    reqs = _mixed_reqs()
+    reqs.append(Request(rid=4, prompt=[5, 6],
+                        gen=GenerationParams(temperature=0.8, seed=11,
+                                             stop=((9, 9),), max_new=5)))
+    _, eng = _run(params, cfg, reqs, slots=2)
+    assert eng.decode_traces == 1
+    assert eng.prefill_traces == 1
+
+
+# ------------------------------------------------- EOS / stop termination
+
+
+def test_eos_terminates_midbatch_neighbour_unaffected(model):
+    cfg, params = model
+    solo, _ = _run(params, cfg,
+                   [Request(rid=0, prompt=[7, 8],
+                            gen=GenerationParams(max_new=6))], slots=1)
+    base = solo[0].output
+    assert solo[0].finish_reason == "length"
+    eos = base[3]
+    cut = base.index(eos)  # EOS fires at its FIRST occurrence
+    neighbour = Request(rid=1, prompt=[1, 2, 3],
+                        gen=GenerationParams(max_new=8))
+    nsolo, _ = _run(params, cfg, [neighbour], slots=1)
+    got, _ = _run(params, cfg, [
+        Request(rid=0, prompt=[7, 8],
+                gen=GenerationParams(max_new=6, eos_ids=(eos,))),
+        Request(rid=1, prompt=[1, 2, 3], gen=GenerationParams(max_new=8)),
+    ], slots=2)
+    assert got[0].output == base[:cut]          # EOS token swallowed
+    assert got[0].finish_reason == "eos"
+    assert got[1].output == nsolo[1].output     # neighbour untouched
+    assert got[1].finish_reason == "length"
+
+
+def test_stop_sequence_trimmed_midbatch(model):
+    cfg, params = model
+    solo, _ = _run(params, cfg,
+                   [Request(rid=0, prompt=[7, 8],
+                            gen=GenerationParams(max_new=6))], slots=1)
+    base = solo[0].output
+    st = tuple(base[1:3])
+    first = next(j for j in range(len(base) - 1)
+                 if tuple(base[j:j + 2]) == st)
+    neighbour = Request(rid=1, prompt=[1, 2, 3],
+                        gen=GenerationParams(max_new=8))
+    nsolo, _ = _run(params, cfg, [neighbour], slots=1)
+    got, _ = _run(params, cfg, [
+        Request(rid=0, prompt=[7, 8],
+                gen=GenerationParams(max_new=6, stop=(st,))),
+        Request(rid=1, prompt=[1, 2, 3], gen=GenerationParams(max_new=8)),
+    ], slots=2)
+    assert got[0].output == base[:first]        # matched suffix trimmed
+    assert got[0].finish_reason == "stop"
+    assert got[1].output == nsolo[1].output
+
+
+def test_empty_prompt_needs_bos(model):
+    cfg, params = model
+    eng = _engine(params, cfg)
+    with pytest.raises(ValueError, match="bos_id"):
+        eng.submit(Request(rid=0, prompt=[], max_new=2))
+    # engine-level override
+    eng2 = _engine(params, cfg, slots=1, bos_id=1)
+    eng2.submit(Request(rid=0, prompt=[], max_new=2))
+    done = eng2.run_to_completion()
+    assert len(done[0].output) == 2
+    # config-level default
+    eng3 = ServeEngine(params, cfg.replace(bos_id=1), PREC, batch_slots=1,
+                       max_len=MAXLEN, prefill_chunk=4)
+    eng3.submit(Request(rid=0, prompt=[], max_new=2))
+    assert eng3.run_to_completion()[0].output == done[0].output
+
+
+# --------------------------------------------------- facade + deprecation
+
+
+def test_generate_facade_and_streaming(model):
+    cfg, params = model
+    stream: list[tuple[int, int]] = []
+    res = generate(
+        params, cfg, [[1, 2, 3], [7, 8]],
+        [GenerationParams(max_new=4),
+         GenerationParams(max_new=4, temperature=0.9, seed=3)],
+        max_len=MAXLEN,
+        on_token=lambda rid, t: stream.append((rid, t)),
+    )
+    assert [r.rid for r in res] == [0, 1]
+    assert all(r.finish_reason == "length" for r in res)
+    assert len(stream) == sum(len(r.tokens) for r in res)
+    # engine-level iterator emits the same tokens in order per request
+    eng = _engine(params, cfg)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3],
+                       gen=GenerationParams(max_new=4)))
+    assert [t for rid, t in eng.stream()] == res[0].tokens
+
+
+def test_greedy_shim_parity(model):
+    """Deprecated greedy paths == new GenerationParams path,
+    token-for-token."""
+    cfg, params = model
+    new, _ = _run(params, cfg,
+                  [Request(rid=0, prompt=[1, 2, 3],
+                           gen=GenerationParams(max_new=6))], slots=1)
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(params, cfg, PREC, batch_slots=1, max_len=MAXLEN,
+                          greedy=True, prefill_chunk=4)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=6))
+    old = eng.run_to_completion()
+    assert old[0].output == new[0].output
+
+    # old step-builder signature: token-by-token greedy decode loop
+    with pytest.warns(DeprecationWarning):
+        legacy = jax.jit(make_serve_step(cfg, PREC, greedy=True))
+    cache = api.cache_init(cfg, 1, MAXLEN, jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    toks = []
+    cur = jnp.asarray([[1]], jnp.int32)
+    for t in [2, 3]:  # feed prompt
+        _, _, cache = legacy(params, cache, cur, rng)
+        cur = jnp.asarray([[t]], jnp.int32)
+    for _ in range(6):
+        cur, _, cache = legacy(params, cache, cur, rng)
+        toks.append(int(cur[0, 0]))
+    assert toks == new[0].output
+
+
+def test_generation_params_validation():
+    with pytest.raises(ValueError):
+        GenerationParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        GenerationParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        GenerationParams(min_p=1.0)
+    with pytest.raises(ValueError):
+        GenerationParams(repetition_penalty=0.0)
+    with pytest.raises(ValueError):
+        GenerationParams(max_new=0)
+    with pytest.raises(ValueError):
+        GenerationParams(stop=((),))
+    # capacity overflow rejected at submit time
+    spec = sample.slot_spec(1, max_stops=1, max_stop_len=2)
+    with pytest.raises(ValueError, match="max_stop_len"):
+        sample.validate_fits(
+            GenerationParams(stop=((1, 2, 3),)), spec
+        )
+    # conflicting deprecated max_new vs gen.max_new rejected
+    with pytest.raises(ValueError, match="conflicting budgets"):
+        Request(rid=0, prompt=[1], max_new=5,
+                gen=GenerationParams(max_new=50))
+    # matching values are fine
+    assert Request(rid=0, prompt=[1], max_new=5,
+                   gen=GenerationParams(max_new=5)).max_new == 5
+    # negative ids collide with the -1 pad sentinel and are rejected
+    with pytest.raises(ValueError, match="eos_ids"):
+        GenerationParams(eos_ids=(-1,))
+    with pytest.raises(ValueError, match="stop token ids"):
+        GenerationParams(stop=((-1, 5),))
+
+
+def test_resubmitted_request_reproduces(model):
+    """Submitting the SAME Request object again (after it finished) resets
+    its mutable state and reproduces the original output — streams are a
+    function of (engine seed, request seed, step), not engine history."""
+    cfg, params = model
+    eng = _engine(params, cfg)
+    req = Request(rid=0, prompt=[1, 2, 3],
+                  gen=GenerationParams(temperature=0.8, seed=4, max_new=5))
+    eng.submit(req)
+    first = list(eng.run_to_completion()[0].output)
+    eng.done.clear()
+    eng.submit(req)
+    eng.run_to_completion()
+    assert req.output == first
+    assert len(req.output) == 5
+
+
+def test_wave_oracle_matches_continuous_sampled(model):
+    """The legacy wave scheduler is still an equivalence oracle under
+    SAMPLED decoding: per-request streams are scheduler-independent."""
+    cfg, params = model
+    outs = {}
+    for sched in ("wave", "continuous"):
+        got, _ = _run(params, cfg, _mixed_reqs(), slots=2, scheduler=sched)
+        outs[sched] = {rid: got[rid].output for rid in got}
+    assert outs["wave"] == outs["continuous"]
