@@ -1,0 +1,40 @@
+"""Gathered-vs-fused scoring sweep (BENCH_fused_scoring.json).
+
+Thin suite wrapper so ``benchmarks/run.py --only fused`` (fast set) can
+drive the sweep that lives next to the other selection-core benches in
+``benchmarks/selection.py::run_fused`` — wall time and compiled peak
+temp-buffer bytes of the materializing xla scorer vs the fused
+index-gather kernel over (N, k).
+
+    PYTHONPATH=src python benchmarks/fused_scoring.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks.selection import run_fused  # noqa: E402
+
+
+def run(smoke: bool = False, out_path: str | None = None):
+    yield from run_fused(smoke=smoke, out_path=out_path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="2 iters (CI)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke, out_path=args.out):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

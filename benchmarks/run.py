@@ -33,10 +33,13 @@ SUITES = {
     "selection": ("benchmarks.selection",
                   "selection core: train vs prefill vs decode tokens/s "
                   "(BENCH_selection.json)"),
+    "fused": ("benchmarks.fused_scoring",
+              "scoring stage: gathered vs fused index-gather, time + peak "
+              "temp memory (BENCH_fused_scoring.json)"),
 }
 
 FAST_DEFAULT = ["parity", "fig3", "tab3", "tab4", "recall", "roofline",
-                "serve", "selection"]
+                "serve", "selection", "fused"]
 ALL = list(SUITES)
 
 

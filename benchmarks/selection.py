@@ -1,14 +1,23 @@
-"""Selection-core microbenchmark: train vs prefill vs decode tokens/s for
-one ZETA attention layer.
+"""Selection-core microbenchmarks.
 
-The three execution modes are one implementation (`repro.core.selection`),
-so this benchmark tracks the per-mode cost of that shared core from day
-one: full-sequence train-mode attention, chunked prefill ingestion, and
-token-by-token decode, all through the real `nn/attention.py` layer entry
-points (projections included).  Writes the machine-readable summary to
-``BENCH_selection.json`` (CI uploads it as a build artifact).
+1. Train vs prefill vs decode tokens/s for one ZETA attention layer: the
+   three execution modes are one implementation (`repro.core.selection`),
+   so this tracks the per-mode cost of that shared core through the real
+   `nn/attention.py` layer entry points (projections included).  Writes
+   ``BENCH_selection.json`` (CI uploads it as a build artifact).
+
+2. Gathered-vs-fused scoring sweep (``run_fused``, the
+   ``benchmarks/fused_scoring.py`` suite): the materializing xla scorer
+   against the fused index-gather kernel over (N, k) — wall time of a
+   jitted fwd+bwd scoring step plus the compiled executable's peak
+   temp-buffer bytes from XLA's memory analysis.  The memory column is
+   the tentpole claim: the (N, K, d) candidate tensor never hits HBM on
+   the fused path.  Writes ``BENCH_fused_scoring.json``.  Off-TPU the
+   fused kernel runs in Pallas interpret mode, so wall time is only
+   meaningful compiled; the memory analysis is device-independent.
 
     PYTHONPATH=src python benchmarks/selection.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/fused_scoring.py [--smoke] [--out PATH]
 """
 
 from __future__ import annotations
@@ -116,6 +125,94 @@ def run(smoke: bool = False, out_path: str | None = None):
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     yield f"selection_json,0,{out_path}"
+
+
+# ------------------------------------------------- gathered vs fused sweep
+
+
+def _scoring_inputs(n, k, dk=3, dv=64, f=1, groups=1, seed=0):
+    """Train-shaped scoring-stage inputs: token-layout K/V with the
+    history-mean fold's full 2N rows (train appends one cumulative-mean
+    row per position), + random candidate indices.  Using the real
+    train-mode Nkv keeps the fused kernel's VMEM-residency guard honest —
+    a silent fallback to the materializing path would show up as the
+    temp-memory gap collapsing."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    nkv = 2 * n                                   # + folded mean rows
+    q = jnp.tanh(jax.random.normal(ks[0], (f, groups, n, dk)))
+    kt = jnp.tanh(jax.random.normal(ks[1], (f, nkv, dk)))
+    vt = jax.random.normal(ks[2], (f, nkv, dv))
+    idx = jax.random.randint(ks[3], (f, groups, n, k + 1), 0, nkv)
+    valid = jax.random.bernoulli(ks[4], 0.9, idx.shape)
+    gamma2 = jnp.asarray(0.5)
+    return q, kt, vt, idx, valid, gamma2
+
+
+def _scoring_step(scorer, idx, valid):
+    def step(q, kt, vt, gamma2):
+        out = scorer(q, kt, vt, idx, valid, gamma2)
+        return jnp.sum(out * out)
+    return jax.jit(jax.value_and_grad(step, argnums=(0, 1, 2, 3)))
+
+
+def _measure(fn, args, iters):
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(compiled(*args))
+    wall = (time.perf_counter() - t0) / iters
+    return {
+        "wall_s": wall,
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+    }
+
+
+def run_fused(smoke: bool = False, out_path: str | None = None):
+    """Gathered-vs-fused sweep over (N, k): fwd+bwd wall time and compiled
+    peak temp memory.  Yields CSV rows; writes BENCH_fused_scoring.json."""
+    from repro.backend import registry
+
+    iters = 2 if smoke else 5
+    sweep = ([(1024, 16), (4096, 16)] if smoke else
+             [(1024, 16), (2048, 32), (4096, 32), (8192, 32)])
+    gathered = registry.get_backend("xla").gathered_idx
+    fused = registry.get_backend("pallas_fused").gathered_idx
+    rows = []
+    for n, k in sweep:
+        q, kt, vt, idx, valid, gamma2 = _scoring_inputs(n, k)
+        entry = {"n": n, "k": k, "d_v": vt.shape[-1]}
+        for name, scorer in (("gathered", gathered), ("fused", fused)):
+            fn = _scoring_step(scorer, idx, valid)
+            entry[name] = _measure(fn, (q, kt, vt, gamma2), iters)
+            yield (f"fused_scoring_{name}_N{n}_k{k},"
+                   f"{1e6 * entry[name]['wall_s']:.0f},"
+                   f"temp_bytes={entry[name]['temp_bytes']}")
+        gb, fb = entry["gathered"]["temp_bytes"], entry["fused"]["temp_bytes"]
+        entry["temp_ratio"] = (gb / fb) if fb > 0 else None
+        rows.append(entry)
+    results = {
+        "sweep": rows,
+        "meta": {
+            "iters": iters,
+            "step": "jitted fwd+bwd of the scoring stage "
+                    "(grads wrt q, K, V, gamma2)",
+            "backend_gathered": "xla (materializing take_along_axis)",
+            "backend_fused": "pallas_fused (in-kernel index gather)",
+            "note": "off-TPU the fused kernel runs in Pallas interpret "
+                    "mode; wall_s is only meaningful compiled, "
+                    "temp_bytes is device-independent",
+        },
+    }
+    out_path = out_path or os.path.join(
+        os.getcwd(), "BENCH_fused_scoring.json"
+    )
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    yield f"fused_scoring_json,0,{out_path}"
 
 
 def main() -> None:

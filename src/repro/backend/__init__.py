@@ -4,6 +4,8 @@ Public surface:
 
   attention(q, k, v, cfg, gamma2=...)   — select a backend and run it
   gathered_attention(...)               — dispatch only the scoring stage
+  gathered_idx_attention(...)           — index-gather scoring stage
+                                          (fused gather; XLA fallback)
   register_backend(name, fn, caps)      — add a backend
   list_backends() / get_backend(name)   — introspection
   available_backends(request)           — capability-filtered, ranked
@@ -24,6 +26,7 @@ from repro.backend.registry import (  # noqa: F401
     current_device,
     default_interpret,
     gathered_attention,
+    gathered_idx_attention,
     get_backend,
     list_backends,
     register_backend,

@@ -1,14 +1,22 @@
-"""Stock backend registrations: reference / xla / pallas / flash.
+"""Stock backend registrations: reference / xla / pallas / pallas_fused /
+flash.
 
-  reference — naive oracles from core/ref.py; always available, slow, the
-              ground truth every other backend is paritied against.
-  xla       — the pure-XLA ZETA pipeline (gather + masked Cauchy scoring
-              with the bf16-cotangent-pinned weighted sum).  Default off-TPU.
-  pallas    — same pipeline but the scoring stage runs the fused Pallas
-              kernel (kernels/cauchy_topk.py).  Compiled on TPU, interpret
-              mode elsewhere.  Default on TPU.
-  flash     — blocked online-softmax dense attention (kernels/flash.py),
-              the paper's full-attention baseline.  Softmax mechanism only.
+  reference    — naive oracles from core/ref.py; always available, slow,
+                 the ground truth every other backend is paritied against.
+  xla          — the pure-XLA ZETA pipeline (gather + masked Cauchy scoring
+                 with the bf16-cotangent-pinned weighted sum).  Default
+                 off-TPU.
+  pallas       — same pipeline but the scoring stage runs the fused Cauchy
+                 kernel on *materialized* gathered candidates
+                 (kernels/cauchy_topk.py).  Compiled on TPU, interpret
+                 mode elsewhere.
+  pallas_fused — the index-gather kernel (kernels/cauchy_topk_fused.py):
+                 the candidate gather happens inside the kernel against
+                 VMEM-resident K/V, so no (N, K, d) candidate tensor ever
+                 hits HBM.  Highest priority; default on TPU.
+  flash        — blocked online-softmax dense attention (kernels/flash.py),
+                 the paper's full-attention baseline.  Softmax mechanism
+                 only.
 
 New backends (sharded, sequence-parallel, ...) are single
 ``register_backend`` calls following the same pattern.
@@ -32,8 +40,34 @@ from repro.core.attention import (
     zeta_attention,
     zeta_attention_noncausal,
 )
+from repro.core.selection import gather_tokens
 
 _CAUCHY_ONLY = ("cauchy",)
+
+# The fused kernel's per-grid-step VMEM footprint: one KV head's K/V
+# block resident + the query-tile buffers (which scale with K and
+# block_n).  Beyond this budget (long-context decode caches, very large
+# k) the wrapper falls back to the XLA index-gather scorer instead of
+# overflowing VMEM.  Sized so the paper's flagship train shape STAYS
+# fused: history_mean doubles the rows, so f32 N=8192 / d_k=3 / d_v=128 /
+# K=33 is ≈ 8.2 MiB resident + ≈ 4.6 MiB tile ≈ 12.8 MiB, inside a v5e
+# core's ~16 MiB VMEM (docs/ARCHITECTURE.md §2a has the math).
+_FUSED_VMEM_BUDGET = 14 * 2**20  # bytes
+
+
+def fits_fused_residency(kt, vt, kk: int = 0,
+                         block_n: int | None = None) -> bool:
+    """True iff the fused kernel's per-grid-step VMEM — the resident
+    (Nkv, d_k) + (Nkv, d_v) KV-head block plus the (block_n, K)-scaled
+    query-tile buffers (f32 compute) — fits the budget."""
+    from repro.kernels.cauchy_topk import DEFAULT_BLOCK_N
+
+    nkv, dk = kt.shape[-2:]
+    dv = vt.shape[-1]
+    resident = nkv * (dk * kt.dtype.itemsize + dv * vt.dtype.itemsize)
+    bn = block_n or DEFAULT_BLOCK_N
+    tile = bn * (kk * (dk + dv + 2) + dk + dv) * 4
+    return resident + tile <= _FUSED_VMEM_BUDGET
 
 
 def _flatten_fnkd(q, k_sel, v_sel, valid, gamma2):
@@ -105,6 +139,65 @@ def _gathered_xla(q, k_sel, v_sel, valid, gamma2, *, score: str = "cauchy"):
     return score_gathered_xla(q, k_sel, v_sel, valid, gamma2, score=score)
 
 
+# ------------------------------------------------------------ gathered_idx
+
+
+def _gathered_idx_reference(q, kt, vt, idx, valid, gamma2, *,
+                            score: str = "cauchy"):
+    """Oracle index-gather scorer: one XLA gather + the reference scorer."""
+    k_sel, v_sel = gather_tokens(kt, vt, idx, dtype=q.dtype)
+    return _gathered_reference(q, k_sel, v_sel, valid, gamma2, score=score)
+
+
+def _gathered_idx_xla(q, kt, vt, idx, valid, gamma2, *,
+                      score: str = "cauchy"):
+    """Pure-XLA index-gather scorer: rank-polymorphic, GQA-aware (the
+    token-layout caches are read through the trailing-merged gather, never
+    repeated G times), then the bf16-cotangent-pinned gathered scorer.
+    The (..., Nq, K, d) candidate buffer IS materialized here — this is
+    the fallback the fused kernel exists to beat."""
+    k_sel, v_sel = gather_tokens(kt, vt, idx, dtype=q.dtype)
+    return score_gathered_xla(q, k_sel, v_sel, valid, gamma2, score=score)
+
+
+def _gathered_idx_pallas_fused(q, kt, vt, idx, valid, gamma2, *,
+                               score: str = "cauchy"):
+    """Fused index-gather scorer (kernels/cauchy_topk_fused.py): flattens
+    the leading dims to the kernel's (F, Nkv, d) / (F*G, Nq, K) layout and
+    gathers inside the kernel.  Falls back to the XLA index-gather scorer
+    when per-(N, K) gamma is requested or the KV block would overflow the
+    kernel's VMEM residency budget."""
+    if score != "cauchy":
+        raise NotImplementedError(
+            f"pallas_fused index-gather scorer supports cauchy only, "
+            f"got {score!r}"
+        )
+    lead = kt.shape[:-2]
+    nkv, dk = kt.shape[-2:]
+    dv = vt.shape[-1]
+    g_, nq, kk = idx.shape[-3:]
+    g2 = jnp.asarray(gamma2, q.dtype)
+    rows_shape = lead + (g_, 1, 1)
+    try:
+        per_row = jnp.broadcast_shapes(g2.shape, rows_shape) == rows_shape
+    except ValueError:
+        per_row = False
+    if not per_row or not fits_fused_residency(kt, vt, kk):
+        return _gathered_idx_xla(q, kt, vt, idx, valid, gamma2, score=score)
+    from repro.kernels import ops as kernel_ops
+
+    f = math.prod(lead) if lead else 1
+    out = kernel_ops.cauchy_topk_fused_attention(
+        q.reshape(f * g_, nq, dk),
+        kt.reshape(f, nkv, dk),
+        vt.reshape(f, nkv, dv),
+        idx.reshape(f * g_, nq, kk),
+        valid.reshape(f * g_, nq, kk),
+        jnp.broadcast_to(g2, rows_shape).reshape(f * g_),
+    )
+    return out.reshape(lead + (g_, nq, dv))
+
+
 def _gathered_pallas(q, k_sel, v_sel, valid, gamma2, *,
                      score: str = "cauchy"):
     if score != "cauchy":
@@ -174,7 +267,7 @@ def _reference(q, k, v, gamma2, *, zcfg, causal, mechanism):
 
 
 def register_stock(overwrite: bool = False) -> None:
-    """(Re-)register the four stock backends.  Runs at import; the registry
+    """(Re-)register the five stock backends.  Runs at import; the registry
     also calls it with ``overwrite=True`` to repopulate after tests have
     unregistered names (a re-import alone would be a cached no-op)."""
     register_backend(
@@ -187,6 +280,7 @@ def register_stock(overwrite: bool = False) -> None:
             notes="naive oracle (core/ref.py); ground truth, O(N·K) einsums",
         ),
         gathered=_gathered_reference,
+        gathered_idx=_gathered_idx_reference,
         overwrite=overwrite,
     )
 
@@ -199,6 +293,7 @@ def register_stock(overwrite: bool = False) -> None:
             notes="pure-XLA gather pipeline; bf16-pinned backward",
         ),
         gathered=_gathered_xla,
+        gathered_idx=_gathered_idx_xla,
         overwrite=overwrite,
     )
 
@@ -212,9 +307,27 @@ def register_stock(overwrite: bool = False) -> None:
             compiled_devices=("tpu",),
             interpreted_devices=("cpu", "gpu"),
             priority=20,
-            notes="fused Cauchy top-k kernel (Appendix-E backward)",
+            notes="fused Cauchy top-k kernel on materialized candidates",
         ),
         gathered=_gathered_pallas,
+        overwrite=overwrite,
+    )
+
+    register_backend(
+        "pallas_fused",
+        _zeta_backend("pallas_fused"),
+        Capabilities(
+            mechanisms=("zeta",),
+            scores=_CAUCHY_ONLY,
+            dtypes=("float32", "bfloat16"),
+            compiled_devices=("tpu",),
+            interpreted_devices=("cpu", "gpu"),
+            priority=30,
+            notes="index-gather kernel: no (N,K,d) HBM candidates; "
+                  "scatter-add backward",
+        ),
+        gathered=_gathered_pallas,
+        gathered_idx=_gathered_idx_pallas_fused,
         overwrite=overwrite,
     )
 

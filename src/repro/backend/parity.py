@@ -104,6 +104,7 @@ def parity_rows(
         ("reference", "xla"),
         ("reference", "pallas"),
         ("xla", "pallas"),
+        ("xla", "pallas_fused"),
     ),
     **kw,
 ) -> list[str]:

@@ -12,15 +12,23 @@ If a preferred backend exists but its capabilities don't match the request
 (e.g. ``pallas`` with a non-Cauchy score), dispatch *warns and falls back*
 instead of failing: the model still runs, just on a capable backend.
 
-Backends register two entry points:
+Backends register up to three entry points:
 
   ``attention(q, k, v, gamma2, *, zcfg, causal, mechanism)``
       full attention on token-space inputs, q/k ``(B, H, N, d_k)``,
       v ``(B, Hkv, N, d_v)``;
   ``gathered(q, k_sel, v_sel, valid, gamma2, *, score)``  (optional)
       the scoring stage on already-gathered candidates,
-      q ``(..., N, d_k)``, k_sel/v_sel ``(..., N, K, d)`` — this is what
-      the ZETA pipeline and the decode step dispatch through.
+      q ``(..., N, d_k)``, k_sel/v_sel ``(..., N, K, d)``;
+  ``gathered_idx(q, kt, vt, idx, valid, gamma2, *, score)``  (optional)
+      the scoring stage on *token-layout* K/V plus candidate positions —
+      kt/vt ``(..., Nkv, d)``, q ``(..., G, Nq, d_k)``, idx/valid
+      ``(..., G, Nq, K)`` with kt's leading dims — so the backend may
+      fuse the gather and never materialize ``(..., Nq, K, d)`` in HBM.
+      This is what the ZETA pipeline dispatches through in every mode
+      (train / prefill / decode); ``gathered_idx_attention`` falls back
+      to an XLA gather + the ``gathered`` stage for backends that lack
+      it, preserving the backend's scoring semantics.
 
 Registration lives in :mod:`repro.backend.backends`; this module holds only
 the policy so kernels may import it without cycles.
@@ -63,7 +71,7 @@ class AttentionRequest:
     dtype: str = "float32"
     causal: bool = True
     device: str = "cpu"
-    stage: Literal["full", "gathered"] = "full"
+    stage: Literal["full", "gathered", "gathered_idx"] = "full"
 
     @classmethod
     def probe(cls, **kw) -> "AttentionRequest":
@@ -117,9 +125,12 @@ class Backend:
     attention: Callable
     caps: Capabilities
     gathered: Callable | None = None
+    gathered_idx: Callable | None = None
 
     def supports(self, req: AttentionRequest) -> bool:
         if req.stage == "gathered" and self.gathered is None:
+            return False
+        if req.stage == "gathered_idx" and self.gathered_idx is None:
             return False
         return self.caps.supports(req)
 
@@ -129,6 +140,7 @@ _REGISTRY: dict[str, Backend] = {}
 
 def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
                      gathered: Callable | None = None,
+                     gathered_idx: Callable | None = None,
                      overwrite: bool = False) -> Backend:
     """Register ``fn`` under ``name``.  Re-registering an existing name
     requires ``overwrite=True`` (tests use this to inject fakes)."""
@@ -137,7 +149,7 @@ def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
             f"backend {name!r} already registered; pass overwrite=True"
         )
     be = Backend(name=name, attention=fn, caps=capabilities,
-                 gathered=gathered)
+                 gathered=gathered, gathered_idx=gathered_idx)
     _REGISTRY[name] = be
     return be
 
@@ -285,6 +297,58 @@ def gathered_attention(q, k_sel, v_sel, valid, gamma2, *,
     return be.gathered(q, k_sel, v_sel, valid, gamma2, score=score)
 
 
+def gathered_idx_attention(q, kt, vt, idx, valid, gamma2, *,
+                           score: str = "cauchy", cfg=None,
+                           backend: str | None = None):
+    """Dispatch the index-gather scoring stage.
+
+    kt/vt: (..., Nkv, d) token-layout K/V; q: (..., G, Nq, d_k) with kt's
+    leading dims plus a GQA group dim (G = 1 for MHA); idx/valid:
+    (..., G, Nq, K) int32 positions into Nkv / bool; gamma2 broadcastable
+    to (..., G, Nq, K).  kt/vt may be lower precision than q (decode
+    caches): scorers upcast the *gathered* values, never the full cache.
+
+    A pinned backend that lacks the ``gathered_idx`` stage keeps its
+    scoring semantics: the candidates are gathered in XLA (a materializing
+    (..., Nq, K, d) buffer — the cost the fused stage exists to remove)
+    and its plain ``gathered`` stage scores them.
+    """
+    zcfg = _zeta_cfg(cfg)
+    req = AttentionRequest.probe(
+        mechanism="zeta", score=score, dtype=str(q.dtype),
+        stage="gathered_idx",
+    )
+    preferred = backend or zcfg.backend
+    if preferred is not None:
+        be = get_backend(preferred)  # unknown explicit name is an error
+        if be.supports(req):
+            return be.gathered_idx(q, kt, vt, idx, valid, gamma2,
+                                   score=score)
+        return _materialize_and_score(q, kt, vt, idx, valid, gamma2,
+                                      score=score, cfg=cfg,
+                                      backend=preferred)
+    try:
+        be = select_backend(req)
+    except LookupError:
+        return _materialize_and_score(q, kt, vt, idx, valid, gamma2,
+                                      score=score, cfg=cfg, backend=None)
+    return be.gathered_idx(q, kt, vt, idx, valid, gamma2, score=score)
+
+
+def _materialize_and_score(q, kt, vt, idx, valid, gamma2, *, score, cfg,
+                           backend):
+    """Fallback for ``gathered_idx``-incapable backends: one XLA gather
+    (GQA-aware, the token caches are read — never repeated G times), then
+    the ordinary ``gathered`` dispatch."""
+    from repro.core.selection import gather_tokens
+
+    k_sel, v_sel = gather_tokens(kt, vt, idx, dtype=q.dtype)
+    return gathered_attention(
+        q, k_sel, v_sel, valid, gamma2,
+        score=score, cfg=cfg, backend=backend,
+    )
+
+
 def resolve_name(cfg=None, *, causal: bool = True,
                  mechanism: Mechanism | None = None,
                  backend: str | None = None,
@@ -315,6 +379,7 @@ def support_matrix() -> list[dict]:
             "scores": "+".join(caps.scores) or "—",
             "dtypes": "+".join(d.replace("float", "f") for d in caps.dtypes),
             "gathered": "yes" if be.gathered is not None else "no",
+            "gathered_idx": "yes" if be.gathered_idx is not None else "no",
             "notes": caps.notes,
         }
         for dev in ("cpu", "gpu", "tpu"):
@@ -332,7 +397,7 @@ def support_matrix_markdown() -> str:
     """The README's backend support matrix, generated from live registrations
     (regenerate with ``PYTHONPATH=src python -m repro.backend``)."""
     cols = ["backend", "mechanisms", "scores", "dtypes",
-            "cpu", "gpu", "tpu", "gathered", "notes"]
+            "cpu", "gpu", "tpu", "gathered", "gathered_idx", "notes"]
     rows = support_matrix()
     head = "| " + " | ".join(cols) + " |"
     sep = "|" + "|".join("---" for _ in cols) + "|"

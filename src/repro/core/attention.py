@@ -120,7 +120,7 @@ def zeta_attention(
     history_mean: bool = True,
     local_window: int = 0,
     score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy",
-    impl: Literal["xla", "pallas", "reference"] = "xla",
+    impl: Literal["xla", "pallas", "pallas_fused", "reference"] = "xla",
     shard_search: bool = False,
 ) -> jax.Array:
     """Causal ZETA attention — the selection core's *train* mode.
@@ -151,7 +151,7 @@ def zeta_attention_noncausal(
     bits: int | None = None,
     bound: float | None = None,
     score: Literal["cauchy", "neg_euclid", "inverse_euclid"] = "cauchy",
-    impl: Literal["xla", "pallas", "reference"] = "xla",
+    impl: Literal["xla", "pallas", "pallas_fused", "reference"] = "xla",
 ) -> jax.Array:
     """Encoder-side (non-causal) ZETA: every query searches the *entire*
     sorted key sequence — a single global sort, no chunk restriction

@@ -21,12 +21,20 @@ stage once, parametrised by execution mode:
   cost per token        O(C log N) am.     O(N log N) masked   O(log N) search
                                            sort per query      + O(N) ins shift
   GQA group-dedup       sort/search once per KV head; G query heads share it
+                        (the per-KV-head caches/codes are READ by the grouped
+                        primitives, never repeated G times)
   own-chunk window      own_chunk_window (positions clamped to [chunk_start, i])
   history-mean token    cumulative mean    cached sums +       cached running
                         (ref.history_      in-chunk cumsum     sums + current
                         mean)                                  token
-  scoring               backend registry ``gathered`` stage (xla / pallas /
-                        reference), selected identically in every mode
+                        — folded into INDEX SPACE: the means are appended as
+                        extra K/V rows and each query gets one always-valid
+                        candidate index, so scoring sees only (kt, vt, idx)
+  scoring               backend registry ``gathered_idx`` stage
+                        (pallas_fused / xla / reference), selected
+                        identically in every mode; ``gathered_idx``-less
+                        backends fall back to one XLA gather + their
+                        ``gathered`` stage
 
 M = N // num_chunks is the chunk size; the prefill/decode pool uses
 *delayed insertion* (a key becomes searchable once it is M steps old), a
@@ -104,6 +112,25 @@ def search_decode(sorted_kz: jax.Array, sorted_pos: jax.Array,
     return topk.prefix_topk_decode(sorted_kz, sorted_pos, length, qz, k=k)
 
 
+def search_decode_grouped(sorted_kz: jax.Array, sorted_pos: jax.Array,
+                          length: jax.Array, qz: jax.Array, *,
+                          k: int) -> TopkResult:
+    """GQA decode-mode search: the G query heads of a group search their
+    KV head's sorted row in place — the (B, Nmax) cache is never repeated
+    G times.  qz: (B, G) -> idx/valid (B, G, k)."""
+    return topk.prefix_topk_decode_grouped(
+        sorted_kz, sorted_pos, length, qz, k=k
+    )
+
+
+def search_prefill_grouped(kz_by_pos: jax.Array, thresholds: jax.Array,
+                           qz: jax.Array, *, k: int) -> TopkResult:
+    """GQA prefill-mode search: the P masked prefix sorts run once per KV
+    head; the group's heads share them.  (B, Nmax), (B, P), (B, G, P) ->
+    idx/valid (B, G, P, k)."""
+    return topk.prefix_topk_bulk_grouped(kz_by_pos, thresholds, qz, k=k)
+
+
 def search_global(kf: jax.Array, qf: jax.Array, *, k: int,
                   bits: int | None = None,
                   bound: float | None = None) -> TopkResult:
@@ -146,14 +173,11 @@ def own_chunk_window(positions: jax.Array, *, chunk: int,
     return jnp.where(valid, j, 0), valid
 
 
-def _append_window(idx, valid, positions, *, chunk, window, repeat_to=None):
-    """Concat own-chunk window candidates onto search results.  positions'
-    shape must broadcast-match idx's leading dims after an optional leading
-    ``jnp.repeat`` (GQA query-head fan-out)."""
+def _append_window(idx, valid, positions, *, chunk, window):
+    """Concat own-chunk window candidates onto search results.  positions
+    must broadcast to idx's leading dims once a trailing window axis is
+    appended (callers insert explicit head/group axes first)."""
     w_idx, w_valid = own_chunk_window(positions, chunk=chunk, window=window)
-    if repeat_to is not None:
-        w_idx = jnp.repeat(w_idx, repeat_to, axis=0)
-        w_valid = jnp.repeat(w_valid, repeat_to, axis=0)
     return (
         jnp.concatenate([idx, jnp.broadcast_to(
             w_idx, idx.shape[:-1] + (window,))], axis=-1),
@@ -162,26 +186,17 @@ def _append_window(idx, valid, positions, *, chunk, window, repeat_to=None):
     )
 
 
-# ------------------------------------------------------------ history mean
-
-
-def append_history_mean(k_sel, v_sel, valid, km, vm):
-    """Append the §3.4 smoothing token as one extra always-valid candidate.
-    k_sel/v_sel: (..., K, d); km/vm broadcastable to (..., 1, d)."""
-    k_sel = jnp.concatenate(
-        [k_sel, jnp.broadcast_to(
-            km.astype(k_sel.dtype), k_sel.shape[:-2] + (1, k_sel.shape[-1])
-        )], axis=-2,
+def _append_candidate(idx, valid, new_idx):
+    """Append one always-valid candidate column (e.g. the folded
+    history-mean row): new_idx broadcastable to idx[..., :1]."""
+    return (
+        jnp.concatenate(
+            [idx, jnp.broadcast_to(new_idx, idx.shape[:-1] + (1,))], axis=-1
+        ),
+        jnp.concatenate(
+            [valid, jnp.ones(valid.shape[:-1] + (1,), bool)], axis=-1
+        ),
     )
-    v_sel = jnp.concatenate(
-        [v_sel, jnp.broadcast_to(
-            vm.astype(v_sel.dtype), v_sel.shape[:-2] + (1, v_sel.shape[-1])
-        )], axis=-2,
-    )
-    valid = jnp.concatenate(
-        [valid, jnp.ones(valid.shape[:-1] + (1,), bool)], axis=-1
-    )
-    return k_sel, v_sel, valid
 
 
 # ---------------------------------------------------------------- scoring
@@ -190,10 +205,12 @@ def append_history_mean(k_sel, v_sel, valid, km, vm):
 def score_gathered(q, k_sel, v_sel, valid, gamma2, *, score: str = "cauchy",
                    impl: str | None = None, zcfg=None):
     """Dispatch the gathered-candidate scoring stage through the backend
-    registry — the SAME selection logic in every mode.  ``impl`` names a
-    resolved backend (train passes the one the full-attention dispatch
-    picked); otherwise capability-based selection runs, honouring
-    ``zcfg.backend``.  Lazy import: backends register the pipeline."""
+    registry.  ``impl`` names a resolved backend (the non-causal pipeline
+    passes the one full-attention dispatch picked); otherwise
+    capability-based selection runs, honouring ``zcfg.backend``.  The
+    causal pipelines dispatch :func:`score_indexed` instead — this stage
+    remains the fallback for ``gathered_idx``-incapable backends.  Lazy
+    import: backends register the pipeline."""
     from repro.backend import registry
 
     if impl is not None:
@@ -205,6 +222,63 @@ def score_gathered(q, k_sel, v_sel, valid, gamma2, *, score: str = "cauchy",
         return scorer(q, k_sel, v_sel, valid, gamma2, score=score)
     return registry.gathered_attention(
         q, k_sel, v_sel, valid, gamma2, score=score, cfg=zcfg
+    )
+
+
+def gather_tokens(kt, vt, idx, dtype=None):
+    """Materializing candidate gather from token-layout K/V — the fallback
+    for ``gathered_idx``-incapable backends and the building block of the
+    xla backend's index-gather scorer.
+
+    kt: (..., Nkv, d_k); vt: (..., Nkv, d_v); idx: (..., G, Nq, K) int32
+    carrying kt's leading dims plus a GQA group axis.  One trailing-merged
+    ``take_along_axis`` per cache: the caches are *read*, never repeated
+    G times (and the merge keeps the leading dims reshape-free for SPMD
+    shardings).  ``dtype`` (usually q's) upcasts only the GATHERED
+    values, never the full cache — the single place the mixed-precision
+    contract lives, shared by every materializing caller.  Returns
+    (k_sel, v_sel) of shape (..., G, Nq, K, d).
+    """
+    lead = kt.shape[:-2]
+    tail = idx.shape[len(lead):]
+    flat = idx.reshape(lead + (-1,))[..., None]
+    k_sel = jnp.take_along_axis(kt, flat, axis=-2)
+    v_sel = jnp.take_along_axis(vt, flat, axis=-2)
+    if dtype is not None:
+        k_sel = k_sel.astype(dtype)
+        v_sel = v_sel.astype(dtype)
+    return (
+        k_sel.reshape(lead + tail + kt.shape[-1:]),
+        v_sel.reshape(lead + tail + vt.shape[-1:]),
+    )
+
+
+def score_indexed(q, kt, vt, idx, valid, gamma2, *, score: str = "cauchy",
+                  impl: str | None = None, zcfg=None):
+    """Dispatch the index-gather scoring stage — the hot path every causal
+    mode (train / prefill / decode) routes through.
+
+    kt/vt: (..., Nkv, d) token-layout K/V (with any folded history-mean
+    rows already appended); q: (..., G, Nq, d_k); idx/valid:
+    (..., G, Nq, K).  ``impl`` names a resolved backend (train passes the
+    one the full-attention dispatch picked); a backend without a
+    ``gathered_idx`` stage keeps its scoring semantics through one XLA
+    gather + its plain ``gathered`` stage.  kt/vt may be lower precision
+    than q (decode caches); only gathered values are upcast.
+    """
+    from repro.backend import registry
+
+    if impl is not None:
+        be = registry.get_backend(impl)
+        if be.gathered_idx is not None:
+            return be.gathered_idx(q, kt, vt, idx, valid, gamma2,
+                                   score=score)
+        k_sel, v_sel = gather_tokens(kt, vt, idx, dtype=q.dtype)
+        return score_gathered(
+            q, k_sel, v_sel, valid, gamma2, score=score, impl=impl,
+        )
+    return registry.gathered_idx_attention(
+        q, kt, vt, idx, valid, gamma2, score=score, cfg=zcfg
     )
 
 
@@ -285,38 +359,30 @@ def attend_train(
             chunk=N // num_chunks, window=local_window,
         )
 
-    # 4. gather candidates (per query; one XLA gather with the trailing
-    # dims merged — docs/ARCHITECTURE.md §4, layout conventions).
-    kk_ = idx.shape[-1]
-    flat = idx.reshape(B, Hkv, G * N * kk_)              # trailing merge
-    k_sel = jnp.take_along_axis(
-        kf, flat[..., None], axis=2
-    ).reshape(B, Hkv, G, N, kk_, dk)
-    v_sel = jnp.take_along_axis(
-        vf, flat[..., None], axis=2
-    ).reshape(B, Hkv, G, N, kk_, dv)
-
-    # history-mean smoothing token (§3.4): cumulative mean of keys gives
-    # the token's coordinate, cumulative mean of values its payload.
+    # 4. fold the history-mean token (§3.4) into index space: the
+    # cumulative means become token rows N .. 2N-1 of the scorer's K/V
+    # view and query i gets one extra always-valid candidate N + i.  The
+    # scorers read the mean through the same index gather as every other
+    # candidate, so the fused path never materializes a (N, K, d) tensor.
+    kt, vt = kf, vf
     if history_mean:
-        km = ref.history_mean(kf)[:, :, None, :, None, :]  # (B,Hkv,1,N,1,dk)
-        vm = ref.history_mean(vf)[:, :, None, :, None, :]
-        k_sel, v_sel, valid = append_history_mean(
-            k_sel, v_sel, valid, km, vm
-        )
-    k_sel = sa(k_sel, ("batch", "model") + (None,) * 4)
-    v_sel = sa(v_sel, ("batch", "model") + (None,) * 4)
+        kt = jnp.concatenate([kf, ref.history_mean(kf)], axis=2)
+        vt = jnp.concatenate([vf, ref.history_mean(vf)], axis=2)
+        mean_idx = N + jnp.arange(N, dtype=jnp.int32)      # (N,)
+        idx, valid = _append_candidate(idx, valid, mean_idx[:, None])
+    kt = sa(kt, ("batch", "model", None, None))
+    vt = sa(vt, ("batch", "model", None, None))
 
     g2 = jnp.asarray(gamma2, q.dtype)
     if g2.ndim == 1:  # per query head
         g2 = g2.reshape(1, Hkv, G, 1, 1)
 
-    # 5. score + aggregate — the registry's gathered scoring stage for the
-    # resolved backend (``impl``).  The xla scorer is rank-polymorphic so
-    # the (B, Hkv, G, ...) layout stays reshape-free; the pallas scorer
-    # flattens to (F, N, K, d) internally.
-    out = score_gathered(qg, k_sel, v_sel, valid, g2, score=score,
-                         impl=impl)
+    # 5. score + aggregate — the registry's index-gather scoring stage for
+    # the resolved backend (``impl``): pallas_fused gathers inside the
+    # kernel (no HBM candidate tensor); backends without the stage gather
+    # once in XLA (rank-polymorphic, so the (B, Hkv, G, ...) layout stays
+    # reshape-free and SPMD shardings survive).
+    out = score_indexed(qg, kt, vt, idx, valid, g2, score=score, impl=impl)
 
     out = sa(out, ("batch", "model", None, None, None))
     return out.reshape(B, Hq, N, dv)
@@ -342,26 +408,6 @@ class ZetaCache(NamedTuple):
     pos_sorted: jax.Array
     ksum: jax.Array
     vsum: jax.Array
-
-
-def _gather_candidates(zk_cache, v_cache, idx, groups):
-    """Gather (k_sel, v_sel) from position-indexed per-KV-head caches.
-    zk_cache: (B, Hkv, Nmax, dk); idx: (B*Hq, ..., K) positions."""
-    B, Hkv, Nmax, dk = zk_cache.shape
-    dv = v_cache.shape[-1]
-    f = B * Hkv
-    lead = idx.shape[1:-1]
-    kk_ = idx.shape[-1]
-    flat = idx.reshape(f * groups, -1)
-    zk_all = jnp.repeat(zk_cache.reshape(f, Nmax, dk), groups, axis=0)
-    v_all = jnp.repeat(v_cache.reshape(f, Nmax, dv), groups, axis=0)
-    k_sel = jnp.take_along_axis(
-        zk_all, flat[..., None], axis=1
-    ).reshape((f * groups,) + lead + (kk_, dk))
-    v_sel = jnp.take_along_axis(
-        v_all, flat[..., None], axis=1
-    ).reshape((f * groups,) + lead + (kk_, dv))
-    return k_sel, v_sel
 
 
 # ------------------------------------------------------------ decode mode
@@ -398,8 +444,9 @@ def attend_decode(
     G = Hq // Hkv
     dk, dv = zk_t.shape[-1], v_t.shape[-1]
     Nmax = cache.zk.shape[2]
-    f, fq = B * Hkv, B * Hq
+    f = B * Hkv
     M = Nmax // max(z.num_chunks, 1)
+    w = z.local_window
     searchable = jnp.maximum(t - M, 0)                     # (B,)
 
     # 0. write the current raw key/value at position t first, so the
@@ -407,44 +454,56 @@ def attend_decode(
     zk_cache = state.row_write(cache.zk, zk_t, t, active)
     v_cache = state.row_write(cache.v, v_t, t, active)
 
-    # 1-2. encode the query, search the sorted cache.  Queries of a GQA
-    # group search their KV head's sorted rows (same dedup as training).
+    # 1-2. encode the query heads, grouped search of each KV head's sorted
+    # rows (same dedup as training): the (f, Nmax) sorted caches are
+    # binary-searched in place — never repeated G times per step, which
+    # the pre-grouped search did on the full cache every token.
     qz_t = morton_codes(
-        zq_t.reshape(fq, 1, dk), bits=z.bits, bound=z.bound
-    )[:, 0]
-    sel = search_decode(
-        jnp.repeat(cache.zk_sorted, G, axis=0),
-        jnp.repeat(cache.pos_sorted, G, axis=0),
-        jnp.repeat(searchable, Hq), qz_t, k=z.k,
+        zq_t.reshape(f, G, dk), bits=z.bits, bound=z.bound
+    )                                                      # (f, G)
+    sel = search_decode_grouped(
+        cache.zk_sorted, cache.pos_sorted,
+        jnp.repeat(searchable, Hkv), qz_t, k=z.k,
     )
-    idx, valid = sel.idx[:, 0], sel.valid[:, 0]            # (fq, k)
+    idx = sel.idx[:, :, None, :]                           # (f, G, 1, k)
+    valid = sel.valid[:, :, None, :]
 
     # 3. optional own-chunk local window (positions clamped to the current
-    # chunk — identical semantics to training's _append_window).
-    if z.local_window > 0:
+    # chunk — the SAME _append_window as training, with the per-slot
+    # positions expanded to the (f, G, 1) query layout).
+    if w > 0:
         idx, valid = _append_window(
-            idx, valid, t, chunk=M, window=z.local_window, repeat_to=Hq,
+            idx, valid, jnp.repeat(t, Hkv)[:, None, None],
+            chunk=M, window=w,
         )
 
-    # 4. gather + history-mean token over past tokens (+ current).
-    k_sel, v_sel = _gather_candidates(zk_cache, v_cache, idx, G)
+    # 4. token-layout K/V view for the scorer; the history-mean token over
+    # past tokens (+ current) folds in as ONE extra always-valid row at
+    # position Nmax.  No candidate gather happens here — the scoring
+    # stage reads the cache through idx (fused in-kernel on capable
+    # backends).  The concat copies the cache view once per step
+    # (G-independent; see docs/ARCHITECTURE.md §2a for the trade-off and
+    # the reserved-row plan that would remove it).
+    kt = zk_cache.reshape(f, Nmax, dk)
+    vt = v_cache.reshape(f, Nmax, dv)
     new_ksum = cache.ksum + zk_t[:, :, 0].astype(jnp.float32)
     new_vsum = cache.vsum + v_t[:, :, 0].astype(jnp.float32)
     if z.history_mean:
         denom = (t + 1).astype(jnp.float32)[:, None, None]  # (B,1,1)
-        km = jnp.repeat((new_ksum / denom).reshape(f, 1, dk), G, axis=0)
-        vm = jnp.repeat((new_vsum / denom).reshape(f, 1, dv), G, axis=0)
-        k_sel, v_sel, valid = append_history_mean(
-            k_sel, v_sel, valid, km, vm
+        km = (new_ksum / denom).reshape(f, 1, dk)
+        vm = (new_vsum / denom).reshape(f, 1, dv)
+        kt = jnp.concatenate([kt, km.astype(kt.dtype)], axis=1)
+        vt = jnp.concatenate([vt, vm.astype(vt.dtype)], axis=1)
+        idx, valid = _append_candidate(
+            idx, valid, jnp.int32(Nmax)
         )
 
-    # 5. score — same gathered stage (and backend selection) as training.
-    qf = zq_t.reshape(fq, dk)
-    g2 = _gamma2_rows(gamma2, B, Hq, zq_t.dtype)
-    out = score_gathered(
-        qf[:, None], k_sel[:, None].astype(qf.dtype),
-        v_sel[:, None].astype(qf.dtype), valid[:, None], g2,
-        score=z.score, zcfg=z,
+    # 5. score — same index-gather stage (and backend selection) as
+    # training, Nq = 1.
+    qf = zq_t.reshape(f, G, 1, dk)
+    g2 = _gamma2_rows(gamma2, B, Hq, zq_t.dtype).reshape(f, G, 1, 1)
+    out = score_indexed(
+        qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
     ).reshape(B, Hq, 1, dv)
 
     # 6. sorted-cache maintenance: insert the key that just became M steps
@@ -507,8 +566,9 @@ def attend_prefill(
     G = Hq // Hkv
     dk, dv = zk_c.shape[-1], v_c.shape[-1]
     Nmax = cache.zk.shape[2]
-    f, fq = B * Hkv, B * Hq
+    f = B * Hkv
     M = Nmax // max(z.num_chunks, 1)
+    w = z.local_window
     token_mask = jnp.asarray(token_mask, bool)
     n_valid = token_mask.sum(axis=-1).astype(jnp.int32)    # (B,)
     active = n_valid > 0
@@ -523,28 +583,35 @@ def attend_prefill(
         zk_cache.reshape(f, Nmax, dk), bits=z.bits, bound=z.bound
     )                                                      # (f, Nmax)
     qz_c = morton_codes(
-        zq_c.reshape(fq, P, dk), bits=z.bits, bound=z.bound
-    )                                                      # (fq, P)
+        zq_c.reshape(f, G, P, dk), bits=z.bits, bound=z.bound
+    )                                                      # (f, G, P)
 
     # 2. per-query candidate pools: positions < (t0 + j) - M, the same
-    # ``searchable`` count sequential decode sees at step t0 + j.
+    # ``searchable`` count sequential decode sees at step t0 + j.  The
+    # grouped search sorts each KV head's codes once — the code cache is
+    # never repeated G times.
     if thresholds is None:
         thresholds = jnp.maximum(positions - M, 0)         # (B, P)
-    sel = search_prefill(
-        jnp.repeat(kz_by_pos, G, axis=0),
-        jnp.repeat(thresholds, Hq, axis=0), qz_c, k=z.k,
+    sel = search_prefill_grouped(
+        kz_by_pos, jnp.repeat(thresholds, Hkv, axis=0), qz_c, k=z.k,
     )
-    idx, valid = sel.idx, sel.valid                        # (fq, P, k)
+    idx, valid = sel.idx, sel.valid                        # (f, G, P, k)
 
-    # 3. optional own-chunk local window.
-    if z.local_window > 0:
+    # 3. optional own-chunk local window — same _append_window as train
+    # and decode, positions expanded to the (f, G, P) query layout.
+    if w > 0:
         idx, valid = _append_window(
-            idx, valid, positions, chunk=M, window=z.local_window,
-            repeat_to=Hq,
+            idx, valid, jnp.repeat(positions, Hkv, axis=0)[:, None],
+            chunk=M, window=w,
         )
 
-    # 4. gather + running history-mean token (mean over 0..t0+j inclusive).
-    k_sel, v_sel = _gather_candidates(zk_cache, v_cache, idx, G)
+    # 4. token-layout K/V view + running history-mean tokens (mean over
+    # 0..t0+j inclusive) folded into index space: the P per-position means
+    # become rows Nmax..Nmax+P-1 and chunk position j points at row
+    # Nmax + j.  The scoring stage reads the cache through idx — no
+    # materialized candidate gather.
+    kt = zk_cache.reshape(f, Nmax, dk)
+    vt = v_cache.reshape(f, Nmax, dv)
     tm = token_mask[:, None, :, None]
     cumk = jnp.cumsum(
         jnp.where(tm, zk_c.astype(jnp.float32), 0.0), axis=2
@@ -556,22 +623,18 @@ def attend_prefill(
         ksum_run = cache.ksum[:, :, None, :] + cumk
         vsum_run = cache.vsum[:, :, None, :] + cumv
         denom = (positions + 1).astype(jnp.float32)[:, None, :, None]
-        km = jnp.repeat(
-            (ksum_run / denom).reshape(f, P, 1, dk), G, axis=0
-        )
-        vm = jnp.repeat(
-            (vsum_run / denom).reshape(f, P, 1, dv), G, axis=0
-        )
-        k_sel, v_sel, valid = append_history_mean(
-            k_sel, v_sel, valid, km, vm
-        )
+        km = (ksum_run / denom).reshape(f, P, dk)
+        vm = (vsum_run / denom).reshape(f, P, dv)
+        kt = jnp.concatenate([kt, km.astype(kt.dtype)], axis=1)
+        vt = jnp.concatenate([vt, vm.astype(vt.dtype)], axis=1)
+        mean_idx = Nmax + jnp.arange(P, dtype=jnp.int32)   # (P,)
+        idx, valid = _append_candidate(idx, valid, mean_idx[:, None])
 
-    # 5. score.
-    qf = zq_c.reshape(fq, P, dk)
-    g2 = _gamma2_rows(gamma2, B, Hq, zq_c.dtype)
-    out = score_gathered(
-        qf, k_sel.astype(qf.dtype), v_sel.astype(qf.dtype), valid, g2,
-        score=z.score, zcfg=z,
+    # 5. score — same index-gather stage as train and decode.
+    qf = zq_c.reshape(f, G, P, dk)
+    g2 = _gamma2_rows(gamma2, B, Hq, zq_c.dtype).reshape(f, G, 1, 1)
+    out = score_indexed(
+        qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
     ).reshape(B, Hq, P, dv)
 
     # 6. rebuild the sorted z-code cache in one shot: after the chunk,

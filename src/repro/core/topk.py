@@ -222,6 +222,41 @@ def chunked_causal_topk_grouped(
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
+def prefix_topk_decode_grouped(
+    sorted_kz: jax.Array,
+    sorted_pos: jax.Array,
+    length: jax.Array,
+    qz: jax.Array,
+    *,
+    k: int,
+) -> TopkResult:
+    """Decode-time search for G grouped query heads against ONE sorted row
+    (GQA dedup): the (B, Nmax) sorted cache is binary-searched in place by
+    every query of the group — it is never repeated G times in HBM, which
+    the pre-grouped formulation did on every decode step.
+
+    sorted_kz:  (B, Nmax) int32 — sorted codes; entries >= length are SENTINEL
+    sorted_pos: (B, Nmax) int32 — original positions, same order
+    length:     (B,) or scalar int32 — number of live entries
+    qz:         (B, G) int32 — the new token's query codes, one per head
+    Returns idx/valid of shape (B, G, k).
+    """
+    B, Nmax = sorted_kz.shape
+    G = qz.shape[1]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    ins = _searchsorted_batched(sorted_kz, qz)                     # (B, G)
+    start = jnp.clip(
+        ins - (k // 2), 0, jnp.maximum(length - k, 0)[:, None]
+    )
+    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)      # (B,G,k)
+    valid = slots < length[:, None, None]
+    slots = jnp.minimum(slots, Nmax - 1)
+    idx = jnp.take_along_axis(
+        sorted_pos, slots.reshape(B, G * k), axis=-1
+    ).reshape(B, G, k)
+    return TopkResult(idx=jnp.where(valid, idx, 0), valid=valid)
+
+
 def prefix_topk_decode(
     sorted_kz: jax.Array,
     sorted_pos: jax.Array,
@@ -230,25 +265,12 @@ def prefix_topk_decode(
     *,
     k: int,
 ) -> TopkResult:
-    """Decode-time search: one new query against an incrementally maintained
-    sorted cache (see serve/cache.py).
-
-    sorted_kz:  (B, Nmax) int32 — sorted codes; entries >= length are SENTINEL
-    sorted_pos: (B, Nmax) int32 — original positions, same order
-    length:     (B,) or scalar int32 — number of live entries
-    qz:         (B,) int32 — the new token's query code
-    Returns idx/valid of shape (B, 1, k).
-    """
-    B, Nmax = sorted_kz.shape
-    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
-    ins = _searchsorted_batched(sorted_kz, qz[:, None])[:, 0]      # (B,)
-    start = jnp.clip(ins - (k // 2), 0, jnp.maximum(length - k, 0))
-    slots = start[:, None] + jnp.arange(k, dtype=jnp.int32)        # (B, k)
-    valid = slots < length[:, None]
-    slots = jnp.minimum(slots, Nmax - 1)
-    idx = jnp.take_along_axis(sorted_pos, slots, axis=-1)
-    idx = jnp.where(valid, idx, 0)
-    return TopkResult(idx=idx[:, None, :], valid=valid[:, None, :])
+    """Decode-time search: one new query per sorted row (the G=1 case of
+    ``prefix_topk_decode_grouped`` — also the per-shard primitive of the
+    distributed decode).  qz: (B,) -> idx/valid (B, 1, k)."""
+    return prefix_topk_decode_grouped(
+        sorted_kz, sorted_pos, length, qz[:, None], k=k
+    )
 
 
 def sorted_insert(
@@ -328,6 +350,53 @@ def reset_rows(
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
+def prefix_topk_bulk_grouped(
+    kz_by_pos: jax.Array,
+    thresholds: jax.Array,
+    qz: jax.Array,
+    *,
+    k: int,
+) -> TopkResult:
+    """Prefill-time search, GQA-deduplicated: the P masked prefix sorts —
+    the dominant cost — run ONCE per KV-head row, and the G query heads of
+    the group binary-search the same sorted prefixes (the dedup
+    ``chunked_causal_topk_grouped`` applies at train time).  The
+    pre-grouped formulation repeated the (B, Nmax) code cache G times and
+    re-sorted every copy.
+
+    kz_by_pos:  (B, Nmax) int32 codes by original position
+    thresholds: (B, P) int32 — query j's candidate pool is positions
+                < thresholds[:, j] (the decode path's ``searchable`` count);
+                shared by the group's heads (all sit at the same position)
+    qz:         (B, G, P) int32 query codes
+    Returns idx/valid of shape (B, G, P, k).
+
+    Work is P parallel masked sorts of length Nmax per KV row — the same
+    prefix-sort realisation as ``chunked_causal_topk``, with per-query
+    instead of per-chunk prefixes (sequential decode pools grow by one
+    token, not one chunk).
+    """
+    B, Nmax = kz_by_pos.shape
+    G, P = qz.shape[1], qz.shape[2]
+    positions = jnp.arange(Nmax, dtype=jnp.int32)
+    in_pool = positions[None, None, :] < thresholds[..., None]     # (B,P,N)
+    masked = jnp.where(in_pool, kz_by_pos[:, None, :], SENTINEL)
+    svals, perm = _sort_with_perm(masked)                          # (B,P,N)
+    # fold G into the query axis of each (B, P) sort row: no (B,G,P,N)
+    # broadcast of the sorted codes is ever formed.
+    ins = _searchsorted_batched(svals, jnp.swapaxes(qz, 1, 2))     # (B,P,G)
+    ins = jnp.swapaxes(ins, 1, 2)                                  # (B,G,P)
+    L = jnp.maximum(thresholds, 0)[:, None, :]                     # (B,1,P)
+    start = jnp.clip(ins - (k // 2), 0, jnp.maximum(L - k, 0))
+    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)      # (B,G,P,k)
+    valid = slots < L[..., None]
+    slots = jnp.minimum(slots, Nmax - 1)
+    slots_t = jnp.swapaxes(slots, 1, 2).reshape(B, P, G * k)
+    idx = jnp.take_along_axis(perm, slots_t, axis=-1)
+    idx = jnp.swapaxes(idx.reshape(B, P, G, k), 1, 2)              # (B,G,P,k)
+    return TopkResult(idx=jnp.where(valid, idx, 0), valid=valid)
+
+
 def prefix_topk_bulk(
     kz_by_pos: jax.Array,
     thresholds: jax.Array,
@@ -335,33 +404,9 @@ def prefix_topk_bulk(
     *,
     k: int,
 ) -> TopkResult:
-    """Prefill-time search: P queries per row, each against its own causal
-    prefix of position-indexed codes (the bulk counterpart of P sequential
-    ``prefix_topk_decode`` calls against an incrementally grown cache).
-
-    kz_by_pos:  (B, Nmax) int32 codes by original position
-    thresholds: (B, P) int32 — query j's candidate pool is positions
-                < thresholds[:, j] (the decode path's ``searchable`` count)
-    qz:         (B, P) int32 query codes
-    Returns idx/valid of shape (B, P, k).
-
-    Work is P parallel masked sorts of length Nmax per row — the same
-    prefix-sort realisation as ``chunked_causal_topk``, with per-query
-    instead of per-chunk prefixes (sequential decode pools grow by one
-    token, not one chunk).
-    """
-    B, Nmax = kz_by_pos.shape
-    P = qz.shape[1]
-    positions = jnp.arange(Nmax, dtype=jnp.int32)
-    in_pool = positions[None, None, :] < thresholds[..., None]     # (B,P,N)
-    masked = jnp.where(in_pool, kz_by_pos[:, None, :], SENTINEL)
-    svals, perm = _sort_with_perm(masked)                          # (B,P,N)
-    ins = _searchsorted_batched(svals, qz[..., None])[..., 0]      # (B,P)
-    L = jnp.maximum(thresholds, 0)
-    start = jnp.clip(ins - (k // 2), 0, jnp.maximum(L - k, 0))
-    slots = start[..., None] + jnp.arange(k, dtype=jnp.int32)      # (B,P,k)
-    valid = slots < L[..., None]
-    slots = jnp.minimum(slots, Nmax - 1)
-    idx = jnp.take_along_axis(perm, slots, axis=-1)
-    idx = jnp.where(valid, idx, 0)
-    return TopkResult(idx=idx, valid=valid)
+    """Prefill-time search, one query head per row (the G=1 case of
+    ``prefix_topk_bulk_grouped``).  qz: (B, P) -> idx/valid (B, P, k)."""
+    res = prefix_topk_bulk_grouped(
+        kz_by_pos, thresholds, qz[:, None], k=k
+    )
+    return TopkResult(idx=res.idx[:, 0], valid=res.valid[:, 0])

@@ -97,11 +97,31 @@ def _bwd_kernel(q_ref, k_ref, v_ref, valid_ref, g2_ref, g_ref,
     dg2_ref[...] = jnp.sum(g_delta, axis=-1)    # (BN,) summed outside
 
 
-def _block_n(n: int, requested: int | None) -> int:
+def block_plan(n: int, requested: int | None = None) -> tuple[int, int]:
+    """Query-tile size and padded query-axis length: (block_n, n_padded)
+    with ``n_padded % block_n == 0``.
+
+    A non-multiple N is PADDED up and masked (padding rows carry
+    ``valid=0`` so they contribute nothing and are sliced off), never met
+    by shrinking the block: the previous halve-until-divides rule degraded
+    any odd N all the way to block 1 — one grid step per query, a ~256x
+    launch-overhead cliff.  Small N gets a single sublane-aligned block.
+    Shared by the gathered kernel here and the fused index-gather kernel
+    (``kernels/cauchy_topk_fused.py``).
+    """
     bn = requested or DEFAULT_BLOCK_N
-    while n % bn:
-        bn //= 2
-    return max(bn, 1)
+    if n < bn:
+        bn = max(8, -(-n // 8) * 8)   # one block, f32 sublane multiple
+    return bn, -(-n // bn) * bn
+
+
+def pad_queries(x, n_pad: int, axis: int = 1):
+    """Zero-pad the query axis up to ``n_pad`` (no-op when already there)."""
+    if x.shape[axis] == n_pad:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, n_pad - x.shape[axis])
+    return jnp.pad(x, pads)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -117,8 +137,10 @@ def cauchy_topk_fwd(q, k_sel, v_sel, valid, gamma2, *,
     f, n, dk = q.shape
     kk = k_sel.shape[2]
     dv = v_sel.shape[-1]
-    bn = _block_n(n, block_n)
-    grid = (f, n // bn)
+    bn, n_pad = block_plan(n, block_n)
+    grid = (f, n_pad // bn)
+    validi = pad_queries(valid.astype(jnp.int8), n_pad)
+    q, k_sel, v_sel = (pad_queries(x, n_pad) for x in (q, k_sel, v_sel))
 
     out, z = pl.pallas_call(
         _fwd_kernel,
@@ -135,12 +157,12 @@ def cauchy_topk_fwd(q, k_sel, v_sel, valid, gamma2, *,
             pl.BlockSpec((None, bn), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((f, n, dv), q.dtype),
-            jax.ShapeDtypeStruct((f, n), jnp.float32),
+            jax.ShapeDtypeStruct((f, n_pad, dv), q.dtype),
+            jax.ShapeDtypeStruct((f, n_pad), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k_sel, v_sel, valid.astype(jnp.int8), gamma2)
-    return out, z
+    )(q, k_sel, v_sel, validi, gamma2)
+    return out[:, :n], z[:, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -152,8 +174,12 @@ def cauchy_topk_bwd(q, k_sel, v_sel, valid, gamma2, g, *,
     f, n, dk = q.shape
     kk = k_sel.shape[2]
     dv = v_sel.shape[-1]
-    bn = _block_n(n, block_n)
-    grid = (f, n // bn)
+    bn, n_pad = block_plan(n, block_n)
+    grid = (f, n_pad // bn)
+    validi = pad_queries(valid.astype(jnp.int8), n_pad)
+    q, k_sel, v_sel, g = (
+        pad_queries(x, n_pad) for x in (q, k_sel, v_sel, g)
+    )
 
     dq, dks, dvs, dg2 = pl.pallas_call(
         _bwd_kernel,
@@ -173,11 +199,11 @@ def cauchy_topk_bwd(q, k_sel, v_sel, valid, gamma2, g, *,
             pl.BlockSpec((None, bn), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((f, n, dk), q.dtype),
-            jax.ShapeDtypeStruct((f, n, kk, dk), k_sel.dtype),
-            jax.ShapeDtypeStruct((f, n, kk, dv), v_sel.dtype),
-            jax.ShapeDtypeStruct((f, n), jnp.float32),
+            jax.ShapeDtypeStruct((f, n_pad, dk), q.dtype),
+            jax.ShapeDtypeStruct((f, n_pad, kk, dk), k_sel.dtype),
+            jax.ShapeDtypeStruct((f, n_pad, kk, dv), v_sel.dtype),
+            jax.ShapeDtypeStruct((f, n_pad), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k_sel, v_sel, valid.astype(jnp.int8), gamma2, g)
-    return dq, dks, dvs, dg2
+    )(q, k_sel, v_sel, validi, gamma2, g)
+    return dq[:, :n], dks[:, :n], dvs[:, :n], dg2[:, :n]

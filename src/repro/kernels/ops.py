@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.backend.registry import default_interpret
 from repro.kernels import cauchy_topk as ck
+from repro.kernels import cauchy_topk_fused as ckf
 from repro.kernels.flash import flash_attention  # re-export  # noqa: F401
 from repro.kernels.zorder_kernel import zorder_encode_kernel  # noqa: F401
 
@@ -77,3 +78,98 @@ def _vjp_bwd(res, g_out):
 
 
 cauchy_topk_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# --------------------------------------------------------- fused index-gather
+
+
+@jax.custom_vjp
+def cauchy_topk_fused_attention(q, kt, vt, idx, valid, gamma2):
+    """Fused index-gather scoring (kernels/cauchy_topk_fused.py): the
+    candidate gather happens inside the kernel, so no (F*G, Nq, K, d)
+    tensor is materialized in HBM in either direction.
+
+    q: (F*G, Nq, dk); kt: (F, Nkv, dk); vt: (F, Nkv, dv) — token layout,
+    one KV row shared by G grouped query rows; idx/valid: (F*G, Nq, K)
+    int32 positions into Nkv / bool; gamma2: scalar | (F*G,) | (F*G,1,1).
+    Returns (F*G, Nq, dv).
+    """
+    out, _ = _fused_fwd_impl(q, kt, vt, idx, valid, gamma2)
+    return out
+
+
+def _fused_fwd_impl(q, kt, vt, idx, valid, gamma2):
+    fg = q.shape[0]
+    g = _norm_gamma(gamma2, fg, q.dtype)
+    out, z = ckf.cauchy_topk_fused_fwd(
+        q, kt, vt, idx, valid, g,
+        groups=fg // kt.shape[0], interpret=default_interpret(),
+    )
+    return out, z
+
+
+def _fused_vjp_fwd(q, kt, vt, idx, valid, gamma2):
+    out, _ = _fused_fwd_impl(q, kt, vt, idx, valid, gamma2)
+    return out, (q, kt, vt, idx, valid, gamma2)
+
+
+def _fused_vjp_bwd(res, g_out):
+    q, kt, vt, idx, valid, gamma2 = res
+    fg, nq, dk_dim = q.shape
+    f, nkv, _ = kt.shape
+    groups = fg // f
+    kk = idx.shape[-1]
+    dv = vt.shape[-1]
+    g = _norm_gamma(gamma2, fg, q.dtype)
+    dq, aw, gd, dg2_rows = ckf.cauchy_topk_fused_bwd(
+        q, kt, vt, idx, valid, g, g_out,
+        groups=groups, interpret=default_interpret(),
+    )
+
+    # dK/dV via the gather's transpose: K slot-wise scatter-adds over idx
+    # (TPU Pallas has no HBM atomics, so the scatter runs in XLA).  Every
+    # buffer inside the loop is (F, G*Nq, d) — the (F, G*Nq, K, d)
+    # candidate-shaped intermediate the materializing path pays for never
+    # exists.  Grouped query rows fold into the query axis of their KV row.
+    idx_g = idx.reshape(f, groups * nq, kk)
+    aw_g = aw.reshape(f, groups * nq, kk)
+    gd_g = gd.reshape(f, groups * nq, kk)
+    gout_g = g_out.astype(jnp.float32).reshape(f, groups * nq, dv)
+    q_g = q.astype(jnp.float32).reshape(f, groups * nq, dk_dim)
+    kt32 = kt.astype(jnp.float32)
+    rows = jnp.arange(f, dtype=jnp.int32)[:, None]
+
+    def body(s, carry):
+        dkt, dvt = carry
+        j = jax.lax.dynamic_index_in_dim(idx_g, s, axis=2, keepdims=False)
+        a_s = jax.lax.dynamic_index_in_dim(aw_g, s, axis=2, keepdims=False)
+        gd_s = jax.lax.dynamic_index_in_dim(gd_g, s, axis=2, keepdims=False)
+        # invalid slots carry a == g_delta == 0 and idx == 0: no-op adds.
+        dvt = dvt.at[rows, j].add(a_s[..., None] * gout_g)
+        k_j = jnp.take_along_axis(kt32, j[..., None], axis=1)
+        dkt = dkt.at[rows, j].add(-2.0 * gd_s[..., None] * (q_g - k_j))
+        return dkt, dvt
+
+    dkt, dvt = jax.lax.fori_loop(
+        0, kk, body,
+        (jnp.zeros((f, nkv, dk_dim), jnp.float32),
+         jnp.zeros((f, nkv, dv), jnp.float32)),
+    )
+
+    g2 = jnp.asarray(gamma2)
+    dg2_f = jnp.sum(dg2_rows, axis=1)           # (FG,)
+    if g2.ndim == 0 or g2.size == 1:
+        dgamma = jnp.sum(dg2_f).reshape(g2.shape).astype(g2.dtype)
+    else:
+        dgamma = dg2_f.reshape(g2.shape).astype(g2.dtype)
+    return (
+        dq.astype(q.dtype),
+        dkt.astype(kt.dtype),
+        dvt.astype(vt.dtype),
+        None,
+        None,
+        dgamma,
+    )
+
+
+cauchy_topk_fused_attention.defvjp(_fused_vjp_fwd, _fused_vjp_bwd)

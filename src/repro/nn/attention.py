@@ -7,13 +7,16 @@ Euclidean metric space needs an explicit position signal; RoPE applies only
 to the full-attention path).
 
 The ZETA selection pipeline itself (Morton encoding, candidate search,
-local window, history-mean token, scoring dispatch) is NOT implemented
-here: all three execution modes are thin callers of the selection core
-(``repro.core.selection`` — train via the backend dispatch, prefill via
-``attend_prefill``, decode via ``attend_decode``), so the phases cannot
-drift.  Decode-cache fields are declared as a ``repro.state`` spec
-(``attn_cache_spec``); the masked write/reset/stacking primitives live in
-that module.
+local window, the index-space history-mean fold, scoring dispatch) is NOT
+implemented here: all three execution modes are thin callers of the
+selection core (``repro.core.selection`` — train via the backend
+dispatch, prefill via ``attend_prefill``, decode via ``attend_decode``),
+so the phases cannot drift.  Scoring reads the raw per-KV-head caches
+through int32 candidate indices (the registry's ``gathered_idx`` stage):
+nothing in the decode path repeats a cache across GQA query heads or
+materializes a per-candidate (N, K, d) tensor.  Decode-cache fields are
+declared as a ``repro.state`` spec (``attn_cache_spec``); the masked
+write/reset/stacking primitives live in that module.
 """
 
 from __future__ import annotations

@@ -63,9 +63,14 @@ def make_distributed_decode_attention(mesh, *, axis: str, k: int):
         idx, valid = _local_candidates(
             skz, spos, length[0], qz, k
         )                                           # (B, k) local ids
-        cand = jnp.take_along_axis(kv, idx[..., None], axis=1)
-        k_cand = cand[..., :dk]
-        v_cand = cand[..., dk:]
+        # shared index-gather helper (selection core): the local segment is
+        # read through idx, one gather per cache — same contract as the
+        # fused scoring stage's fallback.
+        k_cand, v_cand = selection.gather_tokens(
+            kv[..., :dk], kv[..., dk:], idx[:, None, None, :]
+        )
+        k_cand = k_cand[:, 0, 0]
+        v_cand = v_cand[:, 0, 0]
         d2 = jnp.sum((q[:, None, :] - k_cand) ** 2, axis=-1)
         # dtype-aware "infinitely far" sentinel: finite in bf16/f16/f32
         # alike (a hard-coded 3.4e38 overflows to inf below f32 and breaks

@@ -24,7 +24,7 @@ _qkv = parity.make_inputs
 
 def test_stock_backends_registered():
     names = backend.list_backends()
-    for want in ("reference", "xla", "pallas", "flash"):
+    for want in ("reference", "xla", "pallas", "pallas_fused", "flash"):
         assert want in names
 
 
@@ -77,10 +77,11 @@ def test_config_override_wins():
 
 def test_auto_selection_prefers_compiled_on_device():
     # on CPU/GPU the pure-XLA pipeline outranks interpret-mode pallas;
-    # on TPU pallas (compiled, higher priority) wins.
+    # on TPU the fused index-gather kernel (compiled, highest priority)
+    # wins.
     name = backend.resolve_name()
     if backend.current_device() == "tpu":
-        assert name == "pallas"
+        assert name == "pallas_fused"
     else:
         assert name == "xla"
 
@@ -120,7 +121,9 @@ def test_mechanism_derived_from_model_config():
 # ------------------------------------------------------------------ dispatch
 
 
-@pytest.mark.parametrize("name", ["reference", "xla", "pallas"])
+@pytest.mark.parametrize(
+    "name", ["reference", "xla", "pallas", "pallas_fused"]
+)
 def test_zeta_dispatch_runs_all_backends(name):
     q, k, v = _qkv(SMALL_SHAPES[0])
     out = backend.attention(q, k, v, None, gamma2=0.5, backend=name)
@@ -145,7 +148,9 @@ def test_noncausal_dispatch_gqa_and_score():
 def test_registry_repopulates_after_full_unregistration():
     for name in list(backend.list_backends()):
         backend.unregister_backend(name)
-    assert backend.list_backends() == ("flash", "pallas", "reference", "xla")
+    assert backend.list_backends() == (
+        "flash", "pallas", "pallas_fused", "reference", "xla"
+    )
 
 
 def test_flash_dispatch_matches_reference_softmax():
@@ -181,6 +186,8 @@ def test_gathered_dispatch_parity():
     ("reference", "xla"),
     ("reference", "pallas"),
     ("xla", "pallas"),
+    ("reference", "pallas_fused"),
+    ("xla", "pallas_fused"),
 ])
 def test_backend_parity_f32(pair):
     """Acceptance: reference<->pallas max-abs-error < 1e-4 (f32, CPU

@@ -1,0 +1,355 @@
+"""Fused index-gather scoring: parity vs the xla gathered scorer
+(forward + grads, every feature flag, all three modes), registry fallback
+for ``gathered_idx``-incapable backends, and the memory pins — no
+(F, N, K, d_v) candidate buffer in the fused train step's HLO, no
+G-times-repeated cache buffers in the GQA decode step's HLO.
+"""
+
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend
+from repro.backend import registry
+from repro.core import selection
+from repro.core.attention import zeta_attention
+from repro.kernels.cauchy_topk import block_plan
+from repro.nn.config import ZetaConfig
+
+B, HKV, N, DK, DV, CHUNKS, K = 2, 2, 64, 3, 16, 4, 8
+M = N // CHUNKS
+
+
+def _inputs(groups, dtype=jnp.float32, seed=0):
+    hq = HKV * groups
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    zq = jnp.tanh(jax.random.normal(k1, (B, hq, N, DK))).astype(dtype)
+    zk = jnp.tanh(jax.random.normal(k2, (B, HKV, N, DK))).astype(dtype)
+    v = jax.random.normal(k3, (B, HKV, N, DV)).astype(dtype)
+    gamma2 = jax.random.uniform(
+        k4, (hq,), minval=0.2, maxval=0.8
+    ).astype(dtype)
+    return zq, zk, v, gamma2
+
+
+def _empty_cache(dv=DV, n=N):
+    return selection.ZetaCache(
+        zk=jnp.zeros((B, HKV, n, DK), jnp.float32),
+        v=jnp.zeros((B, HKV, n, dv), jnp.float32),
+        zk_sorted=jnp.full((B * HKV, n), selection.SENTINEL, jnp.int32),
+        pos_sorted=jnp.zeros((B * HKV, n), jnp.int32),
+        ksum=jnp.zeros((B, HKV, DK), jnp.float32),
+        vsum=jnp.zeros((B, HKV, dv), jnp.float32),
+    )
+
+
+def _train(impl, zq, zk, v, gamma2, *, history_mean, local_window):
+    return zeta_attention(
+        zq, zk, v, gamma2, num_chunks=CHUNKS, k=K, bound=1.0,
+        history_mean=history_mean, local_window=local_window, impl=impl,
+    )
+
+
+# ------------------------------------------------------------ train parity
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("groups", [1, 2], ids=["mha", "gqa2"])
+@pytest.mark.parametrize("local_window", [0, 4], ids=["nowin", "win4"])
+@pytest.mark.parametrize("history_mean", [True, False], ids=["hm", "nohm"])
+def test_train_fused_matches_xla(history_mean, local_window, groups, dtype):
+    zq, zk, v, gamma2 = _inputs(groups, dtype)
+    out_x = _train("xla", zq, zk, v, gamma2,
+                   history_mean=history_mean, local_window=local_window)
+    out_f = _train("pallas_fused", zq, zk, v, gamma2,
+                   history_mean=history_mean, local_window=local_window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_f, np.float32), np.asarray(out_x, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("flags", [
+    dict(history_mean=True, local_window=0),
+    dict(history_mean=True, local_window=4),
+    dict(history_mean=False, local_window=0),
+], ids=["hm", "hm-win4", "nohm"])
+@pytest.mark.parametrize("groups", [1, 2], ids=["mha", "gqa2"])
+def test_train_fused_grads_match_xla(groups, flags):
+    """dq / dK / dV / dgamma2 of the fused path (in-kernel gather forward,
+    Appendix-E scalars + XLA scatter-add backward) match the xla
+    materializing scorer's autodiff — including the history-mean fold
+    (grads flow through the cumulative-mean rows back to K/V)."""
+    zq, zk, v, gamma2 = _inputs(groups)
+
+    def loss(impl):
+        def go(args):
+            out = _train(impl, *args, **flags)
+            return jnp.sum(jnp.sin(out))
+        return go
+
+    g_f = jax.grad(loss("pallas_fused"))((zq, zk, v, gamma2))
+    g_x = jax.grad(loss("xla"))((zq, zk, v, gamma2))
+    for name, a, b in zip(("dq", "dk", "dv", "dgamma2"), g_f, g_x):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4,
+            err_msg=f"{name} mismatch (groups={groups}, {flags})",
+        )
+
+
+# --------------------------------------------------- prefill/decode parity
+
+
+@pytest.mark.parametrize("groups", [1, 2], ids=["mha", "gqa2"])
+@pytest.mark.parametrize("zeta_kw", [
+    dict(),
+    dict(local_window=3),
+    dict(history_mean=False),
+], ids=["default", "win3", "nohm"])
+def test_prefill_and_decode_fused_match_xla(groups, zeta_kw):
+    zq, zk, v, gamma2 = _inputs(groups)
+    positions = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    all_valid = jnp.ones((B, N), bool)
+    outs, caches = {}, {}
+    for name in ("xla", "pallas_fused"):
+        zcfg = ZetaConfig(d_k=DK, k=K, num_chunks=CHUNKS, bound=1.0,
+                          backend=name, **zeta_kw)
+        outs[name], caches[name] = selection.attend_prefill(
+            _empty_cache(), zq, zk, v, gamma2, positions, all_valid,
+            zcfg=zcfg,
+        )
+    np.testing.assert_allclose(
+        np.asarray(outs["pallas_fused"]), np.asarray(outs["xla"]),
+        rtol=2e-5, atol=2e-5,
+    )
+    jax.tree_util.tree_map(  # cache maintenance is scorer-independent
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)
+        ),
+        caches["xla"]._replace(ksum=0, vsum=0),
+        caches["pallas_fused"]._replace(ksum=0, vsum=0),
+    )
+
+    # decode: the fused scorer step-by-step == the xla scorer step-by-step
+    dec = {}
+    for name in ("xla", "pallas_fused"):
+        zcfg = ZetaConfig(d_k=DK, k=K, num_chunks=CHUNKS, bound=1.0,
+                          backend=name, **zeta_kw)
+        step = jax.jit(functools.partial(selection.attend_decode, zcfg=zcfg))
+        cache = _empty_cache()
+        rows = []
+        active = jnp.ones((B,), bool)
+        for t in range(2 * M + 2):  # past the first sorted-cache inserts
+            o, cache = step(
+                cache, zq[:, :, t:t + 1], zk[:, :, t:t + 1],
+                v[:, :, t:t + 1], gamma2,
+                jnp.full((B,), t, jnp.int32), active,
+            )
+            rows.append(o)
+        dec[name] = jnp.concatenate(rows, axis=2)
+    np.testing.assert_allclose(
+        np.asarray(dec["pallas_fused"]), np.asarray(dec["xla"]),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+# ------------------------------------------------------- registry fallback
+
+
+def test_gathered_idx_stage_capability_gating():
+    req = registry.AttentionRequest.probe(stage="gathered_idx")
+    names = backend.available_backends(req)
+    assert "pallas_fused" in names and "xla" in names
+    # the materializing pallas backend has no gathered_idx stage
+    assert "pallas" not in names
+    assert backend.get_backend("pallas").gathered_idx is None
+
+
+def test_gathered_idx_fallback_uses_backends_gathered_stage():
+    """A pinned backend without ``gathered_idx`` keeps its scoring
+    semantics: candidates are gathered in XLA once and its plain
+    ``gathered`` stage is invoked."""
+    calls = {}
+
+    def fake_gathered(q, k_sel, v_sel, valid, gamma2, *, score="cauchy"):
+        calls["shape"] = k_sel.shape
+        from repro.core.attention import score_gathered_xla
+        return score_gathered_xla(q, k_sel, v_sel, valid, gamma2,
+                                  score=score)
+
+    backend.register_backend(
+        "fake-noidx", lambda *a, **k: None,
+        registry.Capabilities(mechanisms=("zeta",)),
+        gathered=fake_gathered,
+    )
+    try:
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        f, g, nq, nkv, kk = 3, 2, 4, 16, 5
+        q = jnp.tanh(jax.random.normal(ks[0], (f, g, nq, DK)))
+        kt = jnp.tanh(jax.random.normal(ks[1], (f, nkv, DK)))
+        vt = jax.random.normal(ks[2], (f, nkv, 8))
+        idx = jax.random.randint(ks[3], (f, g, nq, kk), 0, nkv)
+        valid = jnp.ones((f, g, nq, kk), bool)
+        out = backend.gathered_idx_attention(
+            q, kt, vt, idx, valid, 0.5, backend="fake-noidx"
+        )
+        assert calls["shape"] == (f, g, nq, kk, DK)  # materialized once
+        want = backend.gathered_idx_attention(
+            q, kt, vt, idx, valid, 0.5, backend="xla"
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-6)
+    finally:
+        backend.unregister_backend("fake-noidx")
+
+
+# ------------------------------------------------------------- memory pins
+
+
+def _hlo_shapes(hlo_text):
+    return [
+        tuple(int(d) for d in m.group(1).split(","))
+        for m in re.finditer(r"\[([0-9]+(?:,[0-9]+)+)\]", hlo_text)
+    ]
+
+
+def _candidate_buffers(hlo_text, n, kset, dv):
+    """Shapes ending in (..., n, K', dv) with a non-trivial lead — the
+    materialized per-candidate tensors the fused path must not create
+    (per-tile rank-3 kernel buffers are allowed: they live in VMEM)."""
+    return [
+        s for s in _hlo_shapes(hlo_text)
+        if len(s) >= 4 and s[-1] == dv and s[-2] in kset and s[-3] == n
+        and int(np.prod(s[:-3])) > 1
+    ]
+
+
+def _train_hlo(impl, history_mean=True, local_window=4):
+    zq, zk, v, gamma2 = _inputs(2)
+
+    def step(args):
+        out = _train(impl, *args, history_mean=history_mean,
+                     local_window=local_window)
+        return jnp.sum(jnp.sin(out))
+
+    fn = jax.jit(jax.value_and_grad(step))
+    return fn.lower((zq, zk, v, gamma2)).compile().as_text()
+
+
+def test_no_candidate_buffer_in_fused_train_hlo():
+    kset = {K, K + 1, K + 4, K + 5}  # k, +mean, +window, +both
+    hlo_x = _train_hlo("xla")
+    assert _candidate_buffers(hlo_x, N, kset, DV), (
+        "detector sanity: the materializing path must show a "
+        "(.., N, K, d_v) candidate buffer"
+    )
+    hlo_f = _train_hlo("pallas_fused")
+    bad = _candidate_buffers(hlo_f, N, kset, DV)
+    assert not bad, f"fused train step materializes candidates: {bad}"
+
+
+def test_decode_step_never_repeats_caches_for_gqa():
+    """GQA satellite pin: with G=3 query heads per KV head, the compiled
+    decode step must not contain any (B*Hq, Nmax, ...) buffer — the old
+    path repeated the sorted codes AND the raw zk/v caches G times every
+    token."""
+    groups, dv = 3, 8
+    hq = HKV * groups
+    nmax = 64
+    zcfg = ZetaConfig(d_k=DK, k=4, num_chunks=4, bound=1.0,
+                      local_window=2, backend="xla")
+    cache = selection.ZetaCache(
+        zk=jnp.zeros((B, HKV, nmax, DK), jnp.float32),
+        v=jnp.zeros((B, HKV, nmax, dv), jnp.float32),
+        zk_sorted=jnp.full((B * HKV, nmax), selection.SENTINEL, jnp.int32),
+        pos_sorted=jnp.zeros((B * HKV, nmax), jnp.int32),
+        ksum=jnp.zeros((B, HKV, DK), jnp.float32),
+        vsum=jnp.zeros((B, HKV, dv), jnp.float32),
+    )
+    step = jax.jit(functools.partial(selection.attend_decode, zcfg=zcfg))
+    args = (
+        cache,
+        jnp.zeros((B, hq, 1, DK)), jnp.zeros((B, HKV, 1, DK)),
+        jnp.zeros((B, HKV, 1, dv)), jnp.asarray(0.5),
+        jnp.full((B,), 9, jnp.int32), jnp.ones((B,), bool),
+    )
+    hlo = step.lower(*args).compile().as_text()
+    fq = B * hq
+    repeated = [
+        s for s in _hlo_shapes(hlo)
+        if len(s) >= 2 and s[0] == fq and s[1] == nmax
+    ]
+    assert not repeated, f"decode repeats per-KV caches G times: {repeated}"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_flagship_train_shape_stays_fused(dtype):
+    """The paper's flagship train shape (N=8192, d_k=3, d_v=128, with
+    history_mean doubling the K/V rows to 2N) must pass the fused
+    kernel's VMEM-residency guard — a silent fallback to the
+    materializing scorer here would void the tentpole at the motivating
+    config.  500k-token decode caches exceed it (the distributed decode
+    shards those)."""
+    from repro.backend.backends import fits_fused_residency
+
+    flagship_kt = jnp.zeros((1, 2 * 8192, 3), dtype)
+    flagship_vt = jnp.zeros((1, 2 * 8192, 128), dtype)
+    assert fits_fused_residency(flagship_kt, flagship_vt, kk=33)
+    long_kt = jnp.zeros((1, 512 * 1024, 3), dtype)
+    long_vt = jnp.zeros((1, 512 * 1024, 128), dtype)
+    assert not fits_fused_residency(long_kt, long_vt, kk=33)
+    # large k blows the (block_n, K) tile buffers, not the resident block:
+    # the guard must catch that too instead of failing Pallas compilation
+    small_kt = jnp.zeros((1, 8192, 3), dtype)
+    small_vt = jnp.zeros((1, 8192, 128), dtype)
+    assert not fits_fused_residency(small_kt, small_vt, kk=129)
+
+
+# ------------------------------------------------------- block-plan cliff
+
+
+def test_block_plan_never_degrades_to_one():
+    bn, n_pad = block_plan(8192 + 1, 256)   # non-multiple large N
+    assert bn == 256 and n_pad == 8448
+    bn, n_pad = block_plan(97, 256)         # small odd N: one padded block
+    assert bn >= 8 and n_pad % bn == 0 and n_pad >= 97
+    assert block_plan(8192, 256) == (256, 8192)  # exact multiple unchanged
+
+
+def test_materializing_kernel_handles_nonmultiple_n():
+    """Numerics across the pad/mask path of both kernels (old behaviour:
+    N=100 degraded to block 1)."""
+    from repro.kernels import ops, ref as kref
+
+    f, n, kk, dk, dv = 2, 100, 5, 3, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jnp.tanh(jax.random.normal(ks[0], (f, n, dk)))
+    k_sel = jnp.tanh(jax.random.normal(ks[1], (f, n, kk, dk)))
+    v_sel = jax.random.normal(ks[2], (f, n, kk, dv))
+    valid = jax.random.bernoulli(ks[3], 0.8, (f, n, kk))
+    g2 = jnp.asarray([0.3, 0.7])
+    out = ops.cauchy_topk_attention(q, k_sel, v_sel, valid, g2)
+    want, _ = kref.cauchy_topk_ref(q, k_sel, v_sel, valid, g2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss(args):
+        return jnp.sum(jnp.sin(ops.cauchy_topk_attention(
+            args[0], args[1], args[2], valid, args[3])))
+
+    def loss_ref(args):
+        return jnp.sum(jnp.sin(kref.cauchy_topk_ref(
+            args[0], args[1], args[2], valid, args[3])[0]))
+
+    gk = jax.grad(loss)((q, k_sel, v_sel, g2))
+    gr = jax.grad(loss_ref)((q, k_sel, v_sel, g2))
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
