@@ -1,0 +1,38 @@
+"""Quality-harness suite for the benchmark runner.
+
+Runs the tiny scale of ``repro.eval`` (MQAR recall, ListOps accuracy, LM
+perplexity slice) through a backend subset and emits the standard CSV
+rows plus ``BENCH_quality.json`` — so the fast benchmark set tracks a
+quality axis next to the perf numbers.  For the real numbers run
+``PYTHONPATH=src python -m repro.eval --fast`` (or ``--scale paper``).
+"""
+
+from __future__ import annotations
+
+import os
+
+# Backends exercised in the fast set: compiled XLA, the fused Pallas
+# scoring stage, and the reference oracle they are compared against.
+BACKENDS = ("reference", "xla", "pallas_fused")
+GEN_BACKENDS = ("reference", "xla", "pallas_fused")
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_quality.json")
+
+
+def run():
+    from repro.eval import quality_rows, run_quality
+
+    results = run_quality(
+        "tiny", backends=BACKENDS, gen_backends=GEN_BACKENDS,
+        out_path=os.path.abspath(OUT),
+    )
+    yield from quality_rows(results)
+    yield f"quality_json,0,{os.path.abspath(OUT)}"
+    if not results["ok"]:
+        failed = [g["name"] for g in results["gates"] if not g["ok"]]
+        raise RuntimeError(f"quality gates failed: {', '.join(failed)}")
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row, flush=True)

@@ -36,20 +36,23 @@ SUITES = {
     "fused": ("benchmarks.fused_scoring",
               "scoring stage: gathered vs fused index-gather, time + peak "
               "temp memory (BENCH_fused_scoring.json)"),
+    "quality": ("benchmarks.quality",
+                "quality harness: MQAR/ListOps/LM metrics + gates at tiny "
+                "shapes (BENCH_quality.json)"),
 }
 
 FAST_DEFAULT = ["parity", "fig3", "tab3", "tab4", "recall", "roofline",
-                "serve", "selection", "fused"]
+                "serve", "selection", "fused", "quality"]
 ALL = list(SUITES)
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names; default: fast set "
                          f"({','.join(FAST_DEFAULT)}); use 'all' for "
                          "everything incl. MQAR training figures")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.only == "all":
         names = ALL
     elif args.only:
@@ -74,6 +77,7 @@ def main() -> None:
     unknown = [n for n in names if n not in SUITES]
     if unknown:
         sys.exit(f"unknown suite(s) {unknown}; available: {', '.join(ALL)}")
+    failed: list[str] = []
     for name in names:
         mod_name, desc = SUITES[name]
         t0 = time.time()
@@ -81,11 +85,15 @@ def main() -> None:
             mod = __import__(mod_name, fromlist=["run"])
             for row in mod.run():
                 print(row, flush=True)
-        except Exception as e:  # keep the suite running
+        except Exception as e:  # finish the remaining suites, then fail
+            failed.append(name)
             print(f"{name}_ERROR,0,{type(e).__name__}:{e}",
                   file=sys.stderr, flush=True)
         print(f"{name}_suite,{1e6 * (time.time() - t0):.0f},{desc}",
               flush=True)
+    if failed:
+        sys.exit(f"BENCH FAILED: {len(failed)}/{len(names)} suite(s) "
+                 f"raised: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -1,108 +1,48 @@
-"""LRA-style long-sequence classification with ZETA (synthetic ListOps).
+"""LRA-style ListOps driver — thin caller over the quality-eval subsystem.
 
-Offline stand-in for the paper's LRA ListOps task: nested bracketed
-expressions over {MAX, MIN, MED, SUM_MOD} rendered as token sequences; the
-model classifies the expression's value (10 classes).  Structure matches
-ListOps' long-range credit assignment: the answer depends on tokens spread
-across the whole sequence.
+The synthetic ListOps task itself lives in ``repro.data.listops`` (nested
+{MAX, MIN, MED, SUM_MOD} expressions, 10-class value prediction) and the
+classifier training loop in ``repro.eval.tasks`` — shared with the gated
+harness (``python -m repro.eval``) so driver and gate never drift apart.
 
+    PYTHONPATH=src python examples/lra_listops.py --scale tiny
     PYTHONPATH=src python examples/lra_listops.py --steps 200
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models.classifier import classifier_apply, classifier_init
-from repro.nn.config import ModelConfig, ZetaConfig
-from repro.nn.module import F32
-from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
-from repro.optim.transform import apply_updates
-
-# token ids: 0..9 digits, 10..13 ops, 14 '(', 15 ')', 16 pad
-OPS = {10: "MAX", 11: "MIN", 12: "MED", 13: "SUMMOD"}
-VOCAB = 17
-
-
-def _gen_expr(rng, depth, max_args=4):
-    if depth == 0 or rng.random() < 0.3:
-        v = int(rng.integers(0, 10))
-        return [v], v
-    op = int(rng.integers(10, 14))
-    n_args = int(rng.integers(2, max_args + 1))
-    toks, vals = [op, 14], []
-    for _ in range(n_args):
-        t, v = _gen_expr(rng, depth - 1, max_args)
-        toks += t
-        vals.append(v)
-    toks.append(15)
-    if op == 10:
-        out = max(vals)
-    elif op == 11:
-        out = min(vals)
-    elif op == 12:
-        out = sorted(vals)[len(vals) // 2]
-    else:
-        out = sum(vals) % 10
-    return toks, out
-
-
-def make_batch(rng, batch, seq_len, depth=4):
-    toks = np.full((batch, seq_len), 16, np.int32)
-    labels = np.zeros((batch,), np.int32)
-    for b in range(batch):
-        t, v = _gen_expr(rng, depth)
-        t = t[:seq_len]
-        toks[b, : len(t)] = t
-        labels[b] = v
-    return jnp.asarray(toks), jnp.asarray(labels)
+from repro.data.eval_splits import listops_eval_batches
+from repro.eval.harness import SCALES
+from repro.eval.tasks import listops_acc, listops_config, train_listops
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--scale", choices=sorted(SCALES), default="fast")
+    ap.add_argument("--mechanism", default="zeta",
+                    choices=["zeta", "full", "topk"])
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the scale's step count")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backends", default="reference",
+                    help="comma-separated eval backends")
     args = ap.parse_args()
 
-    cfg = ModelConfig(
-        name="lra-listops", vocab=VOCAB, d_model=64, n_layers=2,
-        n_heads=2, n_kv_heads=2, d_ff=128, attention="zeta",
-        zeta=ZetaConfig(d_k=3, k=8, num_chunks=4, local_window=4),
+    s = dict(SCALES[args.scale].listops)
+    if args.steps:
+        s["steps"] = args.steps
+
+    cfg = listops_config(args.mechanism, s)
+    params, info = train_listops(cfg, s, seed=args.seed, log_every=25)
+    print(f"trained {cfg.name}: {info['steps']} steps, "
+          f"final loss {info['final_loss']:.3f} ({info['train_s']}s)")
+    batches = listops_eval_batches(
+        batch=s["batch"], seq_len=s["seq_len"], depth=s["depth"],
+        n_batches=s["eval_batches"], seed=args.seed,
     )
-    params = classifier_init(jax.random.PRNGKey(0), cfg, 10)
-    tx = chain(clip_by_global_norm(1.0),
-               adamw(warmup_cosine(args.lr, 20, 2 * args.steps), b2=0.999))
-    opt_state = tx.init(params)
-
-    def loss_fn(p, toks, labels):
-        logits = classifier_apply(p, toks, cfg, F32)
-        onehot = jax.nn.one_hot(labels, 10)
-        ce = -jnp.mean(
-            jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1)
-        )
-        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(
-            jnp.float32))
-        return ce, acc
-
-    @jax.jit
-    def step(p, opt, step_idx, toks, labels):
-        (ce, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(
-            p, toks, labels)
-        upd, opt = tx.update(g, opt, p, step_idx)
-        return apply_updates(p, upd), opt, ce, acc
-
-    rng = np.random.default_rng(0)
-    for i in range(args.steps):
-        toks, labels = make_batch(rng, args.batch, args.seq)
-        params, opt_state, ce, acc = step(
-            params, opt_state, jnp.asarray(i), toks, labels)
-        if (i + 1) % 25 == 0:
-            print(f"step {i + 1:4d} ce {float(ce):.3f} "
-                  f"acc {float(acc):.3f}", flush=True)
+    for backend in [b.strip() for b in args.backends.split(",") if b.strip()]:
+        acc = listops_acc(params, cfg, batches, backend)
+        print(f"listops-acc[{backend}] {acc:.3f}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,84 +1,72 @@
-"""End-to-end training driver: ZETA on MULTI-QUERY ASSOCIATIVE RECALL.
+"""MQAR training driver — thin caller over the quality-eval subsystem.
 
-This is the paper's Fig-2 experiment as a runnable driver with checkpoints
-and resume.  Default size is CPU-friendly; ``--full`` selects the ~124M
-paper configuration (zeta-wt103-124m) for accelerator runs.
+The paper's Fig-2 experiment, now expressed through ``repro.eval``: model
+configs, shapes, training loop, eval splits, and the generate-facade
+recall all come from ``repro.eval.tasks`` / ``repro.eval.harness.SCALES``
+so this driver and the gated harness (``python -m repro.eval``) can never
+drift apart.  Train one mechanism at one scale and report teacher-forced
+recall per backend:
 
-    PYTHONPATH=src python examples/train_mqar.py --steps 400
-    PYTHONPATH=src python examples/train_mqar.py --full --steps 300
+    PYTHONPATH=src python examples/train_mqar.py --scale tiny
+    PYTHONPATH=src python examples/train_mqar.py --mechanism full --steps 300
+    PYTHONPATH=src python examples/train_mqar.py --scale paper   # accelerator
 """
 
 import argparse
 
-import jax
-
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_config
-from repro.data.mqar import mqar_batch
-from repro.nn.config import ModelConfig, ZetaConfig
-from repro.nn.module import F32
-from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
-from repro.train import init_train_state, make_eval_step, make_train_step
-
-
-def small_cfg(mechanism: str) -> ModelConfig:
-    return ModelConfig(
-        name=f"mqar-{mechanism}", vocab=64, d_model=64, n_layers=2,
-        n_heads=4, n_kv_heads=4, d_ff=128, attention=mechanism,
-        zeta=ZetaConfig(d_k=3, k=8, num_chunks=4), tie_embeddings=True,
-    )
+from repro.data.eval_splits import mqar_eval_batches
+from repro.eval.harness import SCALES
+from repro.eval.tasks import (
+    eval_metrics,
+    mqar_config,
+    run_mqar,
+    train_mqar,
+)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=sorted(SCALES), default="fast")
     ap.add_argument("--mechanism", default="zeta",
                     choices=["zeta", "full", "topk"])
-    ap.add_argument("--steps", type=int, default=400)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=1e-2)
-    ap.add_argument("--full", action="store_true",
-                    help="use the ~124M paper config (accelerator-sized)")
-    ap.add_argument("--ckpt-dir", default="/tmp/mqar_ckpt")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the scale's step count")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backends", default="reference",
+                    help="comma-separated eval backends")
+    ap.add_argument("--compare", action="store_true",
+                    help="run the harness's full zeta-vs-full comparison "
+                         "(both mechanisms + generate-facade recall)")
     args = ap.parse_args()
 
-    if args.full:
-        cfg = get_config("zeta-wt103-124m").replace(vocab=256)
-        seq, pairs, queries = 256, 16, 8
-    else:
-        cfg = small_cfg(args.mechanism)
-        seq, pairs, queries = 64, 8, 4
+    s = dict(SCALES[args.scale].mqar)
+    if args.steps:
+        s["steps"] = args.steps
+    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
 
-    tx = chain(
-        clip_by_global_norm(1.0),
-        adamw(warmup_cosine(args.lr, 20, args.steps), weight_decay=0.01),
+    if args.compare:
+        res = run_mqar(s, backends=backends, seed=args.seed)
+        for mech, per_backend in sorted(res["metrics"]["acc"].items()):
+            for backend, acc in sorted(per_backend.items()):
+                print(f"{mech:5s} recall-acc[{backend}] {acc:.3f}")
+        for backend, acc in sorted(
+                res["metrics"]["generate_acc"]["zeta"].items()):
+            print(f"zeta  generate-acc[{backend}] {acc:.3f}")
+        return
+
+    cfg = mqar_config(args.mechanism, s)
+    params, info = train_mqar(cfg, s, seed=args.seed)
+    print(f"trained {cfg.name}: {info['steps']} steps, "
+          f"final loss {info['final_loss']:.3f} ({info['train_s']}s)")
+    batches = mqar_eval_batches(
+        batch=s["batch"], seq_len=s["seq_len"], vocab=s["vocab"],
+        num_pairs=s["num_pairs"], num_queries=s["num_queries"],
+        n_batches=s["eval_batches"], seed=args.seed,
     )
-    state = init_train_state(jax.random.PRNGKey(0), cfg, tx)
-    mgr = CheckpointManager(args.ckpt_dir, keep_last=2)
-    latest = mgr.latest_step()
-    start = 0
-    if latest:
-        state, _ = mgr.restore(latest, state)
-        start = latest
-        print(f"resumed at step {latest}")
-
-    step = jax.jit(make_train_step(cfg, tx, F32), donate_argnums=0)
-    evalf = jax.jit(make_eval_step(cfg, F32))
-    key = jax.random.PRNGKey(1)
-    for i in range(start, args.steps):
-        key, sub = jax.random.split(key)
-        batch = mqar_batch(sub, batch=args.batch, seq_len=seq,
-                           vocab=cfg.vocab, num_pairs=pairs,
-                           num_queries=queries)
-        state, metrics = step(state, batch)
-        if (i + 1) % 50 == 0:
-            key, sub = jax.random.split(key)
-            ev = evalf(state["params"], mqar_batch(
-                sub, batch=args.batch, seq_len=seq, vocab=cfg.vocab,
-                num_pairs=pairs, num_queries=queries))
-            print(f"step {i + 1:4d} loss {float(metrics['loss']):.3f} "
-                  f"recall-acc {float(ev['acc']):.3f}", flush=True)
-            mgr.save(i + 1, state)
-    mgr.wait()
+    for backend in backends:
+        m = eval_metrics(params, cfg, batches, backend)
+        print(f"recall-acc[{backend}] {m['acc']:.3f}  ce {m['ce']:.3f}",
+              flush=True)
 
 
 if __name__ == "__main__":

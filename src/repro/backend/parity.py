@@ -99,6 +99,62 @@ def parity_check(
     return results
 
 
+@dataclasses.dataclass(frozen=True)
+class MetricParity:
+    """Task-level parity: one scalar quality metric (accuracy, perplexity)
+    from two backends evaluated on the *same* params and eval split.  The
+    tensor-level :class:`ParityResult` pins the scoring stage; this pins
+    the end-to-end task behind it — the quality harness (``repro.eval``)
+    builds its backend-vs-reference gates from these."""
+
+    backend: str
+    reference: str
+    task: str
+    metric: str
+    value: float
+    ref_value: float
+
+    @property
+    def abs_err(self) -> float:
+        return abs(self.value - self.ref_value)
+
+    @property
+    def rel_err(self) -> float:
+        denom = max(abs(self.ref_value), 1e-12)
+        return abs(self.value - self.ref_value) / denom
+
+    def ok(self, threshold: float, *, relative: bool = False) -> bool:
+        return (self.rel_err if relative else self.abs_err) < threshold
+
+    def row(self) -> str:
+        return (
+            f"quality_{self.task}_{self.metric}"
+            f"_{self.backend}_vs_{self.reference},0,"
+            f"value={self.value:.4f};ref={self.ref_value:.4f};"
+            f"abs_err={self.abs_err:.3e}"
+        )
+
+
+def metric_parity(per_backend: dict[str, float], *, reference: str,
+                  task: str, metric: str) -> list[MetricParity]:
+    """Compare every backend's scalar metric against ``reference``'s.
+    ``per_backend`` maps backend name -> metric value (reference
+    included); returns one :class:`MetricParity` per non-reference
+    backend."""
+    if reference not in per_backend:
+        raise KeyError(
+            f"reference backend {reference!r} missing from metrics "
+            f"{sorted(per_backend)}"
+        )
+    ref_value = float(per_backend[reference])
+    return [
+        MetricParity(backend=name, reference=reference, task=task,
+                     metric=metric, value=float(v), ref_value=ref_value)
+        for name, v in sorted(per_backend.items())
+        if name != reference
+    ]
+
+
 def parity_rows(
     pairs: Sequence[tuple[str, str]] = (
         ("reference", "xla"),

@@ -1,6 +1,21 @@
-"""Data pipeline: MQAR generator, synthetic LM corpus, stateful loader."""
+"""Data pipeline: MQAR generator, synthetic ListOps, synthetic LM corpus,
+stateful loader, and the deterministic eval splits the quality harness
+gates on."""
 
+from repro.data.listops import listops_batch
 from repro.data.mqar import mqar_batch
 from repro.data.synthetic import SyntheticLMLoader
+from repro.data.eval_splits import (
+    listops_eval_batches,
+    lm_eval_batches,
+    mqar_eval_batches,
+)
 
-__all__ = ["mqar_batch", "SyntheticLMLoader"]
+__all__ = [
+    "mqar_batch",
+    "listops_batch",
+    "SyntheticLMLoader",
+    "mqar_eval_batches",
+    "listops_eval_batches",
+    "lm_eval_batches",
+]

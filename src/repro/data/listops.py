@@ -1,0 +1,62 @@
+"""Synthetic ListOps (LRA) generator — the paper's long-range
+classification task, offline.
+
+Nested bracketed expressions over {MAX, MIN, MED, SUM_MOD} rendered as
+token sequences; the label is the expression's value (10 classes).  The
+structure matches ListOps' long-range credit assignment: the answer
+depends on tokens spread across the whole sequence.
+
+Shared by ``examples/lra_listops.py`` and the quality-eval harness
+(``repro.eval``) so the example and the regression gate train/evaluate on
+the *same* distribution.  Generation is pure numpy off a caller-provided
+``Generator`` — deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# token ids: 0..9 digits, 10..13 ops, 14 '(', 15 ')', 16 pad
+OPS = {10: "MAX", 11: "MIN", 12: "MED", 13: "SUMMOD"}
+VOCAB = 17
+NUM_CLASSES = 10
+PAD = 16
+
+
+def gen_expr(rng: np.random.Generator, depth: int, max_args: int = 4):
+    """One nested expression: returns (token list, value in 0..9)."""
+    if depth == 0 or rng.random() < 0.3:
+        v = int(rng.integers(0, 10))
+        return [v], v
+    op = int(rng.integers(10, 14))
+    n_args = int(rng.integers(2, max_args + 1))
+    toks, vals = [op, 14], []
+    for _ in range(n_args):
+        t, v = gen_expr(rng, depth - 1, max_args)
+        toks += t
+        vals.append(v)
+    toks.append(15)
+    if op == 10:
+        out = max(vals)
+    elif op == 11:
+        out = min(vals)
+    elif op == 12:
+        out = sorted(vals)[len(vals) // 2]
+    else:
+        out = sum(vals) % 10
+    return toks, out
+
+
+def listops_batch(rng: np.random.Generator, batch: int, seq_len: int,
+                  depth: int = 4):
+    """Returns (tokens (B, N) int32, labels (B,) int32); expressions are
+    truncated/padded to ``seq_len`` with the PAD token."""
+    toks = np.full((batch, seq_len), PAD, np.int32)
+    labels = np.zeros((batch,), np.int32)
+    for b in range(batch):
+        t, v = gen_expr(rng, depth)
+        t = t[:seq_len]
+        toks[b, : len(t)] = t
+        labels[b] = v
+    return jnp.asarray(toks), jnp.asarray(labels)

@@ -1,0 +1,31 @@
+"""Quality-eval subsystem: paper tasks through every backend, gated.
+
+``run_quality`` trains small ZETA + full-attention models on MQAR,
+synthetic ListOps, and a WikiText-style synthetic LM slice, measures each
+task's quality metric per registered backend on pinned eval splits, and
+gates the deltas (backend vs reference, ZETA vs full attention, generate
+facade vs teacher forcing).  Output is ``BENCH_quality.json`` — the
+quality axis of the benchmark trajectory.
+
+    PYTHONPATH=src python -m repro.eval --fast
+"""
+
+from repro.eval.gates import Gate, Tolerances, evaluate_gates
+from repro.eval.harness import (
+    SCALES,
+    TASKS,
+    EvalScale,
+    quality_rows,
+    run_quality,
+)
+
+__all__ = [
+    "Gate",
+    "Tolerances",
+    "evaluate_gates",
+    "EvalScale",
+    "SCALES",
+    "TASKS",
+    "run_quality",
+    "quality_rows",
+]

@@ -1,0 +1,71 @@
+"""CLI for the quality-eval harness.
+
+    PYTHONPATH=src python -m repro.eval --fast
+    PYTHONPATH=src python -m repro.eval --scale tiny --out BENCH_quality.json
+    PYTHONPATH=src python -m repro.eval --tasks mqar,lm --backends reference,xla
+
+Prints one CSV row per (task, mechanism, metric, backend) plus one row per
+gate, writes the JSON, and exits non-zero if any gate fails (pass
+``--no-gate-exit`` to report without failing, e.g. while tuning a scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.eval.harness import (
+    SCALES,
+    TASKS,
+    default_out_path,
+    quality_rows,
+    run_quality,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.eval")
+    ap.add_argument("--scale", choices=sorted(SCALES), default="fast")
+    ap.add_argument("--fast", action="store_true",
+                    help="alias for --scale fast")
+    ap.add_argument("--tiny", action="store_true",
+                    help="alias for --scale tiny (CI smoke)")
+    ap.add_argument("--tasks", default=",".join(TASKS),
+                    help=f"comma-separated subset of {','.join(TASKS)}")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated zeta backends "
+                         "(default: all registered)")
+    ap.add_argument("--gen-backends", default=None,
+                    help="backends for the generate-facade recall")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default: ./BENCH_quality.json)")
+    ap.add_argument("--no-gate-exit", action="store_true",
+                    help="exit 0 even when gates fail")
+    args = ap.parse_args(argv)
+
+    scale = "tiny" if args.tiny else ("fast" if args.fast else args.scale)
+    out_path = args.out or default_out_path()
+    results = run_quality(
+        scale,
+        backends=args.backends.split(",") if args.backends else None,
+        gen_backends=(args.gen_backends.split(",")
+                      if args.gen_backends else None),
+        tasks=[t.strip() for t in args.tasks.split(",") if t.strip()],
+        seed=args.seed,
+        out_path=out_path,
+    )
+    print("name,us_per_call,derived")
+    for row in quality_rows(results):
+        print(row, flush=True)
+    print(f"quality_json,0,{out_path}", flush=True)
+    if not results["ok"] and not args.no_gate_exit:
+        failed = [g["name"] for g in results["gates"] if not g["ok"]]
+        print(f"FAILED quality gates: {', '.join(failed)}",
+              file=sys.stderr, flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+"""Tolerance policy + regression gates over quality-harness results.
+
+Three gate families, mirroring the two claims the harness exists to pin
+plus the serving stack:
+
+  backend parity   every backend's task metric within ``eps`` of the
+                   reference backend's (same trained params, same pinned
+                   eval split) — a kernel/backend PR that shifts task
+                   quality fails here even if tensor-level parity noise
+                   stayed under its own threshold.
+  zeta vs full     ZETA's metric within ``delta`` of the full-attention
+                   baseline trained identically — the paper's
+                   matches-full-attention claim as a standing regression
+                   gate (accuracy: absolute gap; perplexity: relative).
+  generate vs tf   MQAR recall through ``repro.api.generate`` within a
+                   (looser) tolerance of the teacher-forced recall on the
+                   same backend: decode uses the delayed-insertion
+                   candidate pool, a conservative subset of the training
+                   pool, so exact equality is not expected — but a paging
+                   or quantisation regression in the serve path lands
+                   here first.
+
+Thresholds live in :class:`Tolerances`; each scale preset picks its own
+(small models trained for few steps are noisier, so tiny/fast run looser
+than paper).  Adding a task = returning the standard metrics dict from a
+task function and, if it introduces a new metric name, teaching
+``evaluate_gates`` which family it belongs to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.backend.parity import metric_parity
+
+REFERENCE = "reference"
+
+# metric name -> (higher_is_better, compare relatively?)
+_METRIC_KIND = {
+    "acc": (True, False),
+    "generate_acc": (True, False),
+    "ppl": (False, True),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Tolerances:
+    """Per-scale tolerance policy (see module docstring)."""
+
+    backend_acc: float = 0.05        # |acc_b - acc_ref| per task
+    backend_ppl_rel: float = 0.02    # |ppl_b/ppl_ref - 1|
+    zeta_vs_full_acc: float = 0.15   # acc_full - acc_zeta (reference)
+    zeta_vs_full_ppl_rel: float = 0.15  # ppl_zeta/ppl_full - 1
+    generate_vs_teacher_acc: float = 0.20
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    name: str        # e.g. "mqar/backend/xla/acc"
+    task: str
+    kind: str        # "backend_parity" | "zeta_vs_full" | "generate_vs_tf"
+    value: float     # the measured delta (smaller is better)
+    threshold: float
+    ok: bool
+    detail: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        return (f"quality_gate_{self.name.replace('/', '_')},0,"
+                f"{status};value={self.value:.4f};"
+                f"threshold={self.threshold:.4f}")
+
+
+def _parity_gates(task: str, metric: str, per_backend: dict,
+                  tol: Tolerances) -> list[Gate]:
+    relative = _METRIC_KIND[metric][1]
+    threshold = tol.backend_ppl_rel if relative else tol.backend_acc
+    gates = []
+    for p in metric_parity(per_backend, reference=REFERENCE, task=task,
+                           metric=metric):
+        value = p.rel_err if relative else p.abs_err
+        gates.append(Gate(
+            name=f"{task}/backend/{p.backend}/{metric}",
+            task=task, kind="backend_parity", value=value,
+            threshold=threshold, ok=value < threshold,
+            detail=f"{metric}={p.value:.4f} vs "
+                   f"{REFERENCE}={p.ref_value:.4f}",
+        ))
+    return gates
+
+
+def _zeta_vs_full_gate(task: str, metric: str, mechs: dict,
+                       tol: Tolerances) -> Gate:
+    higher_better, relative = _METRIC_KIND[metric]
+    z = float(mechs["zeta"][REFERENCE])
+    f = float(mechs["full"][REFERENCE])
+    if relative:
+        # perplexity: zeta may be at most (1 + delta) * full
+        value = z / max(f, 1e-12) - 1.0
+        threshold = tol.zeta_vs_full_ppl_rel
+    else:
+        # accuracy: zeta may trail full by at most delta
+        value = f - z
+        threshold = tol.zeta_vs_full_acc
+    return Gate(
+        name=f"{task}/zeta_vs_full/{metric}", task=task,
+        kind="zeta_vs_full", value=value, threshold=threshold,
+        ok=value <= threshold,
+        detail=f"zeta={z:.4f} full={f:.4f} ({metric}, reference backend)",
+    )
+
+
+def evaluate_gates(tasks_results: dict[str, dict],
+                   tol: Tolerances) -> list[Gate]:
+    """Build every gate from the harness's per-task results (the
+    ``{"metrics": {metric: {mechanism: {backend: value}}}}`` schema the
+    task functions return)."""
+    gates: list[Gate] = []
+    for task, res in sorted(tasks_results.items()):
+        metrics = res["metrics"]
+        for metric, mechs in sorted(metrics.items()):
+            if metric not in _METRIC_KIND:
+                raise KeyError(
+                    f"task {task!r} reports unknown metric {metric!r}; "
+                    f"teach repro.eval.gates its family first"
+                )
+            for mech, per_backend in sorted(mechs.items()):
+                if REFERENCE in per_backend and len(per_backend) > 1:
+                    gates.extend(
+                        _parity_gates(task, metric, per_backend, tol))
+            if metric != "generate_acc" and {"zeta", "full"} <= set(mechs):
+                gates.append(_zeta_vs_full_gate(task, metric, mechs, tol))
+        # serving-stack gate: generate recall vs teacher-forced recall
+        gen = metrics.get("generate_acc", {}).get("zeta", {})
+        tf = metrics.get("acc", {}).get("zeta", {})
+        for backend, g in sorted(gen.items()):
+            anchor = tf.get(backend, tf.get(REFERENCE))
+            if anchor is None:
+                continue
+            value = abs(float(g) - float(anchor))
+            gates.append(Gate(
+                name=f"{task}/generate_vs_tf/{backend}", task=task,
+                kind="generate_vs_tf", value=value,
+                threshold=tol.generate_vs_teacher_acc,
+                ok=value <= tol.generate_vs_teacher_acc,
+                detail=f"generate={float(g):.4f} "
+                       f"teacher_forced={float(anchor):.4f}",
+            ))
+    return gates

@@ -1,0 +1,181 @@
+"""Quality-eval harness: MQAR / ListOps / LM slice through every backend.
+
+Orchestrates the task runners (``repro.eval.tasks``), evaluates the
+regression gates (``repro.eval.gates``), and emits ``BENCH_quality.json``
+— the quality axis next to the BENCH_*.json perf files, so every
+subsequent kernel/paging/quantisation PR shows speed *without* quality
+regressions.
+
+    PYTHONPATH=src python -m repro.eval --fast            # the paper trio
+    PYTHONPATH=src python -m repro.eval --scale tiny      # CI smoke
+    results = run_quality(scale="tiny")                   # library use
+
+Scales:
+  tiny   CI/test shapes — seconds-scale training, loose tolerances; the
+         tier-1 gate (tests/test_eval_harness.py) runs this.
+  fast   small but non-trivial shapes — the default for
+         ``python -m repro.eval --fast`` (minutes on CPU).
+  paper  paper-sized shapes (MQAR 256-token contexts, 512-token ListOps /
+         LM) with the paper's k = 32 — accelerator-scale, tight gates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, Sequence
+
+from repro.eval import tasks as tasks_mod
+from repro.eval.gates import Gate, Tolerances, evaluate_gates
+
+TASKS = ("mqar", "listops", "lm")
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalScale:
+    """One preset: per-task shape dicts + the tolerance policy."""
+
+    name: str
+    mqar: dict
+    listops: dict
+    lm: dict
+    tol: Tolerances
+
+
+SCALES: dict[str, EvalScale] = {
+    "tiny": EvalScale(
+        name="tiny",
+        mqar=dict(vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=32,
+                  num_pairs=2, num_queries=2, batch=32, steps=150,
+                  lr=3e-3, k=8, num_chunks=4, local_window=2,
+                  eval_batches=3, gen_prompts=8),
+        listops=dict(d_model=32, n_layers=2, n_heads=2, seq_len=64,
+                     depth=3, batch=16, steps=100, lr=3e-3, k=8,
+                     num_chunks=4, local_window=4, eval_batches=3),
+        lm=dict(vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=64,
+                batch=8, steps=100, lr=3e-3, k=8, num_chunks=4,
+                eval_batches=3),
+        tol=Tolerances(backend_acc=0.05, backend_ppl_rel=0.02,
+                       zeta_vs_full_acc=0.30, zeta_vs_full_ppl_rel=0.30,
+                       generate_vs_teacher_acc=0.35),
+    ),
+    "fast": EvalScale(
+        name="fast",
+        mqar=dict(vocab=64, d_model=64, n_layers=2, n_heads=2, seq_len=64,
+                  num_pairs=8, num_queries=4, batch=64, steps=500,
+                  lr=3e-3, k=8, num_chunks=4, local_window=2,
+                  eval_batches=4, gen_prompts=16),
+        listops=dict(d_model=64, n_layers=2, n_heads=2, seq_len=128,
+                     depth=4, batch=32, steps=300, lr=3e-3, k=8,
+                     num_chunks=4, local_window=4, eval_batches=4),
+        lm=dict(vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=128,
+                batch=16, steps=300, lr=3e-3, k=16, num_chunks=4,
+                eval_batches=4),
+        tol=Tolerances(backend_acc=0.05, backend_ppl_rel=0.02,
+                       zeta_vs_full_acc=0.15, zeta_vs_full_ppl_rel=0.15,
+                       generate_vs_teacher_acc=0.25),
+    ),
+    "paper": EvalScale(
+        name="paper",
+        mqar=dict(vocab=256, d_model=128, n_layers=2, n_heads=4,
+                  seq_len=256, num_pairs=16, num_queries=8, batch=64,
+                  steps=2000, lr=1e-3, k=32, num_chunks=8,
+                  local_window=2, eval_batches=8, gen_prompts=32),
+        listops=dict(d_model=128, n_layers=4, n_heads=4, seq_len=512,
+                     depth=5, batch=32, steps=2000, lr=1e-3, k=32,
+                     num_chunks=8, local_window=4, eval_batches=8),
+        lm=dict(vocab=1024, d_model=256, n_layers=4, n_heads=4,
+                seq_len=512, batch=16, steps=2000, lr=1e-3, k=32,
+                num_chunks=16, eval_batches=8),
+        tol=Tolerances(backend_acc=0.02, backend_ppl_rel=0.01,
+                       zeta_vs_full_acc=0.03, zeta_vs_full_ppl_rel=0.03,
+                       generate_vs_teacher_acc=0.10),
+    ),
+}
+
+
+def run_quality(scale: str | EvalScale = "fast", *,
+                backends: Sequence[str] | None = None,
+                gen_backends: Sequence[str] | None = None,
+                tasks: Iterable[str] = TASKS,
+                seed: int = 0,
+                out_path: str | None = None) -> dict:
+    """Run the requested quality tasks and gates; returns (and optionally
+    writes) the ``BENCH_quality.json`` dict.
+
+    ``backends``: zeta backends for teacher-forced metrics (default: every
+    registered zeta backend); ``gen_backends``: backends for the
+    generate-facade recall (default: reference/xla/pallas_fused).  The
+    full-attention baseline always runs through the softmax-capable
+    backends (reference/flash).
+    """
+    from repro.backend import registry
+
+    sc = SCALES[scale] if isinstance(scale, str) else scale
+    backends = tuple(backends or tasks_mod.ZETA_BACKENDS)
+    gen_backends = tuple(
+        gen_backends or ("reference", "xla", "pallas_fused"))
+    tasks = tuple(tasks)
+    unknown = set(tasks) - set(TASKS)
+    if unknown:
+        raise ValueError(f"unknown tasks {sorted(unknown)}; have {TASKS}")
+
+    results: dict[str, dict] = {}
+    if "mqar" in tasks:
+        results["mqar"] = tasks_mod.run_mqar(
+            sc.mqar, backends=backends, gen_backends=gen_backends,
+            seed=seed)
+    if "listops" in tasks:
+        results["listops"] = tasks_mod.run_listops(
+            sc.listops, backends=backends, seed=seed)
+    if "lm" in tasks:
+        results["lm"] = tasks_mod.run_lm(
+            sc.lm, backends=backends, seed=seed)
+
+    gates = evaluate_gates(results, sc.tol)
+    out = {
+        "meta": {
+            "scale": sc.name,
+            "seed": seed,
+            "backends": list(backends),
+            "gen_backends": list(gen_backends),
+            "full_backends": list(tasks_mod.FULL_BACKENDS),
+            "device": registry.current_device(),
+            "tolerances": sc.tol.to_dict(),
+            "generated_by": "PYTHONPATH=src python -m repro.eval "
+                            f"--scale {sc.name}",
+        },
+        "tasks": results,
+        "gates": [g.to_dict() for g in gates],
+        "ok": all(g.ok for g in gates),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
+def quality_rows(results: dict) -> list[str]:
+    """CSV rows (the ``benchmarks/run.py`` protocol) from a
+    :func:`run_quality` result dict."""
+    rows = []
+    for task, res in sorted(results["tasks"].items()):
+        for metric, mechs in sorted(res["metrics"].items()):
+            for mech, per_backend in sorted(mechs.items()):
+                for backend, v in sorted(per_backend.items()):
+                    rows.append(
+                        f"quality_{task}_{mech}_{metric}_{backend},0,"
+                        f"{float(v):.4f}"
+                    )
+    for g in results["gates"]:
+        rows.append(Gate(**g).row())
+    status = "ok" if results["ok"] else "FAIL"
+    rows.append(f"quality_gates,0,{status};"
+                f"{sum(1 for g in results['gates'] if g['ok'])}"
+                f"/{len(results['gates'])} passed")
+    return rows
+
+
+def default_out_path() -> str:
+    return os.path.join(os.getcwd(), "BENCH_quality.json")

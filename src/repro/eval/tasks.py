@@ -1,0 +1,342 @@
+"""Quality-eval tasks: MQAR recall, ListOps accuracy, LM perplexity slice.
+
+Each task trains a small model per mechanism (ZETA and the full-attention
+baseline) under pinned seeds, then measures its quality metric on the
+deterministic eval splits (``repro.data.eval_splits``) once per requested
+attention backend — the *same* trained params evaluated through
+reference / xla / pallas / pallas_fused, so any backend-vs-reference
+delta isolates the backend's numerics, and the ZETA-vs-full gap isolates
+the selection mechanism.  MQAR additionally measures recall through the
+``repro.api.generate`` facade (chunked prefill + incremental decode +
+device-side sampling), so the serving stack is gated too, not just the
+training pipeline.
+
+Shapes come in as plain dicts (see ``repro.eval.harness.SCALES``); every
+function here is deterministic given (shapes, seed).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import listops as listops_data
+from repro.data.eval_splits import (
+    listops_eval_batches,
+    lm_eval_batches,
+    mqar_eval_batches,
+)
+from repro.data.mqar import mqar_batch
+from repro.data.synthetic import SyntheticLMLoader
+from repro.models.classifier import classifier_apply, classifier_init
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.nn.module import F32
+from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
+from repro.optim.transform import apply_updates
+from repro.train import init_train_state, make_eval_step, make_train_step
+
+# ZETA backends evaluated by default; the full-attention baseline runs
+# through the softmax-capable backends.
+ZETA_BACKENDS = ("reference", "xla", "pallas", "pallas_fused")
+FULL_BACKENDS = ("reference", "flash")
+
+
+def pin_backend(cfg: ModelConfig, backend: str | None) -> ModelConfig:
+    """Pin the attention dispatch of ``cfg`` to one registry backend
+    (None restores capability-based auto-selection)."""
+    return cfg.replace(zeta=cfg.zeta.replace(backend=backend))
+
+
+def _zeta_cfg(s: dict) -> ZetaConfig:
+    return ZetaConfig(
+        d_k=3, k=s["k"], num_chunks=s["num_chunks"],
+        local_window=s.get("local_window", 0),
+    )
+
+
+# ------------------------------------------------------------------ train
+
+
+def _train_lm_style(cfg: ModelConfig, batch_fn, *, steps: int, lr: float,
+                    seed: int) -> tuple[dict, dict]:
+    """Shared LM-style training loop (MQAR and the LM slice): returns
+    (params, info).  ``batch_fn(key, i) -> batch dict``."""
+    tx = chain(
+        clip_by_global_norm(1.0),
+        adamw(warmup_cosine(lr, 20, 2 * steps), b2=0.999,
+              weight_decay=0.01),
+    )
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, tx)
+    step = jax.jit(make_train_step(cfg, tx, F32), donate_argnums=0)
+    key = jax.random.PRNGKey(seed + 1)
+    t0 = time.time()
+    metrics = {}
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        state, metrics = step(state, batch_fn(sub, i))
+    info = {
+        "steps": steps,
+        "final_loss": float(metrics["loss"]),
+        "train_s": round(time.time() - t0, 2),
+    }
+    return state["params"], info
+
+
+def _eval_lm_style(params, cfg: ModelConfig, batches: list[dict],
+                   backend: str) -> dict[str, float]:
+    """Teacher-forced metrics through one pinned backend: masked token
+    accuracy and perplexity (exp of the masked mean CE)."""
+    evalf = jax.jit(make_eval_step(pin_backend(cfg, backend), F32))
+    ces, accs = [], []
+    for b in batches:
+        m = evalf(params, b)
+        ces.append(float(m["ce"]))
+        accs.append(float(m["acc"]))
+    ce = sum(ces) / len(ces)
+    return {"acc": sum(accs) / len(accs), "ce": ce,
+            "ppl": float(np.exp(ce))}
+
+
+# ------------------------------------------------------------------- MQAR
+
+
+def mqar_config(mechanism: str, s: dict) -> ModelConfig:
+    """MQAR model at the given shapes.  ZETA runs with the own-chunk local
+    window on (the reproduction finding from fig2a: the paper's chunk rule
+    blocks within-chunk previous-token heads, so plain ZETA cannot form
+    the induction circuit MQAR needs; a small local window restores
+    full-attention parity)."""
+    zeta = _zeta_cfg(s)
+    if mechanism != "zeta":
+        zeta = zeta.replace(local_window=0)
+    return ModelConfig(
+        name=f"eval-mqar-{mechanism}", vocab=s["vocab"],
+        d_model=s["d_model"], n_layers=s["n_layers"],
+        n_heads=s["n_heads"], n_kv_heads=s["n_heads"],
+        d_ff=2 * s["d_model"], attention=mechanism, zeta=zeta,
+        tie_embeddings=False,
+    )
+
+
+def _mqar_batch_fn(s: dict):
+    def fn(key, _i):
+        return mqar_batch(
+            key, batch=s["batch"], seq_len=s["seq_len"], vocab=s["vocab"],
+            num_pairs=s["num_pairs"], num_queries=s["num_queries"],
+        )
+    return fn
+
+
+def _mqar_generate_acc(params, cfg: ModelConfig, s: dict, batch: dict,
+                       backend: str) -> float:
+    """Recall through the serving stack: for each eval row, the prompt is
+    the sequence up to (and including) the FIRST re-presented query key;
+    one greedy token from ``repro.api.generate`` must be the bound value.
+    Exercises chunked prefill, the incremental sorted z-code cache, and
+    device-side sampling — the decode pool is the delayed-insertion subset
+    of the training pool, so this is gated with its own (looser)
+    tolerance."""
+    from repro.api import generate
+    from repro.sample import GenerationParams
+
+    n = s["gen_prompts"]
+    qstart = s["seq_len"] - 2 * s["num_queries"]
+    toks = np.asarray(batch["tokens"])[:n]
+    gold = np.asarray(batch["labels"])[:n, qstart]
+    prompts = [toks[b, : qstart + 1].tolist() for b in range(n)]
+    results = generate(
+        params, pin_backend(cfg, backend), prompts,
+        GenerationParams(max_new=1), seed=0,
+        batch_slots=min(n, 8), prefill_chunk=s.get("prefill_chunk", 8),
+    )
+    hits = [int(r.tokens[0] == int(gold[r.rid])) for r in results]
+    return sum(hits) / len(hits)
+
+
+def train_mqar(cfg: ModelConfig, s: dict, *, seed: int = 0):
+    """Train one MQAR model at the given shapes: (params, info).  The
+    thin driver ``examples/train_mqar.py`` calls this."""
+    return _train_lm_style(
+        cfg, _mqar_batch_fn(s), steps=s["steps"], lr=s["lr"], seed=seed)
+
+
+def eval_metrics(params, cfg: ModelConfig, batches,
+                 backend: str = "reference") -> dict[str, float]:
+    """Public face of the LM-style eval: masked acc / ce / ppl through one
+    pinned backend."""
+    return _eval_lm_style(params, cfg, batches, backend)
+
+
+def run_mqar(s: dict, *, backends=ZETA_BACKENDS,
+             gen_backends=("reference", "xla", "pallas_fused"),
+             seed: int = 0) -> dict:
+    """Train ZETA + full-attention MQAR models, measure teacher-forced
+    recall per backend and generate-facade recall per serve backend."""
+    cfg_z = mqar_config("zeta", s)
+    cfg_f = mqar_config("full", s)
+    params_z, info_z = _train_lm_style(
+        cfg_z, _mqar_batch_fn(s), steps=s["steps"], lr=s["lr"], seed=seed)
+    params_f, info_f = _train_lm_style(
+        cfg_f, _mqar_batch_fn(s), steps=s["steps"], lr=s["lr"], seed=seed)
+    batches = mqar_eval_batches(
+        batch=s["batch"], seq_len=s["seq_len"], vocab=s["vocab"],
+        num_pairs=s["num_pairs"], num_queries=s["num_queries"],
+        n_batches=s["eval_batches"], seed=seed,
+    )
+    acc = {
+        "zeta": {b: _eval_lm_style(params_z, cfg_z, batches, b)["acc"]
+                 for b in backends},
+        "full": {b: _eval_lm_style(params_f, cfg_f, batches, b)["acc"]
+                 for b in FULL_BACKENDS},
+    }
+    gen_acc = {
+        "zeta": {b: _mqar_generate_acc(params_z, cfg_z, s, batches[0], b)
+                 for b in gen_backends},
+    }
+    return {
+        "shapes": dict(s),
+        "train": {"zeta": info_z, "full": info_f},
+        "metrics": {"acc": acc, "generate_acc": gen_acc},
+    }
+
+
+# ---------------------------------------------------------------- ListOps
+
+
+def listops_config(mechanism: str, s: dict) -> ModelConfig:
+    return ModelConfig(
+        name=f"eval-listops-{mechanism}", vocab=listops_data.VOCAB,
+        d_model=s["d_model"], n_layers=s["n_layers"],
+        n_heads=s["n_heads"], n_kv_heads=s["n_heads"],
+        d_ff=2 * s["d_model"], attention=mechanism, zeta=_zeta_cfg(s),
+    )
+
+
+def train_listops(cfg: ModelConfig, s: dict, seed: int = 0,
+                  log_every: int = 0) -> tuple[dict, dict]:
+    """ListOps classifier training loop (mean-pool head over the causal
+    trunk — ``repro.models.classifier``)."""
+    params = classifier_init(
+        jax.random.PRNGKey(seed), cfg, listops_data.NUM_CLASSES)
+    steps, lr = s["steps"], s["lr"]
+    tx = chain(clip_by_global_norm(1.0),
+               adamw(warmup_cosine(lr, 20, 2 * steps), b2=0.999))
+    opt_state = tx.init(params)
+
+    def loss_fn(p, toks, labels):
+        logits = classifier_apply(p, toks, cfg, F32)
+        onehot = jax.nn.one_hot(labels, listops_data.NUM_CLASSES)
+        ce = -jnp.mean(
+            jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1))
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return ce, acc
+
+    @jax.jit
+    def step(p, opt, step_idx, toks, labels):
+        (ce, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, toks, labels)
+        upd, opt = tx.update(g, opt, p, step_idx)
+        return apply_updates(p, upd), opt, ce, acc
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    ce = acc = jnp.zeros(())
+    for i in range(steps):
+        toks, labels = listops_data.listops_batch(
+            rng, s["batch"], s["seq_len"], s["depth"])
+        params, opt_state, ce, acc = step(
+            params, opt_state, jnp.asarray(i), toks, labels)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"step {i + 1:4d} ce {float(ce):.3f} "
+                  f"acc {float(acc):.3f}", flush=True)
+    info = {"steps": steps, "final_loss": float(ce),
+            "train_s": round(time.time() - t0, 2)}
+    return params, info
+
+
+def listops_acc(params, cfg: ModelConfig, batches, backend: str) -> float:
+    """Classifier accuracy through one pinned backend (public: the thin
+    driver ``examples/lra_listops.py`` calls this)."""
+    cfg_b = pin_backend(cfg, backend)
+    apply = jax.jit(lambda p, t: classifier_apply(p, t, cfg_b, F32))
+    hits, total = 0, 0
+    for toks, labels in batches:
+        pred = jnp.argmax(apply(params, toks), axis=-1)
+        hits += int(jnp.sum(pred == labels))
+        total += labels.shape[0]
+    return hits / total
+
+
+def run_listops(s: dict, *, backends=ZETA_BACKENDS, seed: int = 0) -> dict:
+    cfg_z = listops_config("zeta", s)
+    cfg_f = listops_config("full", s)
+    params_z, info_z = train_listops(cfg_z, s, seed)
+    params_f, info_f = train_listops(cfg_f, s, seed)
+    batches = listops_eval_batches(
+        batch=s["batch"], seq_len=s["seq_len"], depth=s["depth"],
+        n_batches=s["eval_batches"], seed=seed,
+    )
+    acc = {
+        "zeta": {b: listops_acc(params_z, cfg_z, batches, b)
+                 for b in backends},
+        "full": {b: listops_acc(params_f, cfg_f, batches, b)
+                 for b in FULL_BACKENDS},
+    }
+    return {
+        "shapes": dict(s),
+        "train": {"zeta": info_z, "full": info_f},
+        "metrics": {"acc": acc},
+    }
+
+
+# --------------------------------------------------------------- LM slice
+
+
+def lm_config(mechanism: str, s: dict) -> ModelConfig:
+    return ModelConfig(
+        name=f"eval-lm-{mechanism}", vocab=s["vocab"],
+        d_model=s["d_model"], n_layers=s["n_layers"],
+        n_heads=s["n_heads"], n_kv_heads=s["n_heads"],
+        d_ff=2 * s["d_model"], attention=mechanism, zeta=_zeta_cfg(s),
+    )
+
+
+def run_lm(s: dict, *, backends=ZETA_BACKENDS, seed: int = 0) -> dict:
+    """WikiText-style LM slice on the synthetic Markov corpus (the
+    container is offline — see ``repro.data.synthetic``): perplexity on a
+    pinned held-out split, per mechanism and backend."""
+    cfg_z = lm_config("zeta", s)
+    cfg_f = lm_config("full", s)
+
+    def batch_source(seed_off):
+        loader = SyntheticLMLoader(
+            batch=s["batch"], seq_len=s["seq_len"], vocab=s["vocab"],
+            seed=seed + seed_off,
+        )
+        return lambda _key, _i: {
+            k: jnp.asarray(v) for k, v in next(loader).items()
+        }
+
+    params_z, info_z = _train_lm_style(
+        cfg_z, batch_source(0), steps=s["steps"], lr=s["lr"], seed=seed)
+    params_f, info_f = _train_lm_style(
+        cfg_f, batch_source(0), steps=s["steps"], lr=s["lr"], seed=seed)
+    batches = lm_eval_batches(
+        batch=s["batch"], seq_len=s["seq_len"], vocab=s["vocab"],
+        n_batches=s["eval_batches"], seed=seed,
+    )
+    ppl = {
+        "zeta": {b: _eval_lm_style(params_z, cfg_z, batches, b)["ppl"]
+                 for b in backends},
+        "full": {b: _eval_lm_style(params_f, cfg_f, batches, b)["ppl"]
+                 for b in FULL_BACKENDS},
+    }
+    return {
+        "shapes": dict(s),
+        "train": {"zeta": info_z, "full": info_f},
+        "metrics": {"ppl": ppl},
+    }

@@ -1,0 +1,69 @@
+"""The benchmark runner fails loudly: a suite that raises still lets the
+remaining suites run, but the process exits non-zero with a summary line
+naming every failed suite (previously the exception was swallowed and the
+run exited 0 — a broken bench looked green in CI)."""
+
+import os
+import sys
+import types
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+def _fake_suite(monkeypatch, name, run_fn, desc="fake suite"):
+    mod_name = f"benchmarks._fake_{name}"
+    mod = types.ModuleType(mod_name)
+    mod.run = run_fn
+    monkeypatch.setitem(sys.modules, mod_name, mod)
+    monkeypatch.setitem(bench_run.SUITES, name, (mod_name, desc))
+
+
+def test_broken_suite_exits_nonzero_with_summary(monkeypatch, capsys):
+    def broken():
+        yield "broken_partial,0,row-before-the-raise"
+        raise RuntimeError("deliberately broken bench")
+
+    def healthy():
+        yield "healthy_metric,12,ok"
+
+    _fake_suite(monkeypatch, "broken", broken)
+    _fake_suite(monkeypatch, "healthy", healthy)
+
+    with pytest.raises(SystemExit) as excinfo:
+        bench_run.main(["--only", "broken,healthy"])
+    msg = str(excinfo.value.code)
+    assert "BENCH FAILED" in msg and "broken" in msg and "1/2" in msg
+
+    out = capsys.readouterr()
+    # rows before the raise still printed; later suites still ran
+    assert "broken_partial,0,row-before-the-raise" in out.out
+    assert "healthy_metric,12,ok" in out.out
+    assert "healthy_suite," in out.out
+    # the error itself lands on stderr with the exception detail
+    assert "broken_ERROR" in out.err
+    assert "deliberately broken bench" in out.err
+
+
+def test_healthy_suites_exit_zero(monkeypatch, capsys):
+    _fake_suite(monkeypatch, "ok_a", lambda: iter(["a_metric,1,x"]))
+    _fake_suite(monkeypatch, "ok_b", lambda: iter(["b_metric,2,y"]))
+    bench_run.main(["--only", "ok_a,ok_b"])  # must not raise SystemExit
+    out = capsys.readouterr()
+    assert "a_metric,1,x" in out.out and "b_metric,2,y" in out.out
+
+
+def test_unknown_suite_still_rejected():
+    with pytest.raises(SystemExit) as excinfo:
+        bench_run.main(["--only", "no_such_suite"])
+    assert "unknown suite" in str(excinfo.value.code)
+
+
+def test_quality_registered_in_fast_set():
+    assert "quality" in bench_run.SUITES
+    assert "quality" in bench_run.FAST_DEFAULT

@@ -1,0 +1,113 @@
+"""Regression pins for the pad+mask block plan at adversarial N.
+
+``block_plan`` replaced the old halve-until-divides rule (which degraded
+any odd query count to block_n=1 — one grid step per query).  These tests
+pin (a) the plan itself at primes, N < block, and N == block + 1, and
+(b) that the kernels' *outputs* under the new pad+mask plan are identical
+to the old degenerate plan, which ``block_n=1`` still emulates exactly
+(bn=1 divides every N, so no padding and one query per grid step — the
+old rule's fixed point).  A NumPy oracle anchors both against the math.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.cauchy_topk import (
+    DEFAULT_BLOCK_N,
+    block_plan,
+    cauchy_topk_fwd,
+)
+from repro.kernels.cauchy_topk_fused import cauchy_topk_fused_fwd
+
+_EPS = 1e-9
+
+# prime, N < one sublane block, N == requested block + 1
+ADVERSARIAL_N = (7, 13, 33)
+
+
+def test_block_plan_small_n_single_aligned_block():
+    assert block_plan(7) == (8, 8)            # < one sublane: pad to 8
+    assert block_plan(13) == (16, 16)         # prime: pad to next 8-mult
+    assert block_plan(1) == (8, 8)
+    assert block_plan(8) == (8, 8)            # already aligned: no pad
+
+
+def test_block_plan_block_boundary():
+    assert block_plan(33, 32) == (32, 64)     # N == block+1: pad, 2 steps
+    assert block_plan(32, 32) == (32, 32)
+    assert block_plan(DEFAULT_BLOCK_N) == (DEFAULT_BLOCK_N, DEFAULT_BLOCK_N)
+    assert block_plan(DEFAULT_BLOCK_N + 1) == (DEFAULT_BLOCK_N,
+                                               2 * DEFAULT_BLOCK_N)
+
+
+def test_block_plan_invariants_and_old_rule_emulation():
+    for n in (1, 2, 7, 13, 31, 33, 64, 97, 255, 257):
+        bn, n_pad = block_plan(n)
+        assert n_pad % bn == 0 and n_pad >= n
+        assert n_pad - n < bn                 # never pads a full extra block
+        # block_n=1 reproduces the old halved-to-1 plan: no padding at all
+        assert block_plan(n, 1) == (1, n)
+
+
+def _oracle(q, ksel, vsel, valid, g2):
+    d2 = ((q[:, :, None, :] - ksel) ** 2).sum(-1)
+    s = np.where(valid, 1.0 / (d2 + g2[:, None, None] + _EPS), 0.0)
+    z = s.sum(-1)
+    a = s / np.maximum(z, _EPS)[..., None]
+    return (a[..., None] * vsel).sum(2), z
+
+
+def _gathered_case(n, f=2, kk=4, dk=3, dv=4, seed=0):
+    rng = np.random.default_rng(seed + n)
+    q = rng.standard_normal((f, n, dk)).astype(np.float32)
+    ksel = rng.standard_normal((f, n, kk, dk)).astype(np.float32)
+    vsel = rng.standard_normal((f, n, kk, dv)).astype(np.float32)
+    valid = rng.random((f, n, kk)) < 0.7
+    valid[:, 0, :] = False  # a fully-invalid query row (chunk-0 shape)
+    g2 = rng.uniform(0.1, 1.0, f).astype(np.float32)
+    return q, ksel, vsel, valid, g2
+
+
+@pytest.mark.parametrize("n", ADVERSARIAL_N)
+def test_gathered_kernel_matches_block1_plan(n):
+    q, ksel, vsel, valid, g2 = _gathered_case(n)
+    args = tuple(jnp.asarray(x) for x in (q, ksel, vsel, valid, g2))
+    out_new, z_new = cauchy_topk_fwd(*args, interpret=True)
+    out_old, z_old = cauchy_topk_fwd(*args, block_n=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_new), np.asarray(out_old),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(z_new), np.asarray(z_old),
+                               atol=1e-5)
+    oracle_out, oracle_z = _oracle(q, ksel, vsel, valid, g2)
+    np.testing.assert_allclose(np.asarray(out_new), oracle_out, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z_new), oracle_z, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", ADVERSARIAL_N)
+def test_fused_kernel_matches_block1_plan(n):
+    f, groups, nkv, kk, dk, dv = 2, 2, 16, 4, 3, 4
+    rng = np.random.default_rng(100 + n)
+    q = rng.standard_normal((f * groups, n, dk)).astype(np.float32)
+    kt = rng.standard_normal((f, nkv, dk)).astype(np.float32)
+    vt = rng.standard_normal((f, nkv, dv)).astype(np.float32)
+    idx = rng.integers(0, nkv, size=(f * groups, n, kk)).astype(np.int32)
+    valid = rng.random((f * groups, n, kk)) < 0.7
+    valid[:, 0, :] = False
+    g2 = rng.uniform(0.1, 1.0, f * groups).astype(np.float32)
+    args = tuple(jnp.asarray(x) for x in (q, kt, vt, idx, valid, g2))
+
+    out_new, z_new = cauchy_topk_fused_fwd(*args, groups=groups,
+                                           interpret=True)
+    out_old, z_old = cauchy_topk_fused_fwd(*args, groups=groups,
+                                           block_n=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_new), np.asarray(out_old),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(z_new), np.asarray(z_old),
+                               atol=1e-5)
+    # oracle: gather candidates per query row from its group's KV row
+    ksel = np.stack([kt[i // groups][idx[i]] for i in range(f * groups)])
+    vsel = np.stack([vt[i // groups][idx[i]] for i in range(f * groups)])
+    oracle_out, oracle_z = _oracle(q, ksel, vsel, valid, g2)
+    np.testing.assert_allclose(np.asarray(out_new), oracle_out, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z_new), oracle_z, rtol=1e-5)

@@ -1,0 +1,233 @@
+"""Tier-1 gate for the quality-eval subsystem (``repro.eval``).
+
+Two layers:
+
+* pure unit tests of the gate/tolerance machinery (``evaluate_gates``,
+  ``metric_parity``, ``quality_rows``) over synthetic results — these pin
+  the gate *math* (absolute vs relative, direction of the zeta-vs-full
+  comparison, loud failure on unknown metrics) without any training;
+* one real end-to-end run of ``run_quality`` at a trimmed test scale
+  (module-scoped fixture, ~2 min on CPU): MQAR + ListOps + LM trained
+  under pinned seeds and evaluated through reference / xla / pallas_fused,
+  asserting the backend-vs-reference and ZETA-vs-full deltas the harness
+  exists to gate, plus the BENCH_quality.json schema.
+
+The full tiny scale (what CI's quality job and ``benchmarks/run.py``
+run) is covered by a ``slow``-marked test of the CLI entry point.
+"""
+
+import json
+
+import pytest
+
+from repro.backend.parity import metric_parity
+from repro.eval import (
+    SCALES,
+    TASKS,
+    EvalScale,
+    Tolerances,
+    evaluate_gates,
+    quality_rows,
+    run_quality,
+)
+
+BACKENDS = ("reference", "xla", "pallas_fused")
+
+# Trimmed clone of the tiny scale: same shapes, fewer steps/batches — the
+# zeta-vs-full gates stay meaningful only as plumbing at this depth, so
+# they run wide open while backend parity keeps the tiny thresholds.
+TEST_SCALE = EvalScale(
+    name="test",
+    mqar=dict(vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=32,
+              num_pairs=2, num_queries=2, batch=16, steps=30, lr=3e-3,
+              k=8, num_chunks=4, local_window=2, eval_batches=2,
+              gen_prompts=8),
+    listops=dict(d_model=32, n_layers=2, n_heads=2, seq_len=32, depth=3,
+                 batch=8, steps=20, lr=3e-3, k=8, num_chunks=4,
+                 local_window=4, eval_batches=2),
+    lm=dict(vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=32,
+            batch=8, steps=20, lr=3e-3, k=8, num_chunks=4,
+            eval_batches=2),
+    tol=Tolerances(backend_acc=0.05, backend_ppl_rel=0.02,
+                   zeta_vs_full_acc=1.0, zeta_vs_full_ppl_rel=2.0,
+                   generate_vs_teacher_acc=0.5),
+)
+
+
+# ------------------------------------------------------- gate unit tests
+
+
+def _fake_results(xla_acc=0.79, zeta_ref=0.80, full_ref=0.85,
+                  gen_acc=0.70):
+    return {
+        "mqar": {
+            "metrics": {
+                "acc": {
+                    "zeta": {"reference": zeta_ref, "xla": xla_acc},
+                    "full": {"reference": full_ref},
+                },
+                "generate_acc": {"zeta": {"xla": gen_acc}},
+            },
+        },
+    }
+
+
+def test_gates_pass_within_tolerance():
+    tol = Tolerances(backend_acc=0.05, zeta_vs_full_acc=0.10,
+                     generate_vs_teacher_acc=0.20)
+    gates = {g.name: g for g in evaluate_gates(_fake_results(), tol)}
+    assert gates["mqar/backend/xla/acc"].ok          # |0.79-0.80| < 0.05
+    assert gates["mqar/zeta_vs_full/acc"].ok         # 0.85-0.80 <= 0.10
+    assert gates["mqar/generate_vs_tf/xla"].ok       # |0.70-0.79| <= 0.20
+    assert gates["mqar/backend/xla/acc"].kind == "backend_parity"
+
+
+def test_backend_gate_fails_on_quality_shift():
+    tol = Tolerances(backend_acc=0.05)
+    gates = {g.name: g
+             for g in evaluate_gates(_fake_results(xla_acc=0.70), tol)}
+    g = gates["mqar/backend/xla/acc"]
+    assert not g.ok and g.value == pytest.approx(0.10)
+    assert "FAIL" in g.row()
+
+
+def test_zeta_vs_full_gate_is_directional():
+    """ZETA *beating* full attention never fails the gate; trailing past
+    delta does."""
+    tol = Tolerances(zeta_vs_full_acc=0.02)
+    better = evaluate_gates(
+        _fake_results(zeta_ref=0.90, full_ref=0.85), tol)
+    assert next(g for g in better if g.kind == "zeta_vs_full").ok
+    worse = evaluate_gates(
+        _fake_results(zeta_ref=0.70, full_ref=0.85), tol)
+    assert not next(g for g in worse if g.kind == "zeta_vs_full").ok
+
+
+def test_ppl_gates_are_relative():
+    tol = Tolerances(backend_ppl_rel=0.02, zeta_vs_full_ppl_rel=0.10)
+    results = {"lm": {"metrics": {"ppl": {
+        "zeta": {"reference": 100.0, "xla": 101.0},   # +1% rel: ok
+        "full": {"reference": 95.0},                  # zeta 5.26% worse: ok
+    }}}}
+    gates = {g.name: g for g in evaluate_gates(results, tol)}
+    assert gates["lm/backend/xla/ppl"].ok
+    assert gates["lm/backend/xla/ppl"].value == pytest.approx(0.01)
+    assert gates["lm/zeta_vs_full/ppl"].ok
+    assert gates["lm/zeta_vs_full/ppl"].value == pytest.approx(100 / 95 - 1)
+    assert not evaluate_gates(
+        {"lm": {"metrics": {"ppl": {
+            "zeta": {"reference": 100.0, "xla": 103.0}}}}},
+        tol)[0].ok
+
+
+def test_unknown_metric_fails_loudly():
+    with pytest.raises(KeyError, match="unknown metric"):
+        evaluate_gates(
+            {"t": {"metrics": {"bleu": {"zeta": {"reference": 1.0}}}}},
+            Tolerances())
+
+
+def test_metric_parity_skips_reference_itself():
+    rows = metric_parity({"reference": 0.5, "xla": 0.5, "pallas": 0.4},
+                         reference="reference", task="t", metric="acc")
+    assert sorted(p.backend for p in rows) == ["pallas", "xla"]
+    by = {p.backend: p for p in rows}
+    assert by["pallas"].abs_err == pytest.approx(0.1)
+    assert by["xla"].ok(1e-6)
+
+
+def test_scales_registered():
+    assert set(SCALES) == {"tiny", "fast", "paper"}
+    for sc in SCALES.values():
+        for task in TASKS:
+            shapes = getattr(sc, task)
+            assert shapes["seq_len"] % shapes["num_chunks"] == 0
+
+
+# --------------------------------------------------- end-to-end (real run)
+
+
+@pytest.fixture(scope="module")
+def quality(tmp_path_factory):
+    out = tmp_path_factory.mktemp("quality") / "BENCH_quality.json"
+    results = run_quality(
+        TEST_SCALE, backends=BACKENDS, gen_backends=("reference", "xla"),
+        seed=0, out_path=str(out),
+    )
+    return results, out
+
+
+def test_all_tasks_report_three_backends(quality):
+    results, _ = quality
+    assert set(results["tasks"]) == set(TASKS)
+    for task in TASKS:
+        metrics = results["tasks"][task]["metrics"]
+        primary = "ppl" if task == "lm" else "acc"
+        assert set(metrics[primary]["zeta"]) == set(BACKENDS)
+        assert "reference" in metrics[primary]["full"]
+
+
+def test_backend_within_eps_of_reference(quality):
+    """The tentpole claim, asserted directly: every backend's task metric
+    within epsilon of the reference backend on the same trained params."""
+    results, _ = quality
+    for task in TASKS:
+        metrics = results["tasks"][task]["metrics"]
+        primary = "ppl" if task == "lm" else "acc"
+        per_backend = metrics[primary]["zeta"]
+        ref = per_backend["reference"]
+        for b in ("xla", "pallas_fused"):
+            if primary == "ppl":
+                assert abs(per_backend[b] / ref - 1) < 0.02, (task, b)
+            else:
+                assert abs(per_backend[b] - ref) < 0.05, (task, b)
+
+
+def test_zeta_vs_full_gate_present_and_bounded(quality):
+    results, _ = quality
+    zf = [g for g in results["gates"] if g["kind"] == "zeta_vs_full"]
+    assert {g["task"] for g in zf} == set(TASKS)
+    for g in zf:
+        assert g["ok"], g
+
+
+def test_all_gates_pass_and_json_schema(quality):
+    results, out = quality
+    assert results["ok"], [g for g in results["gates"] if not g["ok"]]
+    on_disk = json.loads(out.read_text())
+    assert on_disk["ok"] is True
+    assert on_disk["meta"]["backends"] == list(BACKENDS)
+    assert set(on_disk["meta"]["tolerances"]) == set(
+        Tolerances().to_dict())
+    for task in TASKS:
+        assert on_disk["tasks"][task]["train"]["zeta"]["steps"] > 0
+    # CSV protocol rows: metrics + one row per gate + the summary row
+    rows = quality_rows(results)
+    assert rows[-1].startswith("quality_gates,0,ok;")
+    assert any(r.startswith("quality_mqar_zeta_acc_pallas_fused,")
+               for r in rows)
+    assert len([r for r in rows if r.startswith("quality_gate_")]) == len(
+        results["gates"])
+
+
+def test_generate_facade_metric_reported(quality):
+    results, _ = quality
+    gen = results["tasks"]["mqar"]["metrics"]["generate_acc"]["zeta"]
+    assert set(gen) == {"reference", "xla"}
+    gv = [g for g in results["gates"] if g["kind"] == "generate_vs_tf"]
+    assert {g["name"].rsplit("/", 1)[1] for g in gv} == {"reference",
+                                                         "xla"}
+
+
+@pytest.mark.slow
+def test_cli_tiny_end_to_end(tmp_path):
+    """The CI smoke job's exact invocation: tiny scale through the CLI,
+    gates enforced via the exit code."""
+    from repro.eval.__main__ import main
+
+    out = tmp_path / "BENCH_quality.json"
+    rc = main(["--tiny", "--backends", ",".join(BACKENDS),
+               "--out", str(out)])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["ok"] and data["meta"]["scale"] == "tiny"

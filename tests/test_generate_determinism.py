@@ -1,0 +1,102 @@
+"""Cross-backend determinism of the ``repro.api.generate`` facade.
+
+Contract pinned here:
+
+* **greedy** token streams are exactly identical whichever registered
+  backend serves them (reference / xla / pallas_fused) — greedy decode is
+  argmax over logits, and the backends agree to ~1e-6 on logits, far
+  inside the argmax margins of a real model;
+* **sampled** streams are bit-exact *per backend* across runs (the
+  per-slot RNG folds in engine seed, request seed and step only) —
+  sampled streams are NOT guaranteed bit-identical *across* backends:
+  sampling applies a random threshold to the probabilities, so a 1e-6
+  logit wobble between backends can flip a token near the threshold and
+  the streams diverge from there.  (Empirically they usually agree at
+  these scales; only the per-backend guarantee is part of the contract.)
+"""
+
+import jax
+import pytest
+
+from repro.api import generate
+from repro.models import api
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.sample import GenerationParams
+
+BACKENDS = ("reference", "xla", "pallas_fused")
+MAXLEN = 48
+
+PROMPTS = [[1, 2, 3, 4], [7, 8], [5, 6, 5, 6, 5]]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = ModelConfig(
+        name="det", vocab=64, d_model=32, n_layers=2, n_heads=4,
+        n_kv_heads=2, d_ff=64,
+        zeta=ZetaConfig(d_k=3, k=4, num_chunks=4, local_window=2),
+    )
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _pin(cfg, backend):
+    return cfg.replace(zeta=cfg.zeta.replace(backend=backend))
+
+
+def _run(params, cfg, gp, *, slots=2, seed=0):
+    res = generate(params, cfg, [list(p) for p in PROMPTS],
+                   gp, seed=seed, batch_slots=slots, max_len=MAXLEN,
+                   prefill_chunk=4)
+    return [tuple(r.tokens) for r in sorted(res, key=lambda r: r.rid)]
+
+
+def test_greedy_identical_across_backends(model):
+    cfg, params = model
+    gp = GenerationParams(max_new=8)
+    streams = {b: _run(params, _pin(cfg, b), gp) for b in BACKENDS}
+    ref = streams["reference"]
+    assert all(len(t) == 8 for t in ref)
+    for b in BACKENDS[1:]:
+        assert streams[b] == ref, (
+            f"greedy streams diverged: {b}={streams[b]} vs "
+            f"reference={ref}"
+        )
+
+
+def test_greedy_invariant_to_slot_count(model):
+    """Slot packing / admission order never leaks into greedy outputs,
+    whatever backend serves the batch."""
+    cfg, params = model
+    gp = GenerationParams(max_new=6)
+    for b in ("reference", "pallas_fused"):
+        two = _run(params, _pin(cfg, b), gp, slots=2)
+        three = _run(params, _pin(cfg, b), gp, slots=3)
+        assert two == three
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sampled_bit_exact_per_backend(model, backend):
+    """Same (engine seed, request seed, prompt) -> bit-identical sampled
+    stream on the same backend, run to run."""
+    cfg, params = model
+    gp = [GenerationParams(max_new=8, temperature=0.9, seed=11),
+          GenerationParams(max_new=8, temperature=1.3, top_k=8, seed=5),
+          GenerationParams(max_new=8, temperature=0.8, top_p=0.9, seed=3)]
+    first = _run(params, _pin(cfg, backend), gp, seed=42)
+    second = _run(params, _pin(cfg, backend), gp, seed=42)
+    assert first == second
+    # and the engine seed is load-bearing for sampled requests
+    other = _run(params, _pin(cfg, backend), gp, seed=43)
+    assert first != other
+
+
+def test_sampled_threshold_not_backend_dependent_rng(model):
+    """The RNG stream itself is backend-independent: with temperature
+    sampling over a *one-hot-ish* distribution (temperature ~0 via
+    top_k=1) every backend must emit the same tokens — isolates the RNG
+    from the logit wobble the module docstring describes."""
+    cfg, params = model
+    gp = GenerationParams(max_new=6, temperature=1.0, top_k=1, seed=9)
+    streams = {b: _run(params, _pin(cfg, b), gp) for b in BACKENDS}
+    for b in BACKENDS[1:]:
+        assert streams[b] == streams["reference"]

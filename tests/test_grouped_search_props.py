@@ -1,0 +1,115 @@
+"""Property tests: GQA-grouped decode/prefill search == ungrouped oracle.
+
+The grouped searches (``prefix_topk_decode_grouped``,
+``prefix_topk_bulk_grouped``) exist so the dominant sort cost runs once
+per KV head instead of once per query head; the contract is that their
+*selection semantics* are bit-identical to running the ungrouped
+primitive on a cache repeated G times (one copy per query head of the
+group).  These properties pin that for arbitrary (B, G, Nmax, k) — the
+flat batch axis B plays batch*Hkv — including heavy code ties (tiny code
+ranges) and empty / partially-empty rows (SENTINEL tails, zero length,
+zero thresholds).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+
+_seeds = st.integers(0, 100_000)
+_b = st.integers(1, 3)
+_g = st.integers(1, 4)
+_n = st.integers(2, 24)
+_k = st.integers(1, 8)
+# 3-bit codes collide constantly (ties); 20-bit codes almost never do.
+_bits = st.sampled_from([3, 20])
+
+
+def _decode_cache(rng, b, nmax, bits):
+    """Random sorted decode cache with at least one empty row when b > 1."""
+    codes = rng.integers(0, 2**bits, size=(b, nmax), dtype=np.int64)
+    length = rng.integers(0, nmax + 1, size=(b,))
+    if b > 1:
+        length[0] = 0  # always exercise the all-SENTINEL row
+    length = jnp.asarray(length, jnp.int32)
+    skz, spos = topk.sorted_build(jnp.asarray(codes, jnp.int32), length)
+    return skz, spos, length
+
+
+@given(_seeds, _b, _g, _n, _k, _bits)
+@settings(max_examples=25, deadline=None)
+def test_decode_grouped_matches_repeated_cache(seed, b, g, nmax, k, bits):
+    """decode search for G grouped heads == G=1 search on the cache
+    repeated G times, bit-for-bit (idx, valid, and tie resolution)."""
+    rng = np.random.default_rng(seed)
+    skz, spos, length = _decode_cache(rng, b, nmax, bits)
+    qz = jnp.asarray(
+        rng.integers(0, 2**bits, size=(b, g), dtype=np.int64), jnp.int32)
+
+    got = topk.prefix_topk_decode_grouped(skz, spos, length, qz, k=k)
+
+    oracle = topk.prefix_topk_decode(
+        jnp.repeat(skz, g, axis=0), jnp.repeat(spos, g, axis=0),
+        jnp.repeat(length, g), qz.reshape(b * g), k=k,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.valid), np.asarray(oracle.valid).reshape(b, g, k))
+    np.testing.assert_array_equal(
+        np.asarray(got.idx), np.asarray(oracle.idx).reshape(b, g, k))
+    # invalid slots are canonical: position 0, never SENTINEL leakage
+    assert (np.asarray(got.idx)[~np.asarray(got.valid)] == 0).all()
+
+
+@given(_seeds, _b, _g, _n, st.integers(1, 6), _k, _bits)
+@settings(max_examples=25, deadline=None)
+def test_bulk_grouped_matches_repeated_cache(seed, b, g, nmax, p, k, bits):
+    """prefill bulk search for G grouped heads == G=1 bulk search on the
+    position-indexed code cache repeated G times."""
+    rng = np.random.default_rng(seed)
+    kz_by_pos = jnp.asarray(
+        rng.integers(0, 2**bits, size=(b, nmax), dtype=np.int64),
+        jnp.int32)
+    thresholds = rng.integers(0, nmax + 1, size=(b, p))
+    thresholds[:, 0] = 0  # first query of every row has an empty pool
+    thresholds = jnp.asarray(thresholds, jnp.int32)
+    qz = jnp.asarray(
+        rng.integers(0, 2**bits, size=(b, g, p), dtype=np.int64),
+        jnp.int32)
+
+    got = topk.prefix_topk_bulk_grouped(kz_by_pos, thresholds, qz, k=k)
+
+    oracle = topk.prefix_topk_bulk(
+        jnp.repeat(kz_by_pos, g, axis=0), jnp.repeat(thresholds, g, axis=0),
+        qz.reshape(b * g, p), k=k,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.valid),
+        np.asarray(oracle.valid).reshape(b, g, p, k))
+    np.testing.assert_array_equal(
+        np.asarray(got.idx), np.asarray(oracle.idx).reshape(b, g, p, k))
+    # empty pools (threshold 0) select nothing
+    assert not np.asarray(got.valid)[:, :, 0, :].any()
+
+
+@given(_seeds, _b, _g, st.integers(1, 16), _bits)
+@settings(max_examples=15, deadline=None)
+def test_decode_grouped_candidates_causal_and_live(seed, b, g, nmax, bits):
+    """Every valid candidate references a live cache position (< length);
+    rows with empty caches select nothing."""
+    rng = np.random.default_rng(seed)
+    skz, spos, length = _decode_cache(rng, b, nmax, bits)
+    qz = jnp.asarray(
+        rng.integers(0, 2**bits, size=(b, g), dtype=np.int64), jnp.int32)
+    res = topk.prefix_topk_decode_grouped(skz, spos, length, qz, k=4)
+    valid = np.asarray(res.valid)
+    idx = np.asarray(res.idx)
+    length_np = np.asarray(length)
+    live = set()
+    for row in range(b):
+        live_pos = set(np.asarray(spos)[row, : length_np[row]].tolist())
+        for gg in range(g):
+            chosen = idx[row, gg][valid[row, gg]]
+            assert set(chosen.tolist()) <= live_pos
+            assert valid[row, gg].sum() == min(4, length_np[row])
+        live |= live_pos
