@@ -58,6 +58,13 @@ def _cfg() -> ModelConfig:
     )
 
 
+def _fused_interpreted() -> bool:
+    from repro.backend import registry
+
+    return registry.current_device() not in \
+        registry.get_backend("pallas_fused").caps.compiled_devices
+
+
 def _timeit(fn, iters: int) -> float:
     jax.block_until_ready(fn())  # warm the jit cache, drain the warm-up
     t0 = time.perf_counter()
@@ -113,6 +120,28 @@ def run(smoke: bool = False, out_path: str | None = None):
 
     dt = _timeit(decode_pass, iters)
     results["decode"] = {"tokens_per_s": B * N / dt, "wall_s_per_pass": dt}
+
+    # fused decode: the whole per-token step as ONE pallas_call
+    # (kernels/decode_fused).  Off-TPU the kernel runs in interpret mode,
+    # so this row is only a speedup claim on benchmark hardware — checked
+    # in so the TPU run has a baseline to diff against.
+    cfg_fused = cfg.replace(zeta=cfg.zeta.replace(backend="pallas_fused"))
+    decf_step = jax.jit(
+        lambda c, xt: attn_decode_step(params, c, xt, cfg_fused, F32)
+    )
+
+    def decode_fused_pass():
+        cache = attn_cache_init(cfg_fused, B, N, jnp.float32)
+        y = None
+        for t in range(N):
+            y, cache = decf_step(cache, x[:, t:t + 1])
+        return y
+
+    dt = _timeit(decode_fused_pass, iters)
+    results["decode_fused"] = {
+        "tokens_per_s": B * N / dt, "wall_s_per_pass": dt,
+        "interpret": _fused_interpreted(),
+    }
 
     for mode, r in results.items():
         yield (f"selection_{mode}_tokens_per_s,"

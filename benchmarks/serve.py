@@ -71,16 +71,18 @@ def _trace(n_requests: int, seed: int = 0,
 
 
 def _run(params, cfg, scheduler: str, n_requests: int,
-         sampled: bool = False) -> dict:
+         sampled: bool = False, speculation=None) -> dict:
     eng = ServeEngine(params, cfg, F32, batch_slots=SLOTS, max_len=MAX_LEN,
-                      scheduler=scheduler, prefill_chunk=PREFILL_CHUNK)
+                      scheduler=scheduler, prefill_chunk=PREFILL_CHUNK,
+                      speculation=speculation)
     # warm the jit caches (prefill / masked decode / slot reset) so the
     # timed trace measures steady-state serving, not compilation
     eng.submit(Request(rid=-1, prompt=[1, 2, 3], max_new=2))
     eng.run_to_completion()
     eng.done.clear()
     eng.ticks = eng.prefill_calls = eng.decode_calls = 0
-    eng.busy_slot_ticks = 0
+    eng.busy_slot_ticks = eng.spec_rounds = 0
+    eng.spec_proposed = eng.spec_accepted = 0
     trace = _trace(n_requests, sampled=sampled)
     # staggered arrivals: a new request every other tick
     t0 = time.perf_counter()
@@ -93,8 +95,13 @@ def _run(params, cfg, scheduler: str, n_requests: int,
             arrival_wall[trace[i].rid] = time.perf_counter()
             eng.submit(trace[i])
             i += 1
-        if not eng.tick() and i >= len(trace):
-            break
+        if not eng.tick():
+            if i >= len(trace):
+                break
+            # engine drained before the next staggered arrival came due
+            # (speculation can finish a whole trace prefix in a handful
+            # of ticks) — idle ticks still advance the arrival clock
+            eng.ticks += 1
         for r in eng.done:
             if r.rid not in first_token_wall and r.first_token_tick >= 0:
                 first_token_wall[r.rid] = time.perf_counter()
@@ -119,12 +126,27 @@ def run(smoke: bool = False, out_path: str | None = None):
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     n_requests = 4 if smoke else 10
     results = {}
+    from repro.spec import SpeculationConfig
+
     # "sampled" = the continuous trace with every request on the full
-    # sampler pipeline — prices the device-side sampler against argmax
-    variants = [("wave", "wave", False), ("continuous", "continuous", False),
-                ("sampled", "continuous", True)]
-    for name, sched, sampled in variants:
-        s = _run(params, cfg, sched, n_requests, sampled=sampled)
+    # sampler pipeline — prices the device-side sampler against argmax;
+    # "decode_fused" pins the single-kernel decode step (interpret mode
+    # off-TPU, so only meaningful on benchmark hardware); "speculative"
+    # = continuous + ngram draft-verify rounds
+    variants = [
+        ("wave", "wave", False, None, None),
+        ("continuous", "continuous", False, None, None),
+        ("sampled", "continuous", True, None, None),
+        ("decode_fused", "continuous", False, "pallas_fused", None),
+        ("speculative", "continuous", False, None,
+         SpeculationConfig(draft="ngram", chunk=4)),
+    ]
+    for name, sched, sampled, backend, spec in variants:
+        vcfg = cfg if backend is None else cfg.replace(
+            zeta=cfg.zeta.replace(backend=backend)
+        )
+        s = _run(params, vcfg, sched, n_requests, sampled=sampled,
+                 speculation=spec)
         results[name] = s
         yield (f"serve_{name}_tokens_per_s,"
                f"{1e6 / max(s['tokens_per_s'], 1e-9):.0f},"

@@ -37,6 +37,7 @@ from repro.nn.config import ModelConfig
 from repro.nn.module import F32, Precision
 from repro.sample import GenerationParams
 from repro.serve.engine import Request, ServeEngine
+from repro.spec import SpeculationConfig
 
 
 @dataclasses.dataclass
@@ -55,6 +56,7 @@ def generate(params, cfg: ModelConfig,
              prec: Precision = F32, seed: int = 0,
              batch_slots: int | None = None, max_len: int | None = None,
              prefill_chunk: int = 8, scheduler: str = "continuous",
+             speculation: SpeculationConfig | None = None,
              bos_id: int | None = None, history_len: int = 32,
              on_token: Callable[[int, int], None] | None = None,
              max_ticks: int = 10_000) -> list[GenerationResult]:
@@ -65,9 +67,11 @@ def generate(params, cfg: ModelConfig,
     ``seed`` keys the engine's base RNG; per-request streams additionally
     fold in each request's ``GenerationParams.seed``.  ``batch_slots`` /
     ``max_len`` and the padded eos/stop table capacities default to the
-    smallest sizes that fit the given requests.  ``on_token(rid, token)``
-    streams tokens as they are emitted.  Results come back in prompt
-    order.
+    smallest sizes that fit the given requests.  ``speculation`` enables
+    draft-verify decoding (:class:`repro.spec.SpeculationConfig`) —
+    output is token-identical, each round can emit several tokens.
+    ``on_token(rid, token)`` streams tokens as they are emitted.
+    Results come back in prompt order.
     """
     prompts = [list(p) for p in prompts]
     if not prompts:
@@ -93,7 +97,7 @@ def generate(params, cfg: ModelConfig,
         batch_slots=batch_slots or min(len(prompts), 8),
         max_len=max_len or need_len,
         seed=seed, scheduler=scheduler, prefill_chunk=prefill_chunk,
-        bos_id=eff_bos,
+        speculation=speculation, bos_id=eff_bos,
         max_eos=max([len(g.eos_ids) for g in gens], default=1) or 1,
         max_stops=max([len(g.stop) for g in gens], default=1) or 1,
         max_stop_len=max_stop_len,

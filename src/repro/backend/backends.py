@@ -70,6 +70,41 @@ def fits_fused_residency(kt, vt, kk: int = 0,
     return resident + tile <= _FUSED_VMEM_BUDGET
 
 
+def fits_decode_residency(nmax: int, dk: int, dv: int, itemsize: int,
+                          g: int, kk: int) -> bool:
+    """True iff the fused decode kernel's per-grid-step VMEM — ONE cache
+    row's resident (Nmax, d_k) + (Nmax, d_v) K/V, the four (Nmax,) int32
+    sorted rows (in + out), and the (G, K, d) candidate tile — fits the
+    shared budget.  f32 Nmax=8192, d_k=3, d_v=128, G=8, K=37 is ≈ 4.2 MiB
+    + 128 KiB sorted rows + ~45 KiB tile: decode stays fused far past the
+    train kernel's envelope because only one row is ever resident."""
+    resident = nmax * (dk + dv) * itemsize + 4 * nmax * 4
+    tile = g * kk * (dk + dv + 2) * 4
+    return resident + tile <= _FUSED_VMEM_BUDGET
+
+
+def _decode_pallas_fused(q, qz, kt, vt, skz, spos, searchable, pos,
+                         km, vm, ins_kz, ins_pos, ins_mask, gamma2, *,
+                         k: int, window: int = 0, chunk: int = 1,
+                         score: str = "cauchy"):
+    """Fused decode stage (kernels/decode_fused.py): binary search +
+    own-chunk window + in-VMEM candidate gather + Cauchy scoring + sorted
+    insert as one Pallas invocation per flat cache row.  Callers gate on
+    ``fits_decode_residency`` first (registry.select_decode_backend docs
+    the split)."""
+    if score != "cauchy":
+        raise NotImplementedError(
+            f"pallas_fused decode stage supports cauchy only, got {score!r}"
+        )
+    from repro.kernels.decode_fused import cauchy_decode_fused
+
+    return cauchy_decode_fused(
+        q, qz, kt, vt, skz, spos, searchable, pos,
+        km, vm, ins_kz, ins_pos, ins_mask, gamma2,
+        k=k, window=window, chunk=chunk,
+    )
+
+
 def _flatten_fnkd(q, k_sel, v_sel, valid, gamma2):
     """Collapse arbitrary leading batch dims to the (F, N, K, d) layout the
     Pallas kernel works in; returns arrays plus an un-flattener."""
@@ -324,10 +359,11 @@ def register_stock(overwrite: bool = False) -> None:
             interpreted_devices=("cpu", "gpu"),
             priority=30,
             notes="index-gather kernel: no (N,K,d) HBM candidates; "
-                  "scatter-add backward",
+                  "scatter-add backward; fused decode step",
         ),
         gathered=_gathered_pallas,
         gathered_idx=_gathered_idx_pallas_fused,
+        decode=_decode_pallas_fused,
         overwrite=overwrite,
     )
 

@@ -12,7 +12,7 @@ If a preferred backend exists but its capabilities don't match the request
 (e.g. ``pallas`` with a non-Cauchy score), dispatch *warns and falls back*
 instead of failing: the model still runs, just on a capable backend.
 
-Backends register up to three entry points:
+Backends register up to four entry points:
 
   ``attention(q, k, v, gamma2, *, zcfg, causal, mechanism)``
       full attention on token-space inputs, q/k ``(B, H, N, d_k)``,
@@ -28,7 +28,20 @@ Backends register up to three entry points:
       This is what the ZETA pipeline dispatches through in every mode
       (train / prefill / decode); ``gathered_idx_attention`` falls back
       to an XLA gather + the ``gathered`` stage for backends that lack
-      it, preserving the backend's scoring semantics.
+      it, preserving the backend's scoring semantics;
+  ``decode(q, qz, kt, vt, skz, spos, searchable, pos, km, vm, ins_kz,
+  ins_pos, ins_mask, gamma2, *, k, window, chunk, score)``  (optional)
+      the whole per-token decode step — binary search + own-chunk window
+      + candidate gather + scoring + sorted insert — as ONE fused call
+      against flat ``(B*Hkv,)``-row caches, returning
+      ``(out (f, G, dv), new_skz, new_spos)``.  Selection goes through
+      :func:`select_decode_backend`: the pinned-backend semantics of
+      ``gathered_idx_attention`` (a pin without the stage means the
+      staged pipeline, never a cross-backend switch), plus one extra
+      rule — with no pin, the stage is only used where the backend runs
+      COMPILED, because the staged fallback is compiled XLA and beats an
+      interpret-mode kernel (the same compiled-beats-interpreted rule
+      ``Capabilities.rank`` applies between backends).
 
 Registration lives in :mod:`repro.backend.backends`; this module holds only
 the policy so kernels may import it without cycles.
@@ -71,7 +84,7 @@ class AttentionRequest:
     dtype: str = "float32"
     causal: bool = True
     device: str = "cpu"
-    stage: Literal["full", "gathered", "gathered_idx"] = "full"
+    stage: Literal["full", "gathered", "gathered_idx", "decode"] = "full"
 
     @classmethod
     def probe(cls, **kw) -> "AttentionRequest":
@@ -126,11 +139,14 @@ class Backend:
     caps: Capabilities
     gathered: Callable | None = None
     gathered_idx: Callable | None = None
+    decode: Callable | None = None
 
     def supports(self, req: AttentionRequest) -> bool:
         if req.stage == "gathered" and self.gathered is None:
             return False
         if req.stage == "gathered_idx" and self.gathered_idx is None:
+            return False
+        if req.stage == "decode" and self.decode is None:
             return False
         return self.caps.supports(req)
 
@@ -141,6 +157,7 @@ _REGISTRY: dict[str, Backend] = {}
 def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
                      gathered: Callable | None = None,
                      gathered_idx: Callable | None = None,
+                     decode: Callable | None = None,
                      overwrite: bool = False) -> Backend:
     """Register ``fn`` under ``name``.  Re-registering an existing name
     requires ``overwrite=True`` (tests use this to inject fakes)."""
@@ -149,7 +166,8 @@ def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
             f"backend {name!r} already registered; pass overwrite=True"
         )
     be = Backend(name=name, attention=fn, caps=capabilities,
-                 gathered=gathered, gathered_idx=gathered_idx)
+                 gathered=gathered, gathered_idx=gathered_idx,
+                 decode=decode)
     _REGISTRY[name] = be
     return be
 
@@ -335,6 +353,42 @@ def gathered_idx_attention(q, kt, vt, idx, valid, gamma2, *,
     return be.gathered_idx(q, kt, vt, idx, valid, gamma2, score=score)
 
 
+def select_decode_backend(score: str = "cauchy", dtype: str = "float32",
+                          preferred: str | None = None) -> Backend | None:
+    """Resolve the capability-gated fused ``decode`` stage, or ``None``
+    for the caller's staged search→gather→score→insert pipeline.
+
+    Pinned semantics mirror ``gathered_idx_attention``: an explicit pin
+    (``zcfg.backend`` / env var) naming a backend WITHOUT the stage means
+    "use that backend's staged pipeline" — never a silent switch to a
+    different backend's fused path.  Unpinned, the stage is used only
+    where its backend runs compiled (the staged fallback is compiled XLA,
+    which beats an interpret-mode kernel); a pin DOES force the stage even
+    in interpret mode, which is how tests and the CPU benchmarks drive it.
+
+    Callers make this decision at trace time (shapes are static), then
+    still apply their own residency guard (``fits_decode_residency``).
+    """
+    _ensure_registered()
+    req = AttentionRequest.probe(
+        mechanism="zeta", score=score, dtype=dtype, stage="decode",
+    )
+    if preferred is not None:
+        be = get_backend(preferred)  # unknown explicit name is an error
+        return be if be.supports(req) else None
+    env = os.environ.get(ENV_VAR)
+    if env:
+        be = _REGISTRY.get(env)
+        if be is not None and be.supports(req):
+            return be
+        return None
+    for name in available_backends(req):
+        be = _REGISTRY[name]
+        if req.device in be.caps.compiled_devices:
+            return be
+    return None
+
+
 def _materialize_and_score(q, kt, vt, idx, valid, gamma2, *, score, cfg,
                            backend):
     """Fallback for ``gathered_idx``-incapable backends: one XLA gather
@@ -380,6 +434,7 @@ def support_matrix() -> list[dict]:
             "dtypes": "+".join(d.replace("float", "f") for d in caps.dtypes),
             "gathered": "yes" if be.gathered is not None else "no",
             "gathered_idx": "yes" if be.gathered_idx is not None else "no",
+            "decode": "yes" if be.decode is not None else "no",
             "notes": caps.notes,
         }
         for dev in ("cpu", "gpu", "tpu"):
@@ -397,7 +452,8 @@ def support_matrix_markdown() -> str:
     """The README's backend support matrix, generated from live registrations
     (regenerate with ``PYTHONPATH=src python -m repro.backend``)."""
     cols = ["backend", "mechanisms", "scores", "dtypes",
-            "cpu", "gpu", "tpu", "gathered", "gathered_idx", "notes"]
+            "cpu", "gpu", "tpu", "gathered", "gathered_idx", "decode",
+            "notes"]
     rows = support_matrix()
     head = "| " + " | ".join(cols) + " |"
     sep = "|" + "|".join("---" for _ in cols) + "|"

@@ -413,6 +413,31 @@ class ZetaCache(NamedTuple):
 # ------------------------------------------------------------ decode mode
 
 
+def decode_backend_name(zcfg, dtype: str, *, nmax: int | None = None,
+                        dk: int | None = None, dv: int | None = None,
+                        g: int | None = None) -> str | None:
+    """The backend whose fused ``decode`` stage :func:`attend_decode`
+    would use for this config, or ``None`` for the staged pipeline.
+    Shape args additionally apply the VMEM residency guard; without them
+    only the capability/pin policy is evaluated (what serve/bench report
+    up front, before cache shapes exist)."""
+    from repro.backend import backends as _backends, registry
+
+    be = registry.select_decode_backend(
+        score=zcfg.score, dtype=str(dtype), preferred=zcfg.backend,
+    )
+    if be is None:
+        return None
+    if nmax is not None:
+        kk = zcfg.k + zcfg.local_window + (1 if zcfg.history_mean else 0)
+        itemsize = jnp.dtype(dtype).itemsize
+        if not _backends.fits_decode_residency(
+            nmax, dk, dv, itemsize, g, kk
+        ):
+            return None
+    return be.name
+
+
 def attend_decode(
     cache: ZetaCache,
     zq_t: jax.Array,
@@ -454,13 +479,63 @@ def attend_decode(
     zk_cache = state.row_write(cache.zk, zk_t, t, active)
     v_cache = state.row_write(cache.v, v_t, t, active)
 
-    # 1-2. encode the query heads, grouped search of each KV head's sorted
-    # rows (same dedup as training): the (f, Nmax) sorted caches are
-    # binary-searched in place — never repeated G times per step, which
-    # the pre-grouped search did on the full cache every token.
+    # 1-2. encode the query heads; running history-mean numerators and the
+    # delayed-insertion key are shared by both decode paths below.
     qz_t = morton_codes(
         zq_t.reshape(f, G, dk), bits=z.bits, bound=z.bound
     )                                                      # (f, G)
+    kt = zk_cache.reshape(f, Nmax, dk)
+    vt = v_cache.reshape(f, Nmax, dv)
+    new_ksum = cache.ksum + zk_t[:, :, 0].astype(jnp.float32)
+    new_vsum = cache.vsum + v_t[:, :, 0].astype(jnp.float32)
+    km = vm = None
+    if z.history_mean:
+        denom = (t + 1).astype(jnp.float32)[:, None, None]  # (B,1,1)
+        km = (new_ksum / denom).reshape(f, dk)
+        vm = (new_vsum / denom).reshape(f, dv)
+    t_ins = jnp.maximum(t - M, 0)                          # (B,)
+    t_ins_f = jnp.repeat(t_ins, Hkv)
+    ins_key = jnp.take_along_axis(
+        kt, t_ins_f[:, None, None], axis=1
+    )                                                      # (f, 1, dk)
+    ins_kz = morton_codes(ins_key, bits=z.bits, bound=z.bound)[:, 0]
+    ins_mask = jnp.repeat((t >= M) & active, Hkv)
+    act_b = active[:, None, None]
+
+    # FAST PATH — the capability-gated fused decode stage: search + window
+    # + gather + score + sorted insert in ONE kernel invocation per cache
+    # row, no per-token HBM round-trip for the candidate set and no
+    # (f, Nmax+1, d) mean-row concat (registry.select_decode_backend has
+    # the selection policy; the VMEM residency guard is trace-time).
+    fused = decode_backend_name(
+        z, str(zq_t.dtype), nmax=Nmax, dk=dk, dv=dv, g=G,
+    )
+    if fused is not None:
+        from repro.backend import registry
+
+        g2 = _gamma2_rows(gamma2, B, Hq, zq_t.dtype).reshape(f, G)
+        out, new_skz, new_spos = registry.get_backend(fused).decode(
+            zq_t.reshape(f, G, dk), qz_t, kt, vt,
+            cache.zk_sorted, cache.pos_sorted,
+            jnp.repeat(searchable, Hkv), jnp.repeat(t, Hkv),
+            None if km is None else km.astype(kt.dtype),
+            None if vm is None else vm.astype(vt.dtype),
+            ins_kz, t_ins_f.astype(jnp.int32), ins_mask, g2,
+            k=z.k, window=w, chunk=M, score=z.score,
+        )
+        return out.reshape(B, Hq, 1, dv), ZetaCache(
+            zk=zk_cache,
+            v=v_cache,
+            zk_sorted=new_skz,
+            pos_sorted=new_spos,
+            ksum=jnp.where(act_b, new_ksum, cache.ksum),
+            vsum=jnp.where(act_b, new_vsum, cache.vsum),
+        )
+
+    # STAGED PATH — grouped search of each KV head's sorted rows (same
+    # dedup as training): the (f, Nmax) sorted caches are binary-searched
+    # in place — never repeated G times per step, which the pre-grouped
+    # search did on the full cache every token.
     sel = search_decode_grouped(
         cache.zk_sorted, cache.pos_sorted,
         jnp.repeat(searchable, Hkv), qz_t, k=z.k,
@@ -477,23 +552,19 @@ def attend_decode(
             chunk=M, window=w,
         )
 
-    # 4. token-layout K/V view for the scorer; the history-mean token over
-    # past tokens (+ current) folds in as ONE extra always-valid row at
-    # position Nmax.  No candidate gather happens here — the scoring
-    # stage reads the cache through idx (fused in-kernel on capable
-    # backends).  The concat copies the cache view once per step
-    # (G-independent; see docs/ARCHITECTURE.md §2a for the trade-off and
-    # the reserved-row plan that would remove it).
-    kt = zk_cache.reshape(f, Nmax, dk)
-    vt = v_cache.reshape(f, Nmax, dv)
-    new_ksum = cache.ksum + zk_t[:, :, 0].astype(jnp.float32)
-    new_vsum = cache.vsum + v_t[:, :, 0].astype(jnp.float32)
+    # 4. the history-mean token over past tokens (+ current) folds in as
+    # ONE extra always-valid row at position Nmax.  No candidate gather
+    # happens here — the scoring stage reads the cache through idx.  The
+    # concat copies the cache view once per step (G-independent) — this
+    # is the per-token HBM cost the fused decode path above removes
+    # (docs/ARCHITECTURE.md §2a).
     if z.history_mean:
-        denom = (t + 1).astype(jnp.float32)[:, None, None]  # (B,1,1)
-        km = (new_ksum / denom).reshape(f, 1, dk)
-        vm = (new_vsum / denom).reshape(f, 1, dv)
-        kt = jnp.concatenate([kt, km.astype(kt.dtype)], axis=1)
-        vt = jnp.concatenate([vt, vm.astype(vt.dtype)], axis=1)
+        kt = jnp.concatenate(
+            [kt, km.reshape(f, 1, dk).astype(kt.dtype)], axis=1
+        )
+        vt = jnp.concatenate(
+            [vt, vm.reshape(f, 1, dv).astype(vt.dtype)], axis=1
+        )
         idx, valid = _append_candidate(
             idx, valid, jnp.int32(Nmax)
         )
@@ -508,18 +579,11 @@ def attend_decode(
 
     # 6. sorted-cache maintenance: insert the key that just became M steps
     # old (it is now outside every future query's own-chunk horizon).
-    t_ins = jnp.maximum(t - M, 0)                          # (B,)
-    t_ins_f = jnp.repeat(t_ins, Hkv)
-    ins_key = jnp.take_along_axis(
-        zk_cache.reshape(f, Nmax, dk), t_ins_f[:, None, None], axis=1
-    )                                                      # (f, 1, dk)
-    ins_kz = morton_codes(ins_key, bits=z.bits, bound=z.bound)[:, 0]
     new_skz, new_spos = topk.sorted_insert(
         cache.zk_sorted, cache.pos_sorted,
         jnp.repeat(searchable, Hkv), ins_kz, t_ins_f.astype(jnp.int32),
-        update_mask=jnp.repeat((t >= M) & active, Hkv),
+        update_mask=ins_mask,
     )
-    act_b = active[:, None, None]
     return out, ZetaCache(
         zk=zk_cache,
         v=v_cache,
@@ -547,9 +611,9 @@ def attend_prefill(
 ) -> tuple[jax.Array, ZetaCache]:
     """Bulk ingest of P tokens per slot — the paper's *parallel* mechanism
     run against a live cache, equivalent to P sequential ``attend_decode``
-    calls (the sorted z-code cache is rebuilt in one sort instead of P
-    inserts; tie order among colliding codes may differ — see
-    ``core.topk.sorted_build``).
+    calls (the sorted z-code cache takes the chunk's keys through ONE
+    batched ``sorted_insert_many``, bit-identical to P sequential inserts
+    including tie order — accepted speculation chunks commit the same way).
 
     zq_c: (B, Hq, P, d_k); zk_c: (B, Hkv, P, d_k); v_c: (B, Hkv, P, d_v);
     positions: (B, P) global token positions (t0 + j); token_mask: (B, P)
@@ -637,19 +701,31 @@ def attend_prefill(
         qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
     ).reshape(B, Hq, P, dv)
 
-    # 6. rebuild the sorted z-code cache in one shot: after the chunk,
-    # decode would have inserted every key up to (t0+n_valid-1) - M.
-    new_len_sorted = jnp.maximum(t0 + n_valid - M, 0)
-    built_kz, built_pos = topk.sorted_build(
-        kz_by_pos, jnp.repeat(new_len_sorted, Hkv)
+    # 6. commit the chunk to the sorted z-code cache with ONE batched
+    # multi-insert: after the chunk, decode would have inserted every key
+    # up to (t0+n_valid-1) - M, i.e. positions old_len .. new_len-1 in
+    # increasing order.  sorted_insert_many reproduces that sequence of
+    # sorted_insert calls bit-for-bit (newest-first ties), so the prefill
+    # cache now matches sequential decode EXACTLY — the old one-shot
+    # sorted_build differed in tie order among colliding codes.
+    old_len = jnp.maximum(t0 - M, 0)
+    new_len = jnp.maximum(t0 + n_valid - M, 0)
+    ins_pos = old_len[:, None] + jnp.arange(P, dtype=jnp.int32)[None, :]
+    ins_pos_f = jnp.repeat(ins_pos, Hkv, axis=0)           # (f, P)
+    ins_kz_f = jnp.take_along_axis(
+        kz_by_pos, jnp.minimum(ins_pos_f, Nmax - 1), axis=1
     )
-    row_act = jnp.repeat(active, Hkv)[:, None]
+    new_skz, new_spos = topk.sorted_insert_many(
+        cache.zk_sorted, cache.pos_sorted, ins_kz_f, ins_pos_f,
+        jnp.repeat(new_len - old_len, Hkv),
+        update_mask=jnp.repeat(active, Hkv),
+    )
     act_b = active[:, None, None]
     return out, ZetaCache(
         zk=zk_cache,
         v=v_cache,
-        zk_sorted=jnp.where(row_act, built_kz, cache.zk_sorted),
-        pos_sorted=jnp.where(row_act, built_pos, cache.pos_sorted),
+        zk_sorted=new_skz,
+        pos_sorted=new_spos,
         ksum=jnp.where(act_b, cache.ksum + cumk[:, :, -1], cache.ksum),
         vsum=jnp.where(act_b, cache.vsum + cumv[:, :, -1], cache.vsum),
     )

@@ -306,6 +306,74 @@ def sorted_insert(
     return out_kz, out_pos
 
 
+def sorted_insert_many(
+    sorted_kz: jax.Array,
+    sorted_pos: jax.Array,
+    new_kz: jax.Array,
+    new_pos: jax.Array,
+    count: jax.Array,
+    update_mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Insert up to P codes per row in ONE pass — bit-identical to P
+    sequential ``sorted_insert`` calls in slot order p = 0 .. count-1,
+    including the tie rule (a 'left' insertion places a new key before
+    existing equals, so the LATEST inserted of equal codes ends leftmost).
+
+    Replaces the O(N) shift *per token* with one O(N·P) vectorised merge:
+    accepted speculation chunks and chunked prefill commit their whole
+    token batch in a single dispatch instead of P dependent shifts.
+
+    sorted_kz/sorted_pos: (B, Nmax) sorted cache rows (SENTINEL tails)
+    new_kz/new_pos:       (B, P) codes/positions to insert, slot order
+    count:                (B,) or scalar — slots p >= count are ignored
+    update_mask:          optional (B,) bool — False rows returned unchanged
+
+    The combined destination map is the rank function of the merged
+    multiset, so every target slot < Nmax is written exactly once; entries
+    pushed past Nmax (displaced sentinel tail) are dropped.
+    """
+    B, Nmax = sorted_kz.shape
+    P = new_kz.shape[1]
+    count = jnp.broadcast_to(jnp.asarray(count, jnp.int32), (B,))
+    pidx = jnp.arange(P, dtype=jnp.int32)
+    live = pidx[None, :] < count[:, None]                          # (B, P)
+    if update_mask is not None:
+        live = live & update_mask[:, None]
+    # Existing entry j shifts right once per live new key <= its code
+    # (equal new keys insert before it under 'left' search).
+    le = live[:, None, :] & (new_kz[:, None, :] <= sorted_kz[:, :, None])
+    dest_old = (
+        jnp.arange(Nmax, dtype=jnp.int32)[None, :]
+        + jnp.sum(le, axis=-1, dtype=jnp.int32)
+    )                                                              # (B, N)
+    # New key p lands at its insertion point among the original entries,
+    # plus one per other live new key that sorts strictly before it:
+    # smaller code, or equal code inserted LATER (q > p) — later equals
+    # displace earlier ones, reproducing sequential newest-first ties.
+    base = jnp.sum(
+        sorted_kz[:, :, None] < new_kz[:, None, :], axis=1, dtype=jnp.int32
+    )                                                              # (B, P)
+    kq = new_kz[:, :, None]                                        # q axis
+    kp = new_kz[:, None, :]                                        # p axis
+    earlier = (kq < kp) | (
+        (kq == kp) & (pidx[:, None] > pidx[None, :])[None]
+    )
+    extra = jnp.sum(live[:, :, None] & earlier, axis=1, dtype=jnp.int32)
+    dest_new = jnp.where(live, base + extra, Nmax)                 # dead->drop
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    out_kz = jnp.full_like(sorted_kz, SENTINEL)
+    out_pos = jnp.zeros_like(sorted_pos)
+    out_kz = out_kz.at[bidx, dest_old].set(sorted_kz, mode="drop")
+    out_pos = out_pos.at[bidx, dest_old].set(sorted_pos, mode="drop")
+    out_kz = out_kz.at[bidx, dest_new].set(new_kz, mode="drop")
+    out_pos = out_pos.at[bidx, dest_new].set(new_pos, mode="drop")
+    if update_mask is not None:
+        keep = ~update_mask[:, None]
+        out_kz = jnp.where(keep, sorted_kz, out_kz)
+        out_pos = jnp.where(keep, sorted_pos, out_pos)
+    return out_kz, out_pos
+
+
 def sorted_build(
     kz_by_pos: jax.Array,
     length: jax.Array,

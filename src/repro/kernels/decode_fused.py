@@ -1,0 +1,310 @@
+"""Fused per-token decode step — Pallas TPU kernel.
+
+The staged decode path (``selection.attend_decode``) runs four dispatches
+per token per layer: a grouped binary search over the sorted z-code cache,
+an own-chunk window append, the index-gather scorer, and an O(N)-shift
+``sorted_insert`` — with the candidate index set and (when history_mean is
+on) a full ``(f, Nmax+1, d)`` concat of the K/V cache round-tripping
+through HBM between them.  BENCH_selection pins the result: ~7k decode
+tokens/s against ~153k for the same selection math run in train mode.
+
+This kernel is the whole step as ONE ``pallas_call``, one grid program per
+flat ``B*Hkv`` cache row, everything resident in VMEM:
+
+    ins   = searchsorted(skz, qz ++ ins_kz)     branch-free binary search
+    idx   = spos[window(ins, k)] ++ own-chunk window positions
+    k_j   = K[idx]; v_j = V[idx]                in-VMEM gather
+    out   = Cauchy(q, k_j, v_j ++ mean row)     same math as the staged path
+    skz'  = shift-insert(skz, ins_kz)           the O(N) shift stays on-chip
+
+The history-mean token arrives as a precomputed ``(f, d)`` row and is
+appended as a scoring COLUMN inside the kernel — the staged path's
+per-step ``concat(cache, mean_row)`` HBM copy (flagged in ARCHITECTURE
+§2a) does not exist here, which the no-(Nmax+1)-buffer HLO test pins.
+
+Candidate column order is [search k | window w | mean], identical to the
+staged pipeline, and the scoring arithmetic mirrors ``score_gathered_xla``
+(+ ``cauchy_weights``) expression for expression so the fused and staged
+paths agree to the ulp on the same device.
+
+VMEM per grid step: Nmax*(d_k+d_v)*itemsize resident K/V + 4*Nmax*4 B for
+the sorted int32 rows (in + out) + the tiny (G, K, d) candidate tile —
+e.g. f32 Nmax=8192, d_k=3, d_v=128, G=8, K=37: ~4.2 MiB + ~128 KiB.  The
+backend wrapper falls back to the staged pipeline past the budget
+(``fits_decode_residency``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.backend.registry import default_interpret
+
+_EPS = 1e-9
+
+
+def _iota(n: int) -> jax.Array:
+    """1-D int32 iota via a 2-D broadcasted_iota (TPU requires >= 2D)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+
+
+def _searchsorted(skz, queries, nmax: int):
+    """Branch-free 'left' binary search of ``queries`` (Q,) in the sorted
+    row ``skz`` (Nmax,) — the same loop as ``topk._searchsorted_batched``
+    (guarded probes, ``n.bit_length()`` rounds) so insertion points match
+    the staged path bit-for-bit."""
+    lo = jnp.zeros(queries.shape, jnp.int32)
+    hi = jnp.full(queries.shape, nmax, jnp.int32)
+    for _ in range(max(1, nmax.bit_length())):
+        mid = (lo + hi) >> 1
+        val = jnp.take(skz, jnp.minimum(mid, nmax - 1), axis=0)
+        active = mid < hi
+        go_right = active & (val < queries)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    return lo
+
+
+def _make_kernel(nmax: int, g: int, k: int, window: int, chunk: int,
+                 has_mean: bool):
+    def kernel(q_ref, qz_ref, kt_ref, vt_ref, skz_ref, spos_ref,
+               len_ref, pos_ref, *rest):
+        if has_mean:
+            (km_ref, vm_ref, insk_ref, insp_ref, upd_ref, g2_ref,
+             out_ref, nskz_ref, nspos_ref) = rest
+        else:
+            (insk_ref, insp_ref, upd_ref, g2_ref,
+             out_ref, nskz_ref, nspos_ref) = rest
+
+        skz = skz_ref[...]                        # (Nmax,)
+        spos = spos_ref[...]
+        length = len_ref[0]                       # searchable count
+        t = pos_ref[0]                            # current position
+        qz = qz_ref[...]                          # (G,)
+
+        # one search serves the G query heads AND the insert key
+        points = _searchsorted(
+            skz, jnp.concatenate([qz, insk_ref[...]]), nmax
+        )
+        ins_q, ins_p = points[:g], points[g]
+
+        # window of k sorted slots centred on each query's insertion point
+        start = jnp.clip(
+            ins_q - (k // 2), 0, jnp.maximum(length - k, 0)
+        )                                         # (G,)
+        slots = start[:, None] + _iota(k)[None, :]
+        valid = slots < length                    # (G, k)
+        idx = jnp.take(
+            spos, jnp.minimum(slots, nmax - 1).reshape(g * k), axis=0
+        ).reshape(g, k)
+        idx = jnp.where(valid, idx, 0)
+
+        if window > 0:                            # own-chunk local window
+            wj = t - _iota(window)
+            wvalid = wj >= (t // chunk) * chunk
+            widx = jnp.where(wvalid, wj, 0)
+            idx = jnp.concatenate(
+                [idx, jnp.broadcast_to(widx[None], (g, window))], axis=1
+            )
+            valid = jnp.concatenate(
+                [valid, jnp.broadcast_to(wvalid[None], (g, window))],
+                axis=1,
+            )
+
+        # in-VMEM candidate gather + history-mean column
+        q = q_ref[...]                            # (G, dk)
+        kk = idx.shape[1]
+        flat = idx.reshape(g * kk)
+        k_sel = jnp.take(kt_ref[...], flat, axis=0).reshape(
+            g, kk, -1).astype(q.dtype)
+        v_sel = jnp.take(vt_ref[...], flat, axis=0).reshape(
+            g, kk, -1).astype(q.dtype)
+        if has_mean:
+            km = km_ref[...].astype(q.dtype)
+            vm = vm_ref[...].astype(q.dtype)
+            k_sel = jnp.concatenate(
+                [k_sel, jnp.broadcast_to(
+                    km[None, None, :], (g, 1, km.shape[-1]))], axis=1
+            )
+            v_sel = jnp.concatenate(
+                [v_sel, jnp.broadcast_to(
+                    vm[None, None, :], (g, 1, vm.shape[-1]))], axis=1
+            )
+            valid = jnp.concatenate(
+                [valid, jnp.ones((g, 1), bool)], axis=1
+            )
+
+        # scoring — expression-for-expression the staged path's
+        # score_gathered_xla + cauchy_weights + f32-accumulated sum
+        g2 = g2_ref[...][:, None]                 # (G, 1) in q.dtype
+        d2 = jnp.sum((q[:, None, :] - k_sel) ** 2, axis=-1)
+        s = jnp.where(valid, 1.0 / (d2 + g2 + _EPS), jnp.zeros_like(d2))
+        z = jnp.sum(s, axis=-1, keepdims=True)
+        w = s / jnp.maximum(z, _EPS)
+        out_ref[...] = jnp.sum(
+            w[..., None] * v_sel, axis=-2, dtype=jnp.float32
+        ).astype(out_ref.dtype)
+
+        # sorted insert (the O(N) shift, on-chip): same semantics as
+        # topk.sorted_insert — entries after the insertion point move one
+        # slot right, masked rows keep their cache untouched.
+        ar = _iota(nmax)
+        shift = ar > ins_p
+        nskz = jnp.where(shift, jnp.roll(skz, 1), skz)
+        nspos = jnp.where(shift, jnp.roll(spos, 1), spos)
+        at = ar == ins_p
+        nskz = jnp.where(at, insk_ref[0], nskz)
+        nspos = jnp.where(at, insp_ref[0], nspos)
+        upd = upd_ref[0] != 0
+        nskz_ref[...] = jnp.where(upd, nskz, skz)
+        nspos_ref[...] = jnp.where(upd, nspos, spos)
+
+    return kernel
+
+
+def _row_specs(g, nmax, dk, dv, has_mean):
+    specs = [
+        pl.BlockSpec((None, g, dk), lambda i: (i, 0, 0)),    # q
+        pl.BlockSpec((None, g), lambda i: (i, 0)),           # qz
+        pl.BlockSpec((None, nmax, dk), lambda i: (i, 0, 0)),  # kt
+        pl.BlockSpec((None, nmax, dv), lambda i: (i, 0, 0)),  # vt
+        pl.BlockSpec((None, nmax), lambda i: (i, 0)),        # skz
+        pl.BlockSpec((None, nmax), lambda i: (i, 0)),        # spos
+        pl.BlockSpec((1,), lambda i: (i,)),                  # searchable
+        pl.BlockSpec((1,), lambda i: (i,)),                  # pos
+    ]
+    if has_mean:
+        specs += [
+            pl.BlockSpec((None, dk), lambda i: (i, 0)),      # km
+            pl.BlockSpec((None, dv), lambda i: (i, 0)),      # vm
+        ]
+    specs += [
+        pl.BlockSpec((1,), lambda i: (i,)),                  # ins_kz
+        pl.BlockSpec((1,), lambda i: (i,)),                  # ins_pos
+        pl.BlockSpec((1,), lambda i: (i,)),                  # ins_mask
+        pl.BlockSpec((None, g), lambda i: (i, 0)),           # gamma2
+    ]
+    return specs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "window", "chunk", "interpret")
+)
+def cauchy_decode_fused(q, qz, kt, vt, skz, spos, searchable, pos,
+                        km, vm, ins_kz, ins_pos, ins_mask, gamma2, *,
+                        k: int, window: int = 0, chunk: int = 1,
+                        interpret: bool | None = None):
+    """One fused decode step over flat cache rows (f = B*Hkv).
+
+    q: (f, G, dk) query coords; qz: (f, G) int32 query codes;
+    kt/vt: (f, Nmax, d) token-layout caches (current token already
+    written); skz/spos: (f, Nmax) int32 sorted z-code cache;
+    searchable/pos: (f,) int32 live sorted count / current position;
+    km/vm: (f, d) history-mean rows in cache dtype, or both None;
+    ins_kz/ins_pos: (f,) int32 delayed-insertion key; ins_mask: (f,) bool;
+    gamma2: (f, G) in q.dtype.  Static: k, window (0 = off), chunk (M).
+
+    Returns (out (f, G, dv), new_skz, new_spos).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    f, g, dk = q.shape
+    nmax = kt.shape[1]
+    dv = vt.shape[-1]
+    has_mean = km is not None
+    kernel = _make_kernel(nmax, g, k, window, chunk, has_mean)
+
+    ins = [q, qz, kt, vt, skz, spos,
+           searchable.astype(jnp.int32), pos.astype(jnp.int32)]
+    if has_mean:
+        ins += [km, vm]
+    ins += [ins_kz.astype(jnp.int32), ins_pos.astype(jnp.int32),
+            ins_mask.astype(jnp.int8), gamma2]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(f,),
+        in_specs=_row_specs(g, nmax, dk, dv, has_mean),
+        out_specs=[
+            pl.BlockSpec((None, g, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, nmax), lambda i: (i, 0)),
+            pl.BlockSpec((None, nmax), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, g, dv), q.dtype),
+            jax.ShapeDtypeStruct((f, nmax), jnp.int32),
+            jax.ShapeDtypeStruct((f, nmax), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*ins)
+
+
+def _smoke() -> int:
+    """Interpret-mode smoke: full attend_decode through the fused kernel
+    vs the staged pipeline on a mid-stream GQA cache.  Run by CI:
+    ``PYTHONPATH=src python -m repro.kernels.decode_fused``."""
+    from repro.core import selection
+    from repro.nn.config import ZetaConfig
+
+    B, Hq, Hkv, dk, dv, Nmax = 2, 4, 2, 3, 8, 64
+    zcfg = ZetaConfig(d_k=dk, k=4, num_chunks=8, local_window=2)
+    t0 = 37
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    zk_hist = jnp.tanh(jax.random.normal(ks[0], (B, Hkv, Nmax, dk)))
+    v_hist = jax.random.normal(ks[1], (B, Hkv, Nmax, dv))
+    pos_mask = jnp.arange(Nmax) < t0
+    zk0 = jnp.where(pos_mask[None, None, :, None], zk_hist, 0.0)
+    v0 = jnp.where(pos_mask[None, None, :, None], v_hist, 0.0)
+    f = B * Hkv
+    M = Nmax // zcfg.num_chunks
+    from repro.core import topk as topk_mod
+    kz = selection.morton_codes(
+        zk0.reshape(f, Nmax, dk), bits=zcfg.bits, bound=zcfg.bound
+    )
+    skz, spos = topk_mod.sorted_build(
+        kz, jnp.full((f,), max(t0 - M, 0), jnp.int32)
+    )
+    cache = selection.ZetaCache(
+        zk=zk0, v=v0, zk_sorted=skz, pos_sorted=spos,
+        ksum=jnp.sum(zk0, axis=2).astype(jnp.float32),
+        vsum=jnp.sum(v0, axis=2).astype(jnp.float32),
+    )
+    zq_t = jnp.tanh(jax.random.normal(ks[2], (B, Hq, 1, dk)))
+    zk_t = jnp.tanh(jax.random.normal(ks[3], (B, Hkv, 1, dk)))
+    v_t = jax.random.normal(ks[4], (B, Hkv, 1, dv))
+    t = jnp.full((B,), t0, jnp.int32)
+    act = jnp.ones((B,), bool)
+    g2 = jnp.asarray(0.5)
+
+    out_f, c_f = selection.attend_decode(
+        cache, zq_t, zk_t, v_t, g2, t, act,
+        zcfg=zcfg.replace(backend="pallas_fused"),
+    )
+    out_s, c_s = selection.attend_decode(
+        cache, zq_t, zk_t, v_t, g2, t, act,
+        zcfg=zcfg.replace(backend="xla"),
+    )
+    errs = {
+        "out": float(jnp.abs(out_f - out_s).max()),
+        "skz": int(jnp.abs(c_f.zk_sorted - c_s.zk_sorted).max()),
+        "spos": int(jnp.abs(c_f.pos_sorted - c_s.pos_sorted).max()),
+    }
+    ok = errs["out"] < 1e-5 and errs["skz"] == 0 and errs["spos"] == 0
+    used = selection.decode_backend_name(
+        zcfg.replace(backend="pallas_fused"), str(zq_t.dtype)
+    )
+    ok = ok and used == "pallas_fused"
+    print("decode-fused smoke (interpret="
+          f"{default_interpret()}, path={used}):",
+          " ".join(f"{k_}={v:.2e}" if isinstance(v, float) else
+                   f"{k_}={v}" for k_, v in errs.items()),
+          "OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(_smoke())

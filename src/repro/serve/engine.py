@@ -26,12 +26,17 @@ prefill-as-decode) as an equivalence oracle: both schedulers produce
 identical outputs per request (greedy AND sampled — the per-request
 streams are scheduler-independent), which `tests/test_serve_engine.py`
 and `tests/test_sampling.py` pin.
+
+``speculation=SpeculationConfig(...)`` swaps the one-token decode step
+for draft-verify rounds (``repro.spec``): a host-side draft head
+proposes ``chunk - 1`` tokens and two bulk prefill calls verify and
+commit the accepted prefix — still token-identical output for any
+draft quality (`tests/test_speculative.py`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from collections import deque
 from typing import Callable, Iterator
 
@@ -44,6 +49,8 @@ from repro.models import api
 from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
 from repro.serve.step import make_prefill_step, make_serve_step
+from repro.spec import SpeculationConfig, make_draft
+from repro.spec.verify import make_spec_step
 
 
 @dataclasses.dataclass
@@ -77,8 +84,8 @@ class Request:
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, prec: Precision, *,
                  batch_slots: int, max_len: int, seed: int = 0,
-                 greedy: bool | None = None,
                  scheduler: str = "continuous", prefill_chunk: int = 8,
+                 speculation: SpeculationConfig | None = None,
                  bos_id: int | None = None, max_eos: int = 4,
                  max_stops: int = 4, max_stop_len: int = 8,
                  history_len: int = 32):
@@ -87,9 +94,10 @@ class ServeEngine:
         ``max_stops`` / ``max_stop_len`` size the padded per-slot
         eos/stop tables; ``history_len`` is the token-history window the
         repetition penalty and stop matching see (prompt tail +
-        generated).  ``greedy`` is a deprecated shim: it becomes the
-        default GenerationParams (temperature 0 or 1) of requests that
-        carry none."""
+        generated).  ``speculation`` switches generating slots from
+        one-token decode steps to draft-verify rounds (see
+        ``repro.spec``): output is token-identical, the round emits up
+        to ``speculation.chunk`` tokens per slot."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if history_len < max_stop_len - 1:
@@ -97,18 +105,12 @@ class ServeEngine:
                 f"history_len={history_len} cannot hold stop sequences of "
                 f"up to {max_stop_len} tokens (needs >= max_stop_len - 1)"
             )
-        if greedy is None:
-            self._default_gen = sample.GenerationParams()
-        else:
-            warnings.warn(
-                "ServeEngine(greedy=...) is deprecated; attach a "
-                "repro.sample.GenerationParams to each Request (greedy =="
-                " temperature 0) instead",
-                DeprecationWarning, stacklevel=2,
+        if speculation is not None and scheduler == "wave":
+            raise ValueError(
+                "speculation requires the continuous scheduler (wave is "
+                "the legacy prefill-as-decode oracle)"
             )
-            self._default_gen = sample.GenerationParams(
-                temperature=0.0 if greedy else 1.0
-            )
+        self._default_gen = sample.GenerationParams()
         self.params = params
         self.cfg = cfg
         self.prec = prec
@@ -121,6 +123,16 @@ class ServeEngine:
         self._raw_prefill = make_prefill_step(cfg, prec)
         self.step_fn = jax.jit(self._raw_step)
         self.prefill_fn = jax.jit(self._raw_prefill)
+        self.decode_path = self._raw_step.decode_path
+        self.speculation = speculation
+        if speculation is not None:
+            self._draft = make_draft(speculation.draft, cfg)
+            self._raw_spec = make_spec_step(cfg, prec, speculation.chunk)
+            self.spec_fn = jax.jit(self._raw_spec)
+        else:
+            self._draft = None
+            self._raw_spec = None
+            self.spec_fn = None
         self.reset_fn = jax.jit(
             lambda cache, mask: api.cache_reset_slots(cfg, cache, mask)
         )
@@ -149,6 +161,9 @@ class ServeEngine:
         self.prefill_calls = 0
         self.decode_calls = 0
         self.busy_slot_ticks = 0
+        self.spec_rounds = 0     # speculation rounds (2 model calls each)
+        self.spec_proposed = 0   # draft tokens offered to the verifier
+        self.spec_accepted = 0   # draft tokens that matched the model
 
     # ----------------------------------------------------------- counters
 
@@ -213,6 +228,10 @@ class ServeEngine:
         tail = self._effective_prompt(req)[-self._history.shape[1]:]
         if tail:
             self._history[i, -len(tail):] = tail
+        if self._draft is not None:
+            self._draft.reset(req)
+            for tok in self._effective_prompt(req):
+                self._draft.observe(req, tok)
 
     def _finish(self, i: int, reason: str) -> None:
         req = self.slots[i]
@@ -264,6 +283,8 @@ class ServeEngine:
             self._on_token(req.rid, tok)
         self._push_history(i, tok)
         self._tokens[i, 0] = tok
+        if self._draft is not None:
+            self._draft.observe(req, tok)
         if finished:
             self._trim_stop(req)
             self._finish(i, "stop")
@@ -326,25 +347,72 @@ class ServeEngine:
                 self.slot_phase[i] = "decode"
                 self._accept(i, int(nxt[i, 0]), bool(fin[i]))
 
-        # ---- one decode step for every generating slot
+        # ---- one decode step (or speculation round) per generating slot
         dec = np.array(
             [self.slot_phase[i] == "decode" and self.slots[i] is not None
              for i in range(self.b)]
         )
         if dec.any():
-            nxt, _, self.cache, fin = self.step_fn(
-                self.params, self.cache, jnp.asarray(self._tokens),
-                self._slot_params_now(), jnp.asarray(self._history),
-                self.rng, jnp.asarray(dec),
-            )
-            self.decode_calls += 1
-            nxt, fin = np.asarray(nxt), np.asarray(fin)
-            for i in range(self.b):
-                if not dec[i]:
-                    continue
-                self._accept(i, int(nxt[i, 0]), bool(fin[i]))
+            if self.spec_fn is not None:
+                self._spec_round(dec)
+            else:
+                nxt, _, self.cache, fin = self.step_fn(
+                    self.params, self.cache, jnp.asarray(self._tokens),
+                    self._slot_params_now(), jnp.asarray(self._history),
+                    self.rng, jnp.asarray(dec),
+                )
+                self.decode_calls += 1
+                nxt, fin = np.asarray(nxt), np.asarray(fin)
+                for i in range(self.b):
+                    if not dec[i]:
+                        continue
+                    self._accept(i, int(nxt[i, 0]), bool(fin[i]))
         self.ticks += 1
         return True
+
+    # ------------------------------------------------------- speculation
+
+    def _spec_round(self, dec: np.ndarray) -> None:
+        """One draft-verify round for every decoding slot: propose
+        ``chunk - 1`` tokens per slot, verify + commit in two model
+        calls, then fold the accepted prefix through the same per-token
+        ``_accept`` path plain decode uses (identical EOS / stop /
+        budget semantics)."""
+        P = self.speculation.chunk
+        drafts = np.zeros((self.b, P), np.int32)
+        drafts[:, 0] = self._tokens[:, 0]
+        room = np.ones((self.b,), np.int32)
+        for i in range(self.b):
+            if not dec[i]:
+                continue
+            r = self.slots[i]
+            prop = [int(t) for t in self._draft.propose(r, P - 1)][:P - 1]
+            drafts[i, 1:1 + len(prop)] = prop
+            # cache length so far: prompt + emitted-but-one (the last
+            # emitted token is fed, not yet written)
+            room[i] = self.max_len - (
+                len(self._effective_prompt(r)) + len(r.output) - 1
+            )
+        emitted, n_emit, fin, self.cache = self.spec_fn(
+            self.params, self.cache, jnp.asarray(drafts),
+            self._slot_params_now(), jnp.asarray(self._history),
+            self.rng, jnp.asarray(dec), jnp.asarray(room),
+        )
+        self.spec_rounds += 1
+        emitted, n_emit, fin = (
+            np.asarray(emitted), np.asarray(n_emit), np.asarray(fin)
+        )
+        for i in range(self.b):
+            if not dec[i]:
+                continue
+            r = self.slots[i]
+            take = int(n_emit[i])
+            self.spec_proposed += P - 1
+            self.spec_accepted += take - 1
+            for j in range(take):
+                if self.slots[i] is not r:
+                    break  # finished mid-chunk: rest of the round is dead
+                self._accept(i, int(emitted[i, j]), bool(fin[i, j]))
 
     # ------------------------------------------------------ wave (oracle)
 
@@ -400,12 +468,21 @@ class ServeEngine:
                 if r.first_token_tick >= 0]
         return {
             "scheduler": self.scheduler,
+            "decode_path": self.decode_path,
             "requests_done": len(self.done),
             "tokens_generated": total,
             "ticks": self.ticks,
-            "model_calls": self.prefill_calls + self.decode_calls,
+            "model_calls": (self.prefill_calls + self.decode_calls
+                            + 2 * self.spec_rounds),
             "prefill_calls": self.prefill_calls,
             "decode_calls": self.decode_calls,
+            "spec_rounds": self.spec_rounds,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "spec_accept_rate": (
+                self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0
+            ),
             "slot_occupancy": (
                 self.busy_slot_ticks / (self.ticks * self.b)
                 if self.ticks else 0.0

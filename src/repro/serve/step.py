@@ -14,17 +14,14 @@ stage through ``repro.backend`` (the same registry train and bench use), so
 serving exercises identical selection logic.  The builders resolve the
 backend once up front purely to fail fast on impossible requests (e.g. a
 config pinned to an unregistered backend) and to let callers log it.
-
-``make_serve_step(cfg, prec, greedy=...)`` (pre-GenerationParams API) is
-kept as a deprecation shim: it returns a step with the OLD
-``(params, cache, token_t, rng[, slot_mask])`` signature that packs the
-equivalent ``GenerationParams`` internally — greedy=True is
-temperature 0, greedy=False a shared temperature-1 categorical.
+``make_serve_step`` additionally reports which decode path the selection
+layer will take (``step.decode_path``): the name of the fused
+single-kernel decode backend when one is eligible, or ``"staged"`` for
+the multi-dispatch search/gather/score pipeline.
 """
 
 from __future__ import annotations
 
-import warnings
 from typing import Callable
 
 import jax
@@ -32,16 +29,16 @@ import jax.numpy as jnp
 
 from repro import backend as attention_backend
 from repro import sample
+from repro.core import selection
 from repro.models import api
 from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
 
 
-def make_serve_step(cfg: ModelConfig, prec: Precision,
-                    greedy: bool | None = None) -> Callable:
+def make_serve_step(cfg: ModelConfig, prec: Precision) -> Callable:
     """Build the one-token decode step.
 
-    New contract (``greedy`` unset)::
+    Contract::
 
         step(params, cache, token_t (B,1), slot_params: SlotParams,
              history (B,H) int32, rng, slot_mask (B,)|None)
@@ -53,14 +50,6 @@ def make_serve_step(cfg: ModelConfig, prec: Precision,
     ``slot_mask``: False rows (empty / prefilling slots) produce garbage
     tokens the engine ignores and leave their cache rows untouched.
     """
-    if greedy is not None:
-        warnings.warn(
-            "make_serve_step(greedy=...) is deprecated; build the step "
-            "without `greedy` and pass a repro.sample.SlotParams batch "
-            "(greedy == temperature 0) instead",
-            DeprecationWarning, stacklevel=2,
-        )
-        return _make_legacy_step(cfg, prec, bool(greedy), prefill=False)
     # Resolving here fails fast (KeyError) on an unregistered
     # cfg.zeta.backend at build time rather than from inside the jitted
     # decode trace.  The name is the f32 resolution for logging; the decode
@@ -81,11 +70,16 @@ def make_serve_step(cfg: ModelConfig, prec: Precision,
 
     serve_step.traces = 0
     serve_step.attention_backend = resolved
+    # Shape-independent probe (the in-trace dispatch re-checks with real
+    # Nmax/head dims and may still fall back to the staged pipeline on
+    # VMEM-residency grounds).
+    serve_step.decode_path = (
+        selection.decode_backend_name(cfg.zeta, "float32") or "staged"
+    )
     return serve_step
 
 
-def make_prefill_step(cfg: ModelConfig, prec: Precision,
-                      greedy: bool | None = None) -> Callable:
+def make_prefill_step(cfg: ModelConfig, prec: Precision) -> Callable:
     """Chunked-prefill step: ingest up to P prompt tokens per slot in one
     model call and SAMPLE each slot's first generated token from the
     logits at its last valid position (so a request whose prompt fits in
@@ -93,14 +87,6 @@ def make_prefill_step(cfg: ModelConfig, prec: Precision,
     time-to-first-token win over prefill-as-decode).  Same SlotParams /
     history / finished contract as :func:`make_serve_step`.
     """
-    if greedy is not None:
-        warnings.warn(
-            "make_prefill_step(greedy=...) is deprecated; build the step "
-            "without `greedy` and pass a repro.sample.SlotParams batch "
-            "(greedy == temperature 0) instead",
-            DeprecationWarning, stacklevel=2,
-        )
-        return _make_legacy_step(cfg, prec, bool(greedy), prefill=True)
     resolved = attention_backend.resolve_name(cfg)
 
     def prefill_step(params, cache, tokens: jax.Array,
@@ -127,50 +113,3 @@ def make_prefill_step(cfg: ModelConfig, prec: Precision,
     prefill_step.traces = 0
     prefill_step.attention_backend = resolved
     return prefill_step
-
-
-def _make_legacy_step(cfg: ModelConfig, prec: Precision, greedy: bool,
-                      *, prefill: bool) -> Callable:
-    """Old-signature shim over the SlotParams step: every slot gets the
-    same GenerationParams (temperature 0 for greedy, else 1), zero
-    history, and the caller-supplied rng as the base key.  Greedy output
-    is token-for-token identical to the new path (parity pinned by
-    ``tests/test_sampling.py``); the sampled path draws from the same
-    temperature-1 categorical but a different stream than the pre-shim
-    code (shared `categorical(rng, ...)` became per-slot fold-in)."""
-    gp = sample.GenerationParams(temperature=0.0 if greedy else 1.0)
-
-    def _sp(batch: int) -> sample.SlotParams:
-        # distinct per-row seeds keep the sampled shim's batch rows
-        # decorrelated, like the shared-categorical path it replaces
-        return sample.pack(
-            sample.slot_spec(batch),
-            [gp.replace(seed=i) for i in range(batch)],
-        )
-
-    if prefill:
-        new_step = make_prefill_step(cfg, prec)
-
-        def prefill_step(params, cache, tokens, token_mask, rng):
-            B = tokens.shape[0]
-            hist = jnp.full((B, 8), -1, jnp.int32)
-            nxt, last_logits, new_cache, _fin = new_step(
-                params, cache, tokens, token_mask, _sp(B), hist, rng
-            )
-            return nxt, last_logits, new_cache
-
-        prefill_step.attention_backend = new_step.attention_backend
-        return prefill_step
-
-    new_step = make_serve_step(cfg, prec)
-
-    def serve_step(params, cache, token_t, rng, slot_mask=None):
-        B = token_t.shape[0]
-        hist = jnp.full((B, 8), -1, jnp.int32)
-        nxt, logits, new_cache, _fin = new_step(
-            params, cache, token_t, _sp(B), hist, rng, slot_mask
-        )
-        return nxt, logits, new_cache
-
-    serve_step.attention_backend = new_step.attention_backend
-    return serve_step

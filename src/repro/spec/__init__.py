@@ -1,0 +1,73 @@
+"""Speculative decoding: draft-verify on top of the ZETA serve stack.
+
+A cheap host-side draft head proposes the next few tokens; ONE bulk
+prefix-top-k model call (the chunked-prefill path, so the whole chunk
+runs ZETA's parallel search) verifies them all, and a second masked call
+commits exactly the accepted prefix into the cache.  Greedy output is
+token-identical to non-speculative decoding for ANY draft quality — a
+bad draft only costs speed, never correctness — and sampled requests
+keep their reproducible per-slot streams because the sampler is a pure
+function of (base key, request seed, sample step).
+
+Components:
+
+- :class:`SpeculationConfig` — the knob carried by ``ServeEngine`` /
+  ``repro.api.generate``.
+- :mod:`repro.spec.draft` — draft heads (``ngram``, ``linear``, and the
+  scripted ``FixedDraft`` used to force accept patterns in tests).
+- :func:`repro.spec.verify.make_spec_step` — the jitted verify+commit
+  step (two model calls per speculation round, any number of tokens).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.spec.draft import (
+    DraftHead,
+    FixedDraft,
+    LinearAttentionDraft,
+    NgramDraft,
+)
+from repro.spec.verify import make_spec_step
+
+__all__ = [
+    "SpeculationConfig",
+    "DraftHead",
+    "NgramDraft",
+    "LinearAttentionDraft",
+    "FixedDraft",
+    "make_draft",
+    "make_spec_step",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationConfig:
+    """``draft``: a :class:`DraftHead` instance or a registered name
+    (``"ngram"`` | ``"linear"``).  ``chunk``: positions per speculation
+    round — 1 committed token plus ``chunk - 1`` draft proposals (the
+    paper-motivated sweet spot is 4–8)."""
+
+    draft: str | DraftHead = "ngram"
+    chunk: int = 4
+
+    def __post_init__(self):
+        if not 2 <= self.chunk <= 8:
+            raise ValueError(
+                f"speculation chunk must be in [2, 8], got {self.chunk}"
+            )
+
+
+def make_draft(spec: str | DraftHead, cfg) -> DraftHead:
+    """Resolve a draft spec (name or instance) against a ModelConfig."""
+    if isinstance(spec, DraftHead):
+        return spec
+    if spec == "ngram":
+        return NgramDraft()
+    if spec == "linear":
+        return LinearAttentionDraft(vocab=cfg.vocab)
+    raise ValueError(
+        f"unknown draft head {spec!r} (expected 'ngram', 'linear', or a "
+        "DraftHead instance)"
+    )

@@ -1,0 +1,161 @@
+"""Draft heads for speculative decoding.
+
+Draft heads run on the HOST, per request, between model calls: they only
+have to be cheap and deterministic — the verify step guarantees output
+correctness regardless of draft quality, so a head is judged purely by
+its accept rate.  The interface mirrors the engine's per-request
+lifecycle:
+
+- ``reset(req)`` at admission (a recycled slot never leaks state),
+- ``observe(req, token)`` for every token that enters the stream the
+  model actually sees (prompt tokens at admission, then each accepted
+  output token),
+- ``propose(req, n)`` -> exactly ``n`` draft tokens extending the
+  stream past its last token.
+
+``req`` is the engine's ``Request`` (``rid`` keys per-request state;
+``output`` is the emitted-so-far list).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class DraftHead:
+    """Base: a head that always proposes ``fill`` (zero accept rate in
+    practice — useful as the null baseline)."""
+
+    fill: int = 0
+
+    def reset(self, req) -> None:  # pragma: no cover - trivial
+        pass
+
+    def observe(self, req, token: int) -> None:  # pragma: no cover
+        pass
+
+    def propose(self, req, n: int) -> list[int]:
+        return [self.fill] * n
+
+
+class NgramDraft(DraftHead):
+    """Order-``n`` suffix matching over the request's own stream: propose
+    the token that followed the most recent earlier occurrence of the
+    current ``order - 1``-token context, falling back to shorter contexts
+    and finally to repeating the last token.  Zero parameters; strong on
+    repetitive continuations (code, lists, copied spans)."""
+
+    def __init__(self, order: int = 3):
+        if order < 2:
+            raise ValueError(f"ngram order must be >= 2, got {order}")
+        self.order = order
+        self._streams: dict[int, list[int]] = {}
+
+    def reset(self, req) -> None:
+        self._streams[req.rid] = []
+
+    def observe(self, req, token: int) -> None:
+        self._streams.setdefault(req.rid, []).append(int(token))
+
+    def _next(self, seq: list[int]) -> int:
+        for width in range(self.order - 1, 0, -1):
+            if len(seq) < width + 1:
+                continue
+            ctx = seq[-width:]
+            # most recent earlier occurrence wins
+            for i in range(len(seq) - width - 1, -1, -1):
+                if seq[i:i + width] == ctx:
+                    return seq[i + width]
+        return seq[-1] if seq else self.fill
+
+    def propose(self, req, n: int) -> list[int]:
+        seq = list(self._streams.get(req.rid, []))
+        out = []
+        for _ in range(n):
+            tok = self._next(seq)
+            out.append(tok)
+            seq.append(tok)
+        return out
+
+
+class LinearAttentionDraft(DraftHead):
+    """Tiny linear-attention recurrence ("Transformers are RNNs"-style)
+    with fixed random parameters: per request it maintains the O(1)
+    state ``(S, z)`` of a single elu+1 feature-map attention head over
+    tied random embeddings, and proposes by greedy rollout.  Pure numpy —
+    a few hundred FLOPs per token, no device round-trip, deterministic
+    for a given seed.  It exists to exercise a *stateful* draft head end
+    to end; accept rates on a real model are incidental."""
+
+    def __init__(self, vocab: int, d_model: int = 32, d_feat: int = 16,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        scale = 1.0 / np.sqrt(d_model)
+        self.embed = rng.normal(0, scale, (vocab, d_model)).astype(np.float32)
+        self.wq = rng.normal(0, scale, (d_model, d_feat)).astype(np.float32)
+        self.wk = rng.normal(0, scale, (d_model, d_feat)).astype(np.float32)
+        self.vocab = vocab
+        self.d_model = d_model
+        self.d_feat = d_feat
+        self._state: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    @staticmethod
+    def _phi(x: np.ndarray) -> np.ndarray:
+        # elu(x) + 1: positive feature map from the linear-attention paper
+        return np.where(x > 0, x + 1.0, np.exp(np.minimum(x, 0.0)))
+
+    def reset(self, req) -> None:
+        self._state[req.rid] = (
+            np.zeros((self.d_feat, self.d_model), np.float32),
+            np.zeros((self.d_feat,), np.float32),
+        )
+
+    def _ingest(self, S, z, tok: int):
+        e = self.embed[int(tok) % self.vocab]
+        fk = self._phi(e @ self.wk)
+        return S + np.outer(fk, e), z + fk
+
+    def observe(self, req, token: int) -> None:
+        if req.rid not in self._state:
+            self.reset(req)
+        S, z = self._state[req.rid]
+        self._state[req.rid] = self._ingest(S, z, token)
+
+    def _read(self, S, z, tok: int) -> int:
+        fq = self._phi(self.embed[int(tok) % self.vocab] @ self.wq)
+        o = (fq @ S) / (fq @ z + 1e-6)
+        return int(np.argmax(o @ self.embed.T))
+
+    def propose(self, req, n: int) -> list[int]:
+        S, z = self._state.get(req.rid, (None, None))
+        if S is None:
+            return [self.fill] * n
+        S, z = S.copy(), z.copy()
+        last = req.output[-1] if req.output else self.fill
+        out = []
+        for _ in range(n):
+            tok = self._read(S, z, last)
+            out.append(tok)
+            S, z = self._ingest(S, z, tok)
+            last = tok
+        return out
+
+
+class FixedDraft(DraftHead):
+    """Scripted draft for tests: ``scripts[rid]`` is the (claimed) full
+    output continuation of request ``rid``; ``propose`` serves the slice
+    starting at the request's current output length.  Feeding the true
+    greedy continuation gives a 100% accept oracle; an empty/garbage
+    script forces 0% accepts; corrupting one position forces a partial
+    accept — all three must produce identical final output."""
+
+    def __init__(self, scripts: dict[int, list[int]] | None = None,
+                 fill: int = 0):
+        self.scripts = {} if scripts is None else dict(scripts)
+        self.fill = fill
+
+    def propose(self, req, n: int) -> list[int]:
+        s = self.scripts.get(req.rid, [])
+        pos = len(req.output)
+        out = [int(t) for t in s[pos:pos + n]]
+        return out + [self.fill] * (n - len(out))

@@ -1,0 +1,105 @@
+"""The jitted speculative verify+commit step.
+
+One speculation round for a batch of decode slots:
+
+1. **Verify** — one chunked-prefill model call over
+   ``chunk_tokens = [last_emitted, draft_1, ..., draft_{P-1}]`` per slot
+   (ZETA's bulk prefix-top-k search scores all P positions at once); its
+   cache output is DISCARDED — it only supplies per-position logits.
+2. **Emit** — each position ``j`` is sampled exactly as ``P`` sequential
+   decode steps would have: sample step ``base + j``, token history
+   advanced with the chunk tokens.  Because ``repro.sample`` is a pure
+   function of ``(base key, request seed, step)``, this holds for greedy
+   AND sampled requests.
+3. **Accept** — draft ``j+1`` is accepted iff every earlier draft
+   matched what the model emitted (``n_emit = 1 + leading matches``).
+   On a mismatch the model's own token at the first divergent position
+   is still emitted, so every round yields >= 1 token per active slot.
+4. **Commit** — a second prefill call with the token mask cut at
+   ``n_emit`` writes exactly the accepted prefix into the cache.
+
+``room`` (host-computed ``max_len - cache length``) clips both the
+verify mask and acceptance so near-capacity slots never write or emit
+past their cache rows.  Tokens emitted past a device-detected finish
+(EOS/stop) are dropped by the engine's host loop — the slot is recycled
+and its cache rows reset at next admission, so over-commit is harmless.
+
+Output parity is the contract: for ANY draft token pattern, the emitted
+token stream equals non-speculative decoding token for token (pinned by
+``tests/test_speculative.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import backend as attention_backend
+from repro import sample
+from repro.models import api
+from repro.nn.config import ModelConfig
+from repro.nn.module import Precision
+
+
+def make_spec_step(cfg: ModelConfig, prec: Precision,
+                   chunk: int) -> Callable:
+    """Build the speculation round step (``chunk`` = P positions)::
+
+        spec_step(params, cache, chunk_tokens (B,P) int32,
+                  slot_params: SlotParams, history (B,H) int32, rng,
+                  spec_mask (B,) bool, room (B,) int32)
+          -> (emitted (B,P) int32, n_emit (B,) int32,
+              finished (B,P) bool, new_cache)
+
+    ``chunk_tokens[:, 0]`` is each slot's last emitted token (the one a
+    plain decode step would feed); columns 1.. are draft proposals.
+    Rows with ``spec_mask`` False leave their cache untouched and return
+    garbage the engine ignores.  ``emitted[:, :n_emit]`` are the round's
+    output tokens with matching ``finished`` flags.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    resolved = attention_backend.resolve_name(cfg)
+
+    def spec_step(params, cache, chunk_tokens: jax.Array,
+                  slot_params: sample.SlotParams, history: jax.Array,
+                  rng: jax.Array, spec_mask: jax.Array, room: jax.Array):
+        spec_step.traces += 1
+        B, P = chunk_tokens.shape
+        pj = jnp.arange(P, dtype=jnp.int32)
+        in_room = pj[None, :] < room[:, None]            # (B, P)
+        verify_mask = spec_mask[:, None] & in_room
+        logits, _ = api.prefill(
+            params, cache, chunk_tokens, cfg, prec, token_mask=verify_mask
+        )
+        base = slot_params.step
+        h = history
+        emitted, finished = [], []
+        for j in range(P):
+            # position j emits output index base+j: same sample step and
+            # history a sequential decode step j would see
+            sp_j = slot_params.replace(step=base + j)
+            tok_j = sample.sample_logits(logits[:, j], sp_j, rng, h)
+            emitted.append(tok_j)
+            finished.append(sample.check_finished(sp_j, h, tok_j))
+            if j + 1 < P:
+                h = jnp.concatenate(
+                    [h[:, 1:], chunk_tokens[:, j + 1:j + 2]], axis=1
+                )
+        emitted = jnp.stack(emitted, axis=1)             # (B, P)
+        finished = jnp.stack(finished, axis=1)           # (B, P)
+        match = (emitted[:, :-1] == chunk_tokens[:, 1:]) & in_room[:, 1:]
+        n_emit = 1 + jnp.cumprod(
+            match.astype(jnp.int32), axis=1
+        ).sum(axis=1).astype(jnp.int32)                  # (B,) in [1, P]
+        commit_mask = spec_mask[:, None] & (pj[None, :] < n_emit[:, None])
+        _, new_cache = api.prefill(
+            params, cache, chunk_tokens, cfg, prec, token_mask=commit_mask
+        )
+        return emitted, n_emit, finished, new_cache
+
+    spec_step.traces = 0
+    spec_step.attention_backend = resolved
+    return spec_step

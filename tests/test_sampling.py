@@ -13,10 +13,7 @@ Pins the request-level generation contract:
 4. ONE jitted step for heterogeneous batches — greedy, temperature/
    top-p, min-p, stop-sequence requests in the same tick with no retrace
    (trace-count assertion), and a heterogeneous batch equals per-request
-   sequential runs token-for-token;
-5. the deprecated greedy shims (`ServeEngine(greedy=...)`,
-   `make_serve_step(cfg, prec, greedy=...)`) match the new path
-   token-for-token.
+   sequential runs token-for-token.
 """
 
 import jax
@@ -305,34 +302,25 @@ def test_generate_facade_and_streaming(model):
     assert [t for rid, t in eng.stream()] == res[0].tokens
 
 
-def test_greedy_shim_parity(model):
-    """Deprecated greedy paths == new GenerationParams path,
-    token-for-token."""
+def test_max_new_only_request_defaults_greedy(model):
+    """A gen-less Request (max_new-only spelling) inherits the engine's
+    default GenerationParams — greedy, so it matches an explicit
+    temperature-0 request token-for-token.  (The build-time ``greedy=``
+    shims on the step builders and engine are gone.)"""
     cfg, params = model
     new, _ = _run(params, cfg,
                   [Request(rid=0, prompt=[1, 2, 3],
                            gen=GenerationParams(max_new=6))], slots=1)
-    with pytest.warns(DeprecationWarning):
-        eng = ServeEngine(params, cfg, PREC, batch_slots=1, max_len=MAXLEN,
-                          greedy=True, prefill_chunk=4)
+    eng = ServeEngine(params, cfg, PREC, batch_slots=1, max_len=MAXLEN,
+                      prefill_chunk=4)
     eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=6))
     old = eng.run_to_completion()
     assert old[0].output == new[0].output
-
-    # old step-builder signature: token-by-token greedy decode loop
-    with pytest.warns(DeprecationWarning):
-        legacy = jax.jit(make_serve_step(cfg, PREC, greedy=True))
-    cache = api.cache_init(cfg, 1, MAXLEN, jnp.float32)
-    rng = jax.random.PRNGKey(0)
-    toks = []
-    cur = jnp.asarray([[1]], jnp.int32)
-    for t in [2, 3]:  # feed prompt
-        _, _, cache = legacy(params, cache, cur, rng)
-        cur = jnp.asarray([[t]], jnp.int32)
-    for _ in range(6):
-        cur, _, cache = legacy(params, cache, cur, rng)
-        toks.append(int(cur[0, 0]))
-    assert toks == new[0].output
+    with pytest.raises(TypeError):
+        ServeEngine(params, cfg, PREC, batch_slots=1, max_len=MAXLEN,
+                    greedy=True)
+    with pytest.raises(TypeError):
+        make_serve_step(cfg, PREC, greedy=True)
 
 
 def test_generation_params_validation():

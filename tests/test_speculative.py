@@ -1,0 +1,177 @@
+"""Speculative decoding (repro.spec): parity is the contract.
+
+For ANY draft pattern — oracle (100% accept), garbage (0%), corrupted
+(partial), real heads (ngram / linear) — speculative output must equal
+non-speculative output token for token, greedy AND sampled, including
+EOS / stop-sequence / max_new finishes landing mid-chunk.  Greedy parity
+is pinned across every registered backend that supports the config
+(acceptance criterion), and the round accounting (2 model calls emit up
+to ``chunk`` tokens) is pinned so the speedup is structural, not
+incidental.
+"""
+
+import jax
+import pytest
+
+from repro.backend import registry
+from repro.models import api
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.nn.module import F32
+from repro.sample import GenerationParams
+from repro.serve.engine import Request, ServeEngine
+from repro.spec import (
+    FixedDraft,
+    LinearAttentionDraft,
+    NgramDraft,
+    SpeculationConfig,
+)
+
+PREC = F32
+MAXLEN = 32
+
+
+def _cfg(backend=None):
+    return ModelConfig(name="z", vocab=64, d_model=32, n_layers=2,
+                       n_heads=4, n_kv_heads=2, d_ff=64,
+                       zeta=ZetaConfig(d_k=3, k=4, num_chunks=4,
+                                       backend=backend))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _requests(gen=None):
+    gen = gen or GenerationParams()
+
+    def mk(rid, prompt, max_new):
+        return Request(rid=rid, prompt=prompt,
+                       gen=gen.replace(max_new=max_new))
+
+    return [mk(0, [1, 2, 3, 4, 5], 6), mk(1, [7, 8], 3),
+            mk(2, [9, 10, 11, 12, 13, 14, 15], 5), mk(3, [4], 4),
+            mk(4, [5, 6, 7], 2)]
+
+
+def _run(params, cfg, reqs, speculation=None, slots=3):
+    eng = ServeEngine(params, cfg, PREC, batch_slots=slots, max_len=MAXLEN,
+                      prefill_chunk=4, speculation=speculation,
+                      max_stop_len=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    return {r.rid: (tuple(r.output), r.finish_reason)
+            for r in eng.done}, eng
+
+
+def _oracle(base):
+    """FixedDraft scripted with the true continuations -> max accepts."""
+    return FixedDraft({rid: list(out) for rid, (out, _) in base.items()})
+
+
+def test_greedy_parity_any_accept_pattern(model):
+    cfg, params = model
+    base, beng = _run(params, cfg, _requests())
+    drafts = {
+        "oracle": _oracle(base),
+        "garbage": FixedDraft({}, fill=63),
+        "corrupt": FixedDraft({rid: [out[0], 63, *out[2:]]
+                               for rid, (out, _) in base.items()}),
+        "ngram": NgramDraft(),
+        "linear": LinearAttentionDraft(vocab=cfg.vocab),
+    }
+    for name, draft in drafts.items():
+        got, eng = _run(params, cfg, _requests(),
+                        SpeculationConfig(draft=draft, chunk=4))
+        assert got == base, f"draft={name}"
+        st = eng.stats()
+        assert st["decode_calls"] == 0 and st["spec_rounds"] > 0
+        if name == "oracle":
+            # full-accept drafts amortise: 2 calls emit up to `chunk`
+            # tokens, so the oracle takes fewer model calls than plain
+            # one-token decode
+            assert st["spec_accepted"] > 0
+            assert st["model_calls"] < beng.stats()["model_calls"]
+        if name == "garbage":
+            assert st["spec_accepted"] == 0
+    # the minimum chunk (1 draft per round) holds parity too
+    got, _ = _run(params, cfg, _requests(),
+                  SpeculationConfig(draft=_oracle(base), chunk=2))
+    assert got == base
+
+
+def test_sampled_parity(model):
+    """Per-slot streams are (seed, step)-pure, so speculation preserves
+    SAMPLED output too — for any accept pattern."""
+    cfg, params = model
+    gen = GenerationParams(temperature=0.8, top_p=0.9, seed=5)
+    base, _ = _run(params, cfg, _requests(gen))
+    for draft in (_oracle(base), FixedDraft({}, fill=63)):
+        got, _ = _run(params, cfg, _requests(gen),
+                      SpeculationConfig(draft=draft, chunk=4))
+        assert got == base
+
+
+def test_finish_mid_chunk(model):
+    """EOS and stop-sequence detection inside an accepted chunk: the
+    finish must land on the same token as sequential decode, and drafted
+    tokens past it must be dropped."""
+    cfg, params = model
+    gen = GenerationParams(eos_ids=(36,), stop=((22, 54),))
+    base, _ = _run(params, cfg, _requests(gen))
+    assert {r[1] for r in base.values()} >= {"eos", "stop"}  # both fire
+    over = FixedDraft({rid: list(out) + [63] * 4
+                       for rid, (out, _) in base.items()})
+    for draft in (over, FixedDraft({}, fill=63)):
+        got, _ = _run(params, cfg, _requests(gen),
+                      SpeculationConfig(draft=draft, chunk=4))
+        assert got == base
+
+
+def test_parity_across_backends(model):
+    """Acceptance criterion: speculative greedy == non-speculative greedy
+    on every registered backend that supports the config."""
+    _, params = model
+    req = registry.AttentionRequest(score="cauchy", dtype="float32")
+
+    def reqs():
+        return [Request(rid=0, prompt=[1, 2, 3],
+                        gen=GenerationParams(max_new=5)),
+                Request(rid=1, prompt=[7, 8, 9, 10],
+                        gen=GenerationParams(max_new=4))]
+
+    for name in registry.list_backends():
+        if not registry.get_backend(name).supports(req):
+            continue
+        cfg = _cfg(backend=name)
+        base, _ = _run(params, cfg, reqs(), slots=2)
+        got, _ = _run(params, cfg, reqs(), slots=2,
+                      speculation=SpeculationConfig(draft=_oracle(base),
+                                                    chunk=4))
+        assert got == base, f"backend={name}"
+
+
+def test_speculation_knob_validation(model):
+    cfg, params = model
+    from repro.spec import make_draft
+    with pytest.raises(ValueError, match="chunk"):
+        SpeculationConfig(chunk=1)
+    with pytest.raises(ValueError, match="draft"):
+        make_draft("nope", cfg)
+    with pytest.raises(ValueError, match="wave"):
+        ServeEngine(params, cfg, PREC, batch_slots=1, max_len=MAXLEN,
+                    scheduler="wave", speculation=SpeculationConfig())
+
+
+def test_generate_speculation_knob(model):
+    """api.generate(speculation=...) round-trips the engine knob."""
+    cfg, params = model
+    from repro.api import generate
+    prompts = [[1, 2, 3], [7, 8, 9, 10]]
+    gens = [GenerationParams(max_new=5), GenerationParams(max_new=4)]
+    base = generate(params, cfg, prompts, gens, max_len=MAXLEN)
+    spec = generate(params, cfg, prompts, gens, max_len=MAXLEN,
+                    speculation=SpeculationConfig(draft="ngram", chunk=4))
+    assert [r.tokens for r in spec] == [r.tokens for r in base]

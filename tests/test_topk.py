@@ -140,6 +140,45 @@ def test_searchsorted_matches_numpy_oracle(seed):
     assert (want == got).all()
 
 
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_sorted_insert_many_matches_sequential(seed):
+    """The batched multi-insert == a loop of sorted_insert, bit for bit —
+    INCLUDING tie order (codes drawn from a tiny space so collisions are
+    the common case: later inserts of an equal code land leftmost), row
+    overflow past Nmax, per-row counts, and frozen (masked) rows."""
+    rng = np.random.default_rng(seed)
+    B, nmax = 3, 12
+    P = int(rng.integers(1, 7))
+    live = rng.integers(0, nmax, size=B)
+    skz = np.full((B, nmax), int(topk.SENTINEL), np.int32)
+    spos = np.zeros((B, nmax), np.int32)
+    for b in range(B):
+        skz[b, : live[b]] = np.sort(rng.integers(0, 8, size=live[b]))
+        spos[b, : live[b]] = rng.permutation(live[b])
+    new_kz = rng.integers(0, 8, size=(B, P)).astype(np.int32)
+    new_pos = rng.integers(0, 64, size=(B, P)).astype(np.int32)
+    count = rng.integers(0, P + 1, size=B).astype(np.int32)
+    mask = rng.random(B) < 0.7
+
+    want_kz, want_pos = jnp.asarray(skz), jnp.asarray(spos)
+    for p in range(P):
+        step = jnp.asarray((p < count) & mask)
+        want_kz, want_pos = topk.sorted_insert(
+            want_kz, want_pos,
+            jnp.asarray(live + p, jnp.int32),    # length arg (unused)
+            jnp.asarray(new_kz[:, p]), jnp.asarray(new_pos[:, p]),
+            update_mask=step,
+        )
+    got_kz, got_pos = topk.sorted_insert_many(
+        jnp.asarray(skz), jnp.asarray(spos),
+        jnp.asarray(new_kz), jnp.asarray(new_pos),
+        jnp.asarray(count), update_mask=jnp.asarray(mask),
+    )
+    np.testing.assert_array_equal(np.asarray(got_kz), np.asarray(want_kz))
+    np.testing.assert_array_equal(np.asarray(got_pos), np.asarray(want_pos))
+
+
 # ------------------------------------------- per-slot / bulk primitives
 
 
