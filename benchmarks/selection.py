@@ -184,6 +184,40 @@ def _scoring_step(scorer, idx, valid):
     return jax.jit(jax.value_and_grad(step, argnums=(0, 1, 2, 3)))
 
 
+def _scoring_fwd_q(scorer, idx, valid):
+    """Forward-only step for the int8 cache tier (inference-only: the
+    quantized stage deliberately has no VJP)."""
+    def step(q, kt_q, kt_s, vt_q, vt_s, gamma2):
+        out = scorer(q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2)
+        return jnp.sum(out * out)
+    return jax.jit(step)
+
+
+def _max_admitted_n(dtype, k, dk=3, dv=64):
+    """Largest sweep N (token-layout Nkv = 2N, history-mean fold included)
+    whose K/V block the fused scorer keeps VMEM-resident at this cache
+    dtype.  Pure shape arithmetic via the registry's residency guard — no
+    allocation (ShapeDtypeStructs carry shape+itemsize)."""
+    from repro.backend.backends import fits_fused_residency
+
+    extra = 8 if jnp.dtype(dtype) == jnp.int8 else 0
+
+    def fits(n):
+        nkv = 2 * n
+        kt = jax.ShapeDtypeStruct((1, nkv, dk), dtype)
+        vt = jax.ShapeDtypeStruct((1, nkv, dv), dtype)
+        return fits_fused_residency(kt, vt, k + 1, extra_row_bytes=extra)
+
+    lo, hi = 1, 1 << 26
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
 def _measure(fn, args, iters):
     lowered = fn.lower(*args)
     compiled = lowered.compile()
@@ -201,15 +235,22 @@ def _measure(fn, args, iters):
 
 
 def run_fused(smoke: bool = False, out_path: str | None = None):
-    """Gathered-vs-fused sweep over (N, k): fwd+bwd wall time and compiled
-    peak temp memory.  Yields CSV rows; writes BENCH_fused_scoring.json."""
+    """Gathered-vs-fused sweep over (N, k) x cache dtype: fwd+bwd wall
+    time and compiled peak temp memory for the f32 stages, forward-only
+    for the int8 tier (inference-only), plus the analytic residency
+    envelope per dtype — the largest N each dtype keeps fused.  Yields
+    CSV rows; writes BENCH_fused_scoring.json."""
+    from repro import state
     from repro.backend import registry
+    from repro.backend.backends import fits_fused_residency
 
     iters = 2 if smoke else 5
     sweep = ([(1024, 16), (4096, 16)] if smoke else
              [(1024, 16), (2048, 32), (4096, 32), (8192, 32)])
     gathered = registry.get_backend("xla").gathered_idx
     fused = registry.get_backend("pallas_fused").gathered_idx
+    gathered_q = registry.get_backend("xla").gathered_idx_q
+    fused_q = registry.get_backend("pallas_fused").gathered_idx_q
     rows = []
     for n, k in sweep:
         q, kt, vt, idx, valid, gamma2 = _scoring_inputs(n, k)
@@ -220,17 +261,51 @@ def run_fused(smoke: bool = False, out_path: str | None = None):
             yield (f"fused_scoring_{name}_N{n}_k{k},"
                    f"{1e6 * entry[name]['wall_s']:.0f},"
                    f"temp_bytes={entry[name]['temp_bytes']}")
+        kt_q, kt_s = state.quantize_rows(kt)
+        vt_q, vt_s = state.quantize_rows(vt)
+        qargs = (q, kt_q, kt_s[..., 0], vt_q, vt_s[..., 0], gamma2)
+        for name, scorer in (("gathered_q", gathered_q),
+                             ("fused_q", fused_q)):
+            fn = _scoring_fwd_q(scorer, idx, valid)
+            entry[name] = _measure(fn, qargs, iters)
+            yield (f"fused_scoring_{name}_int8_N{n}_k{k},"
+                   f"{1e6 * entry[name]['wall_s']:.0f},"
+                   f"temp_bytes={entry[name]['temp_bytes']}")
+        entry["fused_admits"] = {
+            "float32": bool(fits_fused_residency(kt, vt, k + 1)),
+            "int8": bool(fits_fused_residency(kt_q, vt_q, k + 1,
+                                              extra_row_bytes=8)),
+        }
         gb, fb = entry["gathered"]["temp_bytes"], entry["fused"]["temp_bytes"]
         entry["temp_ratio"] = (gb / fb) if fb > 0 else None
         rows.append(entry)
+    # residency envelope: the widened-window claim, independent of sweep
+    # size — largest N whose K/V block stays VMEM-resident per dtype.
+    envelope = {}
+    for kk_ in sorted({k for _, k in sweep}):
+        f32_max = _max_admitted_n(jnp.float32, kk_)
+        int8_max = _max_admitted_n(jnp.int8, kk_)
+        envelope[f"k{kk_}"] = {
+            "float32_max_n": f32_max,
+            "int8_max_n": int8_max,
+            "ratio": round(int8_max / max(f32_max, 1), 3),
+        }
+        yield (f"fused_residency_envelope_k{kk_},0,"
+               f"f32_max_n={f32_max};int8_max_n={int8_max};"
+               f"ratio={int8_max / max(f32_max, 1):.2f}")
     results = {
         "sweep": rows,
+        "residency_envelope": envelope,
         "meta": {
             "iters": iters,
             "step": "jitted fwd+bwd of the scoring stage "
-                    "(grads wrt q, K, V, gamma2)",
+                    "(grads wrt q, K, V, gamma2); int8 rows are "
+                    "forward-only (the quantized tier has no VJP)",
             "backend_gathered": "xla (materializing take_along_axis)",
             "backend_fused": "pallas_fused (in-kernel index gather)",
+            "backend_gathered_q": "xla (dequantize-at-gather, int8 cache)",
+            "backend_fused_q": "pallas_fused (in-kernel dequant-on-gather,"
+                               " int8 cache)",
             "note": "off-TPU the fused kernel runs in Pallas interpret "
                     "mode; wall_s is only meaningful compiled, "
                     "temp_bytes is device-independent",

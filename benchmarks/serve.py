@@ -5,7 +5,9 @@ Reports tokens/s, time-to-first-token (wall seconds and engine ticks), and
 slot occupancy for both schedulers on the same request trace; the
 ``sampled`` variant re-runs the continuous trace with every request on the
 full device-side sampling pipeline (temperature / top-p / repetition
-penalty / per-request seeds) to price the sampler against argmax.  The
+penalty / per-request seeds) to price the sampler against argmax.  A
+cache-dtype axis (``int8_cache`` / ``int8_decode_fused``) replays the
+continuous trace through the quantized K/V tier (§2c).  The
 machine-readable summary goes to ``BENCH_serve.json`` (CI uploads it as a
 build artifact).
 
@@ -71,10 +73,13 @@ def _trace(n_requests: int, seed: int = 0,
 
 
 def _run(params, cfg, scheduler: str, n_requests: int,
-         sampled: bool = False, speculation=None) -> dict:
+         sampled: bool = False, speculation=None,
+         cache_dtype=None) -> dict:
     eng = ServeEngine(params, cfg, F32, batch_slots=SLOTS, max_len=MAX_LEN,
                       scheduler=scheduler, prefill_chunk=PREFILL_CHUNK,
-                      speculation=speculation)
+                      speculation=speculation,
+                      **({} if cache_dtype is None
+                         else {"cache_dtype": cache_dtype}))
     # warm the jit caches (prefill / masked decode / slot reset) so the
     # timed trace measures steady-state serving, not compilation
     eng.submit(Request(rid=-1, prompt=[1, 2, 3], max_new=2))
@@ -132,21 +137,30 @@ def run(smoke: bool = False, out_path: str | None = None):
     # sampler pipeline — prices the device-side sampler against argmax;
     # "decode_fused" pins the single-kernel decode step (interpret mode
     # off-TPU, so only meaningful on benchmark hardware); "speculative"
-    # = continuous + ngram draft-verify rounds
+    # = continuous + ngram draft-verify rounds; "int8_cache" /
+    # "int8_decode_fused" replay the continuous trace through the
+    # quantized cache tier (dtype axis — halved decode HBM traffic, §2c)
+    import jax.numpy as jnp
+
     variants = [
-        ("wave", "wave", False, None, None),
-        ("continuous", "continuous", False, None, None),
-        ("sampled", "continuous", True, None, None),
-        ("decode_fused", "continuous", False, "pallas_fused", None),
+        ("wave", "wave", False, None, None, None),
+        ("continuous", "continuous", False, None, None, None),
+        ("sampled", "continuous", True, None, None, None),
+        ("decode_fused", "continuous", False, "pallas_fused", None, None),
         ("speculative", "continuous", False, None,
-         SpeculationConfig(draft="ngram", chunk=4)),
+         SpeculationConfig(draft="ngram", chunk=4), None),
+        ("int8_cache", "continuous", False, None, None, jnp.int8),
+        ("int8_decode_fused", "continuous", False, "pallas_fused", None,
+         jnp.int8),
     ]
-    for name, sched, sampled, backend, spec in variants:
+    for name, sched, sampled, backend, spec, cache_dtype in variants:
         vcfg = cfg if backend is None else cfg.replace(
             zeta=cfg.zeta.replace(backend=backend)
         )
         s = _run(params, vcfg, sched, n_requests, sampled=sampled,
-                 speculation=spec)
+                 speculation=spec, cache_dtype=cache_dtype)
+        if cache_dtype is not None:
+            s["cache_dtype"] = jnp.dtype(cache_dtype).name
         results[name] = s
         yield (f"serve_{name}_tokens_per_s,"
                f"{1e6 / max(s['tokens_per_s'], 1e-9):.0f},"

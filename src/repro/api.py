@@ -58,6 +58,7 @@ def generate(params, cfg: ModelConfig,
              prefill_chunk: int = 8, scheduler: str = "continuous",
              speculation: SpeculationConfig | None = None,
              bos_id: int | None = None, history_len: int = 32,
+             cache_dtype=None,
              on_token: Callable[[int, int], None] | None = None,
              max_ticks: int = 10_000) -> list[GenerationResult]:
     """Generate completions for ``prompts`` (token-id lists).
@@ -71,7 +72,10 @@ def generate(params, cfg: ModelConfig,
     draft-verify decoding (:class:`repro.spec.SpeculationConfig`) —
     output is token-identical, each round can emit several tokens.
     ``on_token(rid, token)`` streams tokens as they are emitted.
-    Results come back in prompt order.
+    ``cache_dtype`` selects the K/V cache tier (default f32);
+    ``jnp.int8`` stores ZETA coords/values row-quantized with in-kernel
+    dequant-on-gather (docs/ARCHITECTURE.md §2c) — roughly 4x less cache
+    HBM, compute still in ``prec``.  Results come back in prompt order.
     """
     prompts = [list(p) for p in prompts]
     if not prompts:
@@ -102,6 +106,7 @@ def generate(params, cfg: ModelConfig,
         max_stops=max([len(g.stop) for g in gens], default=1) or 1,
         max_stop_len=max_stop_len,
         history_len=max(history_len, max_stop_len),
+        **({} if cache_dtype is None else {"cache_dtype": cache_dtype}),
     )
     for rid, (p, g) in enumerate(zip(prompts, gens)):
         engine.submit(Request(rid=rid, prompt=p, gen=g))

@@ -6,6 +6,10 @@ Public surface:
   gathered_attention(...)               — dispatch only the scoring stage
   gathered_idx_attention(...)           — index-gather scoring stage
                                           (fused gather; XLA fallback)
+  gathered_idx_q_attention(...)         — int8-cache scoring stage
+                                          (dequant-on-gather; §2c)
+  select_decode_backend(...)            — fused decode stage resolution
+                                          (quantized=True for decode_q)
   register_backend(name, fn, caps)      — add a backend
   list_backends() / get_backend(name)   — introspection
   available_backends(request)           — capability-filtered, ranked
@@ -27,14 +31,21 @@ from repro.backend.registry import (  # noqa: F401
     default_interpret,
     gathered_attention,
     gathered_idx_attention,
+    gathered_idx_q_attention,
     get_backend,
     list_backends,
     register_backend,
     resolve_name,
     select_backend,
+    select_decode_backend,
     support_matrix,
     support_matrix_markdown,
     unregister_backend,
 )
 from repro.backend import backends  # noqa: F401  (stock registrations)
-from repro.backend.parity import parity_check, parity_rows  # noqa: F401
+from repro.backend.parity import (  # noqa: F401
+    parity_check,
+    parity_rows,
+    quantized_parity_check,
+    quantized_parity_rows,
+)

@@ -25,6 +25,7 @@ New backends (sharded, sequence-parallel, ...) are single
 from __future__ import annotations
 
 import math
+import os
 
 import jax.numpy as jnp
 
@@ -40,7 +41,7 @@ from repro.core.attention import (
     zeta_attention,
     zeta_attention_noncausal,
 )
-from repro.core.selection import gather_tokens
+from repro.core.selection import gather_tokens, gather_tokens_quant
 
 _CAUCHY_ONLY = ("cauchy",)
 
@@ -51,36 +52,63 @@ _CAUCHY_ONLY = ("cauchy",)
 # overflowing VMEM.  Sized so the paper's flagship train shape STAYS
 # fused: history_mean doubles the rows, so f32 N=8192 / d_k=3 / d_v=128 /
 # K=33 is ≈ 8.2 MiB resident + ≈ 4.6 MiB tile ≈ 12.8 MiB, inside a v5e
-# core's ~16 MiB VMEM (docs/ARCHITECTURE.md §2a has the math).
-_FUSED_VMEM_BUDGET = 14 * 2**20  # bytes
+# core's ~16 MiB VMEM (docs/ARCHITECTURE.md §2a has the math).  The
+# int8 tier stores the same rows at 1 B/elem + 8 B/row of f32 scales,
+# widening the admitted (Nkv, K) envelope ~3.5x (§2c).
+_DEFAULT_FUSED_VMEM_BUDGET = 14 * 2**20  # bytes
+_FUSED_VMEM_BUDGET = _DEFAULT_FUSED_VMEM_BUDGET  # back-compat alias
+
+
+def fused_vmem_budget(override: int | None = None) -> int:
+    """Resolve the residency-guard budget: explicit ``override`` (e.g.
+    ``ZetaConfig.fused_vmem_budget``) > ``REPRO_FUSED_VMEM_BUDGET`` env
+    var > the built-in v5e default.  Non-v5e parts and interpret-mode CI
+    tune the guard here instead of editing source."""
+    if override is not None:
+        return int(override)
+    env = os.environ.get("REPRO_FUSED_VMEM_BUDGET")
+    if env:
+        return int(env)
+    return _DEFAULT_FUSED_VMEM_BUDGET
 
 
 def fits_fused_residency(kt, vt, kk: int = 0,
-                         block_n: int | None = None) -> bool:
+                         block_n: int | None = None, *,
+                         extra_row_bytes: int = 0,
+                         budget: int | None = None) -> bool:
     """True iff the fused kernel's per-grid-step VMEM — the resident
     (Nkv, d_k) + (Nkv, d_v) KV-head block plus the (block_n, K)-scaled
-    query-tile buffers (f32 compute) — fits the budget."""
+    query-tile buffers (f32 compute) — fits the budget.  Itemsize-aware:
+    int8 payloads charge 1 B/elem, so shapes f32 spills to the staged
+    path stay fused.  ``extra_row_bytes`` charges per-Nkv-row siblings
+    (8 for the two f32 scale columns of the quantized tier); the tile
+    term is always f32 — dequant happens at gather, compute stays f32."""
     from repro.kernels.cauchy_topk import DEFAULT_BLOCK_N
 
     nkv, dk = kt.shape[-2:]
     dv = vt.shape[-1]
-    resident = nkv * (dk * kt.dtype.itemsize + dv * vt.dtype.itemsize)
+    resident = nkv * (dk * kt.dtype.itemsize + dv * vt.dtype.itemsize
+                      + extra_row_bytes)
     bn = block_n or DEFAULT_BLOCK_N
     tile = bn * (kk * (dk + dv + 2) + dk + dv) * 4
-    return resident + tile <= _FUSED_VMEM_BUDGET
+    return resident + tile <= fused_vmem_budget(budget)
 
 
 def fits_decode_residency(nmax: int, dk: int, dv: int, itemsize: int,
-                          g: int, kk: int) -> bool:
+                          g: int, kk: int, *, scale_bytes: int = 0,
+                          budget: int | None = None) -> bool:
     """True iff the fused decode kernel's per-grid-step VMEM — ONE cache
     row's resident (Nmax, d_k) + (Nmax, d_v) K/V, the four (Nmax,) int32
     sorted rows (in + out), and the (G, K, d) candidate tile — fits the
     shared budget.  f32 Nmax=8192, d_k=3, d_v=128, G=8, K=37 is ≈ 4.2 MiB
     + 128 KiB sorted rows + ~45 KiB tile: decode stays fused far past the
-    train kernel's envelope because only one row is ever resident."""
-    resident = nmax * (dk + dv) * itemsize + 4 * nmax * 4
+    train kernel's envelope because only one row is ever resident.
+    ``itemsize`` prices the K/V payload (1 for the int8 tier) and
+    ``scale_bytes`` the per-row f32 scale siblings (8 when quantized)."""
+    resident = (nmax * ((dk + dv) * itemsize + scale_bytes)
+                + 4 * nmax * 4)
     tile = g * kk * (dk + dv + 2) * 4
-    return resident + tile <= _FUSED_VMEM_BUDGET
+    return resident + tile <= fused_vmem_budget(budget)
 
 
 def _decode_pallas_fused(q, qz, kt, vt, skz, spos, searchable, pos,
@@ -93,13 +121,41 @@ def _decode_pallas_fused(q, qz, kt, vt, skz, spos, searchable, pos,
     ``fits_decode_residency`` first (registry.select_decode_backend docs
     the split)."""
     if score != "cauchy":
-        raise NotImplementedError(
+        # unreachable through the registry: pallas_fused declares
+        # scores=("cauchy",) and select_decode_backend filters on it —
+        # only a direct call with an unsupported score lands here
+        raise ValueError(
             f"pallas_fused decode stage supports cauchy only, got {score!r}"
+            " — route selection through registry.select_decode_backend,"
+            " which capability-gates on Capabilities.scores"
         )
     from repro.kernels.decode_fused import cauchy_decode_fused
 
     return cauchy_decode_fused(
         q, qz, kt, vt, skz, spos, searchable, pos,
+        km, vm, ins_kz, ins_pos, ins_mask, gamma2,
+        k=k, window=window, chunk=chunk,
+    )
+
+
+def _decode_q_pallas_fused(q, qz, kt_q, kt_s, vt_q, vt_s, skz, spos,
+                           searchable, pos, km, vm, ins_kz, ins_pos,
+                           ins_mask, gamma2, *, k: int, window: int = 0,
+                           chunk: int = 1, score: str = "cauchy"):
+    """Quantized fused decode stage: same single-invocation pipeline as
+    ``_decode_pallas_fused`` but the resident K/V block is int8 with
+    per-row f32 scales; ONLY the gathered candidate rows are dequantized
+    in-kernel (mean rows arrive pre-dequantized f32)."""
+    if score != "cauchy":
+        raise ValueError(
+            f"pallas_fused decode_q stage supports cauchy only, got "
+            f"{score!r} — route selection through "
+            "registry.select_decode_backend"
+        )
+    from repro.kernels.decode_fused import cauchy_decode_fused_q
+
+    return cauchy_decode_fused_q(
+        q, qz, kt_q, kt_s, vt_q, vt_s, skz, spos, searchable, pos,
         km, vm, ins_kz, ins_pos, ins_mask, gamma2,
         k=k, window=window, chunk=chunk,
     )
@@ -233,6 +289,76 @@ def _gathered_idx_pallas_fused(q, kt, vt, idx, valid, gamma2, *,
     return out.reshape(lead + (g_, nq, dv))
 
 
+# --------------------------------------------------------- gathered_idx_q
+# Quantized-cache index-gather scorers: caches arrive as int8 payloads +
+# per-row f32 scales; only the K gathered candidate rows are ever
+# dequantized (distances / weights / outputs stay f32).  Inference-only:
+# no VJP — the quantized tier is a decode/prefill cache format, training
+# reads the f32 activations directly.
+
+
+def _gathered_idx_q_reference(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                              gamma2, *, score: str = "cauchy"):
+    """Oracle quantized scorer: dequantize-at-gather + reference scorer."""
+    k_sel, v_sel = gather_tokens_quant(kt_q, kt_s, vt_q, vt_s, idx,
+                                       dtype=q.dtype)
+    return _gathered_reference(q, k_sel, v_sel, valid, gamma2, score=score)
+
+
+def _gathered_idx_q_xla(q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2, *,
+                        score: str = "cauchy"):
+    """Pure-XLA quantized scorer: trailing-merged gather of int8 rows +
+    their scales, dequant on the gathered (…, Nq, K, d) block only, then
+    the bf16-cotangent-pinned gathered scorer."""
+    k_sel, v_sel = gather_tokens_quant(kt_q, kt_s, vt_q, vt_s, idx,
+                                       dtype=q.dtype)
+    return score_gathered_xla(q, k_sel, v_sel, valid, gamma2, score=score)
+
+
+def _gathered_idx_q_pallas_fused(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                                 gamma2, *, score: str = "cauchy"):
+    """Fused quantized index-gather scorer: the int8 K/V block plus its
+    scale columns stay VMEM-resident; the kernel dequantizes only the K
+    gathered rows per query.  Falls back to the XLA quantized scorer on
+    per-(N, K) gamma or residency overflow (the int8 envelope is ~3.5x
+    the f32 one, so the fallback fires far later)."""
+    if score != "cauchy":
+        raise NotImplementedError(
+            f"pallas_fused quantized scorer supports cauchy only, "
+            f"got {score!r}"
+        )
+    lead = kt_q.shape[:-2]
+    nkv, dk = kt_q.shape[-2:]
+    dv = vt_q.shape[-1]
+    g_, nq, kk = idx.shape[-3:]
+    g2 = jnp.asarray(gamma2, q.dtype)
+    rows_shape = lead + (g_, 1, 1)
+    try:
+        per_row = jnp.broadcast_shapes(g2.shape, rows_shape) == rows_shape
+    except ValueError:
+        per_row = False
+    if not per_row or not fits_fused_residency(kt_q, vt_q, kk,
+                                               extra_row_bytes=8):
+        return _gathered_idx_q_xla(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                                   gamma2, score=score)
+    from repro.kernels.cauchy_topk_fused import cauchy_topk_fused_fwd_q
+
+    f = math.prod(lead) if lead else 1
+    out = cauchy_topk_fused_fwd_q(
+        q.reshape(f * g_, nq, dk),
+        kt_q.reshape(f, nkv, dk),
+        kt_s.reshape(f, nkv),
+        vt_q.reshape(f, nkv, dv),
+        vt_s.reshape(f, nkv),
+        idx.reshape(f * g_, nq, kk),
+        valid.reshape(f * g_, nq, kk),
+        jnp.broadcast_to(g2, rows_shape).reshape(f * g_),
+        groups=g_,
+        interpret=default_interpret(),
+    )
+    return out.reshape(lead + (g_, nq, dv))
+
+
 def _gathered_pallas(q, k_sel, v_sel, valid, gamma2, *,
                      score: str = "cauchy"):
     if score != "cauchy":
@@ -316,6 +442,7 @@ def register_stock(overwrite: bool = False) -> None:
         ),
         gathered=_gathered_reference,
         gathered_idx=_gathered_idx_reference,
+        gathered_idx_q=_gathered_idx_q_reference,
         overwrite=overwrite,
     )
 
@@ -329,6 +456,7 @@ def register_stock(overwrite: bool = False) -> None:
         ),
         gathered=_gathered_xla,
         gathered_idx=_gathered_idx_xla,
+        gathered_idx_q=_gathered_idx_q_xla,
         overwrite=overwrite,
     )
 
@@ -359,11 +487,14 @@ def register_stock(overwrite: bool = False) -> None:
             interpreted_devices=("cpu", "gpu"),
             priority=30,
             notes="index-gather kernel: no (N,K,d) HBM candidates; "
-                  "scatter-add backward; fused decode step",
+                  "scatter-add backward; fused decode step; int8 "
+                  "dequant-on-gather cache tier",
         ),
         gathered=_gathered_pallas,
         gathered_idx=_gathered_idx_pallas_fused,
+        gathered_idx_q=_gathered_idx_q_pallas_fused,
         decode=_decode_pallas_fused,
+        decode_q=_decode_q_pallas_fused,
         overwrite=overwrite,
     )
 

@@ -99,6 +99,75 @@ def parity_check(
     return results
 
 
+def quantized_parity_check(
+    backend_a: str = "pallas_fused",
+    backend_b: str = "xla",
+    *,
+    shapes: Sequence[tuple[int, int, int, int, int, int]] = DEFAULT_SHAPES,
+    k: int = 8,
+    gamma2: float = 0.5,
+    seed: int = 0,
+    oracle: bool = False,
+) -> list[ParityResult]:
+    """int8-cache scoring parity (the §2c quantized tier).
+
+    Runs both backends' ``gathered_idx_q`` stage on identical row-quantized
+    K/V plus identical candidate sets, so the error isolates the
+    dequant-on-gather scoring implementations against each other (expected
+    ~float rounding).  With ``oracle=True``, ``backend_b`` instead scores
+    the RAW f32 tensors through its f32 ``gathered_idx`` stage — the error
+    then measures the quantization itself: per-row step amax/254 on
+    tanh-squashed coords, carried through Cauchy scoring."""
+    from repro import state
+    from repro.backend import registry
+
+    results = []
+    for i, shape in enumerate(shapes):
+        b, hq, hkv, n, dk, dv = shape
+        g = hq // hkv
+        q, kc, v = make_inputs(shape, jnp.float32, seed + i)
+        qg = q.reshape(b, hkv, g, n, dk)
+        kk = min(k, n)
+        ks = jax.random.split(jax.random.PRNGKey(seed + 7 + i), 2)
+        idx = jax.random.randint(ks[0], (b, hkv, g, n, kk), 0, n)
+        valid = jax.random.bernoulli(ks[1], 0.9, idx.shape)
+        k_q, k_s = state.quantize_rows(kc)
+        v_q, v_s = state.quantize_rows(v)
+        g2 = jnp.asarray(gamma2, jnp.float32)
+        out_a = registry.get_backend(backend_a).gathered_idx_q(
+            qg, k_q, k_s[..., 0], v_q, v_s[..., 0], idx, valid, g2
+        )
+        if oracle:
+            out_b = registry.get_backend(backend_b).gathered_idx(
+                qg, kc, v, idx, valid, g2
+            )
+        else:
+            out_b = registry.get_backend(backend_b).gathered_idx_q(
+                qg, k_q, k_s[..., 0], v_q, v_s[..., 0], idx, valid, g2
+            )
+        err = float(
+            jnp.max(jnp.abs(out_a.astype(jnp.float32)
+                            - out_b.astype(jnp.float32)))
+        )
+        results.append(
+            ParityResult(
+                backend_a=backend_a,
+                backend_b=backend_b + ("+f32" if oracle else ""),
+                shape=shape,
+                dtype="int8",
+                max_abs_err=err,
+            )
+        )
+    return results
+
+
+def quantized_parity_rows(**kw) -> list[str]:
+    """CSV rows: int8 stage parity plus the vs-f32-oracle accuracy pin."""
+    rows = [r.row() for r in quantized_parity_check(**kw)]
+    rows += [r.row() for r in quantized_parity_check(oracle=True, **kw)]
+    return rows
+
+
 @dataclasses.dataclass(frozen=True)
 class MetricParity:
     """Task-level parity: one scalar quality metric (accuracy, perplexity)

@@ -43,6 +43,16 @@ Backends register up to four entry points:
       interpret-mode kernel (the same compiled-beats-interpreted rule
       ``Capabilities.rank`` applies between backends).
 
+Two quantized-cache siblings mirror the last two stages for the int8
+storage tier (docs/ARCHITECTURE.md §2c): ``gathered_idx_q(q, kt_q, kt_s,
+vt_q, vt_s, idx, valid, gamma2, *, score)`` takes int8 token-layout K/V
+payloads plus their flat per-row f32 scales, and ``decode_q`` the same
+cache split for the fused decode step.  Both are inference-only (no VJP)
+and capability-gate exactly like their f32 counterparts —
+``gathered_idx_q_attention`` falls back to dequantize-at-gather + the
+``gathered`` stage for backends that lack the fused form, and
+``select_decode_backend(..., quantized=True)`` resolves ``decode_q``.
+
 Registration lives in :mod:`repro.backend.backends`; this module holds only
 the policy so kernels may import it without cycles.
 """
@@ -84,7 +94,8 @@ class AttentionRequest:
     dtype: str = "float32"
     causal: bool = True
     device: str = "cpu"
-    stage: Literal["full", "gathered", "gathered_idx", "decode"] = "full"
+    stage: Literal["full", "gathered", "gathered_idx", "gathered_idx_q",
+                   "decode", "decode_q"] = "full"
 
     @classmethod
     def probe(cls, **kw) -> "AttentionRequest":
@@ -139,14 +150,20 @@ class Backend:
     caps: Capabilities
     gathered: Callable | None = None
     gathered_idx: Callable | None = None
+    gathered_idx_q: Callable | None = None
     decode: Callable | None = None
+    decode_q: Callable | None = None
 
     def supports(self, req: AttentionRequest) -> bool:
         if req.stage == "gathered" and self.gathered is None:
             return False
         if req.stage == "gathered_idx" and self.gathered_idx is None:
             return False
+        if req.stage == "gathered_idx_q" and self.gathered_idx_q is None:
+            return False
         if req.stage == "decode" and self.decode is None:
+            return False
+        if req.stage == "decode_q" and self.decode_q is None:
             return False
         return self.caps.supports(req)
 
@@ -157,7 +174,9 @@ _REGISTRY: dict[str, Backend] = {}
 def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
                      gathered: Callable | None = None,
                      gathered_idx: Callable | None = None,
+                     gathered_idx_q: Callable | None = None,
                      decode: Callable | None = None,
+                     decode_q: Callable | None = None,
                      overwrite: bool = False) -> Backend:
     """Register ``fn`` under ``name``.  Re-registering an existing name
     requires ``overwrite=True`` (tests use this to inject fakes)."""
@@ -167,7 +186,8 @@ def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
         )
     be = Backend(name=name, attention=fn, caps=capabilities,
                  gathered=gathered, gathered_idx=gathered_idx,
-                 decode=decode)
+                 gathered_idx_q=gathered_idx_q,
+                 decode=decode, decode_q=decode_q)
     _REGISTRY[name] = be
     return be
 
@@ -353,8 +373,63 @@ def gathered_idx_attention(q, kt, vt, idx, valid, gamma2, *,
     return be.gathered_idx(q, kt, vt, idx, valid, gamma2, score=score)
 
 
+def gathered_idx_q_attention(q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2,
+                             *, score: str = "cauchy", cfg=None,
+                             backend: str | None = None):
+    """Dispatch the quantized index-gather scoring stage.
+
+    kt_q/vt_q: (..., Nkv, d) int8 token-layout payloads; kt_s/vt_s:
+    (..., Nkv) per-row f32 scales; q/idx/valid/gamma2 as in
+    ``gathered_idx_attention``.  Inference-only (no VJP).
+
+    Pinned semantics mirror the f32 stage: a pinned backend without
+    ``gathered_idx_q`` keeps its scoring semantics — the K candidate
+    rows are gathered and dequantized in XLA (only the (…, Nq, K, d)
+    block, never the whole cache) and its plain ``gathered`` stage
+    scores them.
+    """
+    zcfg = _zeta_cfg(cfg)
+    req = AttentionRequest.probe(
+        mechanism="zeta", score=score, dtype=str(q.dtype),
+        stage="gathered_idx_q",
+    )
+    preferred = backend or zcfg.backend
+    if preferred is not None:
+        be = get_backend(preferred)  # unknown explicit name is an error
+        if be.supports(req):
+            return be.gathered_idx_q(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                                     gamma2, score=score)
+        return _dequantize_and_score(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                                     gamma2, score=score, cfg=cfg,
+                                     backend=preferred)
+    try:
+        be = select_backend(req)
+    except LookupError:
+        return _dequantize_and_score(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                                     gamma2, score=score, cfg=cfg,
+                                     backend=None)
+    return be.gathered_idx_q(q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2,
+                             score=score)
+
+
+def _dequantize_and_score(q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2, *,
+                          score, cfg, backend):
+    """Fallback for ``gathered_idx_q``-incapable backends: gather the int8
+    candidate rows + their scales in XLA, dequantize only that gathered
+    block, then the ordinary ``gathered`` dispatch."""
+    from repro.core.selection import gather_tokens_quant
+
+    k_sel, v_sel = gather_tokens_quant(kt_q, kt_s, vt_q, vt_s, idx,
+                                       dtype=q.dtype)
+    return gathered_attention(
+        q, k_sel, v_sel, valid, gamma2,
+        score=score, cfg=cfg, backend=backend,
+    )
+
+
 def select_decode_backend(score: str = "cauchy", dtype: str = "float32",
-                          preferred: str | None = None) -> Backend | None:
+                          preferred: str | None = None, *,
+                          quantized: bool = False) -> Backend | None:
     """Resolve the capability-gated fused ``decode`` stage, or ``None``
     for the caller's staged search→gather→score→insert pipeline.
 
@@ -368,10 +443,16 @@ def select_decode_backend(score: str = "cauchy", dtype: str = "float32",
 
     Callers make this decision at trace time (shapes are static), then
     still apply their own residency guard (``fits_decode_residency``).
+    ``quantized=True`` resolves the int8-cache ``decode_q`` stage under
+    the same policy.  Score/dtype capability filtering happens HERE, via
+    ``Capabilities`` — a backend whose stage would raise at trace time
+    (e.g. pallas_fused with a non-Cauchy score) is simply never
+    returned, and the caller takes its staged pipeline.
     """
     _ensure_registered()
     req = AttentionRequest.probe(
-        mechanism="zeta", score=score, dtype=dtype, stage="decode",
+        mechanism="zeta", score=score, dtype=dtype,
+        stage="decode_q" if quantized else "decode",
     )
     if preferred is not None:
         be = get_backend(preferred)  # unknown explicit name is an error
@@ -435,6 +516,10 @@ def support_matrix() -> list[dict]:
             "gathered": "yes" if be.gathered is not None else "no",
             "gathered_idx": "yes" if be.gathered_idx is not None else "no",
             "decode": "yes" if be.decode is not None else "no",
+            "quantized_cache": (
+                "yes" if (be.gathered_idx_q is not None
+                          or be.decode_q is not None) else "no"
+            ),
             "notes": caps.notes,
         }
         for dev in ("cpu", "gpu", "tpu"):
@@ -453,7 +538,7 @@ def support_matrix_markdown() -> str:
     (regenerate with ``PYTHONPATH=src python -m repro.backend``)."""
     cols = ["backend", "mechanisms", "scores", "dtypes",
             "cpu", "gpu", "tpu", "gathered", "gathered_idx", "decode",
-            "notes"]
+            "quantized_cache", "notes"]
     rows = support_matrix()
     head = "| " + " | ".join(cols) + " |"
     sep = "|" + "|".join("---" for _ in cols) + "|"

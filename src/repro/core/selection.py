@@ -253,6 +253,62 @@ def gather_tokens(kt, vt, idx, dtype=None):
     )
 
 
+def gather_tokens_quant(kt_q, kt_s, vt_q, vt_s, idx, dtype=None):
+    """Quantized-cache candidate gather: same trailing-merged
+    ``take_along_axis`` as :func:`gather_tokens` on the int8 payloads,
+    plus a scale gather — dequantization touches ONLY the gathered
+    (..., G, Nq, K, d) block, never the full cache.
+
+    kt_q: (..., Nkv, d_k) int8; kt_s: (..., Nkv) per-row f32 scales
+    (likewise vt_q/vt_s); idx: (..., G, Nq, K) int32.  Returns f32 (or
+    ``dtype``) (k_sel, v_sel) matching ``gather_tokens`` on the
+    dequantized caches exactly.
+    """
+    lead = kt_q.shape[:-2]
+    tail = idx.shape[len(lead):]
+    flat = idx.reshape(lead + (-1,))
+    k_sel = jnp.take_along_axis(kt_q, flat[..., None], axis=-2)
+    v_sel = jnp.take_along_axis(vt_q, flat[..., None], axis=-2)
+    k_sc = jnp.take_along_axis(kt_s.astype(jnp.float32), flat, axis=-1)
+    v_sc = jnp.take_along_axis(vt_s.astype(jnp.float32), flat, axis=-1)
+    k_sel = k_sel.astype(jnp.float32) * k_sc[..., None]
+    v_sel = v_sel.astype(jnp.float32) * v_sc[..., None]
+    if dtype is not None:
+        k_sel = k_sel.astype(dtype)
+        v_sel = v_sel.astype(dtype)
+    return (
+        k_sel.reshape(lead + tail + kt_q.shape[-1:]),
+        v_sel.reshape(lead + tail + vt_q.shape[-1:]),
+    )
+
+
+def score_indexed_q(q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2, *,
+                    score: str = "cauchy", impl: str | None = None,
+                    zcfg=None):
+    """Quantized-cache sibling of :func:`score_indexed` — dispatches the
+    registry's ``gathered_idx_q`` stage (int8 payloads + flat per-row f32
+    scales).  Backends without the fused form keep their scoring
+    semantics via :func:`gather_tokens_quant` + their ``gathered`` stage.
+    Inference-only: the quantized tier has no VJP.
+    """
+    from repro.backend import registry
+
+    if impl is not None:
+        be = registry.get_backend(impl)
+        if be.gathered_idx_q is not None:
+            return be.gathered_idx_q(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                                     gamma2, score=score)
+        k_sel, v_sel = gather_tokens_quant(kt_q, kt_s, vt_q, vt_s, idx,
+                                           dtype=q.dtype)
+        return score_gathered(
+            q, k_sel, v_sel, valid, gamma2, score=score, impl=impl,
+        )
+    return registry.gathered_idx_q_attention(
+        q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2, score=score,
+        cfg=zcfg,
+    )
+
+
 def score_indexed(q, kt, vt, idx, valid, gamma2, *, score: str = "cauchy",
                   impl: str | None = None, zcfg=None):
     """Dispatch the index-gather scoring stage — the hot path every causal
@@ -395,11 +451,23 @@ class ZetaCache(NamedTuple):
     """The ZETA slice of a decode cache (a *view* over the mixer's cache
     dict — see ``attn_cache_spec`` in nn/attention.py for the field specs).
 
-    zk:         (B, Hkv, Nmax, d_k)  raw metric keys by position
-    v:          (B, Hkv, Nmax, d_v)  raw values by position
+    zk:         (B, Hkv, Nmax, d_k)  metric keys by position
+    v:          (B, Hkv, Nmax, d_v)  values by position
     zk_sorted:  (B*Hkv, Nmax) int32  sorted Morton codes (SENTINEL tail)
     pos_sorted: (B*Hkv, Nmax) int32  original position of each sorted code
     ksum/vsum:  (B, Hkv, d)   f32    running history-mean numerators
+
+    Quantized tier (``cache_dtype=int8``, docs/ARCHITECTURE.md §2c):
+    ``zk``/``v`` hold int8 payloads and the sibling per-row f32 scales
+
+    zk_scale:   (B, Hkv, Nmax, 1) f32   or None (f32/bf16 tier)
+    v_scale:    (B, Hkv, Nmax, 1) f32   or None
+
+    are set; ``zk_scale is not None`` is THE quantized-mode predicate the
+    pipelines branch on.  z-codes stay int32 and the running sums stay
+    raw f32 (accumulated from the incoming activations, not the
+    quantized storage), so search order and the history-mean are
+    identical across tiers up to the payload rounding.
     """
 
     zk: jax.Array
@@ -408,6 +476,8 @@ class ZetaCache(NamedTuple):
     pos_sorted: jax.Array
     ksum: jax.Array
     vsum: jax.Array
+    zk_scale: jax.Array | None = None
+    v_scale: jax.Array | None = None
 
 
 # ------------------------------------------------------------ decode mode
@@ -415,24 +485,31 @@ class ZetaCache(NamedTuple):
 
 def decode_backend_name(zcfg, dtype: str, *, nmax: int | None = None,
                         dk: int | None = None, dv: int | None = None,
-                        g: int | None = None) -> str | None:
-    """The backend whose fused ``decode`` stage :func:`attend_decode`
-    would use for this config, or ``None`` for the staged pipeline.
-    Shape args additionally apply the VMEM residency guard; without them
+                        g: int | None = None,
+                        quantized: bool = False) -> str | None:
+    """The backend whose fused ``decode`` (or ``decode_q``) stage
+    :func:`attend_decode` would use for this config, or ``None`` for the
+    staged pipeline.  Shape args additionally apply the VMEM residency
+    guard (itemsize-aware: the int8 tier charges 1 B/elem + 8 B/row of
+    scales, so it stays fused far past the f32 envelope); without them
     only the capability/pin policy is evaluated (what serve/bench report
-    up front, before cache shapes exist)."""
+    up front, before cache shapes exist).  ``zcfg.fused_vmem_budget``
+    overrides the guard's budget."""
     from repro.backend import backends as _backends, registry
 
     be = registry.select_decode_backend(
         score=zcfg.score, dtype=str(dtype), preferred=zcfg.backend,
+        quantized=quantized,
     )
     if be is None:
         return None
     if nmax is not None:
         kk = zcfg.k + zcfg.local_window + (1 if zcfg.history_mean else 0)
-        itemsize = jnp.dtype(dtype).itemsize
+        itemsize = 1 if quantized else jnp.dtype(dtype).itemsize
         if not _backends.fits_decode_residency(
-            nmax, dk, dv, itemsize, g, kk
+            nmax, dk, dv, itemsize, g, kk,
+            scale_bytes=8 if quantized else 0,
+            budget=getattr(zcfg, "fused_vmem_budget", None),
         ):
             return None
     return be.name
@@ -472,12 +549,26 @@ def attend_decode(
     f = B * Hkv
     M = Nmax // max(z.num_chunks, 1)
     w = z.local_window
+    quantized = cache.zk_scale is not None
     searchable = jnp.maximum(t - M, 0)                     # (B,)
 
-    # 0. write the current raw key/value at position t first, so the
+    # 0. write the current key/value at position t first, so the
     # own-chunk window (which includes the current token) can gather them.
-    zk_cache = state.row_write(cache.zk, zk_t, t, active)
-    v_cache = state.row_write(cache.v, v_t, t, active)
+    # Quantized tier: the write quantizes per row, payload + scale move
+    # together (state.row_write_quant).
+    if quantized:
+        zk_cache, zk_scale = state.row_write_quant(
+            cache.zk, cache.zk_scale, zk_t, t, active
+        )
+        v_cache, v_scale = state.row_write_quant(
+            cache.v, cache.v_scale, v_t, t, active
+        )
+        kt_s = zk_scale.reshape(f, Nmax)
+        vt_s = v_scale.reshape(f, Nmax)
+    else:
+        zk_cache = state.row_write(cache.zk, zk_t, t, active)
+        v_cache = state.row_write(cache.v, v_t, t, active)
+        zk_scale = v_scale = kt_s = vt_s = None
 
     # 1-2. encode the query heads; running history-mean numerators and the
     # delayed-insertion key are shared by both decode paths below.
@@ -489,15 +580,30 @@ def attend_decode(
     new_ksum = cache.ksum + zk_t[:, :, 0].astype(jnp.float32)
     new_vsum = cache.vsum + v_t[:, :, 0].astype(jnp.float32)
     km = vm = None
+    km_q = km_s = vm_q = vm_s = None
     if z.history_mean:
         denom = (t + 1).astype(jnp.float32)[:, None, None]  # (B,1,1)
         km = (new_ksum / denom).reshape(f, dk)
         vm = (new_vsum / denom).reshape(f, dv)
+        if quantized:
+            # quantize the running mean ONCE and hand every path the same
+            # reconstruction — fused (f32 row) and staged (int8 row +
+            # scale appended to the cache view) then agree exactly
+            km_q, km_s = state.quantize_rows(km)
+            vm_q, vm_s = state.quantize_rows(vm)
+            km = state.dequantize_rows(km_q, km_s)
+            vm = state.dequantize_rows(vm_q, vm_s)
     t_ins = jnp.maximum(t - M, 0)                          # (B,)
     t_ins_f = jnp.repeat(t_ins, Hkv)
     ins_key = jnp.take_along_axis(
         kt, t_ins_f[:, None, None], axis=1
     )                                                      # (f, 1, dk)
+    if quantized:
+        # codes derive from the DEQUANTIZED stored row — the same
+        # arithmetic prefill uses for its whole-cache encode, so codes
+        # stay comparable across modes
+        ins_scale = jnp.take_along_axis(kt_s, t_ins_f[:, None], axis=1)
+        ins_key = state.dequantize_rows(ins_key, ins_scale[..., None])
     ins_kz = morton_codes(ins_key, bits=z.bits, bound=z.bound)[:, 0]
     ins_mask = jnp.repeat((t >= M) & active, Hkv)
     act_b = active[:, None, None]
@@ -509,20 +615,32 @@ def attend_decode(
     # the selection policy; the VMEM residency guard is trace-time).
     fused = decode_backend_name(
         z, str(zq_t.dtype), nmax=Nmax, dk=dk, dv=dv, g=G,
+        quantized=quantized,
     )
     if fused is not None:
         from repro.backend import registry
 
         g2 = _gamma2_rows(gamma2, B, Hq, zq_t.dtype).reshape(f, G)
-        out, new_skz, new_spos = registry.get_backend(fused).decode(
-            zq_t.reshape(f, G, dk), qz_t, kt, vt,
-            cache.zk_sorted, cache.pos_sorted,
-            jnp.repeat(searchable, Hkv), jnp.repeat(t, Hkv),
-            None if km is None else km.astype(kt.dtype),
-            None if vm is None else vm.astype(vt.dtype),
-            ins_kz, t_ins_f.astype(jnp.int32), ins_mask, g2,
-            k=z.k, window=w, chunk=M, score=z.score,
-        )
+        if quantized:
+            out, new_skz, new_spos = registry.get_backend(fused).decode_q(
+                zq_t.reshape(f, G, dk), qz_t, kt, kt_s, vt, vt_s,
+                cache.zk_sorted, cache.pos_sorted,
+                jnp.repeat(searchable, Hkv), jnp.repeat(t, Hkv),
+                None if km is None else km.astype(zq_t.dtype),
+                None if vm is None else vm.astype(zq_t.dtype),
+                ins_kz, t_ins_f.astype(jnp.int32), ins_mask, g2,
+                k=z.k, window=w, chunk=M, score=z.score,
+            )
+        else:
+            out, new_skz, new_spos = registry.get_backend(fused).decode(
+                zq_t.reshape(f, G, dk), qz_t, kt, vt,
+                cache.zk_sorted, cache.pos_sorted,
+                jnp.repeat(searchable, Hkv), jnp.repeat(t, Hkv),
+                None if km is None else km.astype(kt.dtype),
+                None if vm is None else vm.astype(vt.dtype),
+                ins_kz, t_ins_f.astype(jnp.int32), ins_mask, g2,
+                k=z.k, window=w, chunk=M, score=z.score,
+            )
         return out.reshape(B, Hq, 1, dv), ZetaCache(
             zk=zk_cache,
             v=v_cache,
@@ -530,6 +648,8 @@ def attend_decode(
             pos_sorted=new_spos,
             ksum=jnp.where(act_b, new_ksum, cache.ksum),
             vsum=jnp.where(act_b, new_vsum, cache.vsum),
+            zk_scale=zk_scale,
+            v_scale=v_scale,
         )
 
     # STAGED PATH — grouped search of each KV head's sorted rows (same
@@ -559,23 +679,38 @@ def attend_decode(
     # is the per-token HBM cost the fused decode path above removes
     # (docs/ARCHITECTURE.md §2a).
     if z.history_mean:
-        kt = jnp.concatenate(
-            [kt, km.reshape(f, 1, dk).astype(kt.dtype)], axis=1
-        )
-        vt = jnp.concatenate(
-            [vt, vm.reshape(f, 1, dv).astype(vt.dtype)], axis=1
-        )
+        if quantized:
+            # the pre-quantized mean row rides the cache view: payload
+            # row Nmax + its scale, read through the same dequant-gather
+            # as every other candidate
+            kt = jnp.concatenate([kt, km_q.reshape(f, 1, dk)], axis=1)
+            vt = jnp.concatenate([vt, vm_q.reshape(f, 1, dv)], axis=1)
+            kt_s = jnp.concatenate([kt_s, km_s.reshape(f, 1)], axis=1)
+            vt_s = jnp.concatenate([vt_s, vm_s.reshape(f, 1)], axis=1)
+        else:
+            kt = jnp.concatenate(
+                [kt, km.reshape(f, 1, dk).astype(kt.dtype)], axis=1
+            )
+            vt = jnp.concatenate(
+                [vt, vm.reshape(f, 1, dv).astype(vt.dtype)], axis=1
+            )
         idx, valid = _append_candidate(
             idx, valid, jnp.int32(Nmax)
         )
 
     # 5. score — same index-gather stage (and backend selection) as
-    # training, Nq = 1.
+    # training, Nq = 1 (the quantized tier through its dequant-on-gather
+    # sibling stage).
     qf = zq_t.reshape(f, G, 1, dk)
     g2 = _gamma2_rows(gamma2, B, Hq, zq_t.dtype).reshape(f, G, 1, 1)
-    out = score_indexed(
-        qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
-    ).reshape(B, Hq, 1, dv)
+    if quantized:
+        out = score_indexed_q(
+            qf, kt, kt_s, vt, vt_s, idx, valid, g2, score=z.score, zcfg=z,
+        ).reshape(B, Hq, 1, dv)
+    else:
+        out = score_indexed(
+            qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
+        ).reshape(B, Hq, 1, dv)
 
     # 6. sorted-cache maintenance: insert the key that just became M steps
     # old (it is now outside every future query's own-chunk horizon).
@@ -591,6 +726,8 @@ def attend_decode(
         pos_sorted=new_spos,
         ksum=jnp.where(act_b, new_ksum, cache.ksum),
         vsum=jnp.where(act_b, new_vsum, cache.vsum),
+        zk_scale=zk_scale,
+        v_scale=v_scale,
     )
 
 
@@ -633,18 +770,37 @@ def attend_prefill(
     f = B * Hkv
     M = Nmax // max(z.num_chunks, 1)
     w = z.local_window
+    quantized = cache.zk_scale is not None
     token_mask = jnp.asarray(token_mask, bool)
     n_valid = token_mask.sum(axis=-1).astype(jnp.int32)    # (B,)
     active = n_valid > 0
     t0 = positions[:, 0]
 
-    # 0-1. bulk-write the chunk's raw keys/values, then encode the updated
-    # cache: within-chunk candidates occur exactly when decode would have
-    # inserted them (position older than M steps).
-    zk_cache = state.chunk_write(cache.zk, zk_c, positions, token_mask)
-    v_cache = state.chunk_write(cache.v, v_c, positions, token_mask)
+    # 0-1. bulk-write the chunk's keys/values (quantize-on-write for the
+    # int8 tier), then encode the updated cache: within-chunk candidates
+    # occur exactly when decode would have inserted them (position older
+    # than M steps).  Quantized codes derive from the DEQUANTIZED stored
+    # rows — the same arithmetic decode applies to its delayed-insertion
+    # key, so the sorted caches stay bit-identical across modes.
+    if quantized:
+        zk_cache, zk_scale = state.chunk_write_quant(
+            cache.zk, cache.zk_scale, zk_c, positions, token_mask
+        )
+        v_cache, v_scale = state.chunk_write_quant(
+            cache.v, cache.v_scale, v_c, positions, token_mask
+        )
+        kt_s = zk_scale.reshape(f, Nmax)
+        vt_s = v_scale.reshape(f, Nmax)
+        kz_src = state.dequantize_rows(
+            zk_cache, zk_scale
+        ).reshape(f, Nmax, dk)
+    else:
+        zk_cache = state.chunk_write(cache.zk, zk_c, positions, token_mask)
+        v_cache = state.chunk_write(cache.v, v_c, positions, token_mask)
+        zk_scale = v_scale = kt_s = vt_s = None
+        kz_src = zk_cache.reshape(f, Nmax, dk)
     kz_by_pos = morton_codes(
-        zk_cache.reshape(f, Nmax, dk), bits=z.bits, bound=z.bound
+        kz_src, bits=z.bits, bound=z.bound
     )                                                      # (f, Nmax)
     qz_c = morton_codes(
         zq_c.reshape(f, G, P, dk), bits=z.bits, bound=z.bound
@@ -689,17 +845,33 @@ def attend_prefill(
         denom = (positions + 1).astype(jnp.float32)[:, None, :, None]
         km = (ksum_run / denom).reshape(f, P, dk)
         vm = (vsum_run / denom).reshape(f, P, dv)
-        kt = jnp.concatenate([kt, km.astype(kt.dtype)], axis=1)
-        vt = jnp.concatenate([vt, vm.astype(vt.dtype)], axis=1)
+        if quantized:
+            # quantize the P mean rows once; the scorer reads them back
+            # through the same dequant-gather as the cached tokens
+            km_q, km_s = state.quantize_rows(km)
+            vm_q, vm_s = state.quantize_rows(vm)
+            kt = jnp.concatenate([kt, km_q], axis=1)
+            vt = jnp.concatenate([vt, vm_q], axis=1)
+            kt_s = jnp.concatenate([kt_s, km_s[..., 0]], axis=1)
+            vt_s = jnp.concatenate([vt_s, vm_s[..., 0]], axis=1)
+        else:
+            kt = jnp.concatenate([kt, km.astype(kt.dtype)], axis=1)
+            vt = jnp.concatenate([vt, vm.astype(vt.dtype)], axis=1)
         mean_idx = Nmax + jnp.arange(P, dtype=jnp.int32)   # (P,)
         idx, valid = _append_candidate(idx, valid, mean_idx[:, None])
 
-    # 5. score — same index-gather stage as train and decode.
+    # 5. score — same index-gather stage as train and decode (the
+    # quantized tier through its dequant-on-gather sibling stage).
     qf = zq_c.reshape(f, G, P, dk)
     g2 = _gamma2_rows(gamma2, B, Hq, zq_c.dtype).reshape(f, G, 1, 1)
-    out = score_indexed(
-        qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
-    ).reshape(B, Hq, P, dv)
+    if quantized:
+        out = score_indexed_q(
+            qf, kt, kt_s, vt, vt_s, idx, valid, g2, score=z.score, zcfg=z,
+        ).reshape(B, Hq, P, dv)
+    else:
+        out = score_indexed(
+            qf, kt, vt, idx, valid, g2, score=z.score, zcfg=z,
+        ).reshape(B, Hq, P, dv)
 
     # 6. commit the chunk to the sorted z-code cache with ONE batched
     # multi-insert: after the chunk, decode would have inserted every key
@@ -728,4 +900,6 @@ def attend_prefill(
         pos_sorted=new_spos,
         ksum=jnp.where(act_b, cache.ksum + cumk[:, :, -1], cache.ksum),
         vsum=jnp.where(act_b, cache.vsum + cumv[:, :, -1], cache.vsum),
+        zk_scale=zk_scale,
+        v_scale=v_scale,
     )

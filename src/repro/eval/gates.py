@@ -19,6 +19,12 @@ plus the serving stack:
                    pool, so exact equality is not expected — but a paging
                    or quantisation regression in the serve path lands
                    here first.
+  quantized cache  serve recall through the int8 cache tier (§2c,
+                   ``"<backend>+int8"`` keys) within ``eps`` of the SAME
+                   backend's f32 serve recall — pins the per-row
+                   quantize/dequant round trip at task level, on top of
+                   the tensor-level oracle pin in
+                   ``repro.backend.parity.quantized_parity_check``.
 
 Thresholds live in :class:`Tolerances`; each scale preset picks its own
 (small models trained for few steps are noisier, so tiny/fast run looser
@@ -52,6 +58,7 @@ class Tolerances:
     zeta_vs_full_acc: float = 0.15   # acc_full - acc_zeta (reference)
     zeta_vs_full_ppl_rel: float = 0.15  # ppl_zeta/ppl_full - 1
     generate_vs_teacher_acc: float = 0.20
+    quantized_cache_acc: float = 0.10  # |acc_int8 - acc_f32| same backend
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -61,7 +68,8 @@ class Tolerances:
 class Gate:
     name: str        # e.g. "mqar/backend/xla/acc"
     task: str
-    kind: str        # "backend_parity" | "zeta_vs_full" | "generate_vs_tf"
+    kind: str        # "backend_parity" | "zeta_vs_full" |
+                     # "generate_vs_tf" | "quantized_cache"
     value: float     # the measured delta (smaller is better)
     threshold: float
     ok: bool
@@ -131,15 +139,37 @@ def evaluate_gates(tasks_results: dict[str, dict],
                     f"teach repro.eval.gates its family first"
                 )
             for mech, per_backend in sorted(mechs.items()):
-                if REFERENCE in per_backend and len(per_backend) > 1:
-                    gates.extend(
-                        _parity_gates(task, metric, per_backend, tol))
+                # "+"-suffixed keys (e.g. "xla+int8") are cache-tier
+                # variants, gated by their own family below — not
+                # backend-vs-reference parity.
+                base = {k: v for k, v in per_backend.items()
+                        if "+" not in k}
+                if REFERENCE in base and len(base) > 1:
+                    gates.extend(_parity_gates(task, metric, base, tol))
             if metric != "generate_acc" and {"zeta", "full"} <= set(mechs):
                 gates.append(_zeta_vs_full_gate(task, metric, mechs, tol))
         # serving-stack gate: generate recall vs teacher-forced recall
         gen = metrics.get("generate_acc", {}).get("zeta", {})
         tf = metrics.get("acc", {}).get("zeta", {})
         for backend, g in sorted(gen.items()):
+            if backend.endswith("+int8"):
+                # quantized-cache gate: int8 serve recall vs the SAME
+                # backend's f32 serve recall (falls back to the reference
+                # serve recall if that backend wasn't run in f32).
+                base = backend[: -len("+int8")]
+                anchor = gen.get(base, gen.get(REFERENCE))
+                if anchor is None:
+                    continue
+                value = abs(float(g) - float(anchor))
+                gates.append(Gate(
+                    name=f"{task}/quantized_cache/{base}", task=task,
+                    kind="quantized_cache", value=value,
+                    threshold=tol.quantized_cache_acc,
+                    ok=value <= tol.quantized_cache_acc,
+                    detail=f"int8={float(g):.4f} "
+                           f"f32={float(anchor):.4f} (generate, {base})",
+                ))
+                continue
             anchor = tf.get(backend, tf.get(REFERENCE))
             if anchor is None:
                 continue

@@ -58,7 +58,8 @@ SCALES: dict[str, EvalScale] = {
                 eval_batches=3),
         tol=Tolerances(backend_acc=0.05, backend_ppl_rel=0.02,
                        zeta_vs_full_acc=0.30, zeta_vs_full_ppl_rel=0.30,
-                       generate_vs_teacher_acc=0.35),
+                       generate_vs_teacher_acc=0.35,
+                       quantized_cache_acc=0.25),
     ),
     "fast": EvalScale(
         name="fast",
@@ -74,7 +75,8 @@ SCALES: dict[str, EvalScale] = {
                 eval_batches=4),
         tol=Tolerances(backend_acc=0.05, backend_ppl_rel=0.02,
                        zeta_vs_full_acc=0.15, zeta_vs_full_ppl_rel=0.15,
-                       generate_vs_teacher_acc=0.25),
+                       generate_vs_teacher_acc=0.25,
+                       quantized_cache_acc=0.15),
     ),
     "paper": EvalScale(
         name="paper",
@@ -90,7 +92,8 @@ SCALES: dict[str, EvalScale] = {
                 num_chunks=16, eval_batches=8),
         tol=Tolerances(backend_acc=0.02, backend_ppl_rel=0.01,
                        zeta_vs_full_acc=0.03, zeta_vs_full_ppl_rel=0.03,
-                       generate_vs_teacher_acc=0.10),
+                       generate_vs_teacher_acc=0.10,
+                       quantized_cache_acc=0.05),
     ),
 }
 

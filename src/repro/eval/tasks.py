@@ -131,14 +131,16 @@ def _mqar_batch_fn(s: dict):
 
 
 def _mqar_generate_acc(params, cfg: ModelConfig, s: dict, batch: dict,
-                       backend: str) -> float:
+                       backend: str, cache_dtype=None) -> float:
     """Recall through the serving stack: for each eval row, the prompt is
     the sequence up to (and including) the FIRST re-presented query key;
     one greedy token from ``repro.api.generate`` must be the bound value.
     Exercises chunked prefill, the incremental sorted z-code cache, and
     device-side sampling — the decode pool is the delayed-insertion subset
     of the training pool, so this is gated with its own (looser)
-    tolerance."""
+    tolerance.  ``cache_dtype=jnp.int8`` serves through the quantized
+    cache tier (§2c) — same params, same prompts — which is what the
+    quantized_cache eval gate pins against the f32 serve path."""
     from repro.api import generate
     from repro.sample import GenerationParams
 
@@ -151,6 +153,7 @@ def _mqar_generate_acc(params, cfg: ModelConfig, s: dict, batch: dict,
         params, pin_backend(cfg, backend), prompts,
         GenerationParams(max_new=1), seed=0,
         batch_slots=min(n, 8), prefill_chunk=s.get("prefill_chunk", 8),
+        cache_dtype=cache_dtype,
     )
     hits = [int(r.tokens[0] == int(gold[r.rid])) for r in results]
     return sum(hits) / len(hits)
@@ -172,9 +175,18 @@ def eval_metrics(params, cfg: ModelConfig, batches,
 
 def run_mqar(s: dict, *, backends=ZETA_BACKENDS,
              gen_backends=("reference", "xla", "pallas_fused"),
+             quant_gen_backends=None,
              seed: int = 0) -> dict:
     """Train ZETA + full-attention MQAR models, measure teacher-forced
-    recall per backend and generate-facade recall per serve backend."""
+    recall per backend and generate-facade recall per serve backend.
+    ``quant_gen_backends`` additionally serve through the int8 quantized
+    cache tier; their recall lands under ``"<backend>+int8"`` keys and is
+    gated against the f32 serve recall of the same backend.  Defaults to
+    the dequant-capable members of ``gen_backends`` so trimmed eval runs
+    never serve through a backend they did not ask for."""
+    if quant_gen_backends is None:
+        quant_gen_backends = tuple(
+            b for b in gen_backends if b in ("xla", "pallas_fused"))
     cfg_z = mqar_config("zeta", s)
     cfg_f = mqar_config("full", s)
     params_z, info_z = _train_lm_style(
@@ -196,6 +208,9 @@ def run_mqar(s: dict, *, backends=ZETA_BACKENDS,
         "zeta": {b: _mqar_generate_acc(params_z, cfg_z, s, batches[0], b)
                  for b in gen_backends},
     }
+    for b in quant_gen_backends:
+        gen_acc["zeta"][f"{b}+int8"] = _mqar_generate_acc(
+            params_z, cfg_z, s, batches[0], b, cache_dtype=jnp.int8)
     return {
         "shapes": dict(s),
         "train": {"zeta": info_z, "full": info_f},

@@ -128,6 +128,49 @@ def _bwd_kernel(q_ref, kt_ref, vt_ref, idx_ref, valid_ref, g2_ref, g_ref,
     dg2_ref[...] = jnp.sum(g_delta, axis=-1)
 
 
+def _distances_q(q, kt, kscale, idx):
+    """Quantized-cache distances: gather int8 columns + the per-row scale,
+    dequantize only the gathered (BN, K) entries.  kt (Nkv, dk) int8,
+    kscale (Nkv,) f32."""
+    s_k = jnp.take(kscale, idx, axis=0)         # (BN, K) f32
+    d2 = jnp.zeros(idx.shape, jnp.float32)
+    for j in range(kt.shape[-1]):
+        kj = jnp.take(kt[:, j].astype(jnp.float32), idx, axis=0) * s_k
+        diff = q[:, None, j] - kj
+        d2 = d2 + diff * diff
+    return d2
+
+
+def _gather_values_q(vt, vscale, idx):
+    """vt (Nkv, dv) int8, vscale (Nkv,) f32 -> (BN, K, dv) f32 dequantized
+    at the gather — the full cache block stays int8 in VMEM."""
+    bn, kk = idx.shape
+    flat = idx.reshape(bn * kk)
+    v = jnp.take(vt.astype(jnp.float32), flat, axis=0)
+    s = jnp.take(vscale, flat, axis=0)
+    return (v * s[:, None]).reshape(bn, kk, vt.shape[-1])
+
+
+def _fwd_q_kernel(q_ref, kt_ref, ks_ref, vt_ref, vs_ref, idx_ref,
+                  valid_ref, g2_ref, out_ref):
+    """Quantized forward: identical scoring math to ``_fwd_kernel`` but the
+    resident K/V block is int8 + per-row f32 scales; only the K gathered
+    candidate rows are dequantized.  Inference-only (no backward)."""
+    q = q_ref[...].astype(jnp.float32)          # (BN, dk)
+    idx = idx_ref[...]                          # (BN, K) int32
+    valid = valid_ref[...]                      # (BN, K) int8
+    g2 = g2_ref[0].astype(jnp.float32)
+
+    d2 = _distances_q(q, kt_ref[...], ks_ref[...], idx)
+    s = jnp.where(valid != 0, 1.0 / (d2 + g2 + _EPS), 0.0)
+    z = jnp.sum(s, axis=-1)                     # (BN,)
+    a = s / jnp.maximum(z, _EPS)[:, None]
+    v_sel = _gather_values_q(vt_ref[...], vs_ref[...], idx)
+    out_ref[...] = jnp.sum(a[:, :, None] * v_sel, axis=1).astype(
+        out_ref.dtype
+    )
+
+
 def _query_specs(bn, dk, kk):
     return [
         pl.BlockSpec((None, bn, dk), lambda i, j: (i, j, 0)),   # q
@@ -187,6 +230,50 @@ def cauchy_topk_fused_fwd(q, kt, vt, idx, valid, gamma2, *,
         gamma2,
     )
     return out[:, :n], z[:, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("groups", "block_n", "interpret")
+)
+def cauchy_topk_fused_fwd_q(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
+                            gamma2, *, groups: int = 1,
+                            block_n: int | None = None,
+                            interpret: bool | None = None):
+    """Quantized-cache fused forward (inference-only, no VJP).
+
+    q: (F*groups, Nq, dk); kt_q/vt_q: (F, Nkv, d) int8 payloads;
+    kt_s/vt_s: (F, Nkv) per-row f32 scales; idx/valid: (F*groups, Nq, K);
+    gamma2: (F*groups,) f32 rows.  Returns out (F*groups, Nq, dv) —
+    matches ``cauchy_topk_fused_fwd`` on the dequantized cache exactly
+    (both dequantize the same gathered rows to f32 before scoring).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    fg, n, dk = q.shape
+    _, nkv, _ = kt_q.shape
+    kk = idx.shape[-1]
+    dv = vt_q.shape[-1]
+    bn, n_pad = block_plan(n, block_n)
+    grid = (fg, n_pad // bn)
+    qs, idxs, vals, g2s = _query_specs(bn, dk, kk)
+    kts, vts = _kv_specs(nkv, dk, dv, groups)
+    scale_spec = pl.BlockSpec((None, nkv), lambda i, j: (i // groups, 0))
+
+    out = pl.pallas_call(
+        _fwd_q_kernel,
+        grid=grid,
+        in_specs=[qs, kts, scale_spec, vts, scale_spec, idxs, vals, g2s],
+        out_specs=pl.BlockSpec((None, bn, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((fg, n_pad, dv), q.dtype),
+        interpret=interpret,
+    )(
+        pad_queries(q, n_pad), kt_q, kt_s.astype(jnp.float32),
+        vt_q, vt_s.astype(jnp.float32),
+        pad_queries(idx, n_pad),
+        pad_queries(valid.astype(jnp.int8), n_pad),
+        gamma2,
+    )
+    return out[:, :n]
 
 
 @functools.partial(
@@ -280,5 +367,44 @@ def _smoke() -> int:
     return 0 if ok else 1
 
 
+def _smoke_q() -> int:
+    """Interpret-mode smoke for the quantized forward: fused int8
+    dequant-on-gather vs the XLA dequantize-at-gather oracle on the same
+    quantized cache — identical math, so the match is near-exact.  CI:
+    ``PYTHONPATH=src python -m repro.kernels.cauchy_topk_fused --dtype
+    int8``."""
+    from repro.backend import registry
+    from repro.kernels import ops
+    from repro.state import quantize_rows
+
+    f, g_, nq, nkv, kk, dk, dv = 2, 2, 40, 64, 5, 3, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jnp.tanh(jax.random.normal(ks[0], (f, g_, nq, dk)))
+    kt = jnp.tanh(jax.random.normal(ks[1], (f, nkv, dk)))
+    vt = jax.random.normal(ks[2], (f, nkv, dv))
+    idx = jax.random.randint(ks[3], (f, g_, nq, kk), 0, nkv)
+    valid = jax.random.bernoulli(ks[4], 0.85, (f, g_, nq, kk))
+    gamma2 = jnp.asarray(0.5)
+
+    kt_q, kt_s = quantize_rows(kt)
+    vt_q, vt_s = quantize_rows(vt)
+    kt_s, vt_s = kt_s[..., 0], vt_s[..., 0]
+    qargs = (q, kt_q, kt_s, vt_q, vt_s, idx, valid, gamma2)
+    fused = registry.get_backend("pallas_fused").gathered_idx_q
+    xla = registry.get_backend("xla").gathered_idx_q
+    err = float(jnp.abs(fused(*qargs) - xla(*qargs)).max())
+    ok = err < 1e-5
+    print("fused-kernel int8 smoke (interpret="
+          f"{ops.default_interpret()}): out={err:.2e}",
+          "OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
 if __name__ == "__main__":
-    raise SystemExit(_smoke())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dtype", choices=("f32", "int8"), default="f32",
+                    help="which cache tier to smoke-test")
+    args = ap.parse_args()
+    raise SystemExit(_smoke_q() if args.dtype == "int8" else _smoke())

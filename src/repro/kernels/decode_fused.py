@@ -70,9 +70,13 @@ def _searchsorted(skz, queries, nmax: int):
 
 
 def _make_kernel(nmax: int, g: int, k: int, window: int, chunk: int,
-                 has_mean: bool):
-    def kernel(q_ref, qz_ref, kt_ref, vt_ref, skz_ref, spos_ref,
-               len_ref, pos_ref, *rest):
+                 has_mean: bool, quantized: bool = False):
+    def kernel(q_ref, qz_ref, kt_ref, vt_ref, *rest):
+        if quantized:
+            # int8 K/V payloads stay resident; per-row f32 scale columns
+            # ride along and are read only at the candidate gather
+            ks_ref, vs_ref, *rest = rest
+        skz_ref, spos_ref, len_ref, pos_ref, *rest = rest
         if has_mean:
             (km_ref, vm_ref, insk_ref, insp_ref, upd_ref, g2_ref,
              out_ref, nskz_ref, nspos_ref) = rest
@@ -119,10 +123,17 @@ def _make_kernel(nmax: int, g: int, k: int, window: int, chunk: int,
         q = q_ref[...]                            # (G, dk)
         kk = idx.shape[1]
         flat = idx.reshape(g * kk)
-        k_sel = jnp.take(kt_ref[...], flat, axis=0).reshape(
-            g, kk, -1).astype(q.dtype)
-        v_sel = jnp.take(vt_ref[...], flat, axis=0).reshape(
-            g, kk, -1).astype(q.dtype)
+        k_sel = jnp.take(kt_ref[...], flat, axis=0).reshape(g, kk, -1)
+        v_sel = jnp.take(vt_ref[...], flat, axis=0).reshape(g, kk, -1)
+        if quantized:
+            # dequantize ONLY the G*K gathered rows — q * scale, matching
+            # state.dequantize_rows so fused == staged exactly
+            k_sc = jnp.take(ks_ref[...], flat, axis=0).reshape(g, kk)
+            v_sc = jnp.take(vs_ref[...], flat, axis=0).reshape(g, kk)
+            k_sel = k_sel.astype(jnp.float32) * k_sc[..., None]
+            v_sel = v_sel.astype(jnp.float32) * v_sc[..., None]
+        k_sel = k_sel.astype(q.dtype)
+        v_sel = v_sel.astype(q.dtype)
         if has_mean:
             km = km_ref[...].astype(q.dtype)
             vm = vm_ref[...].astype(q.dtype)
@@ -166,12 +177,19 @@ def _make_kernel(nmax: int, g: int, k: int, window: int, chunk: int,
     return kernel
 
 
-def _row_specs(g, nmax, dk, dv, has_mean):
+def _row_specs(g, nmax, dk, dv, has_mean, quantized=False):
     specs = [
         pl.BlockSpec((None, g, dk), lambda i: (i, 0, 0)),    # q
         pl.BlockSpec((None, g), lambda i: (i, 0)),           # qz
         pl.BlockSpec((None, nmax, dk), lambda i: (i, 0, 0)),  # kt
         pl.BlockSpec((None, nmax, dv), lambda i: (i, 0, 0)),  # vt
+    ]
+    if quantized:
+        specs += [
+            pl.BlockSpec((None, nmax), lambda i: (i, 0)),    # kt scale
+            pl.BlockSpec((None, nmax), lambda i: (i, 0)),    # vt scale
+        ]
+    specs += [
         pl.BlockSpec((None, nmax), lambda i: (i, 0)),        # skz
         pl.BlockSpec((None, nmax), lambda i: (i, 0)),        # spos
         pl.BlockSpec((1,), lambda i: (i,)),                  # searchable
@@ -229,6 +247,57 @@ def cauchy_decode_fused(q, qz, kt, vt, skz, spos, searchable, pos,
         kernel,
         grid=(f,),
         in_specs=_row_specs(g, nmax, dk, dv, has_mean),
+        out_specs=[
+            pl.BlockSpec((None, g, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, nmax), lambda i: (i, 0)),
+            pl.BlockSpec((None, nmax), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, g, dv), q.dtype),
+            jax.ShapeDtypeStruct((f, nmax), jnp.int32),
+            jax.ShapeDtypeStruct((f, nmax), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*ins)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "window", "chunk", "interpret")
+)
+def cauchy_decode_fused_q(q, qz, kt_q, kt_s, vt_q, vt_s, skz, spos,
+                          searchable, pos, km, vm, ins_kz, ins_pos,
+                          ins_mask, gamma2, *, k: int, window: int = 0,
+                          chunk: int = 1, interpret: bool | None = None):
+    """Quantized-cache fused decode step.
+
+    Same contract as :func:`cauchy_decode_fused` except the caches split
+    into int8 payloads ``kt_q/vt_q`` (f, Nmax, d) + per-row f32 scales
+    ``kt_s/vt_s`` (f, Nmax); only the gathered candidate rows are
+    dequantized in-kernel.  ``km/vm`` arrive PRE-dequantized f32 — the
+    caller quantizes the running mean once and hands both paths the same
+    reconstruction, so fused == staged exactly.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    f, g, dk = q.shape
+    nmax = kt_q.shape[1]
+    dv = vt_q.shape[-1]
+    has_mean = km is not None
+    kernel = _make_kernel(nmax, g, k, window, chunk, has_mean,
+                          quantized=True)
+
+    ins = [q, qz, kt_q, vt_q,
+           kt_s.astype(jnp.float32), vt_s.astype(jnp.float32),
+           skz, spos, searchable.astype(jnp.int32), pos.astype(jnp.int32)]
+    if has_mean:
+        ins += [km, vm]
+    ins += [ins_kz.astype(jnp.int32), ins_pos.astype(jnp.int32),
+            ins_mask.astype(jnp.int8), gamma2]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(f,),
+        in_specs=_row_specs(g, nmax, dk, dv, has_mean, quantized=True),
         out_specs=[
             pl.BlockSpec((None, g, dv), lambda i: (i, 0, 0)),
             pl.BlockSpec((None, nmax), lambda i: (i, 0)),
@@ -306,5 +375,82 @@ def _smoke() -> int:
     return 0 if ok else 1
 
 
+def _smoke_q() -> int:
+    """Interpret-mode smoke for the quantized tier: attend_decode on an
+    int8 cache through the fused kernel vs the staged pipeline — both
+    dequantize the same gathered rows, so the match is near-exact.  CI:
+    ``PYTHONPATH=src python -m repro.kernels.decode_fused --dtype int8``.
+    """
+    from repro.core import selection
+    from repro.core import topk as topk_mod
+    from repro.nn.config import ZetaConfig
+    from repro.state import quantize_rows
+
+    B, Hq, Hkv, dk, dv, Nmax = 2, 4, 2, 3, 8, 64
+    zcfg = ZetaConfig(d_k=dk, k=4, num_chunks=8, local_window=2)
+    t0 = 37
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    zk_hist = jnp.tanh(jax.random.normal(ks[0], (B, Hkv, Nmax, dk)))
+    v_hist = jax.random.normal(ks[1], (B, Hkv, Nmax, dv))
+    pos_mask = jnp.arange(Nmax) < t0
+    zk0 = jnp.where(pos_mask[None, None, :, None], zk_hist, 0.0)
+    v0 = jnp.where(pos_mask[None, None, :, None], v_hist, 0.0)
+    f = B * Hkv
+    M = Nmax // zcfg.num_chunks
+    zk_q, zk_s = quantize_rows(zk0)
+    v_q, v_s = quantize_rows(v0)
+    zk0_dq = zk_q.astype(jnp.float32) * zk_s
+    kz = selection.morton_codes(
+        zk0_dq.reshape(f, Nmax, dk), bits=zcfg.bits, bound=zcfg.bound
+    )
+    skz, spos = topk_mod.sorted_build(
+        kz, jnp.full((f,), max(t0 - M, 0), jnp.int32)
+    )
+    cache = selection.ZetaCache(
+        zk=zk_q, v=v_q, zk_sorted=skz, pos_sorted=spos,
+        ksum=jnp.sum(zk0, axis=2).astype(jnp.float32),
+        vsum=jnp.sum(v0, axis=2).astype(jnp.float32),
+        zk_scale=zk_s, v_scale=v_s,
+    )
+    zq_t = jnp.tanh(jax.random.normal(ks[2], (B, Hq, 1, dk)))
+    zk_t = jnp.tanh(jax.random.normal(ks[3], (B, Hkv, 1, dk)))
+    v_t = jax.random.normal(ks[4], (B, Hkv, 1, dv))
+    t = jnp.full((B,), t0, jnp.int32)
+    act = jnp.ones((B,), bool)
+    g2 = jnp.asarray(0.5)
+
+    out_f, c_f = selection.attend_decode(
+        cache, zq_t, zk_t, v_t, g2, t, act,
+        zcfg=zcfg.replace(backend="pallas_fused"),
+    )
+    out_s, c_s = selection.attend_decode(
+        cache, zq_t, zk_t, v_t, g2, t, act,
+        zcfg=zcfg.replace(backend="xla"),
+    )
+    errs = {
+        "out": float(jnp.abs(out_f - out_s).max()),
+        "skz": int(jnp.abs(c_f.zk_sorted - c_s.zk_sorted).max()),
+        "spos": int(jnp.abs(c_f.pos_sorted - c_s.pos_sorted).max()),
+    }
+    ok = errs["out"] < 1e-5 and errs["skz"] == 0 and errs["spos"] == 0
+    used = selection.decode_backend_name(
+        zcfg.replace(backend="pallas_fused"), str(zq_t.dtype),
+        quantized=True,
+    )
+    ok = ok and used == "pallas_fused"
+    print("decode-fused int8 smoke (interpret="
+          f"{default_interpret()}, path={used}):",
+          " ".join(f"{k_}={v:.2e}" if isinstance(v, float) else
+                   f"{k_}={v}" for k_, v in errs.items()),
+          "OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
 if __name__ == "__main__":
-    raise SystemExit(_smoke())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dtype", choices=("f32", "int8"), default="f32",
+                    help="which cache tier to smoke-test")
+    args = ap.parse_args()
+    raise SystemExit(_smoke_q() if args.dtype == "int8" else _smoke())

@@ -76,6 +76,14 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype):
     """The whole model's declared cache structure, UNstacked per layer
     (stacked cache leaves carry an extra leading layer dim that broadcasts
     against the spec — see ``repro.state.reset_slots``)."""
+    if jnp.dtype(dtype) == jnp.int8 and (cfg.mixer != "attn"
+                                         or is_encdec(cfg)):
+        # The quantized tier (§2c) only exists for the ZETA attention cache;
+        # SSD conv/state carries and enc-dec memory have no int8 layout.
+        raise ValueError(
+            "int8 cache dtype requires mixer='attn' decoder-only models "
+            f"(got mixer={cfg.mixer!r}, enc_layers={cfg.enc_layers})"
+        )
     if is_encdec(cfg):
         return {
             "self": attn_cache_spec(cfg, batch, max_len, dtype),

@@ -152,12 +152,23 @@ def _zeta_gamma2(p, dtype):
 
 
 def _zeta_cache_view(cache) -> selection.ZetaCache:
-    """The ZETA slice of the layer cache as the selection core's view."""
+    """The ZETA slice of the layer cache as the selection core's view.
+    Quantized caches (int8 payloads) carry the sibling scale fields; their
+    presence is what flips the selection core into dequant-on-gather
+    mode."""
     return selection.ZetaCache(
         zk=cache["zk"], v=cache["v"], zk_sorted=cache["zk_sorted"],
         pos_sorted=cache["pos_sorted"], ksum=cache["ksum"],
         vsum=cache["vsum"],
+        zk_scale=cache.get("zk_scale"), v_scale=cache.get("v_scale"),
     )
+
+
+def _zeta_cache_update(zc: selection.ZetaCache) -> dict:
+    """New cache entries from a selection-core result: the scale fields
+    exist only in the quantized tier, so None entries are dropped instead
+    of polluting f32 cache dicts."""
+    return {k: v for k, v in zc._asdict().items() if v is not None}
 
 
 # ------------------------------------------------------------------ apply
@@ -257,6 +268,13 @@ def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
     per-slot reset rule needs no shape detection."""
     hkv, hd = cfg.kv_heads, cfg.resolved_head_dim
     F = state.CacheField
+    quantized = jnp.dtype(dtype) == jnp.int8
+    if quantized and (cfg.attention != "zeta" or cfg.mla is not None):
+        raise ValueError(
+            "int8 cache dtype is the ZETA quantized tier "
+            "(docs/ARCHITECTURE.md §2c): it requires attention='zeta' "
+            "without MLA — other paths have no dequant-on-gather stage."
+        )
     if cfg.mla is not None:
         m = cfg.mla
         spec = {
@@ -282,6 +300,12 @@ def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
             "ksum": F((batch, hkv_eff, z.d_k), jnp.float32),
             "vsum": F((batch, hkv_eff, dv), jnp.float32),
         })
+        if quantized:
+            # Sibling per-row scale columns (§2c): payloads stay int8 in
+            # HBM/VMEM, scales ride along as (..., max_len, 1) f32 so the
+            # masked row/chunk write primitives apply unchanged.
+            spec["zk_scale"] = F((batch, hkv_eff, max_len, 1), jnp.float32)
+            spec["v_scale"] = F((batch, hkv, max_len, 1), jnp.float32)
     spec["length"] = F((batch,), jnp.int32)
     return spec
 
@@ -326,7 +350,8 @@ def attn_decode_step(p, cache, x_t: jax.Array, cfg: ModelConfig,
             _zeta_gamma2(p, x_t.dtype), t, active, zcfg=cfg.zeta,
         )
         new_cache = dict(
-            cache, **zc._asdict(), length=jnp.where(active, t + 1, t),
+            cache, **_zeta_cache_update(zc),
+            length=jnp.where(active, t + 1, t),
         )
     else:
         q_t = _split_heads(linear_apply(p["wq"], x_t, prec), hq)
@@ -392,7 +417,8 @@ def attn_prefill(p, cache, x_chunk: jax.Array, cfg: ModelConfig,
             _zeta_gamma2(p, x_chunk.dtype), positions, token_mask,
             zcfg=cfg.zeta,
         )
-        new_cache = dict(cache, **zc._asdict(), length=t0 + n_valid)
+        new_cache = dict(cache, **_zeta_cache_update(zc),
+                         length=t0 + n_valid)
     else:
         q_c = _split_heads(linear_apply(p["wq"], x_chunk, prec), hq)
         k_c = _split_heads(linear_apply(p["wk"], x_chunk, prec), hkv)

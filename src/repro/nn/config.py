@@ -27,6 +27,10 @@ class ZetaConfig:
     # Attention backend name from repro.backend's registry ("reference" /
     # "xla" / "pallas" / ...); None = capability-based auto-selection.
     backend: str | None = None
+    # Per-core VMEM budget (bytes) for the fused-kernel residency guards
+    # in backend/backends.py.  None = the REPRO_FUSED_VMEM_BUDGET env var
+    # if set, else the built-in 14 MiB v5e default.
+    fused_vmem_budget: int | None = None
     # ---- beyond-paper performance flags (see launch/optimized.py) ----
     shard_search: bool = False       # shard the z-search over batch*heads
     group_search: bool = False       # GQA: sort once per KV head, not per Q head

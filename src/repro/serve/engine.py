@@ -88,7 +88,7 @@ class ServeEngine:
                  speculation: SpeculationConfig | None = None,
                  bos_id: int | None = None, max_eos: int = 4,
                  max_stops: int = 4, max_stop_len: int = 8,
-                 history_len: int = 32):
+                 history_len: int = 32, cache_dtype=jnp.float32):
         """``seed`` keys the engine's base PRNG stream; ``bos_id``
         (default ``cfg.bos_id``) is fed for empty prompts; ``max_eos`` /
         ``max_stops`` / ``max_stop_len`` size the padded per-slot
@@ -97,7 +97,10 @@ class ServeEngine:
         generated).  ``speculation`` switches generating slots from
         one-token decode steps to draft-verify rounds (see
         ``repro.spec``): output is token-identical, the round emits up
-        to ``speculation.chunk`` tokens per slot."""
+        to ``speculation.chunk`` tokens per slot.  ``cache_dtype``
+        selects the K/V cache tier — ``jnp.int8`` stores ZETA coords and
+        values quantized per row with in-kernel dequant-on-gather
+        (docs/ARCHITECTURE.md §2c); compute stays in ``prec``."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if history_len < max_stop_len - 1:
@@ -119,7 +122,9 @@ class ServeEngine:
         self.scheduler = scheduler
         self.prefill_chunk = prefill_chunk
         self.bos_id = cfg.bos_id if bos_id is None else bos_id
-        self._raw_step = make_serve_step(cfg, prec)
+        self.cache_dtype = jnp.dtype(cache_dtype)
+        self._raw_step = make_serve_step(cfg, prec,
+                                         cache_dtype=self.cache_dtype)
         self._raw_prefill = make_prefill_step(cfg, prec)
         self.step_fn = jax.jit(self._raw_step)
         self.prefill_fn = jax.jit(self._raw_prefill)
@@ -141,7 +146,8 @@ class ServeEngine:
         self.slot_pending: list[deque[int]] = [deque() for _ in
                                                range(batch_slots)]
         self.slot_phase: list[str] = ["idle"] * batch_slots
-        self.cache = api.cache_init(cfg, batch_slots, max_len, jnp.float32)
+        self.cache = api.cache_init(cfg, batch_slots, max_len,
+                                    self.cache_dtype)
         self.slot_spec = sample.slot_spec(
             batch_slots, max_eos=max_eos, max_stops=max_stops,
             max_stop_len=max_stop_len,
@@ -425,7 +431,7 @@ class ServeEngine:
         if not self.queue:
             return
         self.cache = api.cache_init(
-            self.cfg, self.b, self.max_len, jnp.float32
+            self.cfg, self.b, self.max_len, self.cache_dtype
         )
         for i in range(self.b):
             if self.queue:

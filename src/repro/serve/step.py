@@ -35,7 +35,8 @@ from repro.nn.config import ModelConfig
 from repro.nn.module import Precision
 
 
-def make_serve_step(cfg: ModelConfig, prec: Precision) -> Callable:
+def make_serve_step(cfg: ModelConfig, prec: Precision, *,
+                    cache_dtype=jnp.float32) -> Callable:
     """Build the one-token decode step.
 
     Contract::
@@ -72,9 +73,11 @@ def make_serve_step(cfg: ModelConfig, prec: Precision) -> Callable:
     serve_step.attention_backend = resolved
     # Shape-independent probe (the in-trace dispatch re-checks with real
     # Nmax/head dims and may still fall back to the staged pipeline on
-    # VMEM-residency grounds).
+    # VMEM-residency grounds).  int8 caches probe the decode_q stage.
+    quantized = jnp.dtype(cache_dtype) == jnp.int8
     serve_step.decode_path = (
-        selection.decode_backend_name(cfg.zeta, "float32") or "staged"
+        selection.decode_backend_name(cfg.zeta, "float32",
+                                      quantized=quantized) or "staged"
     )
     return serve_step
 

@@ -2,24 +2,36 @@
 
 Mixers declare their decode-cache fields as :class:`CacheField` specs;
 init / per-slot reset / masked writes / layer stacking live here, once.
+The quantized storage tier (int8 payload + per-row f32 scale siblings,
+docs/ARCHITECTURE.md §2c) shares the same write primitives.
 """
 
 from repro.state.spec import (  # noqa: F401
+    QUANT_EPS,
     CacheField,
     chunk_write,
+    chunk_write_quant,
+    dequantize_rows,
     init_cache,
     is_field,
+    quantize_rows,
     reset_slots,
     row_write,
+    row_write_quant,
     stack_layers,
 )
 
 __all__ = [
+    "QUANT_EPS",
     "CacheField",
     "chunk_write",
+    "chunk_write_quant",
+    "dequantize_rows",
     "init_cache",
     "is_field",
+    "quantize_rows",
     "reset_slots",
     "row_write",
+    "row_write_quant",
     "stack_layers",
 ]

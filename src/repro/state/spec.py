@@ -141,3 +141,58 @@ def chunk_write(cache_arr: jax.Array, new_vals: jax.Array,
     return cache_arr.at[b_idx, :, wpos].set(
         new_vals.transpose(0, 2, 1, 3).astype(cache_arr.dtype), mode="drop"
     )
+
+
+# --------------------------------------------------- quantized storage tier
+
+QUANT_EPS = 1e-8  # floor on amax so all-zero rows quantize to scale eps/127
+
+
+def quantize_rows(x: jax.Array, *, eps: float = QUANT_EPS):
+    """Per-row symmetric int8 quantization over the last axis.
+
+    Returns ``(q, scale)`` with ``q`` int8 of ``x.shape`` and ``scale``
+    f32 of ``x.shape[:-1] + (1,)``; ``scale = max(amax(|row|), eps)/127``
+    so dequant ``q * scale`` reconstructs each element within
+    ``amax/254`` (half a quantization step).  Same idiom as
+    ``optim/compress.int8_quantize`` but per row — one scale per cached
+    token keeps the error proportional to that token's own magnitude.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, eps) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_rows`: ``q * scale`` in ``dtype``."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def row_write_quant(payload: jax.Array, scales: jax.Array,
+                    new_vals: jax.Array, t: jax.Array, active: jax.Array,
+                    *, seq_axis: int = 2):
+    """:func:`row_write` into a quantized (int8 payload + f32 scale) pair.
+
+    ``scales`` has the payload's shape with trailing dim 1 (per-row
+    scale); both arrays are written at the same positions so a row and
+    its scale never go out of sync.
+    """
+    q, s = quantize_rows(new_vals)
+    return (
+        row_write(payload, q, t, active, seq_axis=seq_axis),
+        row_write(scales, s, t, active, seq_axis=seq_axis),
+    )
+
+
+def chunk_write_quant(payload: jax.Array, scales: jax.Array,
+                      new_vals: jax.Array, positions: jax.Array,
+                      token_mask: jax.Array, *, seq_axis: int = 2):
+    """:func:`chunk_write` into a quantized (payload, scale) pair."""
+    q, s = quantize_rows(new_vals)
+    return (
+        chunk_write(payload, q, positions, token_mask, seq_axis=seq_axis),
+        chunk_write(scales, s, positions, token_mask, seq_axis=seq_axis),
+    )

@@ -213,10 +213,15 @@ def test_all_gates_pass_and_json_schema(quality):
 def test_generate_facade_metric_reported(quality):
     results, _ = quality
     gen = results["tasks"]["mqar"]["metrics"]["generate_acc"]["zeta"]
-    assert set(gen) == {"reference", "xla"}
+    # int8 runs follow the requested gen backends: reference has no
+    # dequant stage, so only xla picks up a "+int8" sibling here.
+    assert set(gen) == {"reference", "xla", "xla+int8"}
     gv = [g for g in results["gates"] if g["kind"] == "generate_vs_tf"]
     assert {g["name"].rsplit("/", 1)[1] for g in gv} == {"reference",
                                                          "xla"}
+    qc = [g for g in results["gates"] if g["kind"] == "quantized_cache"]
+    assert {g["name"].rsplit("/", 1)[1] for g in qc} == {"xla"}
+    assert all(g["ok"] for g in qc)
 
 
 @pytest.mark.slow

@@ -1,0 +1,316 @@
+"""Quantized (int8) K/V cache tier tests — docs/ARCHITECTURE.md §2c.
+
+Four layers of pinning:
+
+  1. the quantize/dequant row primitives (round-trip bound, degenerate
+     rows, write-primitive composition);
+  2. the itemsize-aware VMEM residency guards (int8 admits shapes f32
+     rejects; the f32 tile terms are unchanged; budget resolution
+     arg > env > default, plus the ``ZetaConfig.fused_vmem_budget`` knob);
+  3. scoring-stage parity (fused-int8 vs staged-int8 at float-rounding
+     level, both vs the f32 oracle within the quantization bound);
+  4. the real layer: int8 decode/prefill vs the f32 layer across
+     GQA / history_mean / local_window variants through both the staged
+     (xla) and fused (pallas_fused) paths, and prefill-vs-decode mode
+     parity inside the int8 tier.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import state
+from repro.backend import quantized_parity_check, registry
+from repro.backend.backends import (
+    _DEFAULT_FUSED_VMEM_BUDGET,
+    fits_decode_residency,
+    fits_fused_residency,
+    fused_vmem_budget,
+)
+from repro.core import selection
+from repro.models import api
+from repro.nn.attention import (
+    attn_cache_init,
+    attn_cache_spec,
+    attn_decode_step,
+    attn_init,
+    attn_prefill,
+)
+from repro.nn.config import ModelConfig, ZetaConfig
+from repro.nn.module import F32
+
+# ------------------------------------------------------------- primitives
+
+
+@given(
+    st.lists(st.floats(-8.0, 8.0, allow_nan=False, width=32),
+             min_size=2, max_size=16),
+)
+@settings(max_examples=40, deadline=None)
+def test_quantize_roundtrip_bound(row):
+    """Per-row symmetric int8: round-trip error is at most half a step,
+    amax/254 per element (plus float slack)."""
+    x = jnp.asarray(row, jnp.float32)[None, :]
+    q, s = state.quantize_rows(x)
+    back = state.dequantize_rows(q, s)
+    amax = float(jnp.max(jnp.abs(x)))
+    bound = max(amax, state.QUANT_EPS) / 254.0
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert q.dtype == jnp.int8
+    assert err <= bound * (1 + 1e-5) + 1e-9
+
+
+def test_quantize_zero_row_exact():
+    q, s = state.quantize_rows(jnp.zeros((3, 4), jnp.float32))
+    assert int(jnp.max(jnp.abs(q))) == 0
+    np.testing.assert_array_equal(
+        np.asarray(state.dequantize_rows(q, s)), np.zeros((3, 4), np.float32)
+    )
+
+
+def test_quantize_rows_per_row_scales():
+    """Scales are per ROW (last axis reduced): scaling one row does not
+    perturb another row's reconstruction."""
+    x = jnp.asarray([[1.0, -0.5, 0.25], [100.0, -50.0, 25.0]], jnp.float32)
+    q, s = state.quantize_rows(x)
+    assert s.shape == (2, 1)
+    back = np.asarray(state.dequantize_rows(q, s))
+    assert abs(back[0, 0] - 1.0) < 1.0 / 254.0 + 1e-6
+    assert abs(back[1, 0] - 100.0) < 100.0 / 254.0 + 1e-4
+
+
+def test_row_write_quant_composes():
+    """row_write_quant == quantize_rows + two plain row_writes."""
+    key = jax.random.PRNGKey(0)
+    payload = jnp.zeros((2, 3, 8, 4), jnp.int8)
+    scales = jnp.zeros((2, 3, 8, 1), jnp.float32)
+    new = jax.random.normal(key, (2, 3, 1, 4), jnp.float32)
+    t = jnp.asarray([2, 5], jnp.int32)
+    active = jnp.asarray([True, True])
+    p2, s2 = state.row_write_quant(payload, scales, new, t, active)
+    q, s = state.quantize_rows(new)
+    np.testing.assert_array_equal(
+        np.asarray(p2), np.asarray(state.row_write(payload, q, t, active)))
+    np.testing.assert_array_equal(
+        np.asarray(s2), np.asarray(state.row_write(scales, s, t, active)))
+
+
+# ------------------------------------------------------- residency guards
+
+
+def _kv_structs(nkv, dtype, dk=3, dv=64):
+    return (jax.ShapeDtypeStruct((1, nkv, dk), dtype),
+            jax.ShapeDtypeStruct((1, nkv, dv), dtype))
+
+
+def test_fused_residency_int8_widens_window():
+    """An Nkv whose f32 K/V block overflows the default budget stays
+    resident at int8 (payload itemsize 1 + 8 scale bytes/row)."""
+    nkv = 65536  # f32: 65536*(3+64)*4 = 16.8 MiB > 14 MiB default
+    kt32, vt32 = _kv_structs(nkv, jnp.float32)
+    kt8, vt8 = _kv_structs(nkv, jnp.int8)
+    assert not fits_fused_residency(kt32, vt32, 33)
+    assert fits_fused_residency(kt8, vt8, 33, extra_row_bytes=8)
+
+
+def test_fused_residency_tile_terms_stay_f32():
+    """The per-tile working-set term is dtype-independent (compute is
+    always f32): an int8 block with a huge K still gets rejected even
+    though its resident payload is tiny."""
+    kt8, vt8 = _kv_structs(256, jnp.int8)
+    assert fits_fused_residency(kt8, vt8, 33, extra_row_bytes=8)
+    # block_n * (kk*(dk+dv+2) + dk+dv) * 4 bytes must blow the budget on
+    # its own: kk = 500_000 -> 128 * 500k * 69 * 4 ≈ 17.6 GiB
+    assert not fits_fused_residency(kt8, vt8, 500_000, extra_row_bytes=8)
+
+
+def test_budget_resolution_order(monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED_VMEM_BUDGET", raising=False)
+    assert fused_vmem_budget() == _DEFAULT_FUSED_VMEM_BUDGET
+    monkeypatch.setenv("REPRO_FUSED_VMEM_BUDGET", "1024")
+    assert fused_vmem_budget() == 1024
+    # explicit argument beats the environment
+    assert fused_vmem_budget(2048) == 2048
+
+
+def test_env_budget_flips_residency(monkeypatch):
+    kt, vt = _kv_structs(256, jnp.float32)
+    assert fits_fused_residency(kt, vt, 9)
+    monkeypatch.setenv("REPRO_FUSED_VMEM_BUDGET", "1024")
+    assert not fits_fused_residency(kt, vt, 9)
+    # per-call budget argument still wins over the env
+    assert fits_fused_residency(kt, vt, 9, budget=_DEFAULT_FUSED_VMEM_BUDGET)
+
+
+def test_decode_residency_itemsize_aware():
+    """A cache length whose f32 rows overflow fits at int8 + scale cols."""
+    nmax, dk, dv, g, kk = 180_000, 3, 16, 2, 9
+    # f32: 180k*(19*4 + 16) ≈ 15.8 MiB > budget; int8: 180k*(19 + 8 + 16)
+    # ≈ 7.4 MiB
+    assert not fits_decode_residency(nmax, dk, dv, 4, g, kk)
+    assert fits_decode_residency(nmax, dk, dv, 1, g, kk, scale_bytes=8)
+
+
+def test_config_budget_reaches_decode_selection():
+    z = ZetaConfig(d_k=3, k=4, num_chunks=4, backend="pallas_fused")
+    assert selection.decode_backend_name(
+        z, "float32", nmax=64, dk=3, dv=16, g=2) == "pallas_fused"
+    z_tiny = z.replace(fused_vmem_budget=1024)
+    assert selection.decode_backend_name(
+        z_tiny, "float32", nmax=64, dk=3, dv=16, g=2) is None
+
+
+def test_select_decode_backend_gates_non_cauchy():
+    """Satellite: no registered backend throws from inside selection —
+    non-cauchy scores simply resolve to the staged pipeline."""
+    assert registry.select_decode_backend(score="neg_euclid") is None
+    assert registry.select_decode_backend(
+        score="neg_euclid", quantized=True) is None
+    z = ZetaConfig(d_k=3, k=4, num_chunks=4, score="neg_euclid")
+    assert selection.decode_backend_name(z, "float32") is None
+
+
+def test_support_matrix_has_quantized_column():
+    m = {r["backend"]: r for r in registry.support_matrix()}
+    assert m["pallas_fused"]["quantized_cache"] == "yes"
+    assert m["reference"]["quantized_cache"] == "yes"
+    assert "quantized_cache" in registry.support_matrix_markdown()
+
+
+# ---------------------------------------------------- stage-level parity
+
+
+def test_stage_parity_fused_vs_staged_int8():
+    """Fused dequant-on-gather == dequantize-at-gather + XLA scorer, to
+    float rounding (identical quantized inputs)."""
+    for r in quantized_parity_check():
+        assert r.ok(1e-4), r
+
+
+def test_stage_parity_int8_vs_f32_oracle():
+    """int8 scoring vs the f32 oracle on the raw tensors: bounded by the
+    per-row quantization step carried through Cauchy scoring."""
+    for r in quantized_parity_check(oracle=True):
+        assert r.max_abs_err < 0.05, r
+
+
+# ------------------------------------------------------- layer-level e2e
+
+B, MAX_LEN, T = 2, 32, 12
+
+VARIANTS = [
+    pytest.param(dict(n_heads=4, n_kv_heads=2), dict(), id="gqa"),
+    pytest.param(dict(n_heads=2, n_kv_heads=2), dict(history_mean=False),
+                 id="no_mean"),
+    pytest.param(dict(n_heads=4, n_kv_heads=2), dict(local_window=2),
+                 id="local_window"),
+]
+
+
+def _cfg(heads: dict, zeta_over: dict, backend=None) -> ModelConfig:
+    zeta = ZetaConfig(d_k=3, k=4, num_chunks=4, backend=backend,
+                      **zeta_over)
+    return ModelConfig(
+        name="t-quant", vocab=32, d_model=32, d_ff=64, n_layers=1,
+        attention="zeta", zeta=zeta, **heads,
+    )
+
+
+def _layer_inputs(cfg):
+    key = jax.random.PRNGKey(7)
+    params = attn_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (B, T, cfg.d_model),
+                          jnp.float32) * 0.5
+    return params, x
+
+
+def _decode_all(params, cfg, x, dtype):
+    cache = attn_cache_init(cfg, B, MAX_LEN, dtype)
+    ys = []
+    for t in range(T):
+        y, cache = attn_decode_step(params, cache, x[:, t:t + 1], cfg, F32)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), cache
+
+
+@pytest.mark.parametrize("heads,zeta_over", VARIANTS)
+@pytest.mark.parametrize("backend", ["xla", "pallas_fused"])
+def test_layer_decode_int8_close_to_f32(heads, zeta_over, backend):
+    cfg = _cfg(heads, zeta_over, backend=backend)
+    params, x = _layer_inputs(cfg)
+    y32, _ = _decode_all(params, cfg, x, jnp.float32)
+    y8, cache8 = _decode_all(params, cfg, x, jnp.int8)
+    assert cache8["zk"].dtype == jnp.int8
+    assert cache8["zk_scale"].dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(y8 - y32))) < 0.05
+
+
+@pytest.mark.parametrize("heads,zeta_over", VARIANTS)
+def test_layer_decode_int8_fused_matches_staged(heads, zeta_over):
+    """Inside the int8 tier, the fused decode kernel and the staged
+    pipeline see the SAME dequantized rows (quantize-once mean fold,
+    morton codes from dequantized storage) — so they agree to float
+    rounding, not just to quantization tolerance."""
+    pf = _cfg(heads, zeta_over, backend="pallas_fused")
+    xla = _cfg(heads, zeta_over, backend="xla")
+    params, x = _layer_inputs(pf)
+    y_f, cache_f = _decode_all(params, pf, x, jnp.int8)
+    y_s, cache_s = _decode_all(params, xla, x, jnp.int8)
+    assert float(jnp.max(jnp.abs(y_f - y_s))) < 1e-4
+    np.testing.assert_array_equal(np.asarray(cache_f["zk_sorted"]),
+                                  np.asarray(cache_s["zk_sorted"]))
+
+
+@pytest.mark.parametrize("heads,zeta_over", VARIANTS)
+@pytest.mark.parametrize("backend", [None, "xla", "pallas_fused"])
+def test_layer_prefill_matches_decode_int8(heads, zeta_over, backend):
+    """Mode parity inside the quantized tier: one bulk prefill call over
+    the chunk equals T sequential decode steps — cache included (the
+    sorted z-codes must be bit-identical because both modes derive morton
+    codes from the DEQUANTIZED stored rows)."""
+    cfg = _cfg(heads, zeta_over, backend=backend)
+    params, x = _layer_inputs(cfg)
+    y_dec, cache_dec = _decode_all(params, cfg, x, jnp.int8)
+    cache = attn_cache_init(cfg, B, MAX_LEN, jnp.int8)
+    y_pre, cache_pre = attn_prefill(params, cache, x, cfg, F32,
+                                    jnp.ones((B, T), bool))
+    assert float(jnp.max(jnp.abs(y_pre - y_dec))) < 1e-4
+    np.testing.assert_array_equal(np.asarray(cache_pre["zk_sorted"]),
+                                  np.asarray(cache_dec["zk_sorted"]))
+    np.testing.assert_array_equal(np.asarray(cache_pre["zk"]),
+                                  np.asarray(cache_dec["zk"]))
+    np.testing.assert_array_equal(np.asarray(cache_pre["zk_scale"]),
+                                  np.asarray(cache_dec["zk_scale"]))
+
+
+# ------------------------------------------------------------ validation
+
+
+def test_int8_cache_spec_requires_zeta():
+    full = ModelConfig(name="t", vocab=32, d_model=32, d_ff=64,
+                       n_layers=1, n_heads=2, attention="full")
+    with pytest.raises(ValueError, match="quantized tier"):
+        attn_cache_spec(full, 1, 8, jnp.int8)
+
+
+def test_int8_cache_spec_requires_attn_mixer():
+    ssd = ModelConfig(name="t", vocab=32, d_model=32, d_ff=64,
+                      n_layers=1, n_heads=2, mixer="ssd")
+    with pytest.raises(ValueError, match="mixer='attn'"):
+        api.cache_spec(ssd, 1, 8, jnp.int8)
+
+
+def test_int8_cache_reset_slots_roundtrip():
+    """Slot recycling works on the quantized layout: the live-cache probe
+    regenerates the int8 spec (scale fields included) from dtype alone."""
+    cfg = _cfg(dict(n_heads=2, n_kv_heads=2), dict())
+    params, x = _layer_inputs(cfg)
+    full = {"layers": api.cache_init(cfg, B, MAX_LEN, jnp.int8)["layers"]}
+    reset = api.cache_reset_slots(cfg, full, jnp.asarray([True, False]))
+    fresh = api.cache_init(cfg, B, MAX_LEN, jnp.int8)
+    lay, ref_ = reset["layers"], fresh["layers"]
+    for k in ("zk", "zk_scale", "v", "v_scale", "zk_sorted"):
+        np.testing.assert_array_equal(np.asarray(lay[k][:, :1]),
+                                      np.asarray(ref_[k][:, :1]))
