@@ -15,7 +15,7 @@ from repro.data.mqar import mqar_batch
 from repro.nn.config import ModelConfig, ZetaConfig
 from repro.nn.module import F32
 from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
-from repro.train import init_train_state, make_train_step, make_eval_step
+from repro.train import init_train_state, make_eval_step, make_train_step
 
 VOCAB = 64
 SEQ = 32

@@ -31,7 +31,8 @@ def overlap(n: int, dk: int, seed: int = 0) -> float:
         :, 1: TOPN + 1
     ]
     return float(np.mean([
-        len(set(a) & set(b)) / TOPN for a, b in zip(true_nn, z_nn)
+        len(set(a) & set(b)) / TOPN
+        for a, b in zip(true_nn, z_nn, strict=True)
     ]))
 
 

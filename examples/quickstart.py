@@ -27,7 +27,7 @@ def main() -> None:
 
     print(f"model: {cfg.name}  params: "
           f"{sum(p.size for p in jax.tree.leaves(state['params'])):,}")
-    for i, batch in zip(range(20), loader):
+    for i, batch in zip(range(20), loader, strict=False):
         state, metrics = step(state, batch)
         if (i + 1) % 5 == 0:
             print(f"step {i + 1:3d}  loss {float(metrics['loss']):.3f}")

@@ -1,0 +1,54 @@
+"""Static analysis for the repro tree: architectural lint (AST),
+registry cross-checks, and the trace-contract analyzer.
+
+Importing this package stays jax-light (rules + HLO text helpers only);
+the trace layer imports jax lazily inside its functions.  CLI:
+``python -m repro.analysis`` (see ``__main__``).
+"""
+
+from repro.analysis.astlint import lint_source, lint_tree
+from repro.analysis.hlo import (
+    candidate_buffers,
+    compiled_text,
+    has_f64,
+    hlo_shapes,
+    leading_buffers,
+)
+from repro.analysis.registrycheck import check_registry
+from repro.analysis.rules import (
+    ALLOWLIST,
+    RULES,
+    RULES_BY_ID,
+    Allowance,
+    Rule,
+    Violation,
+)
+
+__all__ = [
+    "ALLOWLIST",
+    "RULES",
+    "RULES_BY_ID",
+    "Allowance",
+    "Rule",
+    "Violation",
+    "candidate_buffers",
+    "check_registry",
+    "compiled_text",
+    "has_f64",
+    "hlo_shapes",
+    "leading_buffers",
+    "lint_source",
+    "lint_tree",
+    "run_all",
+]
+
+
+def run_all(include_trace: bool = True) -> list[Violation]:
+    """Every check; the trace layer (jit/compile + VMEM audit) is the
+    expensive part and can be skipped."""
+    out = lint_tree() + check_registry()
+    if include_trace:
+        from repro.analysis import tracecheck
+
+        out += tracecheck.run()
+    return out

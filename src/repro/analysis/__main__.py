@@ -1,0 +1,90 @@
+"""``python -m repro.analysis`` — run the architectural lint and the
+trace-contract analyzer; exit non-zero on any violation.
+
+    PYTHONPATH=src python -m repro.analysis            # full run
+    PYTHONPATH=src python -m repro.analysis --skip-trace  # AST+registry only
+    PYTHONPATH=src python -m repro.analysis --json report.json
+    PYTHONPATH=src python -m repro.analysis --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.rules import ALLOWLIST, RULES
+
+
+def _list_rules() -> str:
+    lines = []
+    for r in RULES:
+        lines.append(f"[{r.layer:8s}] {r.id}")
+        lines.append(f"           {r.title}")
+        lines.append(f"           why: {r.why}")
+    lines.append(f"\n{len(ALLOWLIST)} allowance(s):")
+    for a in ALLOWLIST:
+        lines.append(f"  {a.rule} @ {a.path} ({a.match!r}): "
+                     f"{a.justification}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="architectural lint + trace-contract analyzer",
+    )
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a machine-readable report")
+    ap.add_argument("--skip-trace", action="store_true",
+                    help="skip layer 2 (jit/compile checks + VMEM audit); "
+                         "AST lint and registry checks only")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule inventory and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    from repro.analysis.astlint import lint_tree
+    from repro.analysis.registrycheck import check_registry
+
+    violations = lint_tree()
+    violations += check_registry()
+    layers = ["ast", "registry"]
+    if not args.skip_trace:
+        from repro.analysis import tracecheck
+
+        violations += tracecheck.run()
+        layers.append("trace")
+
+    for v in violations:
+        print(v.format())
+
+    counts: dict[str, int] = {}
+    for v in violations:
+        counts[v.rule] = counts.get(v.rule, 0) + 1
+    report = {
+        "ok": not violations,
+        "layers": layers,
+        "rules": [r.id for r in RULES],
+        "counts": counts,
+        "violations": [v.as_dict() for v in violations],
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"report written to {args.json}")
+
+    if violations:
+        print(f"FAIL: {len(violations)} violation(s) across "
+              f"{len(counts)} rule(s)")
+        return 1
+    print(f"OK: {'+'.join(layers)} layers clean "
+          f"({len(RULES)} rules, {len(ALLOWLIST)} allowances)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

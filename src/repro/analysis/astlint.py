@@ -1,0 +1,201 @@
+"""Layer 1 — AST architectural lint over ``src/``.
+
+One ``ast`` walk per file; each rule contributes a node predicate.  The
+engine is deliberately dumb-but-total: it matches *names and call shapes*,
+not data flow, so a violation is always a one-line fix or a reviewed
+:class:`~repro.analysis.rules.Allowance`.  ``lint_source`` is the same
+entry the mutation-style self-tests feed known-bad snippets through, so
+every rule's detector is itself pinned by a fixture.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.rules import (
+    ALLOWLIST,
+    RULES,
+    RULES_BY_ID,
+    SELECTION_OWNERS,
+    SELECTION_PRIMITIVES,
+    Violation,
+)
+
+_HOST_SYNC_NP_NAMES = {"np", "numpy"}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """Trailing name of the called object: f() -> f, m.f() -> f."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _dotted(node: ast.expr) -> str | None:
+    """'jnp.repeat'-style dotted name for Name/Attribute chains."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _axis_of_repeat(node: ast.Call) -> ast.expr | None:
+    """The axis argument of jnp.repeat(a, reps, axis) if present."""
+    for kw in node.keywords:
+        if kw.arg == "axis":
+            return kw.value
+    if len(node.args) >= 3:
+        return node.args[2]
+    return None
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: str, src: str):
+        self.path = path
+        self.lines = src.splitlines()
+        self.found: list[Violation] = []
+
+    # -- helpers ---------------------------------------------------------
+
+    def _in_scope(self, rule_id: str) -> bool:
+        return RULES_BY_ID[rule_id].applies_to(self.path)
+
+    def _line(self, node: ast.AST) -> str:
+        ln = getattr(node, "lineno", 0)
+        return self.lines[ln - 1] if 0 < ln <= len(self.lines) else ""
+
+    def _flag(self, rule_id: str, node: ast.AST, message: str) -> None:
+        if not self._in_scope(rule_id):
+            return
+        line_text = self._line(node)
+        for allow in ALLOWLIST:
+            if allow.covers(rule_id, self.path, line_text):
+                return
+        self.found.append(Violation(
+            rule=rule_id, path=self.path,
+            line=getattr(node, "lineno", 0), message=message,
+        ))
+
+    # -- node hooks ------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        dotted = _dotted(node.func)
+
+        if (name in SELECTION_PRIMITIVES
+                and not any(self.path == p for p in SELECTION_OWNERS)):
+            self._flag(
+                "selection-core-ownership", node,
+                f"call to selection primitive {name}() outside the "
+                "selection core — go through attend_train / "
+                "attend_prefill / attend_decode (core/selection.py)",
+            )
+
+        if name == "item" and not node.args and not node.keywords \
+                and isinstance(node.func, ast.Attribute):
+            self._flag(
+                "no-host-sync", node,
+                ".item() forces a device->host sync inside a "
+                "jit-reachable path",
+            )
+        if dotted == "jax.device_get":
+            self._flag(
+                "no-host-sync", node,
+                "jax.device_get() forces a device->host sync inside a "
+                "jit-reachable path",
+            )
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "asarray"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in _HOST_SYNC_NP_NAMES):
+            self._flag(
+                "no-host-sync", node,
+                f"{node.func.value.id}.asarray() materializes on host "
+                "inside a jit-reachable path (use jnp.asarray)",
+            )
+
+        if dotted in ("jnp.repeat", "jnp.tile") and self._in_scope(
+                "no-cache-repeat"):
+            if dotted == "jnp.tile":
+                self._flag(
+                    "no-cache-repeat", node,
+                    "jnp.tile in a selection/serve path — caches are "
+                    "read per KV head via the grouped primitives, never "
+                    "tiled across the group axis",
+                )
+            else:
+                axis = _axis_of_repeat(node)
+                if isinstance(axis, ast.Constant) and isinstance(
+                        axis.value, int) and axis.value >= 1:
+                    self._flag(
+                        "no-cache-repeat", node,
+                        f"jnp.repeat(..., axis={axis.value}) in a "
+                        "selection/serve path repeats a cache-shaped "
+                        "array across a head/group axis — use the "
+                        "grouped search/gather primitives instead",
+                    )
+
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if (isinstance(node.value, ast.Attribute)
+                and node.value.attr == "at"):
+            self._flag(
+                "cache-writer-ownership", node,
+                "raw .at[...] cache update — route mutation through the "
+                "repro.state writers (row_write / chunk_write / "
+                "*_quant / reset_slots)",
+            )
+        self.generic_visit(node)
+
+    def visit_Constant(self, node: ast.Constant) -> None:
+        v = node.value
+        if isinstance(v, float) and abs(v) >= 1e30:
+            self._flag(
+                "no-raw-sentinel", node,
+                f"raw dtype-sentinel literal {v!r} — derive from the "
+                "dtype (topk.invalid_distance / jnp.finfo) so bf16 "
+                "casts cannot overflow it to inf",
+            )
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str) -> list[Violation]:
+    """Lint one file's source under its repo-relative posix ``path``
+    (e.g. ``"repro/serve/step.py"``).  The self-tests drive this with
+    synthetic snippets; ``lint_tree`` drives it with the real tree."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation(rule="parse-error", path=path,
+                          line=e.lineno or 0, message=str(e.msg))]
+    lint = _FileLint(path, src)
+    lint.visit(tree)
+    return lint.found
+
+
+def lint_tree(src_root: str | Path | None = None) -> list[Violation]:
+    """Walk ``src/`` and lint every module against the AST-layer rules."""
+    root = Path(src_root) if src_root else _default_root()
+    out: list[Violation] = []
+    for py in sorted(root.rglob("*.py")):
+        rel = py.relative_to(root).as_posix()
+        out.extend(lint_source(py.read_text(), rel))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def _default_root() -> Path:
+    """The ``src/`` directory this installed package lives under."""
+    return Path(__file__).resolve().parent.parent.parent
+
+
+def ast_rules() -> list:
+    return [r for r in RULES if r.layer == "ast"]

@@ -1,0 +1,67 @@
+"""Shared HLO-text introspection helpers.
+
+These grew up as private regex helpers copied between
+``tests/test_fused_scoring.py`` and ``tests/test_decode_fused.py``; they
+are now THE one implementation, used by both the tests and the
+trace-contract analyzer (``repro.analysis.tracecheck``).  Everything works
+on the compiled HLO *text* (``jit(f).lower(...).compile().as_text()``)
+because buffer shapes are exactly what the memory pins are about and the
+text survives jax version churn better than internal IR objects.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Callable, Iterable
+
+_SHAPE_RE = re.compile(r"\[([0-9]+(?:,[0-9]+)+)\]")
+
+
+def hlo_shapes(hlo_text: str) -> list[tuple[int, ...]]:
+    """Every multi-dim buffer shape ``[d0,d1,...]`` mentioned in the HLO."""
+    return [
+        tuple(int(d) for d in m.group(1).split(","))
+        for m in _SHAPE_RE.finditer(hlo_text)
+    ]
+
+
+def candidate_buffers(hlo_text: str, n: int, kset: Iterable[int],
+                      dv: int) -> list[tuple[int, ...]]:
+    """Shapes ending in ``(..., n, K', dv)`` with a non-trivial lead — the
+    materialized per-candidate tensors the fused scoring path must not
+    create (per-tile rank-3 kernel buffers are allowed: they live in
+    VMEM).  ``kset`` is the set of admissible candidate counts (k, plus
+    the history-mean / local-window extensions)."""
+    kset = set(kset)
+    return [
+        s for s in hlo_shapes(hlo_text)
+        if len(s) >= 4 and s[-1] == dv and s[-2] in kset and s[-3] == n
+        and math.prod(s[:-3]) > 1
+    ]
+
+
+def leading_buffers(hlo_text: str, lead: int, second: int, *,
+                    min_rank: int = 2) -> list[tuple[int, ...]]:
+    """Shapes whose two leading dims are ``(lead, second)``.
+
+    Covers both decode-path memory pins: ``(B*Hq, Nmax, ...)`` buffers
+    (a GQA cache repeated G times) and ``(B*Hkv, Nmax+1, ...)`` buffers
+    (the staged path's per-step history-mean concat of the whole K/V
+    cache)."""
+    return [
+        s for s in hlo_shapes(hlo_text)
+        if len(s) >= min_rank and s[0] == lead and s[1] == second
+    ]
+
+
+def has_f64(hlo_text: str) -> bool:
+    """True if any f64 buffer appears — an accidental double promotion."""
+    return "f64[" in hlo_text
+
+
+def compiled_text(fn: Callable, *args, **kwargs) -> str:
+    """Compiled HLO text of ``jit(fn)`` at these (abstract) arguments."""
+    import jax
+
+    return jax.jit(fn).lower(*args, **kwargs).compile().as_text()

@@ -1,0 +1,97 @@
+"""Registry-capability cross-checks (rule ``registry-capability-sync``).
+
+A :class:`~repro.backend.registry.Backend` that *declares* a stage in
+``Capabilities.stages`` without binding the fn (or binds a fn it never
+declares) only fails at dispatch time, deep inside a jitted trace.  This
+check runs the comparison at analysis time, over the live registry, in
+both directions — plus two coherence checks that have bitten before:
+stage names must come from the fixed vocabulary, and a backend claiming
+the ``zeta`` mechanism must expose at least one score (and vice versa).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+from repro.analysis.rules import STAGE_NAMES, Violation
+
+# Stage fns that take a ``score=`` keyword (the decode stages pass it
+# positionally through their own keyword bundle, so they are exempt).
+_SCORE_KW_STAGES = ("gathered", "gathered_idx", "gathered_idx_q")
+
+
+def _loc(name: str) -> str:
+    return f"<registry:{name}>"
+
+
+def _accepts_score_kw(fn) -> bool:
+    """True unless we can positively prove ``fn(..., score=...)`` raises.
+    Builtins / partials without signatures get the benefit of the doubt."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return True
+    params = sig.parameters.values()
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return True
+    return "score" in sig.parameters
+
+
+def check_registry() -> list[Violation]:
+    from repro.backend import registry
+
+    registry._ensure_registered()
+    out: list[Violation] = []
+    for name in registry.list_backends():
+        be = registry.get_backend(name)
+        declared = be.caps.stages
+        bound = set(be.bound_stages())
+
+        if declared is None:
+            continue  # derived-from-bindings registration: nothing to sync
+
+        for s in declared:
+            if s not in STAGE_NAMES:
+                out.append(Violation(
+                    rule="registry-capability-sync", path=_loc(name), line=0,
+                    message=f"declares unknown stage {s!r} "
+                            f"(known: {', '.join(STAGE_NAMES)})",
+                ))
+        declared_known = {s for s in declared if s in STAGE_NAMES}
+
+        for s in sorted(declared_known - bound):
+            out.append(Violation(
+                rule="registry-capability-sync", path=_loc(name), line=0,
+                message=f"declares stage {s!r} but binds no {s} fn — "
+                        "dispatch through this capability would fail at "
+                        "trace time",
+            ))
+        for s in sorted(bound - declared_known):
+            out.append(Violation(
+                rule="registry-capability-sync", path=_loc(name), line=0,
+                message=f"binds a {s} fn but does not declare the stage — "
+                        "support_matrix/capability gating will hide it",
+            ))
+
+        zeta = "zeta" in be.caps.mechanisms
+        if zeta and not be.caps.scores:
+            out.append(Violation(
+                rule="registry-capability-sync", path=_loc(name), line=0,
+                message="claims the zeta mechanism with an empty scores "
+                        "tuple — no AttentionRequest can ever match it",
+            ))
+        if be.caps.scores and not zeta:
+            out.append(Violation(
+                rule="registry-capability-sync", path=_loc(name), line=0,
+                message="declares zeta scores without the zeta mechanism",
+            ))
+
+        for s in _SCORE_KW_STAGES:
+            fn = getattr(be, s)
+            if fn is not None and not _accepts_score_kw(fn):
+                out.append(Violation(
+                    rule="registry-capability-sync", path=_loc(name), line=0,
+                    message=f"{s} fn does not accept the score= keyword "
+                            "the dispatchers pass",
+                ))
+    return out

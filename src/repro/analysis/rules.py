@@ -1,0 +1,270 @@
+"""Project rules as data — what the AST lint and the trace analyzer check.
+
+Each :class:`Rule` records the invariant, the scope it applies to, and
+which PR's bug it pins, so ``python -m repro.analysis --list-rules`` is
+the living inventory (docs/ARCHITECTURE.md mirrors it in prose).
+
+Suppressions go through :data:`ALLOWLIST` only: an :class:`Allowance`
+must name the rule, the file, a substring of the offending line, and a
+non-empty justification — there is no inline ``# noqa``-style escape
+hatch, so every exception is reviewable in one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from fnmatch import fnmatch
+
+# Optional stage slots a Backend may bind; Capabilities.stages declares
+# intent against exactly this vocabulary (registrycheck cross-checks it).
+STAGE_NAMES = ("gathered", "gathered_idx", "gathered_idx_q",
+               "decode", "decode_q")
+
+# Search/insert/encode primitives owned by the selection core.  Everything
+# else goes through the attend_train/attend_prefill/attend_decode entry
+# points so the three modes cannot drift (the PR 3 refactor's contract).
+SELECTION_PRIMITIVES = frozenset({
+    "chunked_causal_topk",
+    "chunked_causal_topk_grouped",
+    "prefix_topk_bulk",
+    "prefix_topk_bulk_grouped",
+    "prefix_topk_decode",
+    "prefix_topk_decode_grouped",
+    "sorted_insert",
+    "sorted_insert_many",
+    "sorted_build",
+    "zorder_encode",
+    "zorder_encode_with_bounds",
+})
+
+# Modules allowed to CALL the selection primitives (the owners themselves
+# plus the zorder module's internal encode chain).
+SELECTION_OWNERS = (
+    "repro/core/selection.py",
+    "repro/core/topk.py",
+    "repro/core/zorder.py",
+)
+
+# jit-interior modules: code here is reachable from the jitted serve /
+# train / selection traces, so host-sync calls (``.item()``,
+# ``jax.device_get``, ``np.asarray``) would force a device round-trip per
+# step.  Host-side orchestration (serve/engine.py, eval/, data/, launch/,
+# checkpoint/) is deliberately out of scope — syncing there is its job.
+JIT_INTERIOR = (
+    "repro/core/*",
+    "repro/nn/*",
+    "repro/models/*",
+    "repro/kernels/*",
+    "repro/state/*",
+    "repro/sample/*",
+    "repro/backend/*",
+    "repro/serve/step.py",
+    "repro/serve/distributed.py",
+    "repro/serve/speculative.py",
+    "repro/train/step.py",
+)
+
+# Modules that must mutate decode caches only through the repro.state
+# CacheField writers (row_write / chunk_write / their _quant siblings /
+# reset_slots) — a raw ``.at[...]`` write here bypasses the quantized
+# tier's payload+scale pairing and the active-mask semantics.
+CACHE_MUTATION_SCOPE = (
+    "repro/core/selection.py",
+    "repro/nn/attention.py",
+    "repro/nn/ssd.py",
+    "repro/nn/hybrid.py",
+    "repro/models/*",
+    "repro/serve/*",
+    "repro/spec/*",
+)
+
+# Paths whose cache-shaped arrays must never be repeated across the GQA
+# group axis (axis >= 1 repeat/tile): the grouped search/gather reads the
+# per-KV-head caches in place.
+CACHE_REPEAT_SCOPE = (
+    "repro/core/selection.py",
+    "repro/core/topk.py",
+    "repro/serve/*",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One machine-checked invariant."""
+
+    id: str
+    title: str
+    layer: str                 # "ast" | "registry" | "trace"
+    scope: tuple[str, ...]     # repo-relative globs under src/ ("*" = all)
+    why: str                   # which PR's bug this pins
+
+    def applies_to(self, path: str) -> bool:
+        return any(fnmatch(path, pat) for pat in self.scope)
+
+
+@dataclasses.dataclass(frozen=True)
+class Allowance:
+    """One reviewed exception to a rule.  ``match`` must occur in the
+    flagged source line; ``justification`` is mandatory."""
+
+    rule: str
+    path: str
+    match: str
+    justification: str
+
+    def __post_init__(self):
+        if not self.justification.strip():
+            raise ValueError(
+                f"allowance for {self.rule} at {self.path} has no "
+                "justification — silent suppressions are not allowed"
+            )
+
+    def covers(self, rule: str, path: str, line_text: str) -> bool:
+        return (rule == self.rule and fnmatch(path, self.path)
+                and self.match in line_text)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.rule}: {loc}: {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+RULES: tuple[Rule, ...] = (
+    Rule(
+        id="selection-core-ownership",
+        title="top-k / z-order / sorted-insert primitives are called only "
+              "from the selection core",
+        layer="ast",
+        scope=("repro/*",),
+        why="PR 3 collapsed three drifting copies of the selection "
+            "pipeline into core/selection.py; a stray primitive call "
+            "recreates the drift",
+    ),
+    Rule(
+        id="cache-writer-ownership",
+        title="decode-cache mutation goes through the repro.state "
+              "CacheField writers, never raw .at[...] updates",
+        layer="ast",
+        scope=CACHE_MUTATION_SCOPE,
+        why="PR 6/8: the writers carry the active-slot mask and the int8 "
+            "tier's payload+scale pairing; a raw .at[] write silently "
+            "drops one or the other",
+    ),
+    Rule(
+        id="no-raw-sentinel",
+        title="no raw dtype-sentinel literals (|x| >= 1e30); derive from "
+              "the dtype (topk.invalid_distance / jnp.finfo)",
+        layer="ast",
+        scope=("repro/*",),
+        why="PR 2: a literal 3.4e38 'f32 max' overflowed to inf under "
+            "bf16 casts and inverted a top-k comparison",
+    ),
+    Rule(
+        id="no-cache-repeat",
+        title="no jnp.repeat / jnp.tile of cache-shaped arrays across "
+              "head/group axes in selection or serve paths",
+        layer="ast",
+        scope=CACHE_REPEAT_SCOPE,
+        why="PR 5: the pre-grouped decode repeated every per-KV-head "
+            "cache G times per token; the grouped primitives read them "
+            "in place",
+    ),
+    Rule(
+        id="no-host-sync",
+        title="no host-sync (.item(), jax.device_get, np.asarray) in "
+              "functions reachable from jitted serve/train steps",
+        layer="ast",
+        scope=JIT_INTERIOR,
+        why="PR 6: a stray host read in the decode path serializes every "
+            "tick on a device round-trip",
+    ),
+    Rule(
+        id="registry-capability-sync",
+        title="every Backend's declared stage capabilities match its "
+              "bound stage fns, both directions",
+        layer="registry",
+        scope=("repro/backend/*",),
+        why="PR 7/8: a capability declared without a bound fn (or vice "
+            "versa) only failed at dispatch time, deep inside a jitted "
+            "trace",
+    ),
+    Rule(
+        id="trace-candidate-buffer",
+        title="fused entry points compile with no materialized candidate "
+              "or cache-concat HBM buffers",
+        layer="trace",
+        scope=("repro/core/selection.py",),
+        why="PR 5/6: the whole point of the fused kernels; a refactor "
+            "that reintroduces the buffer silently voids the O(N) memory "
+            "claim",
+    ),
+    Rule(
+        id="trace-f64",
+        title="no f64 buffers in any compiled entry point",
+        layer="trace",
+        scope=("repro/*",),
+        why="a python float sneaking into a shape/scale computation "
+            "promotes the whole trace and halves throughput",
+    ),
+    Rule(
+        id="trace-retrace-budget",
+        title="entry points stay within their retrace budget across "
+              "same-shape calls",
+        layer="trace",
+        scope=("repro/serve/step.py", "repro/train/step.py"),
+        why="PR 6: ONE jitted serve trace must serve mixed "
+            "greedy/sampled batches; a value-dependent branch retraces "
+            "every tick",
+    ),
+    Rule(
+        id="trace-vmem-audit",
+        title="fits_fused_residency / fits_decode_residency agree with "
+              "the kernels' actual BlockSpec-derived VMEM plans",
+        layer="trace",
+        scope=("repro/backend/backends.py",),
+        why="PR 7/8: the guards were hand-derived from the kernel specs "
+            "and can silently drift when a BlockSpec changes — drift "
+            "means VMEM overflow or needless staged fallback",
+    ),
+)
+
+RULES_BY_ID = {r.id: r for r in RULES}
+
+
+ALLOWLIST: tuple[Allowance, ...] = (
+    Allowance(
+        rule="selection-core-ownership",
+        path="repro/kernels/decode_fused.py",
+        match="topk_mod.sorted_build(",
+        justification="__main__ smoke only: builds a mid-stream cache "
+                      "fixture to compare fused vs staged; not on any "
+                      "serve/train path",
+    ),
+    Allowance(
+        rule="no-raw-sentinel",
+        path="repro/analysis/astlint.py",
+        match="1e30",
+        justification="the sentinel detector's own threshold constant — "
+                      "it is compared against source literals, never cast "
+                      "to a device dtype",
+    ),
+    Allowance(
+        rule="no-raw-sentinel",
+        path="repro/kernels/flash.py",
+        match="-1e30",
+        justification="f32 additive softmax-mask constant inside the "
+                      "flash kernel; logits compute in f32 for every "
+                      "input dtype and -inf breaks the online-softmax "
+                      "rescale",
+    ),
+)

@@ -1,0 +1,232 @@
+"""Layer 2 — trace-contract analyzer.
+
+Jits the canonical entry points (selection modes, serve ticks at every
+cache tier, the train step) at tiny shapes and asserts over the compiled
+HLO: no materialized candidate / cache-concat buffers, no f64 promotion,
+and a per-entry retrace budget.  Separately, a static VMEM audit
+recomputes each Pallas kernel's residency bytes from its ACTUAL
+BlockSpecs (``fused_vmem_plan`` / ``decode_vmem_plan``) and cross-checks
+the hand-derived ``fits_*_residency`` guards by comparing the sequence
+lengths at which each flips under the default budget — guard and kernel
+cannot silently drift.
+
+The manifests live NEXT TO the entry points (``trace_entry_points()`` in
+core/selection.py, serve/step.py, train/step.py) so a refactor updates
+its own contract in the same diff; this module only walks the lists.
+"""
+
+from __future__ import annotations
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis.rules import Violation
+
+# VMEM-audit tolerance: the plans count every real operand block (idx,
+# valid, gamma2, outputs, scales) the hand-derived guards approximate
+# away; measured divergence on the current kernels is <= 0.5% of the
+# boundary length, so 2% flags drift without flapping.
+AUDIT_TOL = 0.02
+
+# Audit shapes: paper-scale head dims, both storage tiers.  kk is the
+# full candidate count (k + local window + history mean).
+_FUSED_CASES = (
+    {"name": "fused[f32]", "dk": 3, "dv": 128, "kk": 33, "bn": 256,
+     "itemsize": 4, "extra_row_bytes": 0, "quantized": False},
+    {"name": "fused[int8]", "dk": 3, "dv": 128, "kk": 33, "bn": 256,
+     "itemsize": 1, "extra_row_bytes": 8, "quantized": True},
+)
+_DECODE_CASES = (
+    {"name": "decode[f32]", "dk": 3, "dv": 128, "kk": 37, "g": 8,
+     "itemsize": 4, "scale_bytes": 0, "quantized": False},
+    {"name": "decode[int8]", "dk": 3, "dv": 128, "kk": 37, "g": 8,
+     "itemsize": 1, "scale_bytes": 8, "quantized": True},
+)
+
+
+def entry_points() -> list[dict]:
+    """All registered trace manifests (selection + serve + train)."""
+    from repro.core import selection
+    from repro.serve import step as serve_step
+    from repro.train import step as train_step
+
+    return (selection.trace_entry_points()
+            + serve_step.trace_entry_points()
+            + train_step.trace_entry_points())
+
+
+def _forbidden(hlo_text: str, forbid) -> list[str]:
+    hits = []
+    for spec in forbid:
+        if spec[0] == "candidate":
+            _, n, kset, dv = spec
+            for s in hlo_mod.candidate_buffers(hlo_text, n, kset, dv):
+                hits.append(f"materialized candidate buffer {list(s)}")
+        elif spec[0] == "lead":
+            _, lead, second = spec
+            for s in hlo_mod.leading_buffers(hlo_text, lead, second,
+                                             min_rank=3):
+                hits.append(f"cache-concat/repeat buffer {list(s)}")
+        else:  # pragma: no cover - manifest typo guard
+            hits.append(f"unknown forbid spec {spec!r}")
+    return hits
+
+
+def _make_counted(fn):
+    """Wrap ``fn`` so calls that reach trace time bump a counter (the
+    body only runs while tracing under jit)."""
+    box = [0]
+
+    def counted(*a):
+        box[0] += 1
+        return fn(*a)
+
+    return counted, box
+
+
+def check_traces(entries: list[dict] | None = None) -> list[Violation]:
+    """Compile every manifest entry and check its HLO contracts."""
+    import jax
+
+    if entries is None:
+        entries = entry_points()
+    out: list[Violation] = []
+    for entry in entries:
+        name = entry["name"]
+        loc = f"<trace:{name}>"
+        fn, args, args_alt = entry["build"]()
+        counted, counted_box = _make_counted(fn)
+        jitted = jax.jit(counted)
+        try:
+            compiled = jitted.lower(*args).compile()
+        except Exception as e:  # noqa: BLE001 - report, don't crash the run
+            out.append(Violation(
+                rule="trace-candidate-buffer", path=loc, line=0,
+                message=f"entry failed to compile: {type(e).__name__}: {e}",
+            ))
+            continue
+        text = compiled.as_text()
+
+        for hit in _forbidden(text, entry.get("forbid", ())):
+            out.append(Violation(
+                rule="trace-candidate-buffer", path=loc, line=0,
+                message=hit,
+            ))
+        if hlo_mod.has_f64(text):
+            out.append(Violation(
+                rule="trace-f64", path=loc, line=0,
+                message="compiled HLO contains f64 buffers — a python "
+                        "float promoted the trace",
+            ))
+
+        max_traces = entry.get("max_traces")
+        if max_traces is not None and args_alt is not None:
+            # TOTAL trace count across the whole lifecycle (the .lower()
+            # above is trace #1 and primes the call cache): re-invoking at
+            # the same shapes with different VALUES must not add traces —
+            # the serve contract is ONE trace serving every tick.
+            jax.block_until_ready(jitted(*args))
+            jax.block_until_ready(jitted(*args_alt))
+            if counted_box[0] > max_traces:
+                out.append(Violation(
+                    rule="trace-retrace-budget", path=loc, line=0,
+                    message=f"traced {counted_box[0]}x across compile + "
+                            f"two same-shape calls (budget {max_traces}) "
+                            "— a value-dependent branch reached trace "
+                            "time",
+                ))
+    return out
+
+
+# ------------------------------------------------------------- VMEM audit
+
+
+def _boundary(pred, hi_cap: int = 1 << 28) -> int:
+    """Largest n >= 1 with pred(n) True (pred monotone non-increasing)."""
+    if not pred(1):
+        return 0
+    hi = 1 << 20
+    while pred(hi) and hi < hi_cap:
+        hi *= 2
+    lo = 1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if pred(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def audit_vmem(*, fits_fused=None, fits_decode=None, budget=None,
+               tol: float = AUDIT_TOL) -> list[Violation]:
+    """Cross-check the residency guards against the kernels' BlockSpec
+    plans: for each case, binary-search the sequence length where the
+    guard flips and where the plan crosses the budget — they must agree
+    within ``tol``.  The guards are injectable so the self-tests can
+    prove a sabotaged constant is caught."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.backend import backends as be
+    from repro.kernels.cauchy_topk_fused import fused_vmem_plan
+    from repro.kernels.decode_fused import decode_vmem_plan
+
+    fits_fused = fits_fused or be.fits_fused_residency
+    fits_decode = fits_decode or be.fits_decode_residency
+    bud = be.fused_vmem_budget(budget)
+    out: list[Violation] = []
+
+    def _fused_guard_pred(case, n):
+        dtype = jnp.int8 if case["quantized"] else jnp.float32
+        kt = jax.ShapeDtypeStruct((1, n, case["dk"]), dtype)
+        vt = jax.ShapeDtypeStruct((1, n, case["dv"]), dtype)
+        return fits_fused(kt, vt, kk=case["kk"], block_n=case["bn"],
+                          extra_row_bytes=case["extra_row_bytes"],
+                          budget=budget)
+
+    def _fused_plan_pred(case, n):
+        return fused_vmem_plan(
+            n, case["dk"], case["dv"], case["kk"], case["bn"],
+            itemsize=case["itemsize"], quantized=case["quantized"],
+        ) <= bud
+
+    def _decode_guard_pred(case, n):
+        return fits_decode(n, case["dk"], case["dv"], case["itemsize"],
+                           case["g"], case["kk"],
+                           scale_bytes=case["scale_bytes"], budget=budget)
+
+    def _decode_plan_pred(case, n):
+        return decode_vmem_plan(
+            n, case["g"], case["dk"], case["dv"], case["kk"],
+            itemsize=case["itemsize"], quantized=case["quantized"],
+        ) <= bud
+
+    audits = [
+        (case, _fused_guard_pred, _fused_plan_pred,
+         "fits_fused_residency", "fused_vmem_plan")
+        for case in _FUSED_CASES
+    ] + [
+        (case, _decode_guard_pred, _decode_plan_pred,
+         "fits_decode_residency", "decode_vmem_plan")
+        for case in _DECODE_CASES
+    ]
+    for case, guard_pred, plan_pred, guard_name, plan_name in audits:
+        gn = _boundary(lambda n, c=case, p=guard_pred: p(c, n))
+        pn = _boundary(lambda n, c=case, p=plan_pred: p(c, n))
+        if abs(gn - pn) > tol * max(pn, 1):
+            out.append(Violation(
+                rule="trace-vmem-audit",
+                path="repro/backend/backends.py", line=0,
+                message=f"{case['name']}: {guard_name} flips at n={gn} "
+                        f"but the BlockSpec-derived {plan_name} crosses "
+                        f"the budget at n={pn} "
+                        f"({abs(gn - pn) / max(pn, 1):.1%} apart, "
+                        f"tol {tol:.0%}) — guard and kernel have drifted",
+            ))
+    return out
+
+
+def run(include_vmem: bool = True) -> list[Violation]:
+    out = check_traces()
+    if include_vmem:
+        out.extend(audit_vmem())
+    return out

@@ -93,7 +93,7 @@ def generate(params, cfg: ModelConfig,
 
     eff_bos = cfg.bos_id if bos_id is None else bos_id
     lens = [len(p) or 1 for p in prompts]  # empty prompt -> [bos]
-    need_len = max(n + g.max_new for n, g in zip(lens, gens))
+    need_len = max(n + g.max_new for n, g in zip(lens, gens, strict=True))
     max_stop_len = max(
         [len(s) for g in gens for s in g.stop], default=1)
     engine = ServeEngine(
@@ -108,7 +108,7 @@ def generate(params, cfg: ModelConfig,
         history_len=max(history_len, max_stop_len),
         **({} if cache_dtype is None else {"cache_dtype": cache_dtype}),
     )
-    for rid, (p, g) in enumerate(zip(prompts, gens)):
+    for rid, (p, g) in enumerate(zip(prompts, gens, strict=True)):
         engine.submit(Request(rid=rid, prompt=p, gen=g))
     done = engine.run_to_completion(max_ticks=max_ticks, on_token=on_token)
     by_rid = {r.rid: r for r in done}

@@ -20,6 +20,13 @@ Public surface:
 ``python -m repro.backend`` prints the live support matrix.
 """
 
+from repro.backend import backends  # noqa: F401  (stock registrations)
+from repro.backend.parity import (  # noqa: F401
+    parity_check,
+    parity_rows,
+    quantized_parity_check,
+    quantized_parity_rows,
+)
 from repro.backend.registry import (  # noqa: F401
     ENV_VAR,
     AttentionRequest,
@@ -41,11 +48,4 @@ from repro.backend.registry import (  # noqa: F401
     support_matrix,
     support_matrix_markdown,
     unregister_backend,
-)
-from repro.backend import backends  # noqa: F401  (stock registrations)
-from repro.backend.parity import (  # noqa: F401
-    parity_check,
-    parity_rows,
-    quantized_parity_check,
-    quantized_parity_rows,
 )

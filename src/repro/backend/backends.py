@@ -439,6 +439,7 @@ def register_stock(overwrite: bool = False) -> None:
             scores=_CAUCHY_ONLY,
             priority=0,
             notes="naive oracle (core/ref.py); ground truth, O(N·K) einsums",
+            stages=("gathered", "gathered_idx", "gathered_idx_q"),
         ),
         gathered=_gathered_reference,
         gathered_idx=_gathered_idx_reference,
@@ -453,6 +454,7 @@ def register_stock(overwrite: bool = False) -> None:
             mechanisms=("zeta",),
             priority=10,
             notes="pure-XLA gather pipeline; bf16-pinned backward",
+            stages=("gathered", "gathered_idx", "gathered_idx_q"),
         ),
         gathered=_gathered_xla,
         gathered_idx=_gathered_idx_xla,
@@ -471,6 +473,7 @@ def register_stock(overwrite: bool = False) -> None:
             interpreted_devices=("cpu", "gpu"),
             priority=20,
             notes="fused Cauchy top-k kernel on materialized candidates",
+            stages=("gathered",),
         ),
         gathered=_gathered_pallas,
         overwrite=overwrite,
@@ -489,6 +492,8 @@ def register_stock(overwrite: bool = False) -> None:
             notes="index-gather kernel: no (N,K,d) HBM candidates; "
                   "scatter-add backward; fused decode step; int8 "
                   "dequant-on-gather cache tier",
+            stages=("gathered", "gathered_idx", "gathered_idx_q",
+                    "decode", "decode_q"),
         ),
         gathered=_gathered_pallas,
         gathered_idx=_gathered_idx_pallas_fused,
@@ -508,6 +513,7 @@ def register_stock(overwrite: bool = False) -> None:
             interpreted_devices=("cpu", "gpu"),
             priority=5,
             notes="blocked online-softmax baseline (Tables 3/4)",
+            stages=(),
         ),
         overwrite=overwrite,
     )

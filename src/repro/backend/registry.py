@@ -116,6 +116,12 @@ class Capabilities:
     interpreted_devices: tuple[str, ...] = ()
     priority: int = 0
     notes: str = ""
+    # Declared optional-stage intent ("gathered", "gathered_idx",
+    # "gathered_idx_q", "decode", "decode_q").  None means "derive from
+    # the bound fns" (back-compat for ad-hoc test fakes); stock backends
+    # declare explicitly so repro.analysis can cross-check declaration
+    # against binding in both directions.
+    stages: tuple[str, ...] | None = None
 
     @property
     def devices(self) -> tuple[str, ...]:
@@ -166,6 +172,21 @@ class Backend:
         if req.stage == "decode_q" and self.decode_q is None:
             return False
         return self.caps.supports(req)
+
+    def bound_stages(self) -> tuple[str, ...]:
+        """The optional stages with a fn actually bound."""
+        return tuple(
+            s for s in ("gathered", "gathered_idx", "gathered_idx_q",
+                        "decode", "decode_q")
+            if getattr(self, s) is not None
+        )
+
+    def declared_stages(self) -> tuple[str, ...]:
+        """What the capabilities claim; falls back to the bound fns when
+        the registration didn't declare (``caps.stages is None``)."""
+        if self.caps.stages is None:
+            return self.bound_stages()
+        return self.caps.stages
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -508,17 +529,18 @@ def support_matrix() -> list[dict]:
     for name in sorted(_REGISTRY):
         be = _REGISTRY[name]
         caps = be.caps
+        stages = be.declared_stages()
         row = {
             "backend": name,
             "mechanisms": "+".join(caps.mechanisms),
             "scores": "+".join(caps.scores) or "—",
             "dtypes": "+".join(d.replace("float", "f") for d in caps.dtypes),
-            "gathered": "yes" if be.gathered is not None else "no",
-            "gathered_idx": "yes" if be.gathered_idx is not None else "no",
-            "decode": "yes" if be.decode is not None else "no",
+            "gathered": "yes" if "gathered" in stages else "no",
+            "gathered_idx": "yes" if "gathered_idx" in stages else "no",
+            "decode": "yes" if "decode" in stages else "no",
             "quantized_cache": (
-                "yes" if (be.gathered_idx_q is not None
-                          or be.decode_q is not None) else "no"
+                "yes" if ("gathered_idx_q" in stages
+                          or "decode_q" in stages) else "no"
             ),
             "notes": caps.notes,
         }

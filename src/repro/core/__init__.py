@@ -1,5 +1,6 @@
 """ZETA core: the paper's contribution as composable JAX functions."""
 
+from repro.core import selection  # noqa: F401  (the mode-parametric core)
 from repro.core.attention import zeta_attention, zeta_attention_noncausal
 from repro.core.cauchy import (
     cauchy_weights,
@@ -15,7 +16,6 @@ from repro.core.topk import (
     sorted_insert,
 )
 from repro.core.zorder import zorder_encode, zorder_encode_with_bounds
-from repro.core import selection  # noqa: F401  (the mode-parametric core)
 
 __all__ = [
     "selection",

@@ -903,3 +903,112 @@ def attend_prefill(
         zk_scale=zk_scale,
         v_scale=v_scale,
     )
+
+
+# ----------------------------------------------------------- trace manifest
+
+
+def trace_entry_points() -> list[dict]:
+    """The canonical selection entry points for ``repro.analysis``'s
+    trace-contract layer: each entry builds a jittable fn + concrete
+    args at tiny shapes and lists the compiled-HLO shape families the
+    entry must not contain (``("candidate", n, kset, dv)`` — materialized
+    per-candidate tensors — and ``("lead", d0, d1)`` — whole-cache
+    concat/repeat buffers).  Kept HERE so a selection refactor updates
+    its own contract in the same diff; the analyzer only walks the list.
+    """
+    from repro.nn.config import ZetaConfig
+
+    B, Hq, Hkv, N, dk, dv = 2, 4, 2, 32, 3, 8
+    chunks, k = 8, 4
+    f = B * Hkv
+    zbase = ZetaConfig(d_k=dk, k=k, num_chunks=chunks,
+                       backend="pallas_fused")
+
+    def _rand(key, shape, dtype=jnp.float32):
+        return jnp.tanh(jax.random.normal(jax.random.PRNGKey(key),
+                                          shape)).astype(dtype)
+
+    def _cache(dtype):
+        quant = dtype == jnp.int8
+        store = jnp.float32 if quant else dtype
+        zk = jnp.zeros((B, Hkv, N, dk), store)
+        v = jnp.zeros((B, Hkv, N, dv), store)
+        scale = None
+        if quant:
+            zk, zk_s = state.quantize_rows(zk)
+            v, v_s = state.quantize_rows(v)
+            scale = (zk_s, v_s)
+        kz = morton_codes(
+            jnp.zeros((f, N, dk), jnp.float32),
+            bits=zbase.bits, bound=zbase.bound,
+        )
+        skz, spos = topk.sorted_build(kz, jnp.zeros((f,), jnp.int32))
+        return ZetaCache(
+            zk=zk, v=v, zk_sorted=skz, pos_sorted=spos,
+            ksum=jnp.zeros((B, Hkv, dk), jnp.float32),
+            vsum=jnp.zeros((B, Hkv, dv), jnp.float32),
+            zk_scale=None if scale is None else scale[0],
+            v_scale=None if scale is None else scale[1],
+        )
+
+    def build_train():
+        def fn(q, kk, v):
+            return attend_train(q, kk, v, jnp.asarray(0.5),
+                                num_chunks=chunks, k=k,
+                                impl="pallas_fused")
+
+        args = (_rand(0, (B, Hq, N, dk)), _rand(1, (B, Hkv, N, dk)),
+                _rand(2, (B, Hkv, N, dv)))
+        return fn, args, None
+
+    def build_prefill():
+        P = 8
+        zcfg = zbase
+
+        def fn(cache, zq, zk, v, positions, mask):
+            return attend_prefill(cache, zq, zk, v, jnp.asarray(0.5),
+                                  positions, mask, zcfg=zcfg)
+
+        args = (
+            _cache(jnp.float32),
+            _rand(3, (B, Hq, P, dk)), _rand(4, (B, Hkv, P, dk)),
+            _rand(5, (B, Hkv, P, dv)),
+            jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P)),
+            jnp.ones((B, P), bool),
+        )
+        return fn, args, None
+
+    def build_decode(dtype):
+        io = jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32
+        zcfg = zbase
+
+        def fn(cache, zq, zk, v, t):
+            return attend_decode(cache, zq, zk, v, jnp.asarray(0.5), t,
+                                 jnp.ones((B,), bool), zcfg=zcfg)
+
+        args = (
+            _cache(dtype),
+            _rand(6, (B, Hq, 1, dk), io), _rand(7, (B, Hkv, 1, dk), io),
+            _rand(8, (B, Hkv, 1, dv), io),
+            jnp.full((B,), 7, jnp.int32),
+        )
+        return fn, args, None
+
+    kset = (k, k + 1)  # raw top-k, plus the history-mean candidate
+    return [
+        {"name": "attend_train[f32,pallas_fused]", "build": build_train,
+         "forbid": [("candidate", N, kset, dv)]},
+        {"name": "attend_prefill[f32,pallas_fused]",
+         "build": build_prefill,
+         "forbid": [("candidate", 8, kset, dv)]},
+        {"name": "attend_decode[f32,pallas_fused]",
+         "build": lambda: build_decode(jnp.float32),
+         "forbid": [("lead", f, N + 1)]},
+        {"name": "attend_decode[bf16,pallas_fused]",
+         "build": lambda: build_decode(jnp.bfloat16),
+         "forbid": [("lead", f, N + 1)]},
+        {"name": "attend_decode[int8,pallas_fused]",
+         "build": lambda: build_decode(jnp.int8),
+         "forbid": [("lead", f, N + 1)]},
+    ]

@@ -2,14 +2,14 @@
 stateful loader, and the deterministic eval splits the quality harness
 gates on."""
 
-from repro.data.listops import listops_batch
-from repro.data.mqar import mqar_batch
-from repro.data.synthetic import SyntheticLMLoader
 from repro.data.eval_splits import (
     listops_eval_batches,
     lm_eval_batches,
     mqar_eval_batches,
 )
+from repro.data.listops import listops_batch
+from repro.data.mqar import mqar_batch
+from repro.data.synthetic import SyntheticLMLoader
 
 __all__ = [
     "mqar_batch",

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.backend.registry import default_interpret
-from repro.kernels.cauchy_topk import block_plan, pad_queries
+from repro.kernels.cauchy_topk import DEFAULT_BLOCK_N, block_plan, pad_queries
 
 _EPS = 1e-9
 
@@ -189,6 +189,48 @@ def _kv_specs(nkv, dk, dv, groups):
     ]
 
 
+def _scale_spec(nkv, groups):
+    # per-row dequant scales ride the same group-shared mapping as K/V
+    return pl.BlockSpec((None, nkv), lambda i, j: (i // groups, 0))
+
+
+def _block_bytes(spec, itemsize):
+    """VMEM bytes of one operand's resident block under ``spec``."""
+    total = itemsize
+    for d in spec.block_shape:
+        if d is not None:
+            total *= d
+    return total
+
+
+def fused_vmem_plan(nkv, dk, dv, kk, block_n=None, *,
+                    itemsize: int = 4, quantized: bool = False) -> int:
+    """Per-grid-cell VMEM bytes of the fused scoring kernel, derived from
+    the ACTUAL BlockSpecs above plus the in-kernel candidate tile.
+
+    ``itemsize`` is the K/V storage width (4 f32, 2 bf16, 1 int8 with
+    ``quantized=True`` adding the two f32 scale rows).  The analyzer's
+    VMEM audit cross-checks this against ``fits_fused_residency`` so the
+    hand-derived guard cannot drift from the kernel it guards.
+    """
+    bn = block_n or DEFAULT_BLOCK_N
+    qs, idxs, vals, g2s = _query_specs(bn, dk, kk)
+    kts, vts = _kv_specs(nkv, dk, dv, 1)
+    total = (
+        _block_bytes(qs, 4)            # q upcast to f32 rows
+        + _block_bytes(idxs, 4)        # idx int32
+        + _block_bytes(vals, 1)        # valid int8
+        + _block_bytes(g2s, 4)         # gamma2 f32
+        + _block_bytes(kts, itemsize)
+        + _block_bytes(vts, itemsize)
+    )
+    if quantized:
+        total += 2 * _block_bytes(_scale_spec(nkv, 1), 4)
+    total += bn * dv * 4 + bn * 4      # out + z output blocks
+    total += bn * kk * (dk + dv + 2) * 4  # gathered f32 candidate tile
+    return total
+
+
 @functools.partial(
     jax.jit, static_argnames=("groups", "block_n", "interpret")
 )
@@ -257,7 +299,7 @@ def cauchy_topk_fused_fwd_q(q, kt_q, kt_s, vt_q, vt_s, idx, valid,
     grid = (fg, n_pad // bn)
     qs, idxs, vals, g2s = _query_specs(bn, dk, kk)
     kts, vts = _kv_specs(nkv, dk, dv, groups)
-    scale_spec = pl.BlockSpec((None, nkv), lambda i, j: (i // groups, 0))
+    scale_spec = _scale_spec(nkv, groups)
 
     out = pl.pallas_call(
         _fwd_q_kernel,
@@ -357,7 +399,8 @@ def _smoke() -> int:
         xla(*args[:3], idx, valid, gamma2)).max())}
     gf = jax.grad(loss(fused))(args)
     gx = jax.grad(loss(xla))(args)
-    for name, a, b in zip(("dq", "dk", "dv", "dgamma2"), gf, gx):
+    for name, a, b in zip(("dq", "dk", "dv", "dgamma2"), gf, gx,
+                          strict=True):
         errs[name] = float(jnp.abs(a - b).max())
     ok = all(e < 1e-4 for e in errs.values())
     print("fused-kernel smoke (interpret="

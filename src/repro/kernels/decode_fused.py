@@ -209,6 +209,32 @@ def _row_specs(g, nmax, dk, dv, has_mean, quantized=False):
     return specs
 
 
+def decode_vmem_plan(nmax, g, dk, dv, kk, *, itemsize: int = 4,
+                     quantized: bool = False, has_mean: bool = True) -> int:
+    """Per-row VMEM bytes of the fused decode kernel, derived from the
+    ACTUAL ``_row_specs`` BlockSpecs plus the in-kernel candidate tile.
+
+    ``kk`` is the candidate count after the history-mean / local-window
+    extensions (the ``k + window + mean`` the kernel gathers).  The
+    analyzer's VMEM audit cross-checks this against
+    ``fits_decode_residency`` so guard and kernel cannot drift.
+    """
+    from repro.kernels.cauchy_topk_fused import _block_bytes
+
+    specs = _row_specs(g, nmax, dk, dv, has_mean, quantized)
+    sizes = [4, 4, itemsize, itemsize]       # q, qz, kt, vt
+    if quantized:
+        sizes += [4, 4]                      # kt/vt f32 scale rows
+    sizes += [4, 4, 4, 4]                    # skz, spos, searchable, pos
+    if has_mean:
+        sizes += [4, 4]                      # km, vm
+    sizes += [4, 4, 1, 4]                    # ins_kz, ins_pos, ins_mask, g2
+    total = sum(_block_bytes(s, b) for s, b in zip(specs, sizes, strict=True))
+    total += g * dv * 4 + 2 * nmax * 4       # outputs: out, new skz/spos
+    total += g * kk * (dk + dv + 2) * 4      # gathered f32 candidate tile
+    return total
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "window", "chunk", "interpret")
 )

@@ -44,8 +44,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, all_cells, get_config
-from repro.launch.dryrun import collective_stats
 from repro.launch import specs as S
+from repro.launch.dryrun import collective_stats
 from repro.launch.mesh import (
     HBM_BW,
     ICI_BW_PER_LINK,

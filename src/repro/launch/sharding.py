@@ -193,7 +193,7 @@ def guard_spec(mesh: Mesh, spec: P, shape) -> P:
     """Drop sharding on any dim the mesh axes don't divide evenly."""
     entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
     fixed = []
-    for dim, ax in zip(shape, entries):
+    for dim, ax in zip(shape, entries, strict=True):
         if ax is None:
             fixed.append(None)
             continue

@@ -191,7 +191,7 @@ def cache_shardings(mesh: Mesh, cache_shapes: Any, cell: ShapeCell):
         spec = _cache_pspec(path, leaf.shape, mesh, cell)
         # guard: never shard an axis that doesn't divide
         fixed = []
-        for dim, ax in zip(leaf.shape, spec):
+        for dim, ax in zip(leaf.shape, spec, strict=False):
             if ax is None:
                 fixed.append(None)
                 continue

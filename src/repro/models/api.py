@@ -22,6 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import state
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.lm import _norm_apply  # shared norm dispatch
 from repro.nn.attention import attn_cache_spec, attn_decode_step, attn_prefill
 from repro.nn.config import ModelConfig
 from repro.nn.hybrid import hybrid_cache_spec, hybrid_decode_step, hybrid_prefill
@@ -29,9 +32,6 @@ from repro.nn.layers import embedding_attend, mlp_apply
 from repro.nn.module import Precision
 from repro.nn.moe import moe_apply
 from repro.nn.ssd import ssd_cache_spec, ssd_decode_step, ssd_prefill
-from repro.models import encdec as encdec_mod
-from repro.models import lm as lm_mod
-from repro.models.lm import _norm_apply  # shared norm dispatch
 
 Params = Any
 
@@ -186,7 +186,7 @@ def _lm_step(params: Params, cache: Params, tokens: jax.Array,
             ys = []
             h = x0
             for i in range(n):
-                h, y = body(h, jax.tree.map(lambda a: a[i], xs))
+                h, y = body(h, jax.tree.map(lambda a, _i=i: a[_i], xs))
                 ys.append(y)
             return h, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
         return jax.lax.scan(body, x0, xs)

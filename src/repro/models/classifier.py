@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.lm import _norm_apply, block_init, block_apply, _norm_init
+from repro.models.lm import _norm_apply, _norm_init, block_apply, block_init
 from repro.nn.config import ModelConfig
 from repro.nn.layers import embedding_init, linear_init
 from repro.nn.module import Precision, scan_layers, stack_init

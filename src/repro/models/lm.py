@@ -200,7 +200,7 @@ def lm_apply(
             carry = (x, aux_total)
             n = jax.tree.leaves(p["moe_layers"])[0].shape[0]
             for i in range(n):
-                layer = jax.tree.map(lambda a: a[i], p["moe_layers"])
+                layer = jax.tree.map(lambda a, _i=i: a[_i], p["moe_layers"])
                 carry, _ = step(carry, layer)
             x, aux_total = carry
         else:

@@ -87,7 +87,7 @@ def scan_layers(
     if unroll:
         n = jax.tree.leaves(stacked_params)[0].shape[0]
         for i in range(n):
-            layer = jax.tree.map(lambda a: a[i], stacked_params)
+            layer = jax.tree.map(lambda a, _i=i: a[_i], stacked_params)
             x, _ = step(x, layer)
         return x
     out, _ = jax.lax.scan(step, x, stacked_params)

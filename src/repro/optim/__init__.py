@@ -1,7 +1,7 @@
 """Optimizers (mini-optax: pure init/update transforms)."""
 
-from repro.optim.adamw import adamw
 from repro.optim.adafactor import adafactor
+from repro.optim.adamw import adamw
 from repro.optim.schedule import constant, warmup_cosine
 from repro.optim.transform import Transform, chain, clip_by_global_norm
 

@@ -77,7 +77,8 @@ def adafactor(
         flat_g, treedef = jax.tree.flatten(grads)
         flat_s = treedef.flatten_up_to(state)
         flat_p = treedef.flatten_up_to(params)
-        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        outs = [one(g, s, p)
+                for g, s, p in zip(flat_g, flat_s, flat_p, strict=True)]
         updates = treedef.unflatten([o[0] for o in outs])
         new_state = treedef.unflatten([o[1] for o in outs])
         return updates, new_state

@@ -54,7 +54,8 @@ def adamw(
         flat_p = treedef.flatten_up_to(params)
         outs = [
             upd(g, mu, nu, p)
-            for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)
+            for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p,
+                                    strict=True)
         ]
         updates = treedef.unflatten([o[0] for o in outs])
         new_mu = treedef.unflatten([o[1] for o in outs])

@@ -20,7 +20,7 @@ def chain(*transforms: Transform) -> Transform:
 
     def update(grads, state, params, step):
         new_states = []
-        for t, s in zip(transforms, state):
+        for t, s in zip(transforms, state, strict=True):
             grads, ns = t.update(grads, s, params, step)
             new_states.append(ns)
         return grads, tuple(new_states)

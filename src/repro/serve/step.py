@@ -116,3 +116,51 @@ def make_prefill_step(cfg: ModelConfig, prec: Precision) -> Callable:
     prefill_step.traces = 0
     prefill_step.attention_backend = resolved
     return prefill_step
+
+
+# ----------------------------------------------------------- trace manifest
+
+
+def trace_entry_points() -> list[dict]:
+    """Serve-step entries for ``repro.analysis``'s trace-contract layer:
+    one jitted decode tick per cache tier (f32 / bf16 / int8) at a tiny
+    config, each with a one-trace budget — the SlotParams SoA contract
+    means a batch mixing greedy and sampled slots must NEVER retrace
+    (``args_alt`` re-invokes at the same shapes with different values)."""
+    from repro.nn.config import ZetaConfig
+    from repro.nn.module import F32
+
+    B, max_len = 2, 32
+    cfg = ModelConfig(
+        name="analysis-tiny", vocab=64, d_model=32, n_layers=2, n_heads=4,
+        n_kv_heads=2, d_ff=64,
+        zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+    )
+
+    def build(cache_dtype):
+        def _build():
+            step = make_serve_step(cfg, F32, cache_dtype=cache_dtype)
+            params = api.init_params(jax.random.PRNGKey(0), cfg)
+            cache = api.cache_init(cfg, B, max_len, cache_dtype)
+            sp = sample.init_slot_params(sample.slot_spec(B))
+            history = jnp.full((B, 32), -1, jnp.int32)
+            rng = jax.random.PRNGKey(1)
+            mask = jnp.ones((B,), bool)
+
+            def fn(params, cache, tok, sp, history, rng, mask):
+                return step(params, cache, tok, sp, history, rng, mask)
+
+            args = (params, cache, jnp.full((B, 1), 3, jnp.int32),
+                    sp, history, rng, mask)
+            alt = (params, cache, jnp.full((B, 1), 5, jnp.int32),
+                   sp, history, rng, mask)
+            return fn, args, alt
+
+        return _build
+
+    return [
+        {"name": f"serve_step[{tier}]", "build": build(dt), "forbid": [],
+         "max_traces": 1}
+        for tier, dt in (("f32", jnp.float32), ("bf16", jnp.bfloat16),
+                         ("int8", jnp.int8))
+    ]

@@ -3,9 +3,9 @@
 from repro.train.step import (
     TrainState,
     cross_entropy,
+    init_train_state,
     make_eval_step,
     make_train_step,
-    init_train_state,
 )
 
 __all__ = [

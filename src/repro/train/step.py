@@ -114,3 +114,45 @@ def make_eval_step(cfg: ModelConfig, prec: Precision) -> Callable:
         }
 
     return eval_step
+
+
+# ----------------------------------------------------------- trace manifest
+
+
+def trace_entry_points() -> list[dict]:
+    """Train-step entry for ``repro.analysis``'s trace-contract layer: a
+    tiny full train step (fwd + bwd + optimizer) with a one-trace budget
+    across repeated same-shape calls."""
+    from repro.nn.config import ZetaConfig
+    from repro.nn.module import F32
+    from repro.optim import adamw, chain, clip_by_global_norm
+
+    cfg = ModelConfig(
+        name="analysis-tiny", vocab=64, d_model=32, n_layers=2, n_heads=4,
+        n_kv_heads=2, d_ff=64,
+        zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+    )
+    B, N = 2, 32
+
+    def build():
+        tx = chain(clip_by_global_norm(1.0), adamw(1e-3))
+        step = make_train_step(cfg, tx, F32)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, tx)
+        key = jax.random.PRNGKey(1)
+        tokens = jax.random.randint(key, (B, N), 0, cfg.vocab)
+        batch = {
+            "tokens": tokens,
+            "labels": jnp.roll(tokens, -1, axis=1),
+            "mask": jnp.ones((B, N), jnp.float32),
+        }
+        alt_batch = dict(batch, tokens=(tokens + 1) % cfg.vocab)
+
+        def fn(state, batch):
+            return step(state, batch)
+
+        return fn, (state, batch), (state, alt_batch)
+
+    return [
+        {"name": "train_step[f32]", "build": build, "forbid": [],
+         "max_traces": 1},
+    ]

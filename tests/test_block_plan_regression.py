@@ -9,9 +9,9 @@ to the old degenerate plan, which ``block_n=1`` still emulates exactly
 old rule's fixed point).  A NumPy oracle anchors both against the math.
 """
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 from repro.kernels.cauchy_topk import (
     DEFAULT_BLOCK_N,

@@ -6,7 +6,6 @@ G-times-repeated cache buffers in the GQA decode step's HLO.
 """
 
 import functools
-import re
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +13,7 @@ import numpy as np
 import pytest
 
 from repro import backend
+from repro.analysis import candidate_buffers, leading_buffers
 from repro.backend import registry
 from repro.core import selection
 from repro.core.attention import zeta_attention
@@ -96,7 +96,8 @@ def test_train_fused_grads_match_xla(groups, flags):
 
     g_f = jax.grad(loss("pallas_fused"))((zq, zk, v, gamma2))
     g_x = jax.grad(loss("xla"))((zq, zk, v, gamma2))
-    for name, a, b in zip(("dq", "dk", "dv", "dgamma2"), g_f, g_x):
+    for name, a, b in zip(("dq", "dk", "dv", "dgamma2"), g_f, g_x,
+                          strict=True):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4,
             err_msg=f"{name} mismatch (groups={groups}, {flags})",
@@ -210,24 +211,8 @@ def test_gathered_idx_fallback_uses_backends_gathered_stage():
 
 
 # ------------------------------------------------------------- memory pins
-
-
-def _hlo_shapes(hlo_text):
-    return [
-        tuple(int(d) for d in m.group(1).split(","))
-        for m in re.finditer(r"\[([0-9]+(?:,[0-9]+)+)\]", hlo_text)
-    ]
-
-
-def _candidate_buffers(hlo_text, n, kset, dv):
-    """Shapes ending in (..., n, K', dv) with a non-trivial lead — the
-    materialized per-candidate tensors the fused path must not create
-    (per-tile rank-3 kernel buffers are allowed: they live in VMEM)."""
-    return [
-        s for s in _hlo_shapes(hlo_text)
-        if len(s) >= 4 and s[-1] == dv and s[-2] in kset and s[-3] == n
-        and int(np.prod(s[:-3])) > 1
-    ]
+# (shape detectors live in repro.analysis — the same helpers the
+# trace-contract analyzer runs; no local regex copies)
 
 
 def _train_hlo(impl, history_mean=True, local_window=4):
@@ -245,12 +230,12 @@ def _train_hlo(impl, history_mean=True, local_window=4):
 def test_no_candidate_buffer_in_fused_train_hlo():
     kset = {K, K + 1, K + 4, K + 5}  # k, +mean, +window, +both
     hlo_x = _train_hlo("xla")
-    assert _candidate_buffers(hlo_x, N, kset, DV), (
+    assert candidate_buffers(hlo_x, N, kset, DV), (
         "detector sanity: the materializing path must show a "
         "(.., N, K, d_v) candidate buffer"
     )
     hlo_f = _train_hlo("pallas_fused")
-    bad = _candidate_buffers(hlo_f, N, kset, DV)
+    bad = candidate_buffers(hlo_f, N, kset, DV)
     assert not bad, f"fused train step materializes candidates: {bad}"
 
 
@@ -280,11 +265,7 @@ def test_decode_step_never_repeats_caches_for_gqa():
         jnp.full((B,), 9, jnp.int32), jnp.ones((B,), bool),
     )
     hlo = step.lower(*args).compile().as_text()
-    fq = B * hq
-    repeated = [
-        s for s in _hlo_shapes(hlo)
-        if len(s) >= 2 and s[0] == fq and s[1] == nmax
-    ]
+    repeated = leading_buffers(hlo, B * hq, nmax)
     assert not repeated, f"decode repeats per-KV caches G times: {repeated}"
 
 
@@ -350,6 +331,6 @@ def test_materializing_kernel_handles_nonmultiple_n():
 
     gk = jax.grad(loss)((q, k_sel, v_sel, g2))
     gr = jax.grad(loss_ref)((q, k_sel, v_sel, g2))
-    for a, b in zip(gk, gr):
+    for a, b in zip(gk, gr, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-4)

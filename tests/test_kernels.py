@@ -63,7 +63,7 @@ def test_cauchy_topk_gradients_match_ref_autodiff():
 
     gk = jax.grad(loss_kernel)((q, k_sel, v_sel, g2))
     gr = jax.grad(loss_ref)((q, k_sel, v_sel, g2))
-    for a, b in zip(gk, gr):
+    for a, b in zip(gk, gr, strict=True):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4
         )

@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.nn.config import ModelConfig, MoEConfig, SSMConfig
-from repro.nn.moe import moe_apply, moe_init
 from repro.nn.module import F32
+from repro.nn.moe import moe_apply, moe_init
 from repro.nn.ssd import ssd_apply, ssd_init, ssd_scan
 
 

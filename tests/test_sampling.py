@@ -141,7 +141,7 @@ def test_repetition_penalty_monotonic():
         masked = sample.filter_logits(logits, sp, hist)
         p = np.asarray(jax.nn.softmax(masked, -1))[0]
         probs.append(p)
-    for lo, hi in zip(probs, probs[1:]):
+    for lo, hi in zip(probs, probs[1:], strict=False):
         assert hi[0] < lo[0]          # positive-logit seen token: divided
         assert hi[3] < lo[3]          # negative-logit seen token: multiplied
     # penalty=1.0 is a no-op

@@ -218,9 +218,9 @@ def test_cache_reset_slots_isolates_rows():
                 out.append(np.asarray(leaf[:, b * h:(b + 1) * h]))
         return out
 
-    for got, want in zip(rows(reset, 0), rows(fresh, 0)):
+    for got, want in zip(rows(reset, 0), rows(fresh, 0), strict=True):
         np.testing.assert_array_equal(got, want)
-    for got, keep in zip(rows(reset, 1), rows(cache, 1)):
+    for got, keep in zip(rows(reset, 1), rows(cache, 1), strict=True):
         np.testing.assert_array_equal(got, keep)
 
 

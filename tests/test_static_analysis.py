@@ -1,0 +1,315 @@
+"""Mutation-style self-tests for ``repro.analysis``: every rule ships a
+minimal known-bad fixture it must flag and a known-good twin it must
+pass, the allowlist demands justifications, the registry cross-check and
+the VMEM audit catch seeded mismatches (including a deliberately wrong
+``fits_decode_residency``), and the CLI exits 0 on the clean tree.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import analysis
+from repro.analysis import registrycheck, tracecheck
+from repro.backend import backends as be
+from repro.backend import registry
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _rules_hit(src, path):
+    return {v.rule for v in analysis.lint_source(src, path)}
+
+
+# ------------------------------------------------------- AST rule fixtures
+# (bad snippet, good twin, path it is linted under, rule that must fire)
+
+AST_FIXTURES = {
+    "selection-core-ownership": (
+        "def f(skz, spos, kz, p, n):\n"
+        "    return topk.sorted_insert(skz, spos, kz, p, n)\n",
+        "def f(cache, zq, zk, v, g2, t, a, zcfg):\n"
+        "    return selection.attend_decode(cache, zq, zk, v, g2, t, a,\n"
+        "                                   zcfg=zcfg)\n",
+        "repro/serve/newpath.py",
+    ),
+    "cache-writer-ownership": (
+        "def f(cache, row, t):\n"
+        "    return cache.at[:, :, t].set(row)\n",
+        "def f(cache, row, t, active):\n"
+        "    return state.row_write(cache, row, t, active)\n",
+        "repro/serve/newpath.py",
+    ),
+    "no-raw-sentinel": (
+        "BIG = 3.4e38\n",
+        "def big(dtype):\n"
+        "    return topk.invalid_distance(dtype)\n",
+        "repro/core/newpath.py",
+    ),
+    "no-cache-repeat": (
+        "def f(kt, g):\n"
+        "    return jnp.repeat(kt, g, axis=1)\n",
+        "def f(t, hkv):\n"
+        "    return jnp.repeat(t, hkv)\n",  # flat expand: fine
+        "repro/serve/newpath.py",
+    ),
+    "no-host-sync": (
+        "def f(loss):\n"
+        "    return loss.item()\n",
+        "def f(x):\n"
+        "    return jnp.asarray(x)\n",
+        "repro/core/newpath.py",
+    ),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(AST_FIXTURES))
+def test_ast_rule_flags_bad_and_passes_good(rule):
+    bad, good, path = AST_FIXTURES[rule]
+    assert rule in _rules_hit(bad, path), f"{rule}: bad fixture not flagged"
+    assert rule not in _rules_hit(good, path), (
+        f"{rule}: good twin falsely flagged"
+    )
+
+
+def test_scope_excludes_host_side_modules():
+    # .item() in host orchestration (engine loop, eval) is that layer's
+    # job — only jit-interior paths are in scope.
+    src = "def f(loss):\n    return loss.item()\n"
+    assert "no-host-sync" not in _rules_hit(src, "repro/eval/harness.py")
+    # np.asarray must not substring-match jnp.asarray
+    src2 = "def f(x):\n    return jnp.asarray(x)\n"
+    assert "no-host-sync" not in _rules_hit(src2, "repro/core/newpath.py")
+
+
+def test_selection_owner_may_call_primitives():
+    src = "def f(skz, spos, kz, p, n):\n" \
+          "    return topk.sorted_insert(skz, spos, kz, p, n)\n"
+    assert "selection-core-ownership" not in _rules_hit(
+        src, "repro/core/selection.py"
+    )
+
+
+def test_axis0_repeat_is_allowed():
+    src = "def f(th, hkv):\n    return jnp.repeat(th, hkv, axis=0)\n"
+    assert "no-cache-repeat" not in _rules_hit(src, "repro/serve/newpath.py")
+    src_tile = "def f(kt, g):\n    return jnp.tile(kt, (g, 1))\n"
+    assert "no-cache-repeat" in _rules_hit(src_tile, "repro/serve/newpath.py")
+
+
+def test_allowance_requires_justification():
+    with pytest.raises(ValueError, match="justification"):
+        analysis.Allowance(rule="no-raw-sentinel", path="repro/x.py",
+                           match="1e38", justification="   ")
+
+
+def test_allowlisted_line_not_flagged():
+    # the flash.py softmax-mask constant is the reviewed exception
+    src = Path(REPO, "src/repro/kernels/flash.py").read_text()
+    assert "no-raw-sentinel" not in _rules_hit(src, "repro/kernels/flash.py")
+    # but the same constant elsewhere IS flagged
+    assert "no-raw-sentinel" in _rules_hit(
+        "MASK = -1e30\n", "repro/kernels/newpath.py"
+    )
+
+
+def test_clean_tree_ast_layer():
+    assert analysis.lint_tree() == []
+
+
+# --------------------------------------------------------- registry checks
+
+
+def test_registry_capability_sync_clean():
+    assert registrycheck.check_registry() == []
+
+
+def test_registry_flags_declared_stage_without_fn():
+    caps = registry.Capabilities(mechanisms=("zeta",),
+                                 stages=("gathered", "decode"))
+    registry.register_backend("bad-sync", lambda *a, **k: None, caps,
+                              gathered=lambda *a, **k: None,
+                              overwrite=True)
+    try:
+        msgs = [v.message for v in registrycheck.check_registry()
+                if v.path == "<registry:bad-sync>"]
+        assert any("declares stage 'decode'" in m for m in msgs)
+    finally:
+        registry.unregister_backend("bad-sync")
+
+
+def test_registry_flags_bound_fn_without_declaration():
+    caps = registry.Capabilities(mechanisms=("zeta",), stages=())
+    registry.register_backend("bad-sync2", lambda *a, **k: None, caps,
+                              decode=lambda *a, **k: None, overwrite=True)
+    try:
+        msgs = [v.message for v in registrycheck.check_registry()
+                if v.path == "<registry:bad-sync2>"]
+        assert any("binds a decode fn" in m for m in msgs)
+    finally:
+        registry.unregister_backend("bad-sync2")
+
+
+def test_registry_flags_unknown_stage_and_empty_scores():
+    caps = registry.Capabilities(mechanisms=("zeta",), scores=(),
+                                 stages=("warp_drive",))
+    registry.register_backend("bad-sync3", lambda *a, **k: None, caps,
+                              overwrite=True)
+    try:
+        msgs = [v.message for v in registrycheck.check_registry()
+                if v.path == "<registry:bad-sync3>"]
+        assert any("unknown stage" in m for m in msgs)
+        assert any("empty scores" in m for m in msgs)
+    finally:
+        registry.unregister_backend("bad-sync3")
+
+
+def test_stock_backends_declare_stages_explicitly():
+    for name in registry.list_backends():
+        be_ = registry.get_backend(name)
+        assert be_.caps.stages is not None, (
+            f"stock backend {name} must declare stages explicitly"
+        )
+        assert be_.declared_stages() == be_.bound_stages()
+
+
+# -------------------------------------------------------------- VMEM audit
+
+
+def test_vmem_audit_clean():
+    assert tracecheck.audit_vmem() == []
+
+
+def test_vmem_audit_catches_sabotaged_decode_guard():
+    def wrong_fits_decode(nmax, dk, dv, itemsize, g, kk, *,
+                          scale_bytes=0, budget=None):
+        # a 4x-too-generous budget: the kernel would blow VMEM long
+        # before this guard says stop
+        return be.fits_decode_residency(
+            nmax, dk, dv, itemsize, g, kk, scale_bytes=scale_bytes,
+            budget=4 * be.fused_vmem_budget(budget),
+        )
+
+    bad = tracecheck.audit_vmem(fits_decode=wrong_fits_decode)
+    assert any(v.rule == "trace-vmem-audit" and "decode" in v.message
+               for v in bad)
+
+
+def test_vmem_audit_catches_sabotaged_fused_guard():
+    def wrong_fits_fused(kt, vt, kk=0, block_n=None, *,
+                         extra_row_bytes=0, budget=None):
+        return be.fits_fused_residency(
+            kt, vt, kk=kk, block_n=block_n,
+            extra_row_bytes=extra_row_bytes,
+            budget=4 * be.fused_vmem_budget(budget),
+        )
+
+    bad = tracecheck.audit_vmem(fits_fused=wrong_fits_fused)
+    assert any(v.rule == "trace-vmem-audit" and "fused" in v.message
+               for v in bad)
+
+
+# ------------------------------------------------------------ trace layer
+
+
+def test_trace_checker_flags_candidate_buffer_fixture():
+    import jax.numpy as jnp
+
+    n, k, dv = 16, 4, 8
+
+    def materializing(kt, idx):
+        # (8, n, k, dv): exactly the buffer family the rule forbids
+        return jnp.take_along_axis(
+            kt[:, :, None, :],
+            jnp.broadcast_to(idx[..., None], (8, n, k, dv)),
+            axis=1,
+        ).sum()
+
+    def build():
+        kt = jnp.zeros((8, n, dv))
+        idx = jnp.zeros((8, n, k), jnp.int32)
+        return materializing, (kt, idx), None
+
+    bad = tracecheck.check_traces([
+        {"name": "fixture", "build": build,
+         "forbid": [("candidate", n, (k,), dv)]},
+    ])
+    assert any(v.rule == "trace-candidate-buffer" for v in bad)
+
+    # good twin: same entry without the materialized gather
+    def clean_fn(kt, idx):
+        return kt.sum() + idx.sum()
+
+    def build_clean():
+        kt = jnp.zeros((8, n, dv))
+        idx = jnp.zeros((8, n, k), jnp.int32)
+        return clean_fn, (kt, idx), None
+
+    assert tracecheck.check_traces([
+        {"name": "fixture-clean", "build": build_clean,
+         "forbid": [("candidate", n, (k,), dv)]},
+    ]) == []
+
+
+def test_trace_checker_flags_retrace():
+    import jax.numpy as jnp
+
+    def fn(x):
+        return x * 2
+
+    def build():
+        # args_alt at a DIFFERENT shape forces a second trace — the
+        # detector must count it against the budget
+        return fn, (jnp.zeros((2, 3)),), (jnp.zeros((4, 3)),)
+
+    bad = tracecheck.check_traces([
+        {"name": "fixture-retrace", "build": build, "forbid": [],
+         "max_traces": 1},
+    ])
+    assert any(v.rule == "trace-retrace-budget" for v in bad)
+
+
+def test_f64_detector():
+    assert analysis.has_f64("%p = f64[2,3] parameter(0)")
+    assert not analysis.has_f64("%p = f32[2,3] parameter(0)")
+
+
+def test_hlo_helpers():
+    text = "fusion f32[2,16,4,8] other f32[1,16,4,8] lead f32[4,33,3]"
+    assert analysis.hlo_shapes(text)[0] == (2, 16, 4, 8)
+    # non-trivial lead required: (1, ...) kernel tiles are allowed
+    assert analysis.candidate_buffers(text, 16, {4}, 8) == [(2, 16, 4, 8)]
+    assert analysis.leading_buffers(text, 4, 33, min_rank=3) == [(4, 33, 3)]
+
+
+# ----------------------------------------------------------------- CLI
+
+
+def test_cli_clean_tree_fast_layers():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--skip-trace"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_cli_full_run_with_json(tmp_path):
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--json", str(report)],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+
+    data = json.loads(report.read_text())
+    assert data["ok"] is True
+    assert data["layers"] == ["ast", "registry", "trace"]
+    assert data["violations"] == []

@@ -107,7 +107,7 @@ def test_loader_deterministic_and_resumable():
     l2 = SyntheticLMLoader(batch=2, seq_len=16, vocab=97, seed=7)
     l2.load_state_dict(state)
     resumed = [next(l2) for _ in range(3)]
-    for a, b in zip(after, resumed):
+    for a, b in zip(after, resumed, strict=True):
         np.testing.assert_array_equal(a["tokens"], b["tokens"])
     # different hosts get different data
     l3 = SyntheticLMLoader(batch=2, seq_len=16, vocab=97, seed=7,

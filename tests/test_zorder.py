@@ -82,7 +82,8 @@ def test_locality_preservation_declines_with_dk():
             :, 1: topn + 1
         ]
         overlaps[dk] = np.mean([
-            len(set(a) & set(b)) / topn for a, b in zip(true_nn, z_nn)
+            len(set(a) & set(b)) / topn
+            for a, b in zip(true_nn, z_nn, strict=True)
         ])
     assert overlaps[1] >= overlaps[3] >= overlaps[8] - 0.05
     assert overlaps[3] > 0.2
