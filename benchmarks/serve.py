@@ -7,9 +7,12 @@ slot occupancy for both schedulers on the same request trace; the
 full device-side sampling pipeline (temperature / top-p / repetition
 penalty / per-request seeds) to price the sampler against argmax.  A
 cache-dtype axis (``int8_cache`` / ``int8_decode_fused``) replays the
-continuous trace through the quantized K/V tier (§2c).  The
-machine-readable summary goes to ``BENCH_serve.json`` (CI uploads it as a
-build artifact).
+continuous trace through the quantized K/V tier (§2c).  Two robustness
+variants (§8): ``health_off`` prices the per-tick health sentinels
+(acceptance bar: "fast" tier costs <= 3% decode throughput) and
+``faulted`` replays the trace under an armed fault plan with "full"
+sentinels so recovery cost is a tracked number.  The machine-readable
+summary goes to ``BENCH_serve.json`` (CI uploads it as a build artifact).
 
     PYTHONPATH=src python benchmarks/serve.py [--smoke] [--out PATH]
 """
@@ -74,12 +77,14 @@ def _trace(n_requests: int, seed: int = 0,
 
 def _run(params, cfg, scheduler: str, n_requests: int,
          sampled: bool = False, speculation=None,
-         cache_dtype=None) -> dict:
+         cache_dtype=None, health: str | None = None,
+         fault_plan=None) -> dict:
     eng = ServeEngine(params, cfg, F32, batch_slots=SLOTS, max_len=MAX_LEN,
                       scheduler=scheduler, prefill_chunk=PREFILL_CHUNK,
                       speculation=speculation,
                       **({} if cache_dtype is None
-                         else {"cache_dtype": cache_dtype}))
+                         else {"cache_dtype": cache_dtype}),
+                      **({} if health is None else {"health": health}))
     # warm the jit caches (prefill / masked decode / slot reset) so the
     # timed trace measures steady-state serving, not compilation
     eng.submit(Request(rid=-1, prompt=[1, 2, 3], max_new=2))
@@ -88,6 +93,9 @@ def _run(params, cfg, scheduler: str, n_requests: int,
     eng.ticks = eng.prefill_calls = eng.decode_calls = 0
     eng.busy_slot_ticks = eng.spec_rounds = 0
     eng.spec_proposed = eng.spec_accepted = 0
+    # arm the fault plan only AFTER the warm-up so its tick schedule is
+    # relative to the timed trace (engine ticks were just reset to 0)
+    eng.fault_plan = fault_plan
     trace = _trace(n_requests, sampled=sampled)
     # staggered arrivals: a new request every other tick
     t0 = time.perf_counter()
@@ -123,6 +131,57 @@ def _run(params, cfg, scheduler: str, n_requests: int,
         batch_slots=SLOTS,
     )
     return s
+
+
+def _health_step_us(params, cfg, trials: int = 9, iters: int = 200) -> dict:
+    """Per-tier serve-step latency (us, min over ``trials`` timed runs of
+    ``iters`` chained steps) — the denominator of the sentinel-overhead
+    claim."""
+    import jax.numpy as jnp
+
+    from repro import sample
+    from repro.serve import step as step_mod
+
+    cache = api.cache_init(cfg, SLOTS, MAX_LEN, jnp.float32)
+    sp = sample.init_slot_params(sample.slot_spec(SLOTS))
+    hist = jnp.zeros((SLOTS, 32), jnp.int32)
+    rng = jax.random.PRNGKey(0)
+    tok = jnp.ones((SLOTS, 1), jnp.int32)
+    mask = jnp.ones((SLOTS,), bool)
+    inj = jnp.zeros((SLOTS,), jnp.float32)
+    tiers = ("off", "fast", "full")
+    fns = {}
+    for health in tiers:
+        fns[health] = jax.jit(
+            step_mod.make_serve_step(cfg, F32, health=health))
+        jax.block_until_ready(
+            fns[health](params, cache, tok, sp, hist, rng, mask, inj))
+    # interleave the tiers within each trial round so machine drift hits
+    # all three equally; overheads are MEDIANS of per-round paired ratios
+    # (a round's drift cancels inside its own ratio), latencies are mins
+    rounds = []
+    for _ in range(trials):
+        row = {}
+        for health in tiers:
+            c = cache
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                _, _, c, _, _ = fns[health](params, c, tok, sp, hist,
+                                            rng, mask, inj)
+            jax.block_until_ready(c)
+            row[health] = (time.perf_counter() - t0) / iters * 1e6
+        rounds.append(row)
+
+    def med(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    out = {h: min(r[h] for r in rounds) for h in tiers}
+    out["fast_vs_off_pct"] = med(
+        [100.0 * (r["fast"] / r["off"] - 1.0) for r in rounds])
+    out["full_vs_off_pct"] = med(
+        [100.0 * (r["full"] / r["off"] - 1.0) for r in rounds])
+    return out
 
 
 def run(smoke: bool = False, out_path: str | None = None):
@@ -171,6 +230,44 @@ def run(smoke: bool = False, out_path: str | None = None):
                f"{s['slot_occupancy']:.3f} busy-slot fraction")
         yield (f"serve_{name}_model_calls,0,"
                f"{s['model_calls']} ({s['prefill_calls']} prefill)")
+
+    # "health_off" prices the per-tick health sentinels (the continuous
+    # variant runs the default "fast" tier): the acceptance bar is <= 3%
+    # decode-throughput overhead.  The engine wall-clock at smoke scale is
+    # host-loop-noise dominated, so the overhead number comes from a
+    # PAIRED microbenchmark of the jitted serve step itself (min-of-trials
+    # per tier).  "faulted" replays the continuous trace under an armed
+    # fault plan with "full" sentinels — the CI chaos job uploads this
+    # variant's numbers so a regression in detection/recovery cost is
+    # visible, not just correctness.
+    s_off = _run(params, cfg, "continuous", n_requests, health="off")
+    step_us = _health_step_us(params, cfg)
+    overhead = step_us["fast_vs_off_pct"]
+    s_off["step_us"] = step_us
+    s_off["health_overhead_pct_fast_vs_off"] = overhead
+    results["health_off"] = s_off
+    yield (f"serve_health_off_tokens_per_s,"
+           f"{1e6 / max(s_off['tokens_per_s'], 1e-9):.0f},"
+           f"{s_off['tokens_per_s']:.2f} tok/s")
+    yield (f"serve_health_step_overhead,{step_us['fast']:.0f},"
+           f"fast {overhead:+.1f}% vs off "
+           f"(full {step_us['full_vs_off_pct']:+.1f}%)")
+
+    from repro.faults import FaultPlan, FaultSpec
+    plan = FaultPlan((
+        FaultSpec("nan_logits", name="nan0", tick=3, slot=0),
+        FaultSpec("flip_zcode", name="flip0", tick=7, slot=1, bit=7),
+    ))
+    s_f = _run(params, cfg, "continuous", n_requests, health="full",
+               fault_plan=plan)
+    s_f["faults_fired"] = sorted(plan.fired())
+    results["faulted"] = s_f
+    yield (f"serve_faulted_tokens_per_s,"
+           f"{1e6 / max(s_f['tokens_per_s'], 1e-9):.0f},"
+           f"{s_f['tokens_per_s']:.2f} tok/s, "
+           f"{s_f['quarantines']} quarantines, "
+           f"fired={','.join(s_f['faults_fired']) or 'none'}")
+
     out_path = out_path or os.path.join(os.getcwd(), "BENCH_serve.json")
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -156,6 +156,27 @@ class _FileLint(ast.NodeVisitor):
             )
         self.generic_visit(node)
 
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        types = []
+        if isinstance(node.type, ast.Tuple):
+            types = node.type.elts
+        elif node.type is not None:
+            types = [node.type]
+        blanket = node.type is None or any(
+            _dotted(t) in ("Exception", "BaseException") for t in types
+        )
+        if blanket and not any(
+                isinstance(n, ast.Raise) for n in ast.walk(node)):
+            what = "bare except:" if node.type is None \
+                else "blanket except Exception"
+            self._flag(
+                "no-blanket-except", node,
+                f"{what} swallows failures silently — re-raise (typed or "
+                "bare `raise`) so callers can demote/quarantine, or add "
+                "a reviewed Allowance",
+            )
+        self.generic_visit(node)
+
     def visit_Constant(self, node: ast.Constant) -> None:
         v = node.value
         if isinstance(v, float) and abs(v) >= 1e30:

@@ -189,6 +189,17 @@ RULES: tuple[Rule, ...] = (
             "tick on a device round-trip",
     ),
     Rule(
+        id="no-blanket-except",
+        title="no bare `except:` / blanket `except Exception` without a "
+              "re-raise in the handler or a reviewed allowance",
+        layer="ast",
+        scope=("repro/*",),
+        why="PR 10: a swallowed kernel failure is SILENT corruption — "
+            "the fault-tolerant serving contract is that every failure "
+            "either re-raises (so the engine can demote/quarantine) or "
+            "is a reviewed best-effort reporter",
+    ),
+    Rule(
         id="registry-capability-sync",
         title="every Backend's declared stage capabilities match its "
               "bound stage fns, both directions",
@@ -257,6 +268,38 @@ ALLOWLIST: tuple[Allowance, ...] = (
         justification="the sentinel detector's own threshold constant — "
                       "it is compared against source literals, never cast "
                       "to a device dtype",
+    ),
+    Allowance(
+        rule="no-blanket-except",
+        path="repro/analysis/tracecheck.py",
+        match="report, don't crash the run",
+        justification="the analyzer itself: a compile failure in ONE "
+                      "entry point becomes a Violation in the report "
+                      "instead of aborting the other checks",
+    ),
+    Allowance(
+        rule="no-blanket-except",
+        path="repro/launch/roofline.py",
+        match="record the failure, keep sweeping",
+        justification="offline sweep harness: each (arch, shape) cell "
+                      "records status=fail with the error text; one bad "
+                      "cell must not kill the sweep",
+    ),
+    Allowance(
+        rule="no-blanket-except",
+        path="repro/launch/perf.py",
+        match="except Exception as e:",
+        justification="offline perf harness: the failure is recorded in "
+                      "the emitted record (status=fail + error text), "
+                      "not swallowed",
+    ),
+    Allowance(
+        rule="no-blanket-except",
+        path="repro/launch/dryrun.py",
+        match="except Exception as e:",
+        justification="offline compile dry-run: memory/cost analysis is "
+                      "best-effort per backend and per cell; every "
+                      "failure lands in the cell's record as error text",
     ),
     Allowance(
         rule="no-raw-sentinel",

@@ -45,7 +45,14 @@ class GenerationResult:
     rid: int
     prompt: list[int]
     tokens: list[int]
-    finish_reason: str | None   # "length" | "eos" | "stop"
+    # "length" | "eos" | "stop" on success.  Under load shedding or
+    # faults the engine returns TYPED failure reasons instead of raising
+    # or silently corrupting: "shed_queue_full" (bounded admission),
+    # "shed_deadline" (deadline_ticks exceeded; tokens may be partial),
+    # "cancelled" (engine.cancel(rid)), "quarantined" (health sentinels
+    # kept flagging the request past its retry budget) — see
+    # docs/ARCHITECTURE.md §8.
+    finish_reason: str | None
     gen: GenerationParams | None = None
 
 
@@ -58,7 +65,8 @@ def generate(params, cfg: ModelConfig,
              prefill_chunk: int = 8, scheduler: str = "continuous",
              speculation: SpeculationConfig | None = None,
              bos_id: int | None = None, history_len: int = 32,
-             cache_dtype=None,
+             cache_dtype=None, health: str = "fast",
+             deadline_ticks: int | None = None,
              on_token: Callable[[int, int], None] | None = None,
              max_ticks: int = 10_000) -> list[GenerationResult]:
     """Generate completions for ``prompts`` (token-id lists).
@@ -75,7 +83,12 @@ def generate(params, cfg: ModelConfig,
     ``cache_dtype`` selects the K/V cache tier (default f32);
     ``jnp.int8`` stores ZETA coords/values row-quantized with in-kernel
     dequant-on-gather (docs/ARCHITECTURE.md §2c) — roughly 4x less cache
-    HBM, compute still in ``prec``.  Results come back in prompt order.
+    HBM, compute still in ``prec``.  ``health`` selects the serve step's
+    device-side sentinel tier ("off"/"fast"/"full") and
+    ``deadline_ticks`` applies a per-request deadline (breaches finish
+    with ``"shed_deadline"`` instead of blocking the batch) — see
+    :class:`GenerationResult` for the typed failure reasons.  Results
+    come back in prompt order.
     """
     prompts = [list(p) for p in prompts]
     if not prompts:
@@ -106,10 +119,12 @@ def generate(params, cfg: ModelConfig,
         max_stops=max([len(g.stop) for g in gens], default=1) or 1,
         max_stop_len=max_stop_len,
         history_len=max(history_len, max_stop_len),
+        health=health,
         **({} if cache_dtype is None else {"cache_dtype": cache_dtype}),
     )
     for rid, (p, g) in enumerate(zip(prompts, gens, strict=True)):
-        engine.submit(Request(rid=rid, prompt=p, gen=g))
+        engine.submit(Request(rid=rid, prompt=p, gen=g,
+                              deadline_ticks=deadline_ticks))
     done = engine.run_to_completion(max_ticks=max_ticks, on_token=on_token)
     by_rid = {r.rid: r for r in done}
     if len(by_rid) != len(prompts):

@@ -16,6 +16,9 @@ Public surface:
   support_matrix[_markdown]()           — the README's backend matrix
   resolve_name(cfg)                     — what dispatch would pick
   default_interpret()                   — Pallas interpret-mode probe
+  demote_backend(name, stage)           — sticky runtime-failure record
+  promote_backend(name[, stage])        — clear it after a good re-probe
+  demotion_records() / clear_demotions()— inspect / reset the ladder
 
 ``python -m repro.backend`` prints the live support matrix.
 """
@@ -32,15 +35,20 @@ from repro.backend.registry import (  # noqa: F401
     AttentionRequest,
     Backend,
     Capabilities,
+    Demotion,
     attention,
     available_backends,
+    clear_demotions,
     current_device,
     default_interpret,
+    demote_backend,
+    demotion_records,
     gathered_attention,
     gathered_idx_attention,
     gathered_idx_q_attention,
     get_backend,
     list_backends,
+    promote_backend,
     register_backend,
     resolve_name,
     select_backend,

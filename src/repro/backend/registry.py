@@ -192,6 +192,76 @@ class Backend:
 _REGISTRY: dict[str, Backend] = {}
 
 
+# ----------------------------------------------------------------- demotion
+#
+# Runtime failures are a different animal from capability mismatches: a
+# backend can pass every static ``supports`` check and still blow up when
+# the kernel actually runs (bad lowering on this driver, OOM inside the
+# fused decode, an interpret-mode bug).  A Demotion is the sticky
+# per-process record of such a failure, keyed by (backend, stage).  The
+# selection fns consult it AFTER capability filtering, so a demoted fused
+# ``decode`` stage falls back to the caller's staged pipeline and a
+# demoted staged stage falls to the next ranked backend (ultimately xla)
+# — one bad compile never takes down the process.  ``reprobe_after`` lets
+# every Nth query through so a transient failure can earn its way back;
+# a successful re-probe should call :func:`promote_backend`.
+
+
+@dataclasses.dataclass
+class Demotion:
+    backend: str
+    stage: str
+    reason: str
+    reprobe_after: int = 0   # 0 = sticky forever, N = probe every Nth query
+    skips: int = 0           # queries suppressed since the last probe
+
+
+_DEMOTIONS: dict[tuple[str, str], Demotion] = {}
+
+
+def demote_backend(name: str, stage: str, *,
+                   reason: str = "runtime failure",
+                   reprobe_after: int = 0) -> bool:
+    """Record a runtime failure for ``(name, stage)``.  Returns True if
+    this is a NEW demotion (callers use this to decide whether a retry
+    can possibly take a different path)."""
+    key = (name, stage)
+    if key in _DEMOTIONS:
+        return False
+    _DEMOTIONS[key] = Demotion(name, stage, str(reason),
+                               reprobe_after=reprobe_after)
+    return True
+
+
+def promote_backend(name: str, stage: str | None = None) -> None:
+    """Clear demotion records for ``name`` (one stage, or all of them)."""
+    for key in [k for k in _DEMOTIONS
+                if k[0] == name and (stage is None or k[1] == stage)]:
+        del _DEMOTIONS[key]
+
+
+def demotion_records() -> tuple[Demotion, ...]:
+    return tuple(_DEMOTIONS.values())
+
+
+def clear_demotions() -> None:
+    _DEMOTIONS.clear()
+
+
+def _is_demoted(name: str, stage: str) -> bool:
+    """Demotion check with periodic re-probe: every ``reprobe_after``-th
+    query for a demoted pair is allowed through as a probe."""
+    d = _DEMOTIONS.get((name, stage))
+    if d is None:
+        return False
+    if d.reprobe_after > 0:
+        d.skips += 1
+        if d.skips >= d.reprobe_after:
+            d.skips = 0
+            return False
+    return True
+
+
 def register_backend(name: str, fn: Callable, capabilities: Capabilities, *,
                      gathered: Callable | None = None,
                      gathered_idx: Callable | None = None,
@@ -248,12 +318,20 @@ def select_backend(req: AttentionRequest,
     if preferred is not None:
         be = get_backend(preferred)  # unknown explicit name is an error
         if be.supports(req):
-            return be
-        warnings.warn(
-            f"attention backend {preferred!r} does not support {req}; "
-            f"falling back to automatic selection",
-            stacklevel=2,
-        )
+            if not _is_demoted(preferred, req.stage):
+                return be
+            warnings.warn(
+                f"attention backend {preferred!r} is demoted for stage "
+                f"{req.stage!r} after a runtime failure; falling back to "
+                f"automatic selection",
+                stacklevel=2,
+            )
+        else:
+            warnings.warn(
+                f"attention backend {preferred!r} does not support {req}; "
+                f"falling back to automatic selection",
+                stacklevel=2,
+            )
     env = os.environ.get(ENV_VAR)
     if env and env != preferred:
         be = _REGISTRY.get(env)
@@ -271,9 +349,14 @@ def select_backend(req: AttentionRequest,
                 stacklevel=2,
             )
     names = available_backends(req)
-    if not names:
-        raise LookupError(f"no registered attention backend supports {req}")
-    return _REGISTRY[names[0]]
+    live = [n for n in names if not _is_demoted(n, req.stage)]
+    if live:
+        return _REGISTRY[live[0]]
+    if names:
+        # Everything capable is demoted; a wrong answer is worse than a
+        # flaky backend, so run the best-ranked one anyway.
+        return _REGISTRY[names[0]]
+    raise LookupError(f"no registered attention backend supports {req}")
 
 
 def _ensure_registered() -> None:
@@ -471,22 +554,29 @@ def select_decode_backend(score: str = "cauchy", dtype: str = "float32",
     returned, and the caller takes its staged pipeline.
     """
     _ensure_registered()
+    stage = "decode_q" if quantized else "decode"
     req = AttentionRequest.probe(
-        mechanism="zeta", score=score, dtype=dtype,
-        stage="decode_q" if quantized else "decode",
+        mechanism="zeta", score=score, dtype=dtype, stage=stage,
     )
+    # A demoted fused stage resolves to None — the caller's staged
+    # pipeline IS the next rung of the degradation ladder, so unlike
+    # select_backend there is no cross-backend fallback to arrange here.
     if preferred is not None:
         be = get_backend(preferred)  # unknown explicit name is an error
-        return be if be.supports(req) else None
+        if be.supports(req) and not _is_demoted(preferred, stage):
+            return be
+        return None
     env = os.environ.get(ENV_VAR)
     if env:
         be = _REGISTRY.get(env)
-        if be is not None and be.supports(req):
+        if (be is not None and be.supports(req)
+                and not _is_demoted(env, stage)):
             return be
         return None
     for name in available_backends(req):
         be = _REGISTRY[name]
-        if req.device in be.caps.compiled_devices:
+        if req.device in be.caps.compiled_devices \
+                and not _is_demoted(name, stage):
             return be
     return None
 

@@ -4,8 +4,13 @@ Guarantees needed for restart-after-failure on a real cluster:
 
   * **Atomicity** — a checkpoint directory appears only when complete
     (write to ``<step>.tmp`` then ``os.rename``; rename is atomic on POSIX).
+  * **Durability** — rename-atomicity alone survives process crashes, not
+    power loss: payload files are fsync'd before the rename and the parent
+    directory entry after it, so a completed ``save()`` is on stable
+    storage even if the machine dies the next instant.
   * **Crash consistency** — ``latest_step()`` only ever sees complete dirs;
-    a crash mid-save leaves a ``.tmp`` that is ignored and garbage-collected.
+    a crash mid-save leaves a ``.tmp`` that is ignored and garbage-collected
+    on the next save (and at manager construction).
   * **Resumability** — the train step, optimizer state, PRNG key, and the
     *data-loader state* are all stored, so a restart replays nothing and
     skips nothing.
@@ -32,17 +37,41 @@ import jax
 import numpy as np
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory (directories need their entry durable too —
+    an fsync'd file inside an un-fsync'd directory can vanish on power
+    loss)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _keypath_str(keypath) -> str:
+    parts = []
+    for kp in keypath:
+        if hasattr(kp, "key"):        # DictKey
+            parts.append(str(kp.key))
+        elif hasattr(kp, "idx"):      # SequenceKey
+            parts.append(str(kp.idx))
+        elif hasattr(kp, "name"):     # GetAttrKey (registered dataclasses)
+            parts.append(str(kp.name))
+        else:
+            parts.append(str(kp))
+    return "/".join(parts)
+
+
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for keypath, leaf in flat:
-        parts = []
-        for kp in keypath:
-            if hasattr(kp, "key"):
-                parts.append(str(kp.key))
-            elif hasattr(kp, "idx"):
-                parts.append(str(kp.idx))
-        out["/".join(parts)] = np.asarray(leaf)
+        path = _keypath_str(keypath)
+        if path in out:
+            # a dropped key component would silently overwrite a sibling
+            # leaf and corrupt the checkpoint — fail loudly instead
+            raise ValueError(f"checkpoint path collision at {path!r}")
+        out[path] = np.asarray(leaf)
     return out
 
 
@@ -50,13 +79,7 @@ def _unflatten_into(template: Any, arrays: dict[str, np.ndarray]) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for keypath, leaf in flat:
-        parts = []
-        for kp in keypath:
-            if hasattr(kp, "key"):
-                parts.append(str(kp.key))
-            elif hasattr(kp, "idx"):
-                parts.append(str(kp.idx))
-        path = "/".join(parts)
+        path = _keypath_str(keypath)
         if path not in arrays:
             raise KeyError(f"checkpoint missing leaf {path!r}")
         arr = arrays[path]
@@ -82,6 +105,7 @@ class CheckpointManager:
         host_state = jax.tree.map(np.asarray, state)  # device -> host now
 
         def _write():
+            self._gc_tmp(skip=f"{step}.tmp")  # stale crash leftovers
             tmp = os.path.join(self.directory, f"{step}.tmp")
             final = os.path.join(self.directory, str(step))
             os.makedirs(tmp, exist_ok=True)
@@ -89,9 +113,16 @@ class CheckpointManager:
             manifest = {"step": step, "extra": extra or {}}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            # payload durable before the rename publishes it ...
+            _fsync_path(os.path.join(tmp, "state.npz"))
+            _fsync_path(tmp)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)
+            # ... and the directory entry durable after
+            _fsync_path(self.directory)
             self._gc_old()
 
         if self.async_save:
@@ -150,8 +181,8 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.directory, str(s)),
                           ignore_errors=True)
 
-    def _gc_tmp(self) -> None:
+    def _gc_tmp(self, skip: str | None = None) -> None:
         for d in os.listdir(self.directory):
-            if d.endswith(".tmp"):
+            if d.endswith(".tmp") and d != skip:
                 shutil.rmtree(os.path.join(self.directory, d),
                               ignore_errors=True)

@@ -480,6 +480,58 @@ class ZetaCache(NamedTuple):
     v_scale: jax.Array | None = None
 
 
+# ------------------------------------------------------------- health word
+
+# Nonfinite running history-mean numerators (NaN/Inf poison propagates
+# through every future mean token) — next free bit above the
+# topk.HEALTH_* sorted-cache bits.
+HEALTH_SUMS = 32
+
+
+def cache_health_flags(cache: ZetaCache, t: jax.Array, *, zcfg,
+                       full: bool = False) -> jax.Array:
+    """Per-slot health bitmask over one layer's ZETA decode cache.
+
+    t: (B,) per-slot lengths (``cache["length"]``).  Checks the sorted
+    z-code rows against the invariants ``topk.sorted_cache_health``
+    documents (searchable count = the delayed-insertion pool max(t - M, 0))
+    and the running history-mean numerators for nonfinite poison.
+    ``full=True`` additionally re-encodes the stored key rows and
+    cross-checks every sorted code against its position's code — exact in
+    every cache tier, since sorted codes derive from the STORED rows (the
+    int8 tier re-encodes the dequantized payload, same as the insert
+    paths) — which catches order-preserving bit flips the cheap check
+    cannot see.  Returns (B,) int32 (0 == healthy); pure device
+    arithmetic, no host sync.
+    """
+    B, Hkv, Nmax, dk = cache.zk.shape
+    f = B * Hkv
+    M = Nmax // max(zcfg.num_chunks, 1)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    searchable = jnp.repeat(jnp.maximum(t - M, 0), Hkv)
+    codes_by_pos = None
+    if full:
+        if cache.zk_scale is not None:
+            kz_src = state.dequantize_rows(cache.zk, cache.zk_scale)
+        else:
+            kz_src = cache.zk
+        codes_by_pos = morton_codes(
+            kz_src.reshape(f, Nmax, dk), bits=zcfg.bits, bound=zcfg.bound
+        )
+    row_flags = topk.sorted_cache_health(
+        cache.zk_sorted, cache.pos_sorted, searchable,
+        codes_by_pos=codes_by_pos,
+    )                                                          # (f,)
+    flags = jax.lax.reduce(
+        row_flags.reshape(B, Hkv), jnp.int32(0), jnp.bitwise_or, (1,)
+    )
+    bad_sums = ~(
+        jnp.all(jnp.isfinite(cache.ksum), axis=(1, 2))
+        & jnp.all(jnp.isfinite(cache.vsum), axis=(1, 2))
+    )
+    return flags | bad_sums.astype(jnp.int32) * HEALTH_SUMS
+
+
 # ------------------------------------------------------------ decode mode
 
 

@@ -402,6 +402,83 @@ def sorted_build(
     return svals, spos
 
 
+# Bit layout of the per-row health flags returned by
+# ``sorted_cache_health`` (the serve-step health word shifts these left by
+# one to make room for its own nonfinite-logits bit 0).
+HEALTH_ORDER = 1      # sorted prefix not ascending
+HEALTH_SENTINEL = 2   # SENTINEL inside the prefix / valid code in the tail
+HEALTH_POS = 4        # position out of [0, searchable) / duplicate / tail != 0
+HEALTH_CODE = 8       # stored code disagrees with re-encoded key (full mode)
+HEALTH_LENGTH = 16    # searchable count outside [0, Nmax]
+
+
+def sorted_cache_health(
+    sorted_kz: jax.Array,
+    sorted_pos: jax.Array,
+    searchable: jax.Array,
+    *,
+    codes_by_pos: jax.Array | None = None,
+) -> jax.Array:
+    """Device-side invariant check over sorted decode-cache rows.
+
+    A clean row with searchable count s holds, by construction of
+    ``sorted_insert`` / ``sorted_insert_many`` / ``sorted_build``:
+
+      * codes[0:s] ascending and strictly below SENTINEL, codes[s:] == SENTINEL;
+      * pos[0:s] a permutation of {0..s-1} (keys insert in position order,
+        one per step past the delayed-insertion horizon), pos[s:] == 0.
+
+    sorted_kz/sorted_pos: (R, Nmax); searchable: (R,) or scalar live counts.
+    ``codes_by_pos``: optional (R, Nmax) re-encoded Morton codes of the
+    positional key cache — when given, every prefix entry is cross-checked
+    against the code its position re-encodes to, which catches bit flips
+    that happen to preserve sort order (codes derive from the STORED rows
+    in every tier, so the comparison is exact, not approximate).
+
+    Returns (R,) int32 bitmasks (0 == healthy; see HEALTH_* bits).  Pure
+    device arithmetic — no host sync — so the serve step folds it into its
+    per-tick outputs for free.
+    """
+    R, N = sorted_kz.shape
+    s = jnp.broadcast_to(jnp.asarray(searchable, jnp.int32), (R,))
+    sc = jnp.clip(s, 0, N)
+    i = jnp.arange(N, dtype=jnp.int32)
+    in_prefix = i[None, :] < sc[:, None]                          # (R, N)
+
+    bad_order = jnp.any(
+        in_prefix[:, 1:] & (sorted_kz[:, :-1] > sorted_kz[:, 1:]), axis=-1
+    )
+    bad_sent = (
+        jnp.any(in_prefix & (sorted_kz == SENTINEL), axis=-1)
+        | jnp.any(~in_prefix & (sorted_kz != SENTINEL), axis=-1)
+    )
+    pos_ok = (sorted_pos >= 0) & (sorted_pos < sc[:, None])
+    counts = jnp.zeros((R, N), jnp.int32).at[
+        jnp.arange(R, dtype=jnp.int32)[:, None],
+        jnp.clip(sorted_pos, 0, N - 1),
+    ].add(jnp.where(in_prefix, 1, 0))
+    bad_pos = (
+        jnp.any(in_prefix & ~pos_ok, axis=-1)
+        | jnp.any(~in_prefix & (sorted_pos != 0), axis=-1)
+        | jnp.any(counts > 1, axis=-1)
+    )
+    bad_len = (s < 0) | (s > N)
+
+    flags = (
+        bad_order.astype(jnp.int32) * HEALTH_ORDER
+        + bad_sent.astype(jnp.int32) * HEALTH_SENTINEL
+        + bad_pos.astype(jnp.int32) * HEALTH_POS
+        + bad_len.astype(jnp.int32) * HEALTH_LENGTH
+    )
+    if codes_by_pos is not None:
+        stored = jnp.take_along_axis(
+            codes_by_pos, jnp.clip(sorted_pos, 0, N - 1), axis=-1
+        )
+        bad_code = jnp.any(in_prefix & (stored != sorted_kz), axis=-1)
+        flags = flags + bad_code.astype(jnp.int32) * HEALTH_CODE
+    return flags
+
+
 def reset_rows(
     sorted_kz: jax.Array,
     sorted_pos: jax.Array,

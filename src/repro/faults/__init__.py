@@ -1,0 +1,29 @@
+"""Deterministic fault injection for the serving stack
+(docs/ARCHITECTURE.md §8).
+
+Public surface:
+
+  FaultSpec / FaultPlan             — seedable, named, replayable faults
+  scenario(name) / scenario_names() — the canned chaos scenarios CI runs
+  corrupt_cache / apply_cache_faults— host-side cache corruption
+  raising_stage(backend, stage)     — patch a stage to raise at run time
+  flood(engine, spec)               — burst-submit past admission bounds
+  FaultInjected                     — the injected-failure exception type
+"""
+
+from repro.faults.inject import (  # noqa: F401
+    FaultInjected,
+    apply_cache_faults,
+    corrupt_cache,
+    flood,
+    raising_stage,
+)
+from repro.faults.plan import (  # noqa: F401
+    CACHE_KINDS,
+    KINDS,
+    LOGIT_KINDS,
+    FaultPlan,
+    FaultSpec,
+    scenario,
+    scenario_names,
+)

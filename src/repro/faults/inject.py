@@ -1,0 +1,146 @@
+"""Fault injectors: the host-side halves of :mod:`repro.faults.plan`.
+
+Logit faults travel device-side through the serve step's ``inject``
+argument (built by ``FaultPlan.logit_inject``); everything here runs on
+the host.  ``corrupt_cache`` mutates a serve cache pytree the way cosmic
+rays / DMA bugs would — bit flips and reorderings the health sentinels
+must catch.  ``raising_stage`` patches a registered backend stage to
+raise :class:`FaultInjected`, which is how the chaos suite exercises the
+runtime demotion ladder without a genuinely broken kernel.  ``flood``
+burst-submits past an engine's admission bound.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.plan import CACHE_KINDS, FaultPlan, FaultSpec
+
+
+class FaultInjected(RuntimeError):
+    """Raised by an injected failing kernel stage — a distinct type so
+    chaos tests can tell injected raises from genuine bugs."""
+
+
+# -------------------------------------------------------- cache corruption
+
+
+def _attn_family(cache):
+    """Locate the first attention cache family: (family_key, fam, tree)
+    where ``tree`` holds the stacked (L, ...) zeta leaves — ``fam`` wraps
+    it under ``"attn"`` for hybrid mixers.  None for attention-free
+    models."""
+    if isinstance(cache, dict) and "self" in cache and "memory" in cache:
+        fams = [("self", cache["self"])]
+    else:
+        fams = [(k, cache[k]) for k in ("layers", "moe_layers")
+                if isinstance(cache, dict) and k in cache]
+    for key, fam in fams:
+        tree = fam
+        if isinstance(fam, dict) and "attn" in fam \
+                and "zk_sorted" not in fam:
+            tree = fam["attn"]
+        if isinstance(tree, dict) and "zk_sorted" in tree:
+            return key, fam, tree
+    return None
+
+
+def corrupt_cache(cfg, cache, spec: FaultSpec, *,
+                  rng: np.random.Generator):
+    """Apply one cache-corruption fault, returning a NEW cache pytree
+    (the input is never mutated).  ``rng`` comes from
+    ``FaultPlan.rng_for(spec)`` so the corrupted position replays
+    exactly."""
+    if spec.kind not in CACHE_KINDS:
+        raise ValueError(f"{spec.kind!r} is not a cache fault")
+    fam_info = _attn_family(cache)
+    if fam_info is None:
+        return cache  # attention-free model: nothing to corrupt
+    key, fam, tree = fam_info
+    zs = np.asarray(tree["zk_sorted"]).copy()
+    ps = np.asarray(tree["pos_sorted"]).copy()
+    ln = np.asarray(tree["length"]).copy()
+    L, B = ln.shape
+    layer, slot = spec.layer % L, spec.slot % B
+    hkv = zs.shape[1] // B
+    n = zs.shape[2]
+    m = n // max(cfg.zeta.num_chunks, 1)
+    t = int(ln[layer, slot])
+    s = max(t - m, 0)  # searchable prefix length (delayed insertion)
+    row = slot * hkv + int(rng.integers(hkv))
+    if spec.kind == "stale_length":
+        ln[layer, slot] = min(t + 1 + int(rng.integers(3)), n)
+    elif spec.kind == "swap_rows" and s >= 2 \
+            and zs[layer, row, 0] != zs[layer, row, s - 1]:
+        i, j = 0, s - 1
+        zs[layer, row, i], zs[layer, row, j] = (
+            zs[layer, row, j].item(), zs[layer, row, i].item())
+        ps[layer, row, i], ps[layer, row, j] = (
+            ps[layer, row, j].item(), ps[layer, row, i].item())
+    else:  # flip_zcode, or a swap with no distinct pair to swap
+        pos = int(rng.integers(max(s, 1)))
+        zs[layer, row, pos] ^= np.int32(1 << (spec.bit % 31))
+    new_tree = dict(tree, zk_sorted=jnp.asarray(zs),
+                    pos_sorted=jnp.asarray(ps), length=jnp.asarray(ln))
+    new_fam = (dict(fam, attn=new_tree)
+               if tree is not fam else new_tree)
+    return dict(cache, **{key: new_fam})
+
+
+def apply_cache_faults(engine, plan: FaultPlan) -> list[str]:
+    """Engine-side hook: fire this tick's cache faults against
+    ``engine.cache``.  Returns the fired fault names."""
+    specs = plan.take(engine.ticks, CACHE_KINDS)
+    for spec in specs:
+        engine.cache = corrupt_cache(engine.cfg, engine.cache, spec,
+                                     rng=plan.rng_for(spec))
+    return [s.name for s in specs]
+
+
+# --------------------------------------------------------- kernel failure
+
+
+@contextlib.contextmanager
+def raising_stage(backend_name: str, stage: str, *,
+                  message: str = "injected kernel failure"):
+    """Temporarily replace one stage of a registered backend with a
+    raiser.  The capability surface is untouched — selection still picks
+    the backend, the RUNTIME call fails — which is exactly the gap the
+    demotion ladder exists for."""
+    from repro.backend import registry
+
+    be = registry.get_backend(backend_name)
+    if getattr(be, stage, None) is None:
+        raise ValueError(f"{backend_name!r} does not bind stage {stage!r}")
+
+    def _boom(*args, **kwargs):
+        raise FaultInjected(f"{backend_name}.{stage}: {message}")
+
+    registry._REGISTRY[backend_name] = dataclasses.replace(
+        be, **{stage: _boom})
+    try:
+        yield
+    finally:
+        registry._REGISTRY[backend_name] = be
+
+
+# ------------------------------------------------------------ queue flood
+
+
+def flood(engine, spec: FaultSpec, *, prompt=(1, 2), max_new: int = 4,
+          rid_base: int = 10_000) -> list:
+    """Burst-submit ``spec.count`` tiny requests; with a bounded queue
+    the overflow sheds with ``finish_reason='shed_queue_full'``.  Returns
+    the submitted Request objects so the test can audit every outcome."""
+    from repro.serve.engine import Request
+
+    reqs = [Request(rid=rid_base + i, prompt=list(prompt),
+                    gen=engine._default_gen.replace(max_new=max_new))
+            for i in range(spec.count)]
+    for r in reqs:
+        engine.submit(r)
+    return reqs

@@ -1,0 +1,189 @@
+"""Deterministic, replayable fault plans.
+
+A :class:`FaultPlan` is a seedable list of :class:`FaultSpec`\\ s, each
+naming ONE fault to fire at ONE engine tick.  Tests and the CI chaos job
+address plans by scenario name (:data:`SCENARIOS` / :func:`scenario`) so
+a failure seen in CI replays bit-identically on a laptop: the same plan +
+the same engine seed + the same workload produces the same poisoned
+tensors, the same sentinel bits, and the same recovery path.
+
+The plan is a passive schedule — it never touches the engine.  The engine
+polls it each tick (``logit_inject`` for device-side NaN/Inf injection,
+``take`` for host-side cache corruption); harness-level faults
+(``kernel_raise``, ``heartbeat_stall``, ``queue_flood``) are consumed by
+the helpers in :mod:`repro.faults.inject` around the engine instead of
+inside it.  Every spec fires at most once and the plan records what fired
+(:meth:`FaultPlan.fired`), so a chaos test can assert both that the fault
+happened AND that the engine produced a typed outcome for it — the
+zero-silent-corruption contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+KINDS = (
+    "nan_logits",      # additive NaN on one slot's serve-step logits
+    "inf_logits",      # additive +inf, same mechanism
+    "kernel_raise",    # a chosen backend stage raises at run time
+    "flip_zcode",      # bit-flip one sorted z-code entry (+ its K row)
+    "swap_rows",       # swap two sorted-prefix entries (code + pos)
+    "stale_length",    # advance a slot's cache length past reality
+    "heartbeat_stall", # a host stops beating (elastic layer)
+    "queue_flood",     # burst-submit past the admission bound
+)
+
+# faults the engine applies to its own cache pytree between ticks
+CACHE_KINDS = ("flip_zcode", "swap_rows", "stale_length")
+# faults the engine folds into the serve step's inject vector
+LOGIT_KINDS = ("nan_logits", "inf_logits")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One addressable fault.  ``tick`` is the engine tick (continuous
+    scheduler) at which it fires; ``slot`` targets a batch slot for logit
+    and cache faults; ``layer``/``bit`` refine cache faults; ``count``
+    sizes a queue flood; ``target`` names a backend/stage or host for the
+    harness-level kinds."""
+
+    kind: str
+    name: str = ""
+    tick: int = 0
+    slot: int = 0
+    layer: int = 0
+    bit: int = 7
+    count: int = 32
+    target: str = ""
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {KINDS}"
+            )
+
+
+class FaultPlan:
+    """A seeded schedule of faults.  ``seed`` keys any randomized choice
+    an injector makes (e.g. which sorted position to corrupt), so replays
+    are exact."""
+
+    def __init__(self, specs: tuple[FaultSpec, ...] | list[FaultSpec],
+                 *, seed: int = 0):
+        named = []
+        for i, s in enumerate(specs):
+            named.append(s if s.name else
+                         dataclasses.replace(s, name=f"{s.kind}#{i}"))
+        if len({s.name for s in named}) != len(named):
+            raise ValueError("fault names must be unique within a plan")
+        self.specs: tuple[FaultSpec, ...] = tuple(named)
+        self.seed = seed
+        self._fired: set[str] = set()
+
+    # ---------------------------------------------------------- queries
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def by_name(self, name: str) -> FaultSpec:
+        for s in self.specs:
+            if s.name == name:
+                return s
+        raise KeyError(f"no fault named {name!r} in plan")
+
+    def fired(self, name: str | None = None):
+        """Names fired so far, or whether one specific fault fired."""
+        if name is None:
+            return frozenset(self._fired)
+        return name in self._fired
+
+    def rng_for(self, spec: FaultSpec) -> np.random.Generator:
+        """The spec's private random stream — a pure function of the plan
+        seed and the spec name, so injection choices replay exactly.
+        crc32, not ``hash()``: string hashing is salted per process and
+        would break cross-process replay."""
+        h = zlib.crc32(spec.name.encode())
+        return np.random.default_rng((np.uint64(self.seed) << np.uint64(32))
+                                     + np.uint64(h))
+
+    # ----------------------------------------------------- engine hooks
+
+    def take(self, tick: int, kinds=None) -> list[FaultSpec]:
+        """Specs scheduled for ``tick`` (optionally filtered by kind),
+        marked fired — each spec fires at most once."""
+        out = []
+        for s in self.specs:
+            if s.tick != tick or s.name in self._fired:
+                continue
+            if kinds is not None and s.kind not in kinds:
+                continue
+            self._fired.add(s.name)
+            out.append(s)
+        return out
+
+    def logit_inject(self, tick: int, nslots: int) -> np.ndarray | None:
+        """The (B,) additive logit vector for this tick, or None when no
+        logit fault fires (engine passes zeros either way — injection is
+        value-only and never retraces)."""
+        specs = self.take(tick, LOGIT_KINDS)
+        if not specs:
+            return None
+        vec = np.zeros((nslots,), np.float32)
+        for s in specs:
+            vec[s.slot % nslots] = (np.nan if s.kind == "nan_logits"
+                                    else np.inf)
+        return vec
+
+
+# ------------------------------------------------------------- scenarios
+#
+# The chaos suite and the CI chaos job run these BY NAME.  Keep additions
+# append-only: renaming a scenario orphans the CI replay instructions in
+# old failure reports.
+
+_SCENARIOS: dict[str, tuple[FaultSpec, ...]] = {
+    "nan-logit-mid-decode": (
+        FaultSpec("nan_logits", name="nan0", tick=4, slot=0),
+    ),
+    "inf-logit-burst": (
+        FaultSpec("inf_logits", name="inf0", tick=3, slot=0),
+        FaultSpec("inf_logits", name="inf1", tick=3, slot=1),
+    ),
+    "zcode-bitflip": (
+        FaultSpec("flip_zcode", name="flip0", tick=5, slot=0, layer=0,
+                  bit=7),
+    ),
+    "row-swap": (
+        FaultSpec("swap_rows", name="swap0", tick=5, slot=0, layer=0),
+    ),
+    "stale-length": (
+        FaultSpec("stale_length", name="stale0", tick=5, slot=0),
+    ),
+    "kernel-raise": (
+        FaultSpec("kernel_raise", name="boom0", target="pallas_fused"),
+    ),
+    "heartbeat-stall": (
+        FaultSpec("heartbeat_stall", name="stall0", target="host1"),
+    ),
+    "queue-flood": (
+        FaultSpec("queue_flood", name="flood0", count=16),
+    ),
+}
+
+
+def scenario(name: str, *, seed: int = 0) -> FaultPlan:
+    """A FRESH plan for a named scenario (plans track fired state, so
+    every run gets its own copy)."""
+    try:
+        return FaultPlan(_SCENARIOS[name], seed=seed)
+    except KeyError:
+        raise KeyError(
+            f"unknown chaos scenario {name!r}; known: {sorted(_SCENARIOS)}"
+        ) from None
+
+
+def scenario_names() -> tuple[str, ...]:
+    return tuple(sorted(_SCENARIOS))

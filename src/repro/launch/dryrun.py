@@ -128,7 +128,7 @@ def _build_lowered(arch: str, shape_name: str, mesh, *, zeta_overrides=None):
     fn = jax.jit(
         serve,
         in_shardings=(p_shard, c_shard, None, None, None, None),
-        out_shardings=(None, None, c_shard, None),
+        out_shardings=(None, None, c_shard, None, None),
         donate_argnums=(1,),
     )
     return fn.lower(p_shapes, c_shapes, tok, sp_shapes, hist, rng)

@@ -34,12 +34,26 @@ from jax.sharding import Mesh
 
 @dataclasses.dataclass
 class HeartbeatMonitor:
-    """Tracks last-seen times per host; injectable clock for tests."""
+    """Tracks last-seen times per host; injectable clock for tests.
+
+    ``expected_hosts`` registers the roster at construction: a host that
+    NEVER beats (wedged before its first heartbeat — the
+    silent-from-birth failure mode) counts as dead once ``timeout_s``
+    has elapsed since registration, instead of being invisible to
+    ``dead_hosts()`` forever.  Hosts may still join late via
+    :meth:`expect` or implicitly with their first :meth:`beat`."""
     timeout_s: float = 60.0
     clock: Callable[[], float] = time.monotonic
+    expected_hosts: tuple[int, ...] = ()
 
     def __post_init__(self):
-        self._last: dict[int, float] = {}
+        # registration time stands in for a beat until the first real one
+        now = self.clock()
+        self._last: dict[int, float] = {h: now for h in self.expected_hosts}
+
+    def expect(self, host_id: int) -> None:
+        """Register a host without a beat (late roster additions)."""
+        self._last.setdefault(host_id, self.clock())
 
     def beat(self, host_id: int) -> None:
         self._last[host_id] = self.clock()

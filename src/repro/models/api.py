@@ -25,7 +25,12 @@ from repro import state
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.models.lm import _norm_apply  # shared norm dispatch
-from repro.nn.attention import attn_cache_spec, attn_decode_step, attn_prefill
+from repro.nn.attention import (
+    attn_cache_health,
+    attn_cache_spec,
+    attn_decode_step,
+    attn_prefill,
+)
 from repro.nn.config import ModelConfig
 from repro.nn.hybrid import hybrid_cache_spec, hybrid_decode_step, hybrid_prefill
 from repro.nn.layers import embedding_attend, mlp_apply
@@ -265,6 +270,56 @@ def prefill(params: Params, cache: Params, tokens: jax.Array,
 
     return _lm_step(params, cache, tokens, cfg, prec, _block_prefill,
                     token_mask)
+
+
+def cache_health(cfg: ModelConfig, cache: Params, *,
+                 full: bool = False) -> jax.Array:
+    """Per-slot health bitmask over a whole stacked decode cache.
+
+    Walks every cache family ("layers" / "moe_layers" / enc-dec "self"),
+    vmaps the per-layer sorted-invariant check over the stacked layer axis,
+    and ORs the layer flags into one (B,) int32 word (0 == healthy; bit
+    meanings in ``topk.sorted_cache_health`` / ``selection.HEALTH_SUMS``).
+    Only ZETA attention caches carry sorted-cache invariants; SSD and
+    full-attention families contribute zeros.  Pure device arithmetic —
+    the serve step folds this into its per-tick outputs with no extra
+    host sync (``repro.analysis``'s no-host-sync rule holds here).
+    """
+    def _family(fam) -> jax.Array | None:
+        tree = fam["attn"] if (cfg.mixer == "hybrid"
+                               and isinstance(fam, dict)
+                               and "attn" in fam) else fam
+        if not isinstance(tree, dict) or "zk_sorted" not in tree:
+            return None
+        layer_flags = jax.vmap(
+            lambda lc: attn_cache_health(lc, cfg, full=full)
+        )(tree)                                            # (L, B)
+        return jax.lax.reduce(
+            layer_flags, jnp.int32(0), jnp.bitwise_or, (0,)
+        )
+
+    flags = None
+    fams = [cache["self"]] if is_encdec(cfg) else [
+        cache[k] for k in ("layers", "moe_layers") if k in cache
+    ]
+    for fam in fams:
+        f = _family(fam)
+        if f is None:
+            continue
+        flags = f if flags is None else flags | f
+
+    if flags is None:
+        # no ZETA family anywhere (full attention / pure SSD / softmax
+        # enc-dec): healthy by construction — derive B off the slot axis
+        if is_encdec(cfg):
+            b = cache["memory"].shape[0]
+        else:
+            fam = fams[0]
+            tree = fam["attn"] if (cfg.mixer == "hybrid"
+                                   and "attn" in fam) else fam
+            b = jax.tree.leaves(tree)[0].shape[1]
+        flags = jnp.zeros((b,), jnp.int32)
+    return flags
 
 
 def cache_reset_slots(cfg: ModelConfig, cache: Params,

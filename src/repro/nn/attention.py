@@ -171,6 +171,19 @@ def _zeta_cache_update(zc: selection.ZetaCache) -> dict:
     return {k: v for k, v in zc._asdict().items() if v is not None}
 
 
+def attn_cache_health(cache, cfg: ModelConfig, *,
+                      full: bool = False) -> jax.Array:
+    """Per-slot health bitmask over one layer's decode cache (thin caller
+    of ``selection.cache_health_flags``; see there for the bit meanings).
+    Non-ZETA layers have no sorted-cache invariants — returns zeros."""
+    t = jnp.asarray(cache["length"], jnp.int32)
+    if cfg.attention != "zeta":
+        return jnp.zeros(t.shape, jnp.int32)
+    return selection.cache_health_flags(
+        _zeta_cache_view(cache), t, zcfg=cfg.zeta, full=full
+    )
+
+
 # ------------------------------------------------------------------ apply
 
 

@@ -32,6 +32,24 @@ for draft-verify rounds (``repro.spec``): a host-side draft head
 proposes ``chunk - 1`` tokens and two bulk prefill calls verify and
 commit the accepted prefix — still token-identical output for any
 draft quality (`tests/test_speculative.py`).
+
+**Fault tolerance** (docs/ARCHITECTURE.md §8): every decode tick carries
+a packed per-slot health word computed ON DEVICE inside the serve step
+(nonfinite logits + sorted-cache invariants — no extra host syncs; the
+word rides the same transfer as the sampled tokens).  A flagged slot is
+QUARANTINED: the token is discarded, the slot freed, and the request
+re-queued — the per-request RNG streams above make the retry
+token-identical to an unfaulted run; a request that keeps flagging
+finishes with reason ``"quarantined"``.  A decode step that RAISES
+demotes the failing backend stage via ``repro.backend.demote_backend``
+(fused → staged → xla ladder), rebuilds the jitted steps, and retries
+the tick once.  Admission is bounded (``max_queue`` →
+``"shed_queue_full"``), requests may carry ``deadline_ticks``
+(``"shed_deadline"``, checked at tick granularity) and can be
+``cancel()``\\ ed mid-flight; ``snapshot()/restore()`` persist the whole
+serving state through the atomic checkpoint manager.  Streaming
+callers note: tokens stream as they are sampled, so a quarantined
+request's tokens may replay from the start when it re-runs.
 """
 
 from __future__ import annotations
@@ -60,7 +78,13 @@ class Request:
     max_new: int | None = None          # deprecated alias of gen.max_new
     gen: sample.GenerationParams | None = None
     output: list[int] = dataclasses.field(default_factory=list)
-    finish_reason: str | None = None    # "length" | "eos" | "stop"
+    # "length" | "eos" | "stop" on success; "shed_queue_full" |
+    # "shed_deadline" | "cancelled" | "quarantined" are the typed
+    # failure outcomes (output may be partial for the last three)
+    finish_reason: str | None = None
+    # ticks from arrival by which the request must finish or be shed
+    deadline_ticks: int | None = None
+    retries: int = 0                    # quarantine re-runs so far
     # scheduling stats (ticks are engine steps, not wall time)
     arrival_tick: int = -1
     admit_tick: int = -1
@@ -88,7 +112,9 @@ class ServeEngine:
                  speculation: SpeculationConfig | None = None,
                  bos_id: int | None = None, max_eos: int = 4,
                  max_stops: int = 4, max_stop_len: int = 8,
-                 history_len: int = 32, cache_dtype=jnp.float32):
+                 history_len: int = 32, cache_dtype=jnp.float32,
+                 health: str = "fast", max_queue: int | None = None,
+                 quarantine_retries: int = 1, fault_plan=None):
         """``seed`` keys the engine's base PRNG stream; ``bos_id``
         (default ``cfg.bos_id``) is fed for empty prompts; ``max_eos`` /
         ``max_stops`` / ``max_stop_len`` size the padded per-slot
@@ -100,7 +126,17 @@ class ServeEngine:
         to ``speculation.chunk`` tokens per slot.  ``cache_dtype``
         selects the K/V cache tier — ``jnp.int8`` stores ZETA coords and
         values quantized per row with in-kernel dequant-on-gather
-        (docs/ARCHITECTURE.md §2c); compute stays in ``prec``."""
+        (docs/ARCHITECTURE.md §2c); compute stays in ``prec``.
+
+        ``health`` picks the sentinel tier folded into the serve step
+        (``"off"`` / ``"fast"`` / ``"full"`` — see
+        ``repro.serve.step.make_serve_step``); ``max_queue`` bounds
+        admission (overflow finishes with ``"shed_queue_full"``);
+        ``quarantine_retries`` is how many reproducible re-runs a
+        health-flagged request gets before finishing
+        ``"quarantined"``; ``fault_plan`` is a
+        ``repro.faults.FaultPlan`` the tick loop polls for injected
+        faults (None in production)."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if history_len < max_stop_len - 1:
@@ -123,12 +159,11 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk
         self.bos_id = cfg.bos_id if bos_id is None else bos_id
         self.cache_dtype = jnp.dtype(cache_dtype)
-        self._raw_step = make_serve_step(cfg, prec,
-                                         cache_dtype=self.cache_dtype)
-        self._raw_prefill = make_prefill_step(cfg, prec)
-        self.step_fn = jax.jit(self._raw_step)
-        self.prefill_fn = jax.jit(self._raw_prefill)
-        self.decode_path = self._raw_step.decode_path
+        self.health = health
+        self.max_queue = max_queue
+        self.quarantine_retries = quarantine_retries
+        self.fault_plan = fault_plan
+        self._build_steps()
         self.speculation = speculation
         if speculation is not None:
             self._draft = make_draft(speculation.draft, cfg)
@@ -170,6 +205,25 @@ class ServeEngine:
         self.spec_rounds = 0     # speculation rounds (2 model calls each)
         self.spec_proposed = 0   # draft tokens offered to the verifier
         self.spec_accepted = 0   # draft tokens that matched the model
+        # fault-tolerance bookkeeping
+        self.health_events = 0   # ticks on which a health word flagged
+        self.quarantines = 0     # slot quarantines (retries + give-ups)
+        self.shed = 0            # shed_queue_full + shed_deadline
+        self.demotions: list[str] = []  # human-readable demotion log
+        self._zero_inject = np.zeros((batch_slots,), np.float32)
+
+    def _build_steps(self) -> None:
+        """(Re)build + re-jit the serve/prefill steps from the registry's
+        CURRENT view — called at construction and again after a runtime
+        backend demotion so the fresh trace re-runs backend selection."""
+        self._raw_step = make_serve_step(self.cfg, self.prec,
+                                         cache_dtype=self.cache_dtype,
+                                         health=self.health)
+        self._raw_prefill = make_prefill_step(self.cfg, self.prec,
+                                              health=self.health)
+        self.step_fn = jax.jit(self._raw_step)
+        self.prefill_fn = jax.jit(self._raw_prefill)
+        self.decode_path = self._raw_step.decode_path
 
     # ----------------------------------------------------------- counters
 
@@ -216,9 +270,36 @@ class ServeEngine:
         # reproduces the original output
         req.output = []
         req.finish_reason = None
+        req.retries = 0
         req.first_token_tick = req.admit_tick = req.finish_tick = -1
         req.arrival_tick = self.ticks
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # bounded admission: overflow is a typed REJECTION, not an
+            # exception — callers see it in done like any other outcome
+            req.finish_reason = "shed_queue_full"
+            req.finish_tick = self.ticks
+            self.done.append(req)
+            self.shed += 1
+            return
         self.queue.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or mid-flight request.  Frees its slot (the
+        cache row is recycled at the next admission, like any finish) and
+        records ``finish_reason="cancelled"`` with whatever output was
+        already generated.  Returns False for unknown/finished rids."""
+        for i, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                self._finish(i, "cancelled")
+                return True
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.finish_reason = "cancelled"
+                req.finish_tick = self.ticks
+                self.done.append(req)
+                return True
+        return False
 
     # ------------------------------------------------------------ helpers
 
@@ -246,6 +327,78 @@ class ServeEngine:
         self.done.append(req)
         self.slots[i] = None
         self.slot_phase[i] = "idle"
+
+    def _check_deadlines(self) -> None:
+        """Tick-granularity deadline enforcement: a request that has been
+        in the system ``deadline_ticks`` ticks without finishing sheds —
+        mid-flight requests keep their partial output."""
+        now = self.ticks
+
+        def overdue(req) -> bool:
+            return (req.deadline_ticks is not None
+                    and now - req.arrival_tick >= req.deadline_ticks)
+
+        for i in range(self.b):
+            if self.slots[i] is not None and overdue(self.slots[i]):
+                self.slot_pending[i].clear()
+                self._finish(i, "shed_deadline")
+                self.shed += 1
+        for req in [r for r in self.queue if overdue(r)]:
+            self.queue.remove(req)
+            req.finish_reason = "shed_deadline"
+            req.finish_tick = now
+            self.done.append(req)
+            self.shed += 1
+
+    def _quarantine(self, i: int, word: int) -> None:
+        """A health sentinel flagged slot ``i``: discard this tick's
+        token, free the slot (its poisoned cache row is reset at the next
+        admission), and re-queue the request FROM SCRATCH — the
+        (engine seed, request seed, step) RNG streams make the re-run
+        token-identical to an unfaulted run.  A request that keeps
+        flagging finishes with the typed reason ``"quarantined"``."""
+        req = self.slots[i]
+        self.quarantines += 1
+        self.slots[i] = None
+        self.slot_phase[i] = "idle"
+        self.slot_pending[i].clear()
+        req.retries += 1
+        if req.retries > self.quarantine_retries:
+            req.finish_reason = "quarantined"
+            req.finish_tick = self.ticks
+            self.done.append(req)
+            return
+        req.output = []
+        req.finish_reason = None
+        req.first_token_tick = req.admit_tick = req.finish_tick = -1
+        self.queue.appendleft(req)  # retries go to the head of the line
+
+    def _demote_current(self, exc: BaseException) -> bool:
+        """A serve step raised at runtime: demote the backend stage it
+        was dispatching through (fused decode when one was resolved, else
+        the staged scoring stages of the resolved backend) and rebuild
+        the jitted steps so the fresh trace re-runs selection.  Returns
+        False when nothing new was demoted — the caller re-raises."""
+        from repro import backend as attention_backend
+
+        changed = []
+        if self.decode_path != "staged":
+            stage = ("decode_q" if self.cache_dtype == jnp.int8
+                     else "decode")
+            if attention_backend.demote_backend(
+                    self.decode_path, stage, reason=repr(exc)):
+                changed.append(f"{self.decode_path}:{stage}")
+        else:
+            name = self._raw_step.attention_backend
+            for stage in ("gathered_idx_q", "gathered_idx", "gathered"):
+                if attention_backend.demote_backend(
+                        name, stage, reason=repr(exc)):
+                    changed.append(f"{name}:{stage}")
+        if not changed:
+            return False
+        self.demotions.extend(changed)
+        self._build_steps()
+        return True
 
     def _steps_array(self) -> jax.Array:
         """Per-slot sample step index == tokens already emitted."""
@@ -318,6 +471,7 @@ class ServeEngine:
         self._events = []
         if self.scheduler == "wave":
             return self._tick_wave()
+        self._check_deadlines()
         admit = self._admit()
         if all(s is None for s in self.slots):
             return False
@@ -325,6 +479,11 @@ class ServeEngine:
             # recycle only the admitted rows; neighbours keep their state
             self.cache = self.reset_fn(self.cache, jnp.asarray(admit))
         self.busy_slot_ticks += sum(s is not None for s in self.slots)
+        if self.fault_plan is not None:
+            # host-side cache corruption fires BEFORE the model calls so
+            # this tick's in-step sentinels are the ones that must catch it
+            from repro.faults import apply_cache_faults
+            apply_cache_faults(self, self.fault_plan)
 
         # ---- chunked prefill of every slot that still has prompt tokens
         pre_rows = [i for i in range(self.b) if self.slot_pending[i]]
@@ -339,13 +498,18 @@ class ServeEngine:
                 for j in range(take):
                     tokens[i, j] = self.slot_pending[i].popleft()
                     mask[i, j] = True
-            nxt, _, self.cache, fin = self.prefill_fn(
+            nxt, _, self.cache, fin, hw = self.prefill_fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(mask), sp, hist, self.rng,
             )
             self.prefill_calls += 1
-            nxt, fin = np.asarray(nxt), np.asarray(fin)
+            nxt, fin, hw = np.asarray(nxt), np.asarray(fin), np.asarray(hw)
+            if hw.any():
+                self.health_events += 1
             for i in pre_rows:
+                if hw[i]:
+                    self._quarantine(i, int(hw[i]))
+                    continue
                 if self.slot_pending[i]:
                     continue  # more prompt chunks to go
                 # first token sampled in the SAME call as the final
@@ -362,15 +526,33 @@ class ServeEngine:
             if self.spec_fn is not None:
                 self._spec_round(dec)
             else:
-                nxt, _, self.cache, fin = self.step_fn(
-                    self.params, self.cache, jnp.asarray(self._tokens),
-                    self._slot_params_now(), jnp.asarray(self._history),
-                    self.rng, jnp.asarray(dec),
-                )
+                inj = self._zero_inject
+                if self.fault_plan is not None:
+                    v = self.fault_plan.logit_inject(self.ticks, self.b)
+                    if v is not None:
+                        inj = v
+                args = (self.params, self.cache, jnp.asarray(self._tokens),
+                        self._slot_params_now(), jnp.asarray(self._history),
+                        self.rng, jnp.asarray(dec), jnp.asarray(inj))
+                try:
+                    out = self.step_fn(*args)
+                except Exception as exc:  # runtime kernel failure
+                    if not self._demote_current(exc):
+                        raise
+                    # the failing call never committed a cache, so the
+                    # tick replays cleanly on the demoted path
+                    out = self.step_fn(*args)
+                nxt, _, self.cache, fin, hw = out
                 self.decode_calls += 1
-                nxt, fin = np.asarray(nxt), np.asarray(fin)
+                nxt, fin, hw = (np.asarray(nxt), np.asarray(fin),
+                                np.asarray(hw))
+                if hw.any():
+                    self.health_events += 1
                 for i in range(self.b):
                     if not dec[i]:
+                        continue
+                    if hw[i]:
+                        self._quarantine(i, int(hw[i]))
                         continue
                     self._accept(i, int(nxt[i, 0]), bool(fin[i]))
         self.ticks += 1
@@ -447,7 +629,9 @@ class ServeEngine:
         if all(s is None for s in self.slots):
             return False
         self.busy_slot_ticks += sum(s is not None for s in self.slots)
-        nxt, _, self.cache, fin = self.step_fn(
+        # the wave oracle predates the health/quarantine machinery and
+        # stays the plain equivalence baseline: the word is ignored
+        nxt, _, self.cache, fin, _hw = self.step_fn(
             self.params, self.cache, jnp.asarray(self._tokens),
             self._slot_params_now(), jnp.asarray(self._history), self.rng,
         )
@@ -493,9 +677,125 @@ class ServeEngine:
                 self.busy_slot_ticks / (self.ticks * self.b)
                 if self.ticks else 0.0
             ),
+            "health": self.health,
+            "health_events": self.health_events,
+            "quarantines": self.quarantines,
+            "shed": self.shed,
+            "demotions": list(self.demotions),
+            "queue_depth": len(self.queue),
             "ttft_ticks_mean": float(np.mean(ttft)) if ttft else 0.0,
             "ttft_ticks_max": float(np.max(ttft)) if ttft else 0.0,
         }
+
+    # ------------------------------------------------------- snapshot/restore
+
+    def _device_state(self) -> dict:
+        return {
+            "cache": self.cache,
+            "slot_params": self.slot_params,
+            "rng": self.rng,
+            "tokens": self._tokens,
+            "history": self._history,
+        }
+
+    @staticmethod
+    def _ser_req(req: Request) -> dict:
+        d = dataclasses.asdict(req)
+        d["gen"] = dataclasses.asdict(req.gen) if req.gen else None
+        return d
+
+    def _deser_req(self, d: dict) -> Request:
+        g = d.pop("gen")
+        gen = None
+        if g is not None:
+            g["eos_ids"] = tuple(g["eos_ids"])
+            g["stop"] = tuple(tuple(s) for s in g["stop"])
+            gen = sample.GenerationParams(**g)
+        req = Request(rid=d.pop("rid"), prompt=list(d.pop("prompt")),
+                      max_new=d.pop("max_new"), gen=gen)
+        for k, v in d.items():
+            setattr(req, k, v)
+        return req
+
+    def snapshot(self, directory: str) -> int:
+        """Persist the FULL serving state (device arrays + request
+        bookkeeping) through the atomic checkpoint manager, so a serving
+        process can restart without dropping admitted requests.  Returns
+        the snapshot step (the current tick)."""
+        from repro.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(directory, async_save=False)
+        extra = {
+            "slots": [self._ser_req(r) if r is not None else None
+                      for r in self.slots],
+            "queue": [self._ser_req(r) for r in self.queue],
+            "done": [self._ser_req(r) for r in self.done],
+            "slot_pending": [list(p) for p in self.slot_pending],
+            "slot_phase": list(self.slot_phase),
+            "counters": {
+                "ticks": self.ticks,
+                "prefill_calls": self.prefill_calls,
+                "decode_calls": self.decode_calls,
+                "busy_slot_ticks": self.busy_slot_ticks,
+                "spec_rounds": self.spec_rounds,
+                "spec_proposed": self.spec_proposed,
+                "spec_accepted": self.spec_accepted,
+                "health_events": self.health_events,
+                "quarantines": self.quarantines,
+                "shed": self.shed,
+                "submitted": self._submitted,
+            },
+        }
+        mgr.save(self.ticks, self._device_state(), extra=extra)
+        return self.ticks
+
+    def restore(self, directory: str, step: int | None = None) -> int:
+        """Load a :meth:`snapshot` back into this engine (built with the
+        same config/shape arguments).  Ticks resume where the snapshot
+        left off; in-flight prompts and partial outputs continue, and
+        per-request RNG streams keep their determinism guarantee because
+        they depend only on (engine seed, request seed, step)."""
+        from repro.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(directory, async_save=False)
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no engine snapshot under {directory!r}")
+        state, extra = mgr.restore(step, self._device_state())
+        self.cache = state["cache"]
+        self.slot_params = state["slot_params"]
+        self.rng = state["rng"]
+        # np.array (copy): the engine mutates these host-side buffers in
+        # place, and np.asarray over a device array is a read-only view
+        self._tokens = np.array(state["tokens"])
+        self._history = np.array(state["history"])
+        self.slots = [self._deser_req(d) if d is not None else None
+                      for d in extra["slots"]]
+        self.queue = deque(self._deser_req(d) for d in extra["queue"])
+        self.done = [self._deser_req(d) for d in extra["done"]]
+        self.slot_pending = [deque(p) for p in extra["slot_pending"]]
+        self.slot_phase = list(extra["slot_phase"])
+        c = extra["counters"]
+        self.ticks = c["ticks"]
+        self.prefill_calls = c["prefill_calls"]
+        self.decode_calls = c["decode_calls"]
+        self.busy_slot_ticks = c["busy_slot_ticks"]
+        self.spec_rounds = c["spec_rounds"]
+        self.spec_proposed = c["spec_proposed"]
+        self.spec_accepted = c["spec_accepted"]
+        self.health_events = c["health_events"]
+        self.quarantines = c["quarantines"]
+        self.shed = c["shed"]
+        self._submitted = c["submitted"]
+        if self._draft is not None:
+            # rebuild host-side draft models from prompt + output history
+            for req in [r for r in self.slots if r is not None]:
+                self._draft.reset(req)
+                for tok in self._effective_prompt(req) + req.output:
+                    self._draft.observe(req, tok)
+        return step
 
     # ------------------------------------------------------------ driving
 

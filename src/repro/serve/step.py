@@ -36,21 +36,39 @@ from repro.nn.module import Precision
 
 
 def make_serve_step(cfg: ModelConfig, prec: Precision, *,
-                    cache_dtype=jnp.float32) -> Callable:
+                    cache_dtype=jnp.float32,
+                    health: str = "fast") -> Callable:
     """Build the one-token decode step.
 
     Contract::
 
         step(params, cache, token_t (B,1), slot_params: SlotParams,
-             history (B,H) int32, rng, slot_mask (B,)|None)
+             history (B,H) int32, rng, slot_mask (B,)|None,
+             inject (B,) f32|None)
           -> (next_token (B,1) int32, logits (B,1,V), new_cache,
-              finished (B,) bool)
+              finished (B,) bool, health (B,) int32)
 
     ``rng`` is the engine's BASE key (constant across ticks); per-slot
     streams come from folding in each slot's request seed and sample step.
     ``slot_mask``: False rows (empty / prefilling slots) produce garbage
     tokens the engine ignores and leave their cache rows untouched.
+
+    ``inject`` is a per-slot additive logit perturbation used by the fault
+    harness (zeros is the identity, so the production engine passes zeros
+    every tick and injection never costs a retrace).  ``health`` selects
+    the sentinel tier packed into the fifth output: ``"off"`` (all-zero
+    word), ``"fast"`` (nonfinite-logits sentinel — ONE f32 sum-reduction
+    over an array the step already produced, since NaN/Inf poison the
+    sum; cheap enough to leave on in production — the <= 3% BENCH_serve
+    overhead bar applies to this tier),
+    or ``"full"`` (adds the O(cache) forensics: sorted/sentinel/
+    permutation invariants plus the stored-row z-code cross-check — the
+    chaos suite's tier).  The word stays on device with the other
+    outputs — the engine reads it from the same host transfer it already
+    does for sampled tokens, so sentinels add no host syncs.
     """
+    if health not in ("off", "fast", "full"):
+        raise ValueError(f"unknown health mode {health!r}")
     # Resolving here fails fast (KeyError) on an unregistered
     # cfg.zeta.backend at build time rather than from inside the jitted
     # decode trace.  The name is the f32 resolution for logging; the decode
@@ -60,14 +78,32 @@ def make_serve_step(cfg: ModelConfig, prec: Precision, *,
 
     def serve_step(params, cache, token_t: jax.Array,
                    slot_params: sample.SlotParams, history: jax.Array,
-                   rng: jax.Array, slot_mask: jax.Array | None = None):
+                   rng: jax.Array, slot_mask: jax.Array | None = None,
+                   inject: jax.Array | None = None):
         serve_step.traces += 1  # trace-time only: retrace detector
         logits, new_cache = api.decode_step(
             params, cache, token_t, cfg, prec, slot_mask
         )
+        if inject is not None:
+            logits = logits + inject[:, None, None].astype(logits.dtype)
         nxt = sample.sample_logits(logits[:, -1], slot_params, rng, history)
         finished = sample.check_finished(slot_params, history, nxt)
-        return nxt[:, None], logits, new_cache, finished
+        if health == "off":
+            word = jnp.zeros(logits.shape[:1], jnp.int32)
+        else:
+            # one f32 reduction: any NaN/Inf poisons the per-slot sum
+            # (finite logits cannot overflow f32 at any realistic vocab)
+            csum = jnp.sum(logits.astype(jnp.float32), axis=(1, 2))
+            word = (~jnp.isfinite(csum)).astype(jnp.int32)
+            if health == "full":
+                word = word | (
+                    api.cache_health(cfg, new_cache, full=True) << 1
+                )
+            if slot_mask is not None:
+                # Idle slots keep stale (possibly poisoned) cache rows
+                # until readmission resets them; don't re-flag those.
+                word = jnp.where(slot_mask, word, 0)
+        return nxt[:, None], logits, new_cache, finished, word
 
     serve_step.traces = 0
     serve_step.attention_backend = resolved
@@ -82,14 +118,18 @@ def make_serve_step(cfg: ModelConfig, prec: Precision, *,
     return serve_step
 
 
-def make_prefill_step(cfg: ModelConfig, prec: Precision) -> Callable:
+def make_prefill_step(cfg: ModelConfig, prec: Precision, *,
+                      health: str = "fast") -> Callable:
     """Chunked-prefill step: ingest up to P prompt tokens per slot in one
     model call and SAMPLE each slot's first generated token from the
     logits at its last valid position (so a request whose prompt fits in
     the chunk gets its first token out of the SAME call — that is the
     time-to-first-token win over prefill-as-decode).  Same SlotParams /
-    history / finished contract as :func:`make_serve_step`.
+    history / finished / health-word contract as :func:`make_serve_step`
+    (rows with no valid tokens this chunk report a zero health word).
     """
+    if health not in ("off", "fast", "full"):
+        raise ValueError(f"unknown health mode {health!r}")
     resolved = attention_backend.resolve_name(cfg)
 
     def prefill_step(params, cache, tokens: jax.Array,
@@ -97,7 +137,7 @@ def make_prefill_step(cfg: ModelConfig, prec: Precision) -> Callable:
                      slot_params: sample.SlotParams, history: jax.Array,
                      rng: jax.Array):
         """tokens/token_mask: (B, P) -> (next_token (B, 1),
-        last_logits (B, 1, V), new_cache, finished (B,))."""
+        last_logits (B, 1, V), new_cache, finished (B,), health (B,))."""
         prefill_step.traces += 1
         logits, new_cache = api.prefill(
             params, cache, tokens, cfg, prec, token_mask=token_mask
@@ -111,7 +151,17 @@ def make_prefill_step(cfg: ModelConfig, prec: Precision) -> Callable:
             last_logits[:, 0], slot_params, rng, history
         )
         finished = sample.check_finished(slot_params, history, nxt)
-        return nxt[:, None], last_logits, new_cache, finished
+        if health == "off":
+            word = jnp.zeros(logits.shape[:1], jnp.int32)
+        else:
+            csum = jnp.sum(last_logits.astype(jnp.float32), axis=(1, 2))
+            word = (~jnp.isfinite(csum)).astype(jnp.int32)
+            if health == "full":
+                word = word | (
+                    api.cache_health(cfg, new_cache, full=True) << 1
+                )
+            word = jnp.where(n_valid > 0, word, 0)
+        return nxt[:, None], last_logits, new_cache, finished, word
 
     prefill_step.traces = 0
     prefill_step.attention_backend = resolved
@@ -146,14 +196,15 @@ def trace_entry_points() -> list[dict]:
             history = jnp.full((B, 32), -1, jnp.int32)
             rng = jax.random.PRNGKey(1)
             mask = jnp.ones((B,), bool)
+            inj = jnp.zeros((B,), jnp.float32)
 
-            def fn(params, cache, tok, sp, history, rng, mask):
-                return step(params, cache, tok, sp, history, rng, mask)
+            def fn(params, cache, tok, sp, history, rng, mask, inj):
+                return step(params, cache, tok, sp, history, rng, mask, inj)
 
             args = (params, cache, jnp.full((B, 1), 3, jnp.int32),
-                    sp, history, rng, mask)
+                    sp, history, rng, mask, inj)
             alt = (params, cache, jnp.full((B, 1), 5, jnp.int32),
-                   sp, history, rng, mask)
+                   sp, history, rng, mask, inj)
             return fn, args, alt
 
         return _build

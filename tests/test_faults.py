@@ -1,0 +1,348 @@
+"""Chaos suite: deterministic fault injection against the serving stack.
+
+The contract under test (docs/ARCHITECTURE.md §8): every injected fault
+class — NaN/Inf logits, kernel raise, cache corruption, deadline breach,
+queue overflow — ends in either a RECOVERED request with token-identical
+output (quarantine + reproducible retry) or a TYPED finish/rejection
+reason.  Zero silent-corruption outcomes.
+
+Also home of the satellite hypothesis property test: the sorted-cache
+invariant checker detects every injected corruption class and never
+flags a clean cache produced by prefill/decode across mixers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import faults
+from repro.backend import registry
+from repro.models import api
+from repro.nn.config import ModelConfig, SSMConfig, ZetaConfig
+from repro.nn.module import F32
+from repro.sample import GenerationParams
+from repro.serve.engine import Request, ServeEngine
+
+PREC = F32
+MAXLEN = 32
+SUCCESS = ("length", "eos", "stop")
+TYPED = SUCCESS + ("shed_queue_full", "shed_deadline", "cancelled",
+                   "quarantined")
+
+
+def _cfg(**zeta_kw):
+    return ModelConfig(name="z", vocab=64, d_model=32, n_layers=2,
+                       n_heads=4, n_kv_heads=2, d_ff=64,
+                       zeta=ZetaConfig(d_k=3, k=4, num_chunks=4, **zeta_kw))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(jax.random.PRNGKey(0), _cfg())
+
+
+def _requests():
+    # rid 1 samples (temperature/top-p) so "token-identical recovery"
+    # exercises the per-request RNG streams, not just greedy argmax
+    return [
+        Request(rid=0, prompt=[1, 2, 3, 4, 5, 6], max_new=8),
+        Request(rid=1, prompt=[7, 8, 9],
+                gen=GenerationParams(temperature=0.8, top_p=0.9, seed=3,
+                                     max_new=6)),
+        Request(rid=2, prompt=[9, 10, 11, 12], max_new=5),
+    ]
+
+
+def _run(params, *, cfg=None, plan=None, health="fast", **eng_kw):
+    eng = ServeEngine(params, cfg or _cfg(), PREC, batch_slots=2,
+                      max_len=MAXLEN, prefill_chunk=8, health=health,
+                      fault_plan=plan, **eng_kw)
+    for r in _requests():
+        eng.submit(r)
+    done = eng.run_to_completion()
+    return (eng, {r.rid: list(r.output) for r in done},
+            {r.rid: r.finish_reason for r in done})
+
+
+@pytest.fixture(scope="module")
+def baseline(params):
+    eng, outs, reasons = _run(params)
+    assert set(reasons.values()) <= set(SUCCESS)
+    assert eng.health_events == 0 and eng.quarantines == 0
+    return outs
+
+
+# ----------------------------------------------------- logit-level faults
+
+
+def test_nan_logit_quarantine_recovers_token_identical(params, baseline):
+    plan = faults.scenario("nan-logit-mid-decode")
+    eng, outs, reasons = _run(params, plan=plan)
+    assert plan.fired("nan0")
+    assert eng.health_events >= 1 and eng.quarantines >= 1
+    assert set(reasons.values()) <= set(SUCCESS)
+    assert outs == baseline  # retry replayed the SAME tokens
+
+
+def test_inf_logit_burst_both_slots_recover(params, baseline):
+    plan = faults.scenario("inf-logit-burst")
+    eng, outs, reasons = _run(params, plan=plan)
+    assert plan.fired() == {"inf0", "inf1"}
+    assert eng.quarantines >= 2
+    assert set(reasons.values()) <= set(SUCCESS)
+    assert outs == baseline
+
+
+def test_exhausted_retries_finish_quarantined(params, baseline):
+    # NaN every decode tick for a while: slot 0's request can never get
+    # a clean run, so it must end with the TYPED reason, not hang or
+    # emit garbage
+    plan = faults.FaultPlan(tuple(
+        faults.FaultSpec("nan_logits", name=f"n{t}", tick=t, slot=0)
+        for t in range(1, 26)
+    ))
+    eng, outs, reasons = _run(params, plan=plan, quarantine_retries=1)
+    assert "quarantined" in reasons.values()
+    assert all(r in TYPED for r in reasons.values())
+    # neighbours were never poisoned: their outputs still match baseline
+    clean = [rid for rid, r in reasons.items() if r in SUCCESS]
+    assert clean and all(outs[rid] == baseline[rid] for rid in clean)
+
+
+# ---------------------------------------------------- cache-level faults
+
+
+@pytest.mark.parametrize("scen", ["zcode-bitflip", "row-swap",
+                                  "stale-length"])
+def test_cache_corruption_detected_and_recovered(params, baseline, scen):
+    plan = faults.scenario(scen)
+    eng, outs, reasons = _run(params, plan=plan, health="full")
+    assert plan.fired()  # the corruption really happened
+    assert eng.health_events >= 1 and eng.quarantines >= 1
+    assert set(reasons.values()) <= set(SUCCESS)
+    assert outs == baseline
+
+
+# ------------------------------------------------------- kernel failures
+
+
+def test_kernel_raise_demotes_to_staged(params, baseline):
+    registry.clear_demotions()
+    cfg = _cfg(backend="pallas_fused")
+    try:
+        with faults.raising_stage("pallas_fused", "decode"):
+            eng = ServeEngine(params, cfg, PREC, batch_slots=2,
+                              max_len=MAXLEN, prefill_chunk=8)
+            assert eng.decode_path == "pallas_fused"
+            for r in _requests():
+                eng.submit(r)
+            done = eng.run_to_completion()
+        # demoted mid-flight: fused -> staged, requests still completed
+        assert eng.decode_path == "staged"
+        assert eng.demotions == ["pallas_fused:decode"]
+        recs = {(d.backend, d.stage) for d in registry.demotion_records()}
+        assert ("pallas_fused", "decode") in recs
+        outs = {r.rid: list(r.output) for r in done}
+        assert {r.finish_reason for r in done} <= set(SUCCESS)
+        assert outs == baseline  # staged path is output-identical
+    finally:
+        registry.clear_demotions()
+
+
+def test_demotion_reprobe_and_promote():
+    registry.clear_demotions()
+    try:
+        be = registry.select_decode_backend(preferred="pallas_fused")
+        assert be is not None and be.name == "pallas_fused"
+        assert registry.demote_backend("pallas_fused", "decode",
+                                       reason="test", reprobe_after=2)
+        # second demotion of the same pair is a no-op
+        assert not registry.demote_backend("pallas_fused", "decode")
+        # query 1 suppressed, query 2 is the periodic re-probe
+        assert registry.select_decode_backend(
+            preferred="pallas_fused") is None
+        assert registry.select_decode_backend(
+            preferred="pallas_fused").name == "pallas_fused"
+        registry.promote_backend("pallas_fused")
+        assert registry.demotion_records() == ()
+        assert registry.select_decode_backend(
+            preferred="pallas_fused").name == "pallas_fused"
+    finally:
+        registry.clear_demotions()
+
+
+# --------------------------------------------------- lifecycle hardening
+
+
+def test_deadline_shed_at_tick_granularity(params):
+    eng = ServeEngine(params, _cfg(), PREC, batch_slots=1, max_len=MAXLEN,
+                      prefill_chunk=8)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=6))
+    # rid 1 waits in the queue behind rid 0 and can never start in time
+    eng.submit(Request(rid=1, prompt=[4, 5], max_new=4, deadline_ticks=2))
+    # rid 2 starts but cannot finish its budget before the deadline
+    eng.submit(Request(rid=2, prompt=[6, 7], max_new=20,
+                       deadline_ticks=9))
+    done = eng.run_to_completion()
+    reasons = {r.rid: r.finish_reason for r in done}
+    assert reasons[0] in SUCCESS
+    assert reasons[1] == "shed_deadline"
+    assert reasons[2] == "shed_deadline"
+    by = {r.rid: r for r in done}
+    assert by[1].output == []          # never admitted
+    assert 0 < len(by[2].output) < 20  # partial output survives the shed
+    assert eng.shed == 2
+
+
+def test_queue_flood_sheds_typed_rejections(params):
+    eng = ServeEngine(params, _cfg(), PREC, batch_slots=2, max_len=MAXLEN,
+                      prefill_chunk=8, max_queue=2)
+    plan = faults.scenario("queue-flood")
+    reqs = faults.flood(eng, plan.by_name("flood0"))
+    assert len(reqs) == 16
+    done = eng.run_to_completion()
+    reasons = [r.finish_reason for r in done]
+    assert reasons.count("shed_queue_full") == 14  # bound = 2
+    assert sum(r in SUCCESS for r in reasons) == 2
+    assert len(done) == 16  # every flooded request got SOME typed outcome
+    assert all(r.finish_reason in TYPED for r in reqs)
+
+
+def test_cancel_mid_flight_and_queued(params):
+    eng = ServeEngine(params, _cfg(), PREC, batch_slots=1, max_len=MAXLEN,
+                      prefill_chunk=8)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=8))
+    eng.submit(Request(rid=1, prompt=[4, 5], max_new=4))
+    for _ in range(3):
+        eng.tick()
+    assert eng.cancel(1)        # still queued
+    assert eng.cancel(0)        # mid-flight, partial output kept
+    assert not eng.cancel(99)   # unknown rid
+    done = eng.run_to_completion()
+    by = {r.rid: r for r in done}
+    assert by[0].finish_reason == "cancelled" and by[0].output
+    assert by[1].finish_reason == "cancelled" and by[1].output == []
+    # the freed slot keeps serving new work
+    eng.submit(Request(rid=2, prompt=[6], max_new=3))
+    done = eng.run_to_completion()
+    assert {r.rid: r.finish_reason for r in done}[2] == "length"
+
+
+def test_snapshot_restore_resumes_identically(params, tmp_path):
+    def fresh():
+        e = ServeEngine(params, _cfg(), PREC, batch_slots=2,
+                        max_len=MAXLEN, prefill_chunk=8, seed=11)
+        return e
+
+    eng = fresh()
+    for r in _requests():
+        eng.submit(r)
+    for _ in range(3):
+        eng.tick()
+    step = eng.snapshot(str(tmp_path))
+    done_a = eng.run_to_completion()
+    outs_a = {r.rid: (list(r.output), r.finish_reason) for r in done_a}
+
+    eng2 = fresh()  # a restarted serving process
+    assert eng2.restore(str(tmp_path)) == step
+    assert eng2.ticks == 3
+    done_b = eng2.run_to_completion()
+    outs_b = {r.rid: (list(r.output), r.finish_reason) for r in done_b}
+    assert outs_b == outs_a  # no request dropped, no token diverged
+
+
+def test_bad_health_mode_rejected(params):
+    with pytest.raises(ValueError, match="health"):
+        ServeEngine(params, _cfg(), PREC, batch_slots=2, max_len=MAXLEN,
+                    health="bogus")
+
+
+def test_scenarios_all_constructible():
+    for name in faults.scenario_names():
+        plan = faults.scenario(name, seed=1)
+        assert plan.specs and all(s.name for s in plan.specs)
+    with pytest.raises(KeyError):
+        faults.scenario("no-such-scenario")
+
+
+# ------------------------------------- invariant checker property (sat 4)
+
+
+def _mixer_cfgs():
+    return {
+        "zeta": (_cfg(), jnp.float32),
+        "zeta-bf16": (_cfg(), jnp.bfloat16),
+        "zeta-int8": (_cfg(), jnp.int8),
+        "hybrid": (ModelConfig(
+            name="h", vocab=64, d_model=32, n_layers=2, n_heads=4,
+            n_kv_heads=2, d_ff=64, mixer="hybrid",
+            zeta=ZetaConfig(d_k=3, k=4, num_chunks=4),
+            ssm=SSMConfig(state_dim=8, head_dim=8, chunk=4)),
+            jnp.float32),
+    }
+
+
+_DEEP_CACHES: dict = {}
+
+
+def _deep_cache(name):
+    """Per-mixer cache built the honest way — prefill then decode past
+    the delayed-insertion age (t=14 > M=8) so the sorted prefix is
+    non-empty and every corruption class is detectable.  Memoized at
+    module level (not a fixture) because the hypothesis-stub ``@given``
+    wraps tests as zero-arg runners."""
+    if name not in _DEEP_CACHES:
+        cfg, dt = _mixer_cfgs()[name]
+        p = api.init_params(jax.random.PRNGKey(0), cfg)
+        cache = api.cache_init(cfg, 2, MAXLEN, dt)
+        toks = jnp.asarray([[1, 2, 3, 4, 5, 6], [7, 8, 9, 10, 11, 12]],
+                           jnp.int32)
+        _, cache = api.prefill(p, cache, toks, cfg, PREC)
+        step = jnp.asarray([[3], [5]], jnp.int32)
+        for _ in range(8):
+            _, cache = api.decode_step(p, cache, step, cfg, PREC)
+        _DEEP_CACHES[name] = (cfg, cache)
+    return _DEEP_CACHES[name]
+
+
+@pytest.mark.parametrize("name", sorted(_mixer_cfgs()))
+def test_clean_cache_never_flags(name):
+    cfg, cache = _deep_cache(name)
+    for full in (False, True):
+        flags = np.asarray(api.cache_health(cfg, cache, full=full))
+        assert (flags == 0).all(), (name, full, flags)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(sorted(faults.CACHE_KINDS)),
+       st.integers(0, 10_000),
+       st.integers(0, 1),
+       st.integers(0, 29))
+def test_invariant_checker_detects_every_corruption_class(
+        kind, seed, slot, bit):
+    cfg, cache = _deep_cache("zeta")
+    spec = faults.FaultSpec(kind, name="p", slot=slot, layer=seed % 2,
+                            bit=bit)
+    plan = faults.FaultPlan((spec,), seed=seed)
+    bad = faults.corrupt_cache(cfg, cache, spec, rng=plan.rng_for(spec))
+    flags = np.asarray(api.cache_health(cfg, bad, full=True))
+    assert flags[slot] != 0, (kind, seed, bit)
+    # the untouched slot stays clean — detection is per-slot
+    assert flags[1 - slot] == 0
+
+
+def test_corrupt_cache_is_pure_and_replayable():
+    cfg, cache = _deep_cache("zeta")
+    spec = faults.FaultSpec("flip_zcode", name="f", slot=0, bit=11)
+    before = np.asarray(cache["layers"]["zk_sorted"]).copy()
+    p1, p2 = faults.FaultPlan((spec,), seed=5), faults.FaultPlan(
+        (spec,), seed=5)
+    b1 = faults.corrupt_cache(cfg, cache, spec, rng=p1.rng_for(spec))
+    b2 = faults.corrupt_cache(cfg, cache, spec, rng=p2.rng_for(spec))
+    # input untouched, same seed -> same corruption
+    np.testing.assert_array_equal(
+        np.asarray(cache["layers"]["zk_sorted"]), before)
+    np.testing.assert_array_equal(np.asarray(b1["layers"]["zk_sorted"]),
+                                  np.asarray(b2["layers"]["zk_sorted"]))

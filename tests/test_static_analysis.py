@@ -63,7 +63,34 @@ AST_FIXTURES = {
         "    return jnp.asarray(x)\n",
         "repro/core/newpath.py",
     ),
+    "no-blanket-except": (
+        "def f(step):\n"
+        "    try:\n"
+        "        return step()\n"
+        "    except Exception:\n"
+        "        return None\n",
+        "def f(step):\n"
+        "    try:\n"
+        "        return step()\n"
+        "    except Exception as exc:\n"
+        "        if not demote(exc):\n"
+        "            raise\n"
+        "        return step()\n",
+        "repro/serve/newpath.py",
+    ),
 }
+
+
+def test_bare_except_and_tuple_blanket_flagged():
+    src = "def f(g):\n    try:\n        g()\n    except:\n        pass\n"
+    assert "no-blanket-except" in _rules_hit(src, "repro/core/newpath.py")
+    src2 = ("def f(g):\n    try:\n        g()\n"
+            "    except (ValueError, Exception):\n        pass\n")
+    assert "no-blanket-except" in _rules_hit(src2, "repro/core/newpath.py")
+    # typed handlers without a re-raise are fine
+    src3 = ("def f(g):\n    try:\n        g()\n"
+            "    except ValueError:\n        pass\n")
+    assert "no-blanket-except" not in _rules_hit(src3, "repro/core/newpath.py")
 
 
 @pytest.mark.parametrize("rule", sorted(AST_FIXTURES))

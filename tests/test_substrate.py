@@ -149,6 +149,26 @@ def test_checkpoint_async_and_tmp_cleanup(tmp_path):
     assert not os.path.exists(os.path.join(str(tmp_path), "9.tmp"))
 
 
+def test_checkpoint_stale_tmp_ignored_and_gcd_on_save(tmp_path):
+    # crash mid-save leaves <step>.tmp WITH a complete-looking manifest
+    # inside; it must never count as a checkpoint and the next save (not
+    # just the next construction) must sweep it
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"w": jnp.ones((4,))}
+    mgr.save(1, state)
+    stale = os.path.join(str(tmp_path), "7.tmp")
+    os.makedirs(stale, exist_ok=True)
+    with open(os.path.join(stale, "manifest.json"), "w") as f:
+        f.write('{"step": 7, "extra": {}}')
+    assert mgr.latest_step() == 1
+    mgr.save(2, state)
+    assert not os.path.exists(stale)
+    assert mgr.latest_step() == 2
+    restored, _ = mgr.restore(2, state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((4,)))
+
+
 def test_checkpoint_restore_casts_dtype(tmp_path):
     mgr = CheckpointManager(str(tmp_path), async_save=False)
     state = {"w": jnp.ones((4,), jnp.float32)}
@@ -207,6 +227,22 @@ def test_heartbeat_monitor():
     t[0] = 7.0
     assert mon.dead_hosts() == [1]
     assert mon.alive_hosts() == [0]
+
+
+def test_heartbeat_reports_never_beaten_expected_hosts():
+    # a host wedged before its FIRST heartbeat must still count as dead
+    t = [0.0]
+    mon = HeartbeatMonitor(timeout_s=5.0, clock=lambda: t[0],
+                           expected_hosts=(0, 1, 2))
+    t[0] = 4.0
+    mon.beat(0)
+    assert mon.dead_hosts() == []  # registration grace still running
+    t[0] = 6.0
+    assert sorted(mon.dead_hosts()) == [1, 2]
+    assert mon.alive_hosts() == [0]
+    mon.expect(3)  # late roster addition, never beats
+    t[0] = 12.0
+    assert sorted(mon.dead_hosts()) == [0, 1, 2, 3]
 
 
 # ---------------------------------------------------------------- sharding
