@@ -86,7 +86,8 @@ def generate(params, cfg: ModelConfig,
     HBM, compute still in ``prec``.  ``health`` selects the serve step's
     device-side sentinel tier ("off"/"fast"/"full") and
     ``deadline_ticks`` applies a per-request deadline (breaches finish
-    with ``"shed_deadline"`` instead of blocking the batch) — see
+    with ``"shed_deadline"`` instead of blocking the batch; continuous
+    scheduler only — the wave oracle refuses deadlines) — see
     :class:`GenerationResult` for the typed failure reasons.  Results
     come back in prompt order.
     """

@@ -52,14 +52,18 @@ def _attn_family(cache):
 def corrupt_cache(cfg, cache, spec: FaultSpec, *,
                   rng: np.random.Generator):
     """Apply one cache-corruption fault, returning a NEW cache pytree
-    (the input is never mutated).  ``rng`` comes from
-    ``FaultPlan.rng_for(spec)`` so the corrupted position replays
-    exactly."""
+    (the input is never mutated) — or ``None`` when the fault cannot
+    change any state the health sentinels could observe (attention-free
+    model; ``stale_length`` against a full or window-sized cache).
+    Callers must NOT mark a spec fired on ``None``: the fired set is the
+    chaos suite's every-fired-fault-yields-a-flagged-outcome contract.
+    ``rng`` comes from ``FaultPlan.rng_for(spec)`` so the corrupted
+    position replays exactly."""
     if spec.kind not in CACHE_KINDS:
         raise ValueError(f"{spec.kind!r} is not a cache fault")
     fam_info = _attn_family(cache)
     if fam_info is None:
-        return cache  # attention-free model: nothing to corrupt
+        return None  # attention-free model: nothing to corrupt
     key, fam, tree = fam_info
     zs = np.asarray(tree["zk_sorted"]).copy()
     ps = np.asarray(tree["pos_sorted"]).copy()
@@ -73,7 +77,13 @@ def corrupt_cache(cfg, cache, spec: FaultSpec, *,
     s = max(t - m, 0)  # searchable prefix length (delayed insertion)
     row = slot * hkv + int(rng.integers(hkv))
     if spec.kind == "stale_length":
-        ln[layer, slot] = min(t + 1 + int(rng.integers(3)), n)
+        # the checker only sees the SEARCHABLE prefix (length - M), so
+        # inflate far enough to drag sentinel rows into it (tgt > M);
+        # a full cache (tgt <= t) leaves nothing observable to corrupt
+        tgt = min(max(t + 1 + int(rng.integers(3)), m + 1), n)
+        if tgt <= t or tgt <= m:
+            return None
+        ln[layer, slot] = tgt
     elif spec.kind == "swap_rows" and s >= 2 \
             and zs[layer, row, 0] != zs[layer, row, s - 1]:
         i, j = 0, s - 1
@@ -93,12 +103,20 @@ def corrupt_cache(cfg, cache, spec: FaultSpec, *,
 
 def apply_cache_faults(engine, plan: FaultPlan) -> list[str]:
     """Engine-side hook: fire this tick's cache faults against
-    ``engine.cache``.  Returns the fired fault names."""
-    specs = plan.take(engine.ticks, CACHE_KINDS)
-    for spec in specs:
-        engine.cache = corrupt_cache(engine.cfg, engine.cache, spec,
-                                     rng=plan.rng_for(spec))
-    return [s.name for s in specs]
+    ``engine.cache``.  A spec whose corruption cannot change observable
+    state (``corrupt_cache`` returned None) is left UNfired, preserving
+    the fired-implies-flagged-outcome contract.  Returns the names that
+    actually fired."""
+    fired = []
+    for spec in plan.pending(engine.ticks, CACHE_KINDS):
+        bad = corrupt_cache(engine.cfg, engine.cache, spec,
+                            rng=plan.rng_for(spec))
+        if bad is None:
+            continue
+        engine.cache = bad
+        plan.mark_fired(spec.name)
+        fired.append(spec.name)
+    return fired
 
 
 # --------------------------------------------------------- kernel failure

@@ -111,17 +111,26 @@ class FaultPlan:
 
     # ----------------------------------------------------- engine hooks
 
+    def pending(self, tick: int, kinds=None) -> list[FaultSpec]:
+        """Specs scheduled for ``tick`` (optionally filtered by kind)
+        that have not fired, WITHOUT marking them.  For injectors whose
+        faults can turn out unobservable (cache corruption against a
+        full or attention-free cache): call :meth:`mark_fired` only once
+        the corruption actually landed, so ``fired`` keeps the
+        every-fired-fault-yields-a-flagged-outcome contract."""
+        return [s for s in self.specs
+                if s.tick == tick and s.name not in self._fired
+                and (kinds is None or s.kind in kinds)]
+
+    def mark_fired(self, name: str) -> None:
+        self._fired.add(name)
+
     def take(self, tick: int, kinds=None) -> list[FaultSpec]:
         """Specs scheduled for ``tick`` (optionally filtered by kind),
         marked fired — each spec fires at most once."""
-        out = []
-        for s in self.specs:
-            if s.tick != tick or s.name in self._fired:
-                continue
-            if kinds is not None and s.kind not in kinds:
-                continue
+        out = self.pending(tick, kinds)
+        for s in out:
             self._fired.add(s.name)
-            out.append(s)
         return out
 
     def logit_inject(self, tick: int, nslots: int) -> np.ndarray | None:

@@ -45,7 +45,8 @@ demotes the failing backend stage via ``repro.backend.demote_backend``
 (fused → staged → xla ladder), rebuilds the jitted steps, and retries
 the tick once.  Admission is bounded (``max_queue`` →
 ``"shed_queue_full"``), requests may carry ``deadline_ticks``
-(``"shed_deadline"``, checked at tick granularity) and can be
+(``"shed_deadline"``, checked at tick granularity; continuous
+scheduler only — wave submissions with a deadline are refused) and can be
 ``cancel()``\\ ed mid-flight; ``snapshot()/restore()`` persist the whole
 serving state through the atomic checkpoint manager.  Streaming
 callers note: tokens stream as they are sampled, so a quarantined
@@ -83,6 +84,7 @@ class Request:
     # failure outcomes (output may be partial for the last three)
     finish_reason: str | None = None
     # ticks from arrival by which the request must finish or be shed
+    # (continuous scheduler only — submit() rejects it under wave)
     deadline_ticks: int | None = None
     retries: int = 0                    # quarantine re-runs so far
     # scheduling stats (ticks are engine steps, not wall time)
@@ -239,6 +241,14 @@ class ServeEngine:
     # ------------------------------------------------------------- submit
 
     def submit(self, req: Request) -> None:
+        if req.deadline_ticks is not None and self.scheduler == "wave":
+            # the deadline sweep runs only in the continuous tick loop;
+            # silently never shedding would be worse than refusing
+            raise ValueError(
+                f"request {req.rid}: deadline_ticks requires the "
+                "continuous scheduler (the wave oracle has no deadline "
+                "sweep)"
+            )
         if not req.prompt and self.bos_id is None:
             raise ValueError(
                 f"request {req.rid}: empty prompt and no bos_id configured "
@@ -327,11 +337,17 @@ class ServeEngine:
         self.done.append(req)
         self.slots[i] = None
         self.slot_phase[i] = "idle"
+        # un-ingested prompt tokens die with the slot: a stale pending
+        # deque would put the freed slot back in pre_rows and drain into
+        # a None request (cancel() of a mid-prefill request hits this)
+        self.slot_pending[i].clear()
 
     def _check_deadlines(self) -> None:
         """Tick-granularity deadline enforcement: a request that has been
         in the system ``deadline_ticks`` ticks without finishing sheds —
-        mid-flight requests keep their partial output."""
+        mid-flight requests keep their partial output.  Continuous
+        scheduler only; the wave oracle has no sweep, which is why
+        :meth:`submit` rejects wave requests carrying a deadline."""
         now = self.ticks
 
         def overdue(req) -> bool:
@@ -340,8 +356,7 @@ class ServeEngine:
 
         for i in range(self.b):
             if self.slots[i] is not None and overdue(self.slots[i]):
-                self.slot_pending[i].clear()
-                self._finish(i, "shed_deadline")
+                self._finish(i, "shed_deadline")  # clears slot_pending too
                 self.shed += 1
         for req in [r for r in self.queue if overdue(r)]:
             self.queue.remove(req)
@@ -373,16 +388,20 @@ class ServeEngine:
         req.first_token_tick = req.admit_tick = req.finish_tick = -1
         self.queue.appendleft(req)  # retries go to the head of the line
 
-    def _demote_current(self, exc: BaseException) -> bool:
-        """A serve step raised at runtime: demote the backend stage it
-        was dispatching through (fused decode when one was resolved, else
-        the staged scoring stages of the resolved backend) and rebuild
-        the jitted steps so the fresh trace re-runs selection.  Returns
-        False when nothing new was demoted — the caller re-raises."""
+    def _demote_current(self, exc: BaseException, *,
+                        prefill: bool = False) -> bool:
+        """A model call raised at runtime: demote the backend stage it
+        was dispatching through and rebuild the jitted steps so the
+        fresh trace re-runs selection.  Decode failures demote the fused
+        decode stage when one was resolved, else the staged scoring
+        stages of the resolved backend; prefill always runs the staged
+        pipeline, so ``prefill=True`` skips the fused-decode rung.
+        Returns False when nothing new was demoted — the caller
+        re-raises."""
         from repro import backend as attention_backend
 
         changed = []
-        if self.decode_path != "staged":
+        if not prefill and self.decode_path != "staged":
             stage = ("decode_q" if self.cache_dtype == jnp.int8
                      else "decode")
             if attention_backend.demote_backend(
@@ -399,6 +418,25 @@ class ServeEngine:
         self.demotions.extend(changed)
         self._build_steps()
         return True
+
+    def _call_demotable(self, fn_name: str, args: tuple):
+        """One jitted model call with the demotion ladder around it.
+        ``block_until_ready`` INSIDE the try is load-bearing: under
+        JAX's async dispatch a runtime kernel failure (XlaRuntimeError)
+        surfaces when the results MATERIALIZE, not at the dispatch
+        call, so without it real failures would escape at a later
+        ``np.asarray`` and never demote.  Each failure demotes one rung
+        and retries on the rebuilt step (re-fetched by name); re-raises
+        once nothing is left to demote.  A failing call never committed
+        a cache, so the retry replays the tick cleanly."""
+        while True:
+            try:
+                return jax.block_until_ready(
+                    getattr(self, fn_name)(*args))
+            except Exception as exc:  # runtime kernel failure
+                if not self._demote_current(
+                        exc, prefill=(fn_name == "prefill_fn")):
+                    raise
 
     def _steps_array(self) -> jax.Array:
         """Per-slot sample step index == tokens already emitted."""
@@ -479,6 +517,7 @@ class ServeEngine:
             # recycle only the admitted rows; neighbours keep their state
             self.cache = self.reset_fn(self.cache, jnp.asarray(admit))
         self.busy_slot_ticks += sum(s is not None for s in self.slots)
+        flagged = False  # did ANY health word flag this tick
         if self.fault_plan is not None:
             # host-side cache corruption fires BEFORE the model calls so
             # this tick's in-step sentinels are the ones that must catch it
@@ -498,14 +537,14 @@ class ServeEngine:
                 for j in range(take):
                     tokens[i, j] = self.slot_pending[i].popleft()
                     mask[i, j] = True
-            nxt, _, self.cache, fin, hw = self.prefill_fn(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(mask), sp, hist, self.rng,
+            nxt, _, self.cache, fin, hw = self._call_demotable(
+                "prefill_fn",
+                (self.params, self.cache, jnp.asarray(tokens),
+                 jnp.asarray(mask), sp, hist, self.rng),
             )
             self.prefill_calls += 1
             nxt, fin, hw = np.asarray(nxt), np.asarray(fin), np.asarray(hw)
-            if hw.any():
-                self.health_events += 1
+            flagged |= bool(hw.any())
             for i in pre_rows:
                 if hw[i]:
                     self._quarantine(i, int(hw[i]))
@@ -534,20 +573,12 @@ class ServeEngine:
                 args = (self.params, self.cache, jnp.asarray(self._tokens),
                         self._slot_params_now(), jnp.asarray(self._history),
                         self.rng, jnp.asarray(dec), jnp.asarray(inj))
-                try:
-                    out = self.step_fn(*args)
-                except Exception as exc:  # runtime kernel failure
-                    if not self._demote_current(exc):
-                        raise
-                    # the failing call never committed a cache, so the
-                    # tick replays cleanly on the demoted path
-                    out = self.step_fn(*args)
+                out = self._call_demotable("step_fn", args)
                 nxt, _, self.cache, fin, hw = out
                 self.decode_calls += 1
                 nxt, fin, hw = (np.asarray(nxt), np.asarray(fin),
                                 np.asarray(hw))
-                if hw.any():
-                    self.health_events += 1
+                flagged |= bool(hw.any())
                 for i in range(self.b):
                     if not dec[i]:
                         continue
@@ -555,6 +586,10 @@ class ServeEngine:
                         self._quarantine(i, int(hw[i]))
                         continue
                     self._accept(i, int(nxt[i, 0]), bool(fin[i]))
+        # one increment per tick even when BOTH the prefill and decode
+        # calls flagged — the counter counts ticks, not model calls
+        if flagged:
+            self.health_events += 1
         self.ticks += 1
         return True
 

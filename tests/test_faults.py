@@ -11,6 +11,8 @@ invariant checker detects every injected corruption class and never
 flags a clean cache produced by prefill/decode across mixers.
 """
 
+import types
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -151,6 +153,45 @@ def test_kernel_raise_demotes_to_staged(params, baseline):
         registry.clear_demotions()
 
 
+def test_prefill_kernel_raise_demotes_and_recovers(params, baseline):
+    # a runtime failure in the PREFILL call must route through the same
+    # demotion ladder as decode (the staged scoring stages demote, the
+    # tick retries on the next-ranked backend)
+    registry.clear_demotions()
+    try:
+        eng = ServeEngine(params, _cfg(), PREC, batch_slots=2,
+                          max_len=MAXLEN, prefill_chunk=8)
+        name = eng._raw_prefill.attention_backend
+        with faults.raising_stage(name, "gathered_idx"):
+            for r in _requests():
+                eng.submit(r)
+            done = eng.run_to_completion()
+        assert any(d.startswith(f"{name}:") for d in eng.demotions)
+        outs = {r.rid: list(r.output) for r in done}
+        assert {r.finish_reason for r in done} <= set(SUCCESS)
+        assert outs == baseline  # the demoted path is output-identical
+    finally:
+        registry.clear_demotions()
+
+
+def test_health_events_counts_ticks_not_calls(params):
+    # prefill (cache fault, slot 0) and decode (NaN, slot 1) both flag
+    # on tick 2: the counter records ONE tick, not two model calls
+    plan = faults.FaultPlan((
+        faults.FaultSpec("flip_zcode", name="flip", tick=2, slot=0),
+        faults.FaultSpec("nan_logits", name="nan", tick=2, slot=1),
+    ))
+    eng = ServeEngine(params, _cfg(), PREC, batch_slots=2, max_len=MAXLEN,
+                      prefill_chunk=2, health="full", fault_plan=plan)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6, 7, 8], max_new=4))
+    eng.submit(Request(rid=1, prompt=[7, 8], max_new=6))
+    done = eng.run_to_completion()
+    assert plan.fired() == {"flip", "nan"}
+    assert eng.quarantines == 2
+    assert eng.health_events == 1
+    assert {r.finish_reason for r in done} <= set(SUCCESS)
+
+
 def test_demotion_reprobe_and_promote():
     registry.clear_demotions()
     try:
@@ -228,6 +269,35 @@ def test_cancel_mid_flight_and_queued(params):
     eng.submit(Request(rid=2, prompt=[6], max_new=3))
     done = eng.run_to_completion()
     assert {r.rid: r.finish_reason for r in done}[2] == "length"
+
+
+def test_cancel_mid_prefill_multichunk_empty_queue(params):
+    # regression: cancel() of a request whose prompt spans several
+    # prefill chunks used to leave a stale slot_pending deque — the
+    # freed slot re-entered pre_rows and, once the tokens drained,
+    # _accept dereferenced the None slot and crashed the tick loop
+    eng = ServeEngine(params, _cfg(), PREC, batch_slots=2, max_len=MAXLEN,
+                      prefill_chunk=2)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6], max_new=4))
+    eng.submit(Request(rid=1, prompt=[7, 8], max_new=8))
+    eng.tick()  # rid0 mid-prefill (4 prompt tokens left), rid1 decoding
+    assert eng.slot_pending[0]
+    assert eng.cancel(0)
+    assert not eng.slot_pending[0]  # pending prompt died with the slot
+    done = eng.run_to_completion()  # queue empty: slot 0 stays idle
+    by = {r.rid: r for r in done}
+    assert by[0].finish_reason == "cancelled"
+    assert by[1].finish_reason == "length" and len(by[1].output) == 8
+
+
+def test_wave_scheduler_rejects_deadlines(params):
+    # the deadline sweep exists only in the continuous tick loop; a wave
+    # request carrying one would silently never shed, so submit refuses
+    eng = ServeEngine(params, _cfg(), PREC, batch_slots=1, max_len=MAXLEN,
+                      scheduler="wave")
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(Request(rid=0, prompt=[1, 2], max_new=2,
+                           deadline_ticks=3))
 
 
 def test_snapshot_restore_resumes_identically(params, tmp_path):
@@ -331,6 +401,24 @@ def test_invariant_checker_detects_every_corruption_class(
     assert flags[slot] != 0, (kind, seed, bit)
     # the untouched slot stays clean — detection is per-slot
     assert flags[1 - slot] == 0
+
+
+def test_unobservable_stale_length_left_unfired():
+    # num_chunks=1 makes the delayed-insertion window span the whole
+    # cache: no inflated length can reach the searchable prefix, so the
+    # corruption is a no-op and the spec must stay UNfired (the chaos
+    # contract is fired => flagged outcome)
+    cfg = ModelConfig(name="z1", vocab=64, d_model=32, n_layers=2,
+                      n_heads=4, n_kv_heads=2, d_ff=64,
+                      zeta=ZetaConfig(d_k=3, k=4, num_chunks=1))
+    cache = api.cache_init(cfg, 2, MAXLEN, jnp.float32)
+    spec = faults.FaultSpec("stale_length", name="s", tick=0, slot=0)
+    plan = faults.FaultPlan((spec,))
+    assert faults.corrupt_cache(cfg, cache, spec,
+                                rng=plan.rng_for(spec)) is None
+    eng = types.SimpleNamespace(cfg=cfg, cache=cache, ticks=0)
+    assert faults.apply_cache_faults(eng, plan) == []
+    assert not plan.fired("s")
 
 
 def test_corrupt_cache_is_pure_and_replayable():
